@@ -1,0 +1,8 @@
+"""Pytest root configuration: make `pytest python/tests/` work from the
+repository root by putting the build-time Python package root
+(`python/`, holding the `compile` package) on sys.path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

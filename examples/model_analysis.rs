@@ -1,0 +1,88 @@
+//! The paper's headline method, end to end: *model-guided* performance
+//! analysis of the spMMM kernels.
+//!
+//! For each kernel/workload the example (1) replays the exact kernel
+//! code path against the simulated Sandy Bridge i7-2600 cache hierarchy,
+//! (2) derives the per-data-path code balances and light-speed ceilings
+//! (P = min(P_max, b/B_c) — §IV-A), (3) measures wall-clock MFlop/s on
+//! this host, and (4) reports measured-vs-model efficiency.
+//!
+//! Run: `cargo run --release --example model_analysis`
+
+use blazert::blazemark::{measure, BenchConfig};
+use blazert::gen::{operand_pair, Workload};
+use blazert::kernels::flops::spmmm_flops;
+use blazert::kernels::gustavson::pure_row_major;
+use blazert::kernels::{spmmm, spmmm_traced, NullTracer, Strategy};
+use blazert::model::{balance::GUSTAVSON_INNER_BALANCE, predict, Machine};
+use blazert::simulator::Hierarchy;
+use blazert::sparse::SparseShape;
+use blazert::util::table::Table;
+
+fn main() {
+    let machine = Machine::sandy_bridge_i7_2600();
+    println!("machine model: {}", machine.name);
+    println!(
+        "paper's analytic limits at {} B/Flop: L1 {:.0} MFlop/s, memory {:.0} MFlop/s\n",
+        GUSTAVSON_INNER_BALANCE,
+        blazert::model::lightspeed(&machine, Some(0), GUSTAVSON_INNER_BALANCE) / 1e6,
+        blazert::model::lightspeed(&machine, None, GUSTAVSON_INNER_BALANCE) / 1e6,
+    );
+
+    let cfg = BenchConfig::quick();
+    let mut table = Table::new([
+        "workload", "N", "kernel", "mem B/F", "model MF/s", "measured MF/s", "efficiency",
+    ]);
+
+    for workload in [Workload::FiveBandFd, Workload::RandomFixed5] {
+        // One in-cache size, one beyond-LLC size (the two regimes of
+        // Figures 2/3).
+        for n in [4096usize, 147456] {
+            let (a, b) = operand_pair(workload, n, 7);
+            let flops = spmmm_flops(&a, &b);
+
+            // Pure computation.
+            let mut h = Hierarchy::of_machine(&machine);
+            let _ = pure_row_major(&a, &b, &mut h);
+            let p = predict(&machine, &h.report());
+            let m = measure(&cfg, || {
+                std::hint::black_box(pure_row_major(&a, &b, &mut NullTracer));
+            });
+            let meas = m.mflops(flops);
+            table.row([
+                workload.tag().to_string(),
+                a.rows().to_string(),
+                "pure row-major".to_string(),
+                format!("{:.2}", h.report().mem_balance()),
+                format!("{:.0}", p.predicted / 1e6),
+                format!("{meas:.0}"),
+                format!("{:.0}%", 100.0 * meas * 1e6 / p.predicted),
+            ]);
+
+            // Full kernel (Combined).
+            let mut h2 = Hierarchy::of_machine(&machine);
+            let _ = spmmm_traced(&a, &b, Strategy::Combined, &mut h2);
+            let p2 = predict(&machine, &h2.report());
+            let m2 = measure(&cfg, || {
+                std::hint::black_box(spmmm(&a, &b, Strategy::Combined));
+            });
+            let meas2 = m2.mflops(flops);
+            table.row([
+                workload.tag().to_string(),
+                a.rows().to_string(),
+                "Combined spMMM".to_string(),
+                format!("{:.2}", h2.report().mem_balance()),
+                format!("{:.0}", p2.predicted / 1e6),
+                format!("{meas2:.0}"),
+                format!("{:.0}%", 100.0 * meas2 * 1e6 / p2.predicted),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("notes:");
+    println!("  * 'model MF/s' is the light speed on the *simulated i7-2600*; 'measured'");
+    println!("    is wall-clock on this host — efficiency > 100% simply means this CPU");
+    println!("    outruns a 2011 Sandy Bridge. The paper's claim to check is the SHAPE:");
+    println!("    in-cache sizes sit near the L1/L2 ceilings, out-of-cache sizes near the");
+    println!("    memory ceiling, and the random workload falls below its FD counterpart.");
+}

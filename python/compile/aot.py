@@ -1,0 +1,77 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + manifest.
+
+HLO text (not ``lowered.compile()`` output and not serialized
+``HloModuleProto`` bytes) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+on the Rust side reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --outdir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per entry point plus ``manifest.txt`` with
+the call geometry the Rust runtime validates against::
+
+    name=tile_mma file=tile_mma.hlo.txt dtype=f32 args=64x32x32,64x32x32,64x32x32
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True; the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_tag(s: jax.ShapeDtypeStruct) -> str:
+    return "x".join(str(d) for d in s.shape)
+
+
+def export_all(outdir: str, verbose: bool = True) -> list[str]:
+    os.makedirs(outdir, exist_ok=True)
+    manifest_lines = []
+    for name, (fn, args) in model.entry_points().items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        arg_tags = ",".join(shape_tag(a) for a in args)
+        manifest_lines.append(
+            f"name={name} file={fname} dtype=f32 args={arg_tags} "
+            f"tile={model.TILE} batch={model.BATCH} "
+            f"groups={model.GROUPS} group_k={model.GROUP_K} dense_n={model.DENSE_N}"
+        )
+        if verbose:
+            print(f"wrote {path} ({len(text)} chars)")
+    manifest = os.path.join(outdir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    if verbose:
+        print(f"wrote {manifest}")
+    return manifest_lines
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--outdir", default="../artifacts", help="artifact directory")
+    args = p.parse_args()
+    export_all(args.outdir)
+
+
+if __name__ == "__main__":
+    main()

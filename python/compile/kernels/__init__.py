@@ -1,0 +1,4 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from . import ref, tile_matmul
+
+__all__ = ["ref", "tile_matmul"]

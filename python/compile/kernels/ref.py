@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: pytest asserts kernel == ref to float tolerance)."""
+
+import jax.numpy as jnp
+
+
+def batched_tile_matmul_ref(a, b, acc):
+    """out[i] = acc[i] + a[i] @ b[i] (einsum form, no Pallas)."""
+    return acc + jnp.einsum("bij,bjk->bik", a, b)
+
+
+def grouped_tile_matmul_ref(a, b):
+    """out[g] = sum_k a[g,k] @ b[g,k]."""
+    return jnp.einsum("gkij,gkjl->gil", a, b)
+
+
+def dense_matmul_ref(a, b):
+    """Plain dense product."""
+    return jnp.matmul(a, b)

@@ -1,0 +1,130 @@
+"""Layer 1 — the Pallas tile multiply-accumulate kernel.
+
+TPU adaptation of the paper's hot loop (DESIGN.md §Hardware-Adaptation):
+the scalar Gustavson update ``temp[j] += a_ik * b_kj`` becomes a dense
+(T, T) tile product accumulated into a dense accumulator tile — the
+"dense temporary row" of the paper at block granularity, sized for VMEM
+and shaped for the MXU systolic array.
+
+The Rust coordinator (L3) performs Gustavson over *block* indices of BSR
+operands and streams batches of (A-tile, B-tile, C-accumulator-tile)
+triples through this kernel; the batch dimension is the Pallas grid, so
+on a real TPU the HBM->VMEM pipeline double-buffers tile fetches while
+the MXU computes.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which both the pytest
+oracle checks and the Rust runtime execute. On a real TPU the same code
+compiles natively by dropping the flag.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default artifact geometry: 32x32 f32 tiles in batches of 64.
+#   VMEM per grid step: 3 tiles x 32*32 x 4 B = 12 kB  (<< 16 MB VMEM)
+#   MXU: a 32x32 f32 matmul maps onto 128x128 MXU quarter-tiles; T=128
+#   would fill the MXU fully but quadruples the zero-padding waste of
+#   sparse blocks - see the tile-size ablation in EXPERIMENTS.md.
+TILE = 32
+BATCH = 64
+
+
+def _mma_kernel(a_ref, b_ref, acc_ref, o_ref):
+    """One grid step: o = acc + a @ b for a single (1, T, T) block."""
+    a = a_ref[0]
+    b = b_ref[0]
+    acc = acc_ref[0]
+    o_ref[0] = acc + jnp.dot(a, b, preferred_element_type=o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=())
+def batched_tile_matmul(a, b, acc):
+    """Batched tile multiply-accumulate: ``out[i] = acc[i] + a[i] @ b[i]``.
+
+    Args:
+      a:   f32[B, T, T] left tiles.
+      b:   f32[B, T, T] right tiles.
+      acc: f32[B, T, T] accumulator tiles.
+
+    Returns:
+      f32[B, T, T].
+    """
+    batch, t, t2 = a.shape
+    assert t == t2 and b.shape == a.shape and acc.shape == a.shape
+    block = pl.BlockSpec((1, t, t), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _mma_kernel,
+        grid=(batch,),
+        in_specs=[block, block, block],
+        out_specs=block,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=True,
+    )(a, b, acc)
+
+
+def _reduce_kernel(a_ref, b_ref, o_ref):
+    """Grid step (i, k): accumulate a[i,k] @ b[i,k] into o[i].
+
+    The k axis is sequential (innermost grid dimension), so the output
+    block is revisited and accumulated in place - the standard Pallas
+    reduction idiom. On TPU the accumulator tile stays resident in VMEM
+    across the k steps.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    o_ref[0] += jnp.dot(
+        a_ref[0, 0], b_ref[0, 0], preferred_element_type=o_ref.dtype
+    )
+
+
+@partial(jax.jit, static_argnames=())
+def grouped_tile_matmul(a, b):
+    """Grouped product: ``out[i] = sum_k a[i, k] @ b[i, k]``.
+
+    This is one full block-row x block-column Gustavson group in a single
+    call: the L3 scheduler packs the K partial products of one output
+    block into the k axis.
+
+    Args:
+      a: f32[G, K, T, T].
+      b: f32[G, K, T, T].
+
+    Returns:
+      f32[G, T, T].
+    """
+    g, k, t, t2 = a.shape
+    assert t == t2 and b.shape == a.shape
+    in_block = pl.BlockSpec((1, 1, t, t), lambda i, j: (i, j, 0, 0))
+    out_block = pl.BlockSpec((1, t, t), lambda i, j: (i, 0, 0))
+    return pl.pallas_call(
+        _reduce_kernel,
+        grid=(g, k),
+        in_specs=[in_block, in_block],
+        out_specs=out_block,
+        out_shape=jax.ShapeDtypeStruct((g, t, t), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_bytes(tile: int = TILE, dtype_bytes: int = 4, buffers: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (tiles + double-buffer)."""
+    return buffers * tile * tile * dtype_bytes
+
+
+def mxu_utilization(tile: int = TILE, mxu: int = 128) -> float:
+    """Fraction of MXU lanes a TxT f32 tile product can keep busy.
+
+    The MXU is a 128x128 systolic array; a T<128 tile uses (T/128)^2 of
+    it per pass (ignoring pipelining of multiple tiles, which Mosaic
+    performs for batched grids).
+    """
+    frac = min(tile, mxu) / mxu
+    return frac * frac

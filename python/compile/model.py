@@ -1,0 +1,59 @@
+"""Layer 2 — the JAX compute graph around the Pallas kernel.
+
+The paper's system is a numerics library, so the L2 "model" is the set of
+jitted compute entry points the Rust coordinator calls through PJRT:
+
+* ``tile_mma``       — batched tile multiply-accumulate (the BSR
+                       block-Gustavson inner step; wraps the L1 Pallas
+                       kernel so it lowers into the same HLO module);
+* ``tile_group_mma`` — whole block-row reduction groups (one output tile
+                       per group) for the grouped scheduler variant;
+* ``dense_mm``       — a plain dense product used by the runtime's
+                       verification path on densified small operands.
+
+Everything here executes at build time only; ``aot.py`` lowers each entry
+with fixed shapes to HLO text under ``artifacts/``, and the Rust runtime
+loads those. Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, tile_matmul
+
+# Artifact geometry (keep in sync with rust/src/runtime/tile_engine.rs,
+# which reads it from the manifest at load time).
+TILE = tile_matmul.TILE
+BATCH = tile_matmul.BATCH
+GROUPS = 16
+GROUP_K = 8
+DENSE_N = 256
+
+
+def tile_mma(a, b, acc):
+    """Batched tile multiply-accumulate via the Pallas kernel."""
+    return tile_matmul.batched_tile_matmul(a, b, acc)
+
+
+def tile_group_mma(a, b):
+    """Grouped block-row reduction via the Pallas kernel."""
+    return tile_matmul.grouped_tile_matmul(a, b)
+
+
+def dense_mm(a, b):
+    """Dense f32 product (verification path)."""
+    return ref.dense_matmul_ref(a, b)
+
+
+def entry_points():
+    """The AOT export table: name -> (fn, example argument shapes)."""
+    f32 = jnp.float32
+    t = lambda *shape: jax.ShapeDtypeStruct(shape, f32)  # noqa: E731
+    return {
+        "tile_mma": (tile_mma, (t(BATCH, TILE, TILE),) * 3),
+        "tile_group_mma": (
+            tile_group_mma,
+            (t(GROUPS, GROUP_K, TILE, TILE),) * 2,
+        ),
+        "dense_mm": (dense_mm, (t(DENSE_N, DENSE_N), t(DENSE_N, DENSE_N))),
+    }

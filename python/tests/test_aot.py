@@ -1,0 +1,42 @@
+"""AOT pipeline: HLO text generation + manifest round-trip."""
+
+import os
+
+from compile import aot, model
+
+
+def test_export_all_writes_artifacts(tmp_path):
+    outdir = str(tmp_path / "artifacts")
+    lines = aot.export_all(outdir, verbose=False)
+    assert len(lines) == len(model.entry_points())
+    for name in model.entry_points():
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        assert os.path.exists(path), name
+        text = open(path).read()
+        # HLO text module header and an entry computation.
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # Tuple return (rust side unwraps with to_tuple1).
+        assert "tuple" in text.lower(), name
+    manifest = open(os.path.join(outdir, "manifest.txt")).read().strip().splitlines()
+    assert len(manifest) == len(lines)
+    for line in manifest:
+        fields = dict(kv.split("=", 1) for kv in line.split())
+        assert {"name", "file", "dtype", "args", "tile", "batch"} <= set(fields)
+        assert fields["dtype"] == "f32"
+
+
+def test_hlo_text_has_no_custom_calls(tmp_path):
+    outdir = str(tmp_path / "a")
+    aot.export_all(outdir, verbose=False)
+    for name in model.entry_points():
+        text = open(os.path.join(outdir, f"{name}.hlo.txt")).read()
+        assert "custom-call" not in text, f"{name} must run on CPU PJRT"
+
+
+def test_shape_tag():
+    import jax
+    import jax.numpy as jnp
+
+    s = jax.ShapeDtypeStruct((64, 32, 32), jnp.float32)
+    assert aot.shape_tag(s) == "64x32x32"

@@ -1,0 +1,149 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps tile sizes, batch sizes and value distributions; every
+case asserts allclose between the interpret-mode Pallas kernel and
+``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.tile_matmul import (
+    BATCH,
+    TILE,
+    batched_tile_matmul,
+    grouped_tile_matmul,
+    mxu_utilization,
+    vmem_bytes,
+)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestBatchedTileMatmul:
+    def test_artifact_geometry(self):
+        a = rand(0, (BATCH, TILE, TILE))
+        b = rand(1, (BATCH, TILE, TILE))
+        acc = rand(2, (BATCH, TILE, TILE))
+        out = batched_tile_matmul(a, b, acc)
+        expect = ref.batched_tile_matmul_ref(a, b, acc)
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+    def test_zero_accumulator(self):
+        a = rand(3, (4, 8, 8))
+        b = rand(4, (4, 8, 8))
+        acc = jnp.zeros((4, 8, 8), jnp.float32)
+        out = batched_tile_matmul(a, b, acc)
+        np.testing.assert_allclose(
+            out, jnp.einsum("bij,bjk->bik", a, b), rtol=1e-5, atol=1e-6
+        )
+
+    def test_identity_tiles(self):
+        eye = jnp.broadcast_to(jnp.eye(16, dtype=jnp.float32), (3, 16, 16))
+        x = rand(5, (3, 16, 16))
+        acc = jnp.zeros_like(x)
+        np.testing.assert_allclose(
+            batched_tile_matmul(eye, x, acc), x, rtol=1e-6, atol=1e-6
+        )
+
+    def test_accumulation_chains(self):
+        # Two chained calls == one call on the summed product.
+        a1, b1 = rand(6, (2, 8, 8)), rand(7, (2, 8, 8))
+        a2, b2 = rand(8, (2, 8, 8)), rand(9, (2, 8, 8))
+        acc = jnp.zeros((2, 8, 8), jnp.float32)
+        step1 = batched_tile_matmul(a1, b1, acc)
+        step2 = batched_tile_matmul(a2, b2, step1)
+        expect = jnp.einsum("bij,bjk->bik", a1, b1) + jnp.einsum(
+            "bij,bjk->bik", a2, b2
+        )
+        np.testing.assert_allclose(step2, expect, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.integers(1, 8),
+        tile=st.sampled_from([4, 8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    )
+    def test_hypothesis_sweep(self, batch, tile, seed, scale):
+        a = rand(seed, (batch, tile, tile), scale)
+        b = rand(seed + 1, (batch, tile, tile), scale)
+        acc = rand(seed + 2, (batch, tile, tile), scale)
+        out = batched_tile_matmul(a, b, acc)
+        expect = ref.batched_tile_matmul_ref(a, b, acc)
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4 * scale * scale)
+
+
+class TestGroupedTileMatmul:
+    def test_matches_ref(self):
+        a = rand(10, (3, 5, 8, 8))
+        b = rand(11, (3, 5, 8, 8))
+        out = grouped_tile_matmul(a, b)
+        np.testing.assert_allclose(
+            out, ref.grouped_tile_matmul_ref(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_single_k_is_plain_product(self):
+        a = rand(12, (2, 1, 8, 8))
+        b = rand(13, (2, 1, 8, 8))
+        out = grouped_tile_matmul(a, b)
+        np.testing.assert_allclose(
+            out[:, :, :], jnp.einsum("gkij,gkjl->gil", a, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_zero_blocks_padding(self):
+        # Padding tail entries with zero tiles must not change the sum —
+        # the L3 scheduler relies on this to fill fixed-size batches.
+        a = rand(14, (1, 4, 8, 8))
+        b = rand(15, (1, 4, 8, 8))
+        a_pad = jnp.concatenate([a, jnp.zeros((1, 2, 8, 8), jnp.float32)], axis=1)
+        b_pad = jnp.concatenate([b, rand(16, (1, 2, 8, 8))], axis=1)
+        np.testing.assert_allclose(
+            grouped_tile_matmul(a_pad, b_pad),
+            grouped_tile_matmul(a, b),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        g=st.integers(1, 4),
+        k=st.integers(1, 6),
+        tile=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, g, k, tile, seed):
+        a = rand(seed, (g, k, tile, tile))
+        b = rand(seed + 1, (g, k, tile, tile))
+        np.testing.assert_allclose(
+            grouped_tile_matmul(a, b),
+            ref.grouped_tile_matmul_ref(a, b),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+
+class TestKernelStructure:
+    def test_vmem_fits(self):
+        # One grid step (with double-buffering headroom) must fit VMEM.
+        assert vmem_bytes() < 16 * 1024 * 1024
+
+    def test_mxu_utilization_monotone(self):
+        assert mxu_utilization(32) < mxu_utilization(64) < mxu_utilization(128)
+        assert mxu_utilization(128) == 1.0
+        assert mxu_utilization(256) == 1.0  # capped
+
+    def test_lowering_contains_no_custom_call(self):
+        # interpret=True must lower to plain HLO the CPU PJRT can run:
+        # no Mosaic custom-calls in the module text.
+        a = jax.ShapeDtypeStruct((2, 8, 8), jnp.float32)
+        lowered = jax.jit(lambda x, y, z: batched_tile_matmul(x, y, z)).lower(a, a, a)
+        text = lowered.as_text()
+        assert "tpu_custom_call" not in text
+        assert "mosaic" not in text.lower()

@@ -1,0 +1,46 @@
+"""L2 model entry points: shape table, jit-ability, numeric sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_entry_point_table_complete():
+    eps = model.entry_points()
+    assert set(eps) == {"tile_mma", "tile_group_mma", "dense_mm"}
+    for name, (fn, args) in eps.items():
+        assert callable(fn), name
+        assert all(isinstance(a, jax.ShapeDtypeStruct) for a in args), name
+
+
+def test_tile_mma_shapes_match_manifest_geometry():
+    _, args = model.entry_points()["tile_mma"]
+    assert args[0].shape == (model.BATCH, model.TILE, model.TILE)
+    assert all(a.shape == args[0].shape for a in args)
+    assert all(a.dtype == jnp.float32 for a in args)
+
+
+def test_dense_mm_numeric():
+    a = jax.random.normal(jax.random.PRNGKey(0), (32, 32), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (32, 32), jnp.float32)
+    np.testing.assert_allclose(model.dense_mm(a, b), a @ b, rtol=1e-5, atol=1e-5)
+
+
+def test_tile_group_mma_matches_ref():
+    a = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 8, 8), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(3), (2, 3, 8, 8), jnp.float32)
+    np.testing.assert_allclose(
+        model.tile_group_mma(a, b),
+        ref.grouped_tile_matmul_ref(a, b),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_entry_points_lower_without_error():
+    for name, (fn, args) in model.entry_points().items():
+        lowered = jax.jit(fn).lower(*args)
+        assert lowered.as_text(), name

@@ -1,0 +1,36 @@
+//! Ablation (paper §VI future work): "the decision criterion for which
+//! of the two storing strategies to use might be further improved" —
+//! sweep the Combined kernel's region-vs-population factor (paper: 2).
+
+use blazert::blazemark::{measure, BenchConfig};
+use blazert::gen::{operand_pair, Workload};
+use blazert::kernels::flops::spmmm_flops;
+use blazert::kernels::spmmm::spmmm_combined_factor;
+use blazert::util::table::Table;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    eprintln!("ablation: Combined decision factor; min_time={}s", cfg.min_time_s);
+    let factors = [1usize, 2, 4, 8, 16, 64];
+    let mut header = vec!["workload/N".to_string()];
+    header.extend(factors.iter().map(|f| format!("factor {f}")));
+    let mut t = Table::new(header);
+    for (w, n) in [
+        (Workload::FiveBandFd, 16384usize),
+        (Workload::RandomFixed5, 16384),
+        (Workload::RandomFill01Pct, 24000),
+    ] {
+        let (a, b) = operand_pair(w, n, 5);
+        let flops = spmmm_flops(&a, &b);
+        let mut row = vec![format!("{} N={}", w.tag(), n)];
+        for &f in &factors {
+            let m = measure(&cfg, || {
+                std::hint::black_box(spmmm_combined_factor(&a, &b, f));
+            });
+            row.push(format!("{:.1}", m.mflops(flops)));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+    println!("(MFlop/s; the paper ships factor 2)");
+}

@@ -1,0 +1,43 @@
+//! Ablation (paper §VI future work): comparison sort vs LSD radix sort
+//! for the Sort storing strategy's short index lists, across row
+//! populations (controlled via the fill-ratio generator).
+
+use blazert::blazemark::{measure, BenchConfig};
+use blazert::gen::random_fill_ratio;
+use blazert::kernels::flops::spmmm_flops;
+use blazert::kernels::{spmmm, Strategy};
+use blazert::util::table::Table;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    eprintln!("ablation: Sort (comparison) vs Sort-radix; min_time={}s", cfg.min_time_s);
+    let mut t = Table::new(["N", "nnz/row", "Sort MF/s", "Sort-radix MF/s", "radix gain"]);
+    // Sweep row population: few entries (insertion-sort regime) to many
+    // (radix-counting regime).
+    for (n, fill) in [
+        (20_000usize, 0.0005f64),
+        (20_000, 0.002),
+        (10_000, 0.01),
+        (4_000, 0.05),
+        (2_000, 0.1),
+    ] {
+        let a = random_fill_ratio(n, n, fill, 1);
+        let b = random_fill_ratio(n, n, fill, 2);
+        let flops = spmmm_flops(&a, &b);
+        let m_sort = measure(&cfg, || {
+            std::hint::black_box(spmmm(&a, &b, Strategy::Sort));
+        });
+        let m_radix = measure(&cfg, || {
+            std::hint::black_box(spmmm(&a, &b, Strategy::SortRadix));
+        });
+        let (s, r) = (m_sort.mflops(flops), m_radix.mflops(flops));
+        t.row([
+            n.to_string(),
+            format!("{:.0}", fill * n as f64),
+            format!("{s:.1}"),
+            format!("{r:.1}"),
+            format!("{:+.1}%", 100.0 * (r / s - 1.0)),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,42 @@
+//! Ablation (paper §VI future work): shared-memory parallel spMMM
+//! scaling — "we expect that the typical contention and saturation
+//! effects seen with these architectures will add many new effects".
+
+use blazert::blazemark::{measure, BenchConfig};
+use blazert::gen::{operand_pair, Workload};
+use blazert::kernels::flops::spmmm_flops;
+use blazert::kernels::parallel::par_spmmm;
+use blazert::util::table::Table;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+    eprintln!("ablation: parallel spMMM scaling on {cores} cores; min_time={}s", cfg.min_time_s);
+    let threads: Vec<usize> =
+        [1usize, 2, 4, 8, 16].into_iter().filter(|&t| t <= 2 * cores).collect();
+    let mut header = vec!["workload/N".to_string()];
+    header.extend(threads.iter().map(|t| format!("{t} thr")));
+    header.push("speedup@max".into());
+    let mut t = Table::new(header);
+    for (w, n) in [(Workload::FiveBandFd, 262144usize), (Workload::RandomFixed5, 65536)] {
+        let (a, b) = operand_pair(w, n, 5);
+        let flops = spmmm_flops(&a, &b);
+        let mut row = vec![format!("{} N={}", w.tag(), n)];
+        let mut first = 0.0f64;
+        let mut last = 0.0f64;
+        for &thr in &threads {
+            let m = measure(&cfg, || {
+                std::hint::black_box(par_spmmm(&a, &b, thr));
+            });
+            let mf = m.mflops(flops);
+            if thr == 1 {
+                first = mf;
+            }
+            last = mf;
+            row.push(format!("{mf:.0}"));
+        }
+        row.push(format!("{:.2}x", last / first.max(1e-9)));
+        t.row(row);
+    }
+    println!("{}", t.render());
+}

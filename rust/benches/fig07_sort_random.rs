@@ -1,0 +1,6 @@
+//! Regenerates Figure 7 of the paper (see DESIGN.md §6).
+//! Protocol: Blazemark quick sweep by default; BLAZEMARK_FULL=1 for the
+//! paper's 2 s / best-of-5 protocol and paper-scale problem sizes.
+fn main() {
+    blazert::blazemark::report::bench_main(7);
+}

@@ -1,0 +1,72 @@
+//! MTL4 4.0 strategy: Gustavson traversal with an ordered associative
+//! row accumulator.
+//!
+//! MTL4's sparse product builds each result row in a sorted associative
+//! structure rather than a dense temporary — correct and
+//! allocation-friendly, but every update pays tree-insertion cost where
+//! Blaze pays one indexed add. On the paper's figures MTL4 lands at
+//! roughly half of Blaze for CSR × CSR, and drops further for CSR × CSC
+//! "due to the creation of a temporary CSR matrix and converting the
+//! storage order of the right-hand side operand" — reproduced here by
+//! the same conversion call Blaze uses.
+
+use std::collections::BTreeMap;
+
+use crate::sparse::convert::csc_to_csr;
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
+
+/// CSR × CSR with a BTreeMap row accumulator.
+pub fn mtl4_csr_csr(a: &CsrMatrix, b: &CsrMatrix) -> CsrMatrix {
+    assert_eq!(a.cols(), b.rows(), "inner dimension");
+    let mut out = CsrMatrix::new(a.rows(), b.cols());
+    let mut acc: BTreeMap<usize, f64> = BTreeMap::new();
+    for i in 0..a.rows() {
+        let (a_idx, a_val) = a.row(i);
+        for (&k, &va) in a_idx.iter().zip(a_val) {
+            let (b_idx, b_val) = b.row(k);
+            for (&j, &vb) in b_idx.iter().zip(b_val) {
+                *acc.entry(j).or_insert(0.0) += va * vb;
+            }
+        }
+        for (&j, &v) in &acc {
+            if v != 0.0 {
+                out.append(j, v);
+            }
+        }
+        out.finalize_row();
+        acc.clear();
+    }
+    out
+}
+
+/// CSR × CSC: convert the RHS to CSR (temporary + storage-order
+/// conversion, as the paper attributes to MTL4), then the map-based
+/// kernel.
+pub fn mtl4_csr_csc(a: &CsrMatrix, b: &CscMatrix) -> CsrMatrix {
+    let b_csr = csc_to_csr(b);
+    mtl4_csr_csr(a, &b_csr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{fd_poisson_2d, random_fixed_per_row};
+    use crate::kernels::{spmmm, Strategy};
+    use crate::sparse::convert::csr_to_csc;
+
+    #[test]
+    fn matches_blaze_kernel() {
+        let a = random_fixed_per_row(30, 28, 5, 11);
+        let b = random_fixed_per_row(28, 26, 4, 12);
+        let reference = spmmm(&a, &b, Strategy::Combined);
+        assert!(mtl4_csr_csr(&a, &b).approx_eq(&reference, 1e-13));
+        assert!(mtl4_csr_csc(&a, &csr_to_csc(&b)).approx_eq(&reference, 1e-13));
+    }
+
+    #[test]
+    fn fd_case() {
+        let a = fd_poisson_2d(7);
+        let reference = spmmm(&a, &a, Strategy::Combined);
+        assert!(mtl4_csr_csr(&a, &a).approx_eq(&reference, 1e-13));
+    }
+}

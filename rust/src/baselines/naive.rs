@@ -1,0 +1,77 @@
+//! A "classic operator overloading" strategy: materialize every
+//! intermediate product as data, then canonicalize.
+//!
+//! This is the §II motivation for (Smart) Expression Templates: the
+//! temporary-per-operation style. For spMMM it corresponds to collecting
+//! all partial products `a_{ik}·b_{kj}` as COO triplets (one temporary
+//! entry per multiplication — the worst-case memory footprint the nnz
+//! estimate bounds) and sorting/compressing at the end. Used by the
+//! ablation benches to quantify what the dense-temporary Gustavson
+//! kernels buy.
+
+use crate::sparse::{CooMatrix, CsrMatrix, SparseShape};
+
+/// CSR × CSR via triplet materialization + canonicalization.
+pub fn naive_coo(a: &CsrMatrix, b: &CsrMatrix) -> CsrMatrix {
+    assert_eq!(a.cols(), b.rows(), "inner dimension");
+    let mut coo = CooMatrix::new(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        let (a_idx, a_val) = a.row(i);
+        for (&k, &va) in a_idx.iter().zip(a_val) {
+            let (b_idx, b_val) = b.row(k);
+            for (&j, &vb) in b_idx.iter().zip(b_val) {
+                coo.push(i, j, va * vb);
+            }
+        }
+    }
+    // Canonicalization sums duplicates; exact cancellations must still be
+    // dropped to match the kernel semantics.
+    let dense_nnz = coo.to_csr();
+    let mut out = CsrMatrix::new(a.rows(), b.cols());
+    out.reserve(dense_nnz.nnz());
+    for r in 0..dense_nnz.rows() {
+        let (idx, val) = dense_nnz.row(r);
+        for (&c, &v) in idx.iter().zip(val) {
+            if v != 0.0 {
+                out.append(c, v);
+            }
+        }
+        out.finalize_row();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_fixed_per_row;
+    use crate::kernels::{spmmm, Strategy};
+
+    #[test]
+    fn matches_blaze_kernel() {
+        let a = random_fixed_per_row(20, 20, 5, 31);
+        let b = random_fixed_per_row(20, 20, 5, 32);
+        let reference = spmmm(&a, &b, Strategy::Combined);
+        assert!(naive_coo(&a, &b).approx_eq(&reference, 1e-13));
+    }
+
+    #[test]
+    fn triplet_count_equals_multiplications() {
+        let a = random_fixed_per_row(10, 10, 3, 1);
+        let b = random_fixed_per_row(10, 10, 3, 2);
+        let mults = crate::kernels::flops::required_multiplications(&a, &b);
+        // The naive approach materializes exactly one triplet per
+        // multiplication — the memory blow-up SETs avoid.
+        let mut coo = CooMatrix::new(10, 10);
+        for i in 0..10 {
+            let (a_idx, a_val) = a.row(i);
+            for (&k, &va) in a_idx.iter().zip(a_val) {
+                let (b_idx, b_val) = b.row(k);
+                for (&j, &vb) in b_idx.iter().zip(b_val) {
+                    coo.push(i, j, va * vb);
+                }
+            }
+        }
+        assert_eq!(coo.nnz() as u64, mults);
+    }
+}

@@ -1,0 +1,291 @@
+//! The experiment registry: one [`Figure`] per figure of the paper's
+//! evaluation (see DESIGN.md §6 for the index).
+
+use crate::baselines::Library;
+use crate::gen::Workload;
+use crate::kernels::classic::pure_classic;
+use crate::kernels::gustavson::pure_row_major;
+use crate::kernels::tracer::NullTracer;
+use crate::kernels::{spmmm, Strategy};
+use crate::sparse::convert::csc_to_csr;
+use crate::sparse::{CscMatrix, CsrMatrix};
+use crate::util::timer::black_box;
+
+/// One benchmark series (a curve in a figure).
+#[derive(Clone, Copy, Debug)]
+pub enum SeriesKind {
+    /// Pure computation, row-major Gustavson, CSR × CSR (Listing 2).
+    PureRowMajor,
+    /// Pure computation where the CSC right-hand side is converted to
+    /// CSR inside the timed region ("CSR × CSC (with conversion)").
+    PureConvThenRowMajor,
+    /// Pure computation, classic CSR × CSC dot-product kernel.
+    PureClassic,
+    /// Full spMMM (compute + store) with a storing strategy, CSR × CSR.
+    Full(Strategy),
+    /// Full spMMM CSR × CSC: conversion + strategy, timed together.
+    FullConv(Strategy),
+    /// A library's CSR = CSR × CSR product (Figures 9/10).
+    LibCsrCsr(Library),
+    /// A library's CSR = CSR × CSC product (Figures 11/12).
+    LibCsrCsc(Library),
+}
+
+impl SeriesKind {
+    /// Legend label (paper naming).
+    pub fn label(&self) -> String {
+        match self {
+            SeriesKind::PureRowMajor => "row-major (CSR x CSR)".into(),
+            SeriesKind::PureConvThenRowMajor => "CSR x CSC (with conversion)".into(),
+            SeriesKind::PureClassic => "classic (CSR x CSC)".into(),
+            SeriesKind::Full(s) => s.name().into(),
+            SeriesKind::FullConv(s) => format!("{} (conv)", s.name()),
+            SeriesKind::LibCsrCsr(l) | SeriesKind::LibCsrCsc(l) => l.name().into(),
+        }
+    }
+
+    /// Execute once on prepared operands (`b_csc` is the converted copy
+    /// of `b`, prepared outside the timed region for the series that
+    /// *receive* a CSC operand).
+    pub fn execute(&self, a: &CsrMatrix, b: &CsrMatrix, b_csc: &CscMatrix) {
+        match self {
+            SeriesKind::PureRowMajor => {
+                black_box(pure_row_major(a, b, &mut NullTracer));
+            }
+            SeriesKind::PureConvThenRowMajor => {
+                let b_conv = csc_to_csr(b_csc);
+                black_box(pure_row_major(a, &b_conv, &mut NullTracer));
+            }
+            SeriesKind::PureClassic => {
+                black_box(pure_classic(a, b_csc, &mut NullTracer));
+            }
+            SeriesKind::Full(s) => {
+                black_box(spmmm(a, b, *s));
+            }
+            SeriesKind::FullConv(s) => {
+                let b_conv = csc_to_csr(b_csc);
+                black_box(spmmm(a, &b_conv, *s));
+            }
+            SeriesKind::LibCsrCsr(l) => {
+                black_box(l.multiply_csr_csr(a, b));
+            }
+            SeriesKind::LibCsrCsc(l) => {
+                black_box(l.multiply_csr_csc(a, b_csc));
+            }
+        }
+    }
+
+    /// Largest N this series stays tractable at (the classic and
+    /// uBLAS-like kernels have N²-ish cost and must be capped, as in the
+    /// paper where they stop registering beyond small N).
+    pub fn max_feasible_n(&self, full: bool) -> usize {
+        let quad_cap = if full { 20_000 } else { 5_000 };
+        match self {
+            SeriesKind::PureClassic => quad_cap,
+            SeriesKind::LibCsrCsr(Library::UblasLike) => quad_cap,
+            SeriesKind::LibCsrCsc(Library::UblasLike) => quad_cap,
+            _ => usize::MAX,
+        }
+    }
+}
+
+/// A paper figure: workload, size sweep, and the series it compares.
+#[derive(Clone, Debug)]
+pub struct Figure {
+    /// Paper figure number (2..=12).
+    pub id: u32,
+    /// Title (paper caption, abbreviated).
+    pub title: &'static str,
+    /// Workload family.
+    pub workload: Workload,
+    /// Series compared.
+    pub series: Vec<SeriesKind>,
+    /// Problem sizes (N = rows); quick sweep.
+    pub sizes_quick: Vec<usize>,
+    /// Problem sizes for `BLAZEMARK_FULL=1` (paper-scale).
+    pub sizes_full: Vec<usize>,
+}
+
+impl Figure {
+    /// The size sweep for the given mode.
+    pub fn sizes(&self, full: bool) -> &[usize] {
+        if full {
+            &self.sizes_full
+        } else {
+            &self.sizes_quick
+        }
+    }
+}
+
+/// Geometric sweep used by most figures.
+fn sweep(max: usize) -> Vec<usize> {
+    let mut v = vec![64usize, 144, 324, 784, 1764, 4096, 9216, 20736, 46656, 104976, 236196, 531441, 1048576];
+    v.retain(|&n| n <= max);
+    v
+}
+
+/// Build the registry (Figures 2-12).
+pub fn build_figures() -> Vec<Figure> {
+    use SeriesKind::*;
+    let pure = vec![PureRowMajor, PureConvThenRowMajor, PureClassic];
+    let store4 = vec![
+        Full(Strategy::BruteForceDouble),
+        Full(Strategy::BruteForceBool),
+        Full(Strategy::BruteForceChar),
+        Full(Strategy::MinMax),
+        Full(Strategy::MinMaxChar),
+    ];
+    let sortcmp = vec![Full(Strategy::MinMax), Full(Strategy::Sort), Full(Strategy::Combined)];
+    let libs_rr: Vec<SeriesKind> = Library::ALL.iter().map(|&l| LibCsrCsr(l)).collect();
+    let libs_rc: Vec<SeriesKind> = Library::ALL.iter().map(|&l| LibCsrCsc(l)).collect();
+
+    vec![
+        Figure {
+            id: 2,
+            title: "Pure computation (FD); memory model limit 1140 MFlop/s",
+            workload: Workload::FiveBandFd,
+            series: pure.clone(),
+            sizes_quick: sweep(50_000),
+            sizes_full: sweep(1_100_000),
+        },
+        Figure {
+            id: 3,
+            title: "Pure computation (random)",
+            workload: Workload::RandomFixed5,
+            series: pure,
+            sizes_quick: sweep(50_000),
+            sizes_full: sweep(1_100_000),
+        },
+        Figure {
+            id: 4,
+            title: "Brute Force vs MinMax kernels (FD), complete spMMM",
+            workload: Workload::FiveBandFd,
+            series: store4.clone(),
+            sizes_quick: sweep(50_000),
+            sizes_full: sweep(1_100_000),
+        },
+        Figure {
+            id: 5,
+            title: "Brute Force vs MinMax kernels (random), complete spMMM",
+            workload: Workload::RandomFixed5,
+            series: store4,
+            sizes_quick: sweep(50_000),
+            sizes_full: sweep(1_100_000),
+        },
+        Figure {
+            id: 6,
+            title: "MinMax vs Sort (FD), complete spMMM",
+            workload: Workload::FiveBandFd,
+            series: sortcmp.clone(),
+            sizes_quick: sweep(50_000),
+            sizes_full: sweep(1_100_000),
+        },
+        Figure {
+            id: 7,
+            title: "MinMax vs Sort (random); switch between N=49 and N=64",
+            workload: Workload::RandomFixed5,
+            series: sortcmp.clone(),
+            // The paper zooms into small N here to show the Combined
+            // switch; include the small range explicitly.
+            sizes_quick: vec![16, 25, 36, 49, 64, 100, 256, 1024, 4096, 16384],
+            sizes_full: vec![16, 25, 36, 49, 64, 100, 256, 1024, 4096, 16384, 65536, 262144],
+        },
+        Figure {
+            id: 8,
+            title: "MinMax vs Sort, random 0.1% fill; crossover near N=38000",
+            workload: Workload::RandomFill01Pct,
+            series: sortcmp,
+            sizes_quick: vec![4000, 8000, 16000, 24000, 32000, 40000, 48000],
+            sizes_full: vec![4000, 8000, 16000, 24000, 32000, 38000, 44000, 52000, 64000, 80000],
+        },
+        Figure {
+            id: 9,
+            title: "Library comparison CSR = CSR x CSR (FD)",
+            workload: Workload::FiveBandFd,
+            series: libs_rr.clone(),
+            sizes_quick: sweep(50_000),
+            sizes_full: sweep(1_100_000),
+        },
+        Figure {
+            id: 10,
+            title: "Library comparison CSR = CSR x CSR (random)",
+            workload: Workload::RandomFixed5,
+            series: libs_rr,
+            sizes_quick: sweep(50_000),
+            sizes_full: sweep(1_100_000),
+        },
+        Figure {
+            id: 11,
+            title: "Library comparison CSR = CSR x CSC (FD)",
+            workload: Workload::FiveBandFd,
+            series: libs_rc.clone(),
+            sizes_quick: sweep(50_000),
+            sizes_full: sweep(1_100_000),
+        },
+        Figure {
+            id: 12,
+            title: "Library comparison CSR = CSR x CSC (random)",
+            workload: Workload::RandomFixed5,
+            series: libs_rc,
+            sizes_quick: sweep(50_000),
+            sizes_full: sweep(1_100_000),
+        },
+    ]
+}
+
+/// All figures (lazily built, immutable).
+pub static FIGURES: std::sync::LazyLock<Vec<Figure>> = std::sync::LazyLock::new(build_figures);
+
+/// Find a figure by its paper number.
+pub fn figure_by_id(id: u32) -> Option<&'static Figure> {
+    FIGURES.iter().find(|f| f.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::operand_pair;
+    use crate::sparse::convert::csr_to_csc;
+
+    #[test]
+    fn registry_covers_figures_2_to_12() {
+        let ids: Vec<u32> = FIGURES.iter().map(|f| f.id).collect();
+        assert_eq!(ids, (2..=12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn every_series_executes() {
+        for fig in FIGURES.iter() {
+            let n = fig.sizes_quick[0].min(100);
+            let (a, b) = operand_pair(fig.workload, n, 1);
+            let b_csc = csr_to_csc(&b);
+            for s in &fig.series {
+                s.execute(&a, &b, &b_csc);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_unique_within_figure() {
+        for fig in FIGURES.iter() {
+            let mut labels: Vec<String> = fig.series.iter().map(|s| s.label()).collect();
+            labels.sort();
+            let before = labels.len();
+            labels.dedup();
+            assert_eq!(before, labels.len(), "figure {}", fig.id);
+        }
+    }
+
+    #[test]
+    fn caps_apply_to_quadratic_series() {
+        assert!(SeriesKind::PureClassic.max_feasible_n(false) < 10_000);
+        assert_eq!(SeriesKind::PureRowMajor.max_feasible_n(false), usize::MAX);
+    }
+
+    #[test]
+    fn sweep_is_increasing_and_capped() {
+        let s = sweep(100_000);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        assert!(*s.last().unwrap() <= 100_000);
+    }
+}

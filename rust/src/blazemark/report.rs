@@ -1,0 +1,199 @@
+//! Figure execution + reporting: runs every series of a figure over the
+//! size sweep and prints the same rows/series the paper's figures plot.
+
+use super::figures::Figure;
+use super::runner::{measure, BenchConfig};
+use crate::gen::operand_pair;
+use crate::kernels::flops::spmmm_flops;
+use crate::sparse::convert::csr_to_csc;
+use crate::sparse::SparseShape;
+use crate::util::table::{ascii_chart, Table};
+
+/// The measured curves of one figure.
+#[derive(Clone, Debug)]
+pub struct FigureResult {
+    /// Paper figure number.
+    pub id: u32,
+    /// Caption.
+    pub title: String,
+    /// Series names, figure order.
+    pub series_names: Vec<String>,
+    /// `(N, [mflops_per_series])`; a series skipped at a size (cap)
+    /// holds `None`.
+    pub rows: Vec<(usize, Vec<Option<f64>>)>,
+}
+
+impl FigureResult {
+    /// Aligned table, one row per N, one column per series.
+    pub fn render_table(&self) -> String {
+        let mut header = vec!["N".to_string()];
+        header.extend(self.series_names.iter().cloned());
+        let mut t = Table::new(header);
+        for (n, vals) in &self.rows {
+            let mut row = vec![n.to_string()];
+            for v in vals {
+                row.push(match v {
+                    Some(m) => format!("{m:.1}"),
+                    None => "-".to_string(),
+                });
+            }
+            t.row(row);
+        }
+        format!("Figure {} — {} (MFlop/s, higher is better)\n{}", self.id, self.title, t.render())
+    }
+
+    /// ASCII chart of the curves.
+    pub fn render_chart(&self) -> String {
+        let series: Vec<(String, Vec<(f64, f64)>)> = self
+            .series_names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let pts = self
+                    .rows
+                    .iter()
+                    .filter_map(|(n, vals)| vals[i].map(|m| (*n as f64, m)))
+                    .collect();
+                (name.clone(), pts)
+            })
+            .collect();
+        ascii_chart(&series, 72, 18)
+    }
+
+    /// CSV (one row per N; series columns).
+    pub fn to_csv(&self) -> String {
+        let mut header = vec!["n".to_string()];
+        header.extend(self.series_names.iter().cloned());
+        let mut t = Table::new(header);
+        for (n, vals) in &self.rows {
+            let mut row = vec![n.to_string()];
+            for v in vals {
+                row.push(v.map(|m| format!("{m:.3}")).unwrap_or_default());
+            }
+            t.row(row);
+        }
+        t.to_csv()
+    }
+
+    /// Write the CSV under `results/`.
+    pub fn write_csv(&self) -> std::io::Result<std::path::PathBuf> {
+        let path = std::path::PathBuf::from(format!("results/fig{:02}.csv", self.id));
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Run one figure under the given protocol. `seed` feeds the workload
+/// generator (all series share operands). Progress lines go to stderr so
+/// stdout stays machine-readable.
+pub fn run_figure(fig: &Figure, cfg: &BenchConfig, seed: u64, verbose: bool) -> FigureResult {
+    let full = cfg.min_time_s >= 1.0;
+    let mut rows = Vec::new();
+    for &n in fig.sizes(full) {
+        let (a, b) = operand_pair(fig.workload, n, seed);
+        let b_csc = csr_to_csc(&b);
+        let flops = spmmm_flops(&a, &b);
+        let mut vals = Vec::with_capacity(fig.series.len());
+        for s in &fig.series {
+            if a.rows() > s.max_feasible_n(full) {
+                vals.push(None);
+                continue;
+            }
+            let m = measure(cfg, || s.execute(&a, &b, &b_csc));
+            let mflops = m.mflops(flops);
+            if verbose {
+                eprintln!(
+                    "  fig{:02} N={:<8} {:<28} {:>10.1} MFlop/s ({} reps x {} trials)",
+                    fig.id,
+                    a.rows(),
+                    s.label(),
+                    mflops,
+                    m.reps,
+                    m.trials
+                );
+            }
+            vals.push(Some(mflops));
+        }
+        rows.push((a.rows(), vals));
+    }
+    FigureResult {
+        id: fig.id,
+        title: fig.title.to_string(),
+        series_names: fig.series.iter().map(|s| s.label()).collect(),
+        rows,
+    }
+}
+
+/// Entry point shared by the `rust/benches/figNN_*.rs` targets: run one
+/// figure with the env-configured protocol, print table + chart, write
+/// the CSV.
+pub fn bench_main(figure_id: u32) {
+    let fig = super::figures::figure_by_id(figure_id)
+        .unwrap_or_else(|| panic!("unknown figure {figure_id}"));
+    let cfg = BenchConfig::from_env();
+    eprintln!(
+        "blazemark figure {} [{}] — min_time={}s trials={} (BLAZEMARK_FULL=1 for paper protocol)",
+        fig.id,
+        fig.workload.tag(),
+        cfg.min_time_s,
+        cfg.trials
+    );
+    let res = run_figure(fig, &cfg, 0xb1a2e, true);
+    println!("{}", res.render_table());
+    println!("{}", res.render_chart());
+    match res.write_csv() {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blazemark::figures::figure_by_id;
+
+    fn tiny_cfg() -> BenchConfig {
+        BenchConfig { min_time_s: 0.0005, trials: 1 }
+    }
+
+    #[test]
+    fn run_figure_2_smoke() {
+        let mut fig = figure_by_id(2).unwrap().clone();
+        fig.sizes_quick = vec![64, 256];
+        let res = run_figure(&fig, &tiny_cfg(), 1, false);
+        assert_eq!(res.rows.len(), 2);
+        assert_eq!(res.series_names.len(), 3);
+        for (_, vals) in &res.rows {
+            for v in vals {
+                assert!(v.unwrap() > 0.0);
+            }
+        }
+        let table = res.render_table();
+        assert!(table.contains("Figure 2"));
+        let csv = res.to_csv();
+        assert!(csv.lines().count() == 3);
+    }
+
+    #[test]
+    fn caps_show_as_none() {
+        let mut fig = figure_by_id(9).unwrap().clone();
+        fig.sizes_quick = vec![9216]; // above the quick uBLAS cap (5000)
+        let res = run_figure(&fig, &tiny_cfg(), 1, false);
+        let ublas_idx = res.series_names.iter().position(|n| n.contains("uBLAS")).unwrap();
+        assert!(res.rows[0].1[ublas_idx].is_none());
+        let blaze_idx = res.series_names.iter().position(|n| n == "Blaze").unwrap();
+        assert!(res.rows[0].1[blaze_idx].is_some());
+    }
+
+    #[test]
+    fn chart_renders() {
+        let mut fig = figure_by_id(6).unwrap().clone();
+        fig.sizes_quick = vec![64, 144];
+        let res = run_figure(&fig, &tiny_cfg(), 1, false);
+        let chart = res.render_chart();
+        assert!(chart.contains("MFlop/s"));
+    }
+}

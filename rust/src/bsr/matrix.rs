@@ -1,0 +1,230 @@
+//! Block compressed sparse row storage (f32 blocks, MXU-shaped).
+
+use crate::sparse::{CsrMatrix, SparseShape};
+
+/// A block-CSR matrix: the block grid is CSR-compressed and each stored
+/// block is a dense `tile × tile` f32 tile (row-major), zero-padded at
+/// the right/bottom edges.
+#[derive(Clone, Debug)]
+pub struct BsrMatrix {
+    /// Tile edge length.
+    pub tile: usize,
+    /// Logical (element) dimensions.
+    pub rows: usize,
+    /// Logical column count.
+    pub cols: usize,
+    /// Block-grid dimensions.
+    pub brows: usize,
+    /// Block-grid column count.
+    pub bcols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    blocks: Vec<f32>,
+}
+
+impl BsrMatrix {
+    /// Build from a CSR matrix (f64 values are narrowed to f32 — the MXU
+    /// dtype; DESIGN.md documents the precision substitution).
+    pub fn from_csr(m: &CsrMatrix, tile: usize) -> BsrMatrix {
+        assert!(tile > 0);
+        let brows = m.rows().div_ceil(tile);
+        let bcols = m.cols().div_ceil(tile);
+        let te = tile * tile;
+        // Pass 1: which blocks exist per block-row.
+        let mut row_ptr = vec![0usize; brows + 1];
+        let mut per_row_cols: Vec<Vec<usize>> = vec![Vec::new(); brows];
+        for bi in 0..brows {
+            let mut seen: Vec<usize> = Vec::new();
+            for r in bi * tile..((bi + 1) * tile).min(m.rows()) {
+                for &c in m.row_indices(r) {
+                    let bj = c / tile;
+                    if !seen.contains(&bj) {
+                        seen.push(bj);
+                    }
+                }
+            }
+            seen.sort_unstable();
+            row_ptr[bi + 1] = row_ptr[bi] + seen.len();
+            per_row_cols[bi] = seen;
+        }
+        let nblocks = row_ptr[brows];
+        let mut col_idx = Vec::with_capacity(nblocks);
+        for cols in &per_row_cols {
+            col_idx.extend_from_slice(cols);
+        }
+        // Pass 2: scatter values.
+        let mut blocks = vec![0f32; nblocks * te];
+        for bi in 0..brows {
+            let base = row_ptr[bi];
+            let cols = &per_row_cols[bi];
+            for r in bi * tile..((bi + 1) * tile).min(m.rows()) {
+                let (idx, val) = m.row(r);
+                for (&c, &v) in idx.iter().zip(val) {
+                    let bj = c / tile;
+                    let slot = base + cols.binary_search(&bj).expect("block exists");
+                    let (lr, lc) = (r - bi * tile, c - bj * tile);
+                    blocks[slot * te + lr * tile + lc] = v as f32;
+                }
+            }
+        }
+        BsrMatrix {
+            tile,
+            rows: m.rows(),
+            cols: m.cols(),
+            brows,
+            bcols,
+            row_ptr,
+            col_idx,
+            blocks,
+        }
+    }
+
+    /// Empty matrix with a prepared block grid (used by the multiplier).
+    pub fn empty(rows: usize, cols: usize, tile: usize) -> BsrMatrix {
+        let brows = rows.div_ceil(tile);
+        BsrMatrix {
+            tile,
+            rows,
+            cols,
+            brows,
+            bcols: cols.div_ceil(tile),
+            // Streaming construction: one entry now, one per
+            // push_block_row - mirrors the CSR append/finalize contract.
+            row_ptr: vec![0],
+            col_idx: Vec::new(),
+            blocks: Vec::new(),
+        }
+    }
+
+    /// Number of stored blocks.
+    pub fn nblocks(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Block columns of block-row `bi`.
+    pub fn block_row(&self, bi: usize) -> &[usize] {
+        &self.col_idx[self.row_ptr[bi]..self.row_ptr[bi + 1]]
+    }
+
+    /// Storage index of the `k`-th block of block-row `bi`.
+    pub fn block_slot(&self, bi: usize, k: usize) -> usize {
+        self.row_ptr[bi] + k
+    }
+
+    /// The dense tile at storage slot `slot`.
+    pub fn block(&self, slot: usize) -> &[f32] {
+        let te = self.tile * self.tile;
+        &self.blocks[slot * te..(slot + 1) * te]
+    }
+
+    /// Append a block-row from `(block_col, tile)` pairs (sorted by
+    /// block_col; used by the multiplier).
+    pub fn push_block_row(&mut self, entries: &[(usize, &[f32])]) {
+        let te = self.tile * self.tile;
+        debug_assert!(entries.windows(2).all(|w| w[0].0 < w[1].0));
+        for (bj, data) in entries {
+            debug_assert!(*bj < self.bcols);
+            debug_assert_eq!(data.len(), te);
+            self.col_idx.push(*bj);
+            self.blocks.extend_from_slice(*data);
+        }
+        self.row_ptr.push(self.col_idx.len());
+        debug_assert!(self.row_ptr.len() <= self.brows + 1);
+    }
+
+    /// Fraction of stored tile elements that are structural zeros — the
+    /// padding waste the tile-size ablation measures.
+    pub fn fill_in_ratio(&self, original_nnz: usize) -> f64 {
+        if self.blocks.is_empty() {
+            return 0.0;
+        }
+        1.0 - original_nnz as f64 / self.blocks.len() as f64
+    }
+
+    /// Convert back to (f64) CSR, dropping exact zeros — for verification
+    /// against the scalar kernels.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let te = self.tile * self.tile;
+        let mut out = CsrMatrix::new(self.rows, self.cols);
+        for r in 0..self.rows {
+            let bi = r / self.tile;
+            let lr = r % self.tile;
+            if self.row_ptr.len() <= bi + 1 {
+                out.finalize_row();
+                continue;
+            }
+            for (k, &bj) in self.block_row(bi).iter().enumerate() {
+                let slot = self.block_slot(bi, k);
+                let base = slot * te + lr * self.tile;
+                for lc in 0..self.tile {
+                    let c = bj * self.tile + lc;
+                    if c >= self.cols {
+                        break;
+                    }
+                    let v = self.blocks[base + lc];
+                    if v != 0.0 {
+                        out.append(c, v as f64);
+                    }
+                }
+            }
+            out.finalize_row();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{fd_poisson_2d, random_fixed_per_row};
+    use crate::sparse::DenseMatrix;
+
+    #[test]
+    fn round_trip_preserves_values() {
+        let m = random_fixed_per_row(37, 41, 4, 9); // non-multiple of tile
+        let bsr = BsrMatrix::from_csr(&m, 8);
+        assert_eq!(bsr.brows, 5);
+        assert_eq!(bsr.bcols, 6);
+        let back = bsr.to_csr();
+        let d1 = DenseMatrix::from_csr(&m);
+        let d2 = DenseMatrix::from_csr(&back);
+        // f32 narrowing tolerance.
+        assert!(d1.max_abs_diff(&d2) < 1e-6);
+    }
+
+    #[test]
+    fn fd_block_structure_is_banded() {
+        let m = fd_poisson_2d(16); // N=256
+        let bsr = BsrMatrix::from_csr(&m, 16);
+        assert_eq!(bsr.brows, 16);
+        // 5-point stencil with k=16 = tile: block rows touch at most
+        // {bi-1, bi, bi+1}.
+        for bi in 0..bsr.brows {
+            for &bj in bsr.block_row(bi) {
+                assert!((bj as isize - bi as isize).abs() <= 1, "({bi},{bj})");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_in_ratio_bounds() {
+        let m = random_fixed_per_row(64, 64, 5, 3);
+        let bsr = BsrMatrix::from_csr(&m, 16);
+        let fir = bsr.fill_in_ratio(crate::sparse::SparseShape::nnz(&m));
+        assert!((0.0..1.0).contains(&fir));
+        // Random structure at T=16: blocks are mostly padding.
+        assert!(fir > 0.5);
+    }
+
+    #[test]
+    fn empty_and_push() {
+        let mut b = BsrMatrix::empty(16, 16, 8);
+        let tile: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        b.push_block_row(&[(0, &tile[..])]);
+        b.push_block_row(&[]);
+        assert_eq!(b.nblocks(), 1);
+        let csr = b.to_csr();
+        assert_eq!(csr.get(1, 2), 10.0);
+        assert_eq!(csr.row_nnz(8), 0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Block-sparse (BSR) spMMM — the TPU adaptation of the paper's kernel
+//! (DESIGN.md §Hardware-Adaptation).
+//!
+//! The paper's Gustavson kernel accumulates scalar products into a dense
+//! temporary row; a TPU wants dense (T×T) tiles feeding the MXU instead.
+//! [`BsrMatrix`] stores the nonzero T×T blocks of a sparse matrix;
+//! [`spmmm::bsr_spmmm`] runs Gustavson *at block granularity* on the L3
+//! side (routing, batching, accumulator management — the irregular part
+//! a TPU cannot do) while all floating-point work happens in batched
+//! tile multiply-accumulates executed by the AOT JAX/Pallas artifact
+//! through PJRT ([`crate::runtime::TileEngine`]), or by a native Rust
+//! backend when artifacts are absent (tests, pure-CPU deployments).
+
+pub mod matrix;
+pub mod spmmm;
+
+pub use matrix::BsrMatrix;
+pub use spmmm::{bsr_spmmm, NativeBackend, TileBackend};

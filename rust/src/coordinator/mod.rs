@@ -1,0 +1,13 @@
+//! The L3 coordinator: job pipeline, worker pool, and the service loop
+//! behind the `blazert` CLI.
+//!
+//! The paper's contribution is a library + benchmark methodology rather
+//! than a serving system, so the coordinator is deliberately thin (per
+//! the architecture's guidance): it owns process lifecycle, a
+//! multi-threaded job pipeline for batch workloads ([`pipeline`]:
+//! generate -> multiply -> verify -> report), and the dispatch between
+//! the scalar kernels, the baselines, and the BSR/XLA path.
+
+pub mod pipeline;
+
+pub use pipeline::{run_jobs, Job, JobKind, JobResult};

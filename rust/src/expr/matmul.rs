@@ -1,0 +1,195 @@
+//! Multiplication expressions: sparse × sparse (all storage-order
+//! combinations) and sparse × vector.
+
+use super::Expression;
+use crate::kernels::spmv::spmv;
+use crate::kernels::{spmmm, spmmm_csc, spmmm_csr_csc, Strategy};
+use crate::sparse::convert::csr_to_csc;
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
+
+/// Lazy `CSR × CSR` product.
+#[derive(Clone, Copy, Debug)]
+pub struct MatMulExpr<'a> {
+    a: &'a CsrMatrix,
+    b: &'a CsrMatrix,
+}
+
+impl<'a> MatMulExpr<'a> {
+    /// Evaluate with an explicit storing strategy (the default `eval`
+    /// uses Combined — Blaze's shipped kernel).
+    pub fn eval_with(&self, strategy: Strategy) -> CsrMatrix {
+        spmmm(self.a, self.b, strategy)
+    }
+}
+
+impl Expression for MatMulExpr<'_> {
+    type Output = CsrMatrix;
+    fn eval(&self) -> CsrMatrix {
+        // The shipped kernel: pre-decided Combined (§Perf change 5).
+        crate::kernels::combined_pre::spmmm_combined_pre(self.a, self.b)
+    }
+}
+
+impl<'a> std::ops::Mul<&'a CsrMatrix> for &'a CsrMatrix {
+    type Output = MatMulExpr<'a>;
+    fn mul(self, rhs: &'a CsrMatrix) -> MatMulExpr<'a> {
+        assert_eq!(self.cols(), rhs.rows(), "dimension mismatch in A * B");
+        MatMulExpr { a: self, b: rhs }
+    }
+}
+
+/// Lazy mixed-order `CSR × CSC` product; evaluation inserts the §IV-A
+/// storage-order conversion of the right-hand side.
+#[derive(Clone, Copy, Debug)]
+pub struct MatMulMixedExpr<'a> {
+    a: &'a CsrMatrix,
+    b: &'a CscMatrix,
+}
+
+impl Expression for MatMulMixedExpr<'_> {
+    type Output = CsrMatrix;
+    fn eval(&self) -> CsrMatrix {
+        spmmm_csr_csc(self.a, self.b, Strategy::Combined)
+    }
+}
+
+impl<'a> std::ops::Mul<&'a CscMatrix> for &'a CsrMatrix {
+    type Output = MatMulMixedExpr<'a>;
+    fn mul(self, rhs: &'a CscMatrix) -> MatMulMixedExpr<'a> {
+        assert_eq!(self.cols(), rhs.rows(), "dimension mismatch in A * B");
+        MatMulMixedExpr { a: self, b: rhs }
+    }
+}
+
+/// Lazy column-major `CSC × CSC` product (column Gustavson kernel).
+#[derive(Clone, Copy, Debug)]
+pub struct MatMulCscExpr<'a> {
+    a: &'a CscMatrix,
+    b: &'a CscMatrix,
+}
+
+impl Expression for MatMulCscExpr<'_> {
+    type Output = CscMatrix;
+    fn eval(&self) -> CscMatrix {
+        spmmm_csc(self.a, self.b, Strategy::Combined)
+    }
+}
+
+impl<'a> std::ops::Mul<&'a CscMatrix> for &'a CscMatrix {
+    type Output = MatMulCscExpr<'a>;
+    fn mul(self, rhs: &'a CscMatrix) -> MatMulCscExpr<'a> {
+        assert_eq!(self.cols(), rhs.rows(), "dimension mismatch in A * B");
+        MatMulCscExpr { a: self, b: rhs }
+    }
+}
+
+/// Lazy mixed-order `CSC × CSR` product; converts the *left* operand.
+#[derive(Clone, Copy, Debug)]
+pub struct MatMulCscCsrExpr<'a> {
+    a: &'a CscMatrix,
+    b: &'a CsrMatrix,
+}
+
+impl Expression for MatMulCscCsrExpr<'_> {
+    type Output = CscMatrix;
+    fn eval(&self) -> CscMatrix {
+        let b_csc = csr_to_csc(self.b);
+        spmmm_csc(self.a, &b_csc, Strategy::Combined)
+    }
+}
+
+impl<'a> std::ops::Mul<&'a CsrMatrix> for &'a CscMatrix {
+    type Output = MatMulCscCsrExpr<'a>;
+    fn mul(self, rhs: &'a CsrMatrix) -> MatMulCscCsrExpr<'a> {
+        assert_eq!(self.cols(), rhs.rows(), "dimension mismatch in A * B");
+        MatMulCscCsrExpr { a: self, b: rhs }
+    }
+}
+
+/// Lazy sparse-matrix × dense-vector product.
+#[derive(Clone, Copy, Debug)]
+pub struct MatVecExpr<'a> {
+    a: &'a CsrMatrix,
+    x: &'a [f64],
+}
+
+impl Expression for MatVecExpr<'_> {
+    type Output = Vec<f64>;
+    fn eval(&self) -> Vec<f64> {
+        let mut y = vec![0.0; self.a.rows()];
+        spmv(self.a, self.x, &mut y);
+        y
+    }
+}
+
+impl MatVecExpr<'_> {
+    /// Evaluate into an existing buffer (no allocation — the form the CG
+    /// iteration uses).
+    pub fn eval_into(&self, y: &mut [f64]) {
+        spmv(self.a, self.x, y);
+    }
+}
+
+impl<'a> std::ops::Mul<&'a Vec<f64>> for &'a CsrMatrix {
+    type Output = MatVecExpr<'a>;
+    fn mul(self, rhs: &'a Vec<f64>) -> MatVecExpr<'a> {
+        assert_eq!(self.cols(), rhs.len(), "dimension mismatch in A * x");
+        MatVecExpr { a: self, x: rhs }
+    }
+}
+
+impl<'a> std::ops::Mul<&'a [f64]> for &'a CsrMatrix {
+    type Output = MatVecExpr<'a>;
+    fn mul(self, rhs: &'a [f64]) -> MatVecExpr<'a> {
+        assert_eq!(self.cols(), rhs.len(), "dimension mismatch in A * x");
+        MatVecExpr { a: self, x: rhs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_fixed_per_row;
+    use crate::sparse::DenseMatrix;
+
+    #[test]
+    fn csc_csr_mixed_product() {
+        let a = random_fixed_per_row(10, 14, 3, 1);
+        let b = random_fixed_per_row(14, 9, 3, 2);
+        let a_csc = csr_to_csc(&a);
+        let c = (&a_csc * &b).eval();
+        let oracle = DenseMatrix::from_csr(&a).matmul(&DenseMatrix::from_csr(&b));
+        assert!(DenseMatrix::from_csc(&c).max_abs_diff(&oracle) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_expression() {
+        let a = random_fixed_per_row(8, 6, 2, 3);
+        let x = vec![1.0; 6];
+        let y = (&a * &x).eval();
+        let expect: Vec<f64> = (0..8).map(|r| a.row_values(r).iter().sum()).collect();
+        for (p, q) in y.iter().zip(&expect) {
+            assert!((p - q).abs() < 1e-14);
+        }
+        let mut y2 = vec![0.0; 8];
+        (&a * &x).eval_into(&mut y2);
+        assert_eq!(y, y2);
+    }
+
+    #[test]
+    fn eval_with_strategy() {
+        let a = random_fixed_per_row(12, 12, 4, 5);
+        let b = random_fixed_per_row(12, 12, 4, 6);
+        let c1 = (&a * &b).eval_with(Strategy::Sort);
+        let c2 = (&a * &b).eval();
+        assert!(c1.approx_eq(&c2, 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn dimension_check_at_build() {
+        let a = random_fixed_per_row(4, 5, 2, 1);
+        let b = random_fixed_per_row(4, 5, 2, 2);
+        let _ = &a * &b; // 5 != 4
+    }
+}

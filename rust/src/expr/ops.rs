@@ -1,0 +1,217 @@
+//! Non-product matrix expressions: addition, subtraction, scaling,
+//! transposition.
+
+use super::Expression;
+use crate::sparse::{CsrMatrix, SparseShape};
+
+/// Merge two CSR rows with a combiner; appends results in sorted order.
+fn merge_rows(
+    out: &mut CsrMatrix,
+    (ai, av): (&[usize], &[f64]),
+    (bi, bv): (&[usize], &[f64]),
+    f: impl Fn(f64, f64) -> f64,
+) {
+    let (mut p, mut q) = (0usize, 0usize);
+    while p < ai.len() || q < bi.len() {
+        let (c, v) = if q >= bi.len() || (p < ai.len() && ai[p] < bi[q]) {
+            let r = (ai[p], f(av[p], 0.0));
+            p += 1;
+            r
+        } else if p >= ai.len() || bi[q] < ai[p] {
+            let r = (bi[q], f(0.0, bv[q]));
+            q += 1;
+            r
+        } else {
+            let r = (ai[p], f(av[p], bv[q]));
+            p += 1;
+            q += 1;
+            r
+        };
+        if v != 0.0 {
+            out.append(c, v);
+        }
+    }
+}
+
+/// Lazy sparse matrix addition.
+#[derive(Clone, Copy, Debug)]
+pub struct MatAddExpr<'a> {
+    a: &'a CsrMatrix,
+    b: &'a CsrMatrix,
+}
+
+impl Expression for MatAddExpr<'_> {
+    type Output = CsrMatrix;
+    fn eval(&self) -> CsrMatrix {
+        let mut out = CsrMatrix::new(self.a.rows(), self.a.cols());
+        out.reserve(self.a.nnz() + self.b.nnz());
+        for r in 0..self.a.rows() {
+            merge_rows(&mut out, self.a.row(r), self.b.row(r), |x, y| x + y);
+            out.finalize_row();
+        }
+        out
+    }
+}
+
+impl<'a> std::ops::Add<&'a CsrMatrix> for &'a CsrMatrix {
+    type Output = MatAddExpr<'a>;
+    fn add(self, rhs: &'a CsrMatrix) -> MatAddExpr<'a> {
+        assert_eq!(
+            (self.rows(), self.cols()),
+            (rhs.rows(), rhs.cols()),
+            "dimension mismatch in A + B"
+        );
+        MatAddExpr { a: self, b: rhs }
+    }
+}
+
+/// Lazy sparse matrix subtraction.
+#[derive(Clone, Copy, Debug)]
+pub struct MatSubExpr<'a> {
+    a: &'a CsrMatrix,
+    b: &'a CsrMatrix,
+}
+
+impl Expression for MatSubExpr<'_> {
+    type Output = CsrMatrix;
+    fn eval(&self) -> CsrMatrix {
+        let mut out = CsrMatrix::new(self.a.rows(), self.a.cols());
+        out.reserve(self.a.nnz() + self.b.nnz());
+        for r in 0..self.a.rows() {
+            merge_rows(&mut out, self.a.row(r), self.b.row(r), |x, y| x - y);
+            out.finalize_row();
+        }
+        out
+    }
+}
+
+impl<'a> std::ops::Sub<&'a CsrMatrix> for &'a CsrMatrix {
+    type Output = MatSubExpr<'a>;
+    fn sub(self, rhs: &'a CsrMatrix) -> MatSubExpr<'a> {
+        assert_eq!(
+            (self.rows(), self.cols()),
+            (rhs.rows(), rhs.cols()),
+            "dimension mismatch in A - B"
+        );
+        MatSubExpr { a: self, b: rhs }
+    }
+}
+
+/// Lazy scalar × matrix expression.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleExpr<'a> {
+    s: f64,
+    a: &'a CsrMatrix,
+}
+
+impl Expression for ScaleExpr<'_> {
+    type Output = CsrMatrix;
+    fn eval(&self) -> CsrMatrix {
+        let mut out = CsrMatrix::new(self.a.rows(), self.a.cols());
+        out.reserve(self.a.nnz());
+        for r in 0..self.a.rows() {
+            let (idx, val) = self.a.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                let sv = self.s * v;
+                if sv != 0.0 {
+                    out.append(c, sv);
+                }
+            }
+            out.finalize_row();
+        }
+        out
+    }
+}
+
+impl<'a> std::ops::Mul<&'a CsrMatrix> for f64 {
+    type Output = ScaleExpr<'a>;
+    fn mul(self, rhs: &'a CsrMatrix) -> ScaleExpr<'a> {
+        ScaleExpr { s: self, a: rhs }
+    }
+}
+
+impl<'a> std::ops::Mul<f64> for &'a CsrMatrix {
+    type Output = ScaleExpr<'a>;
+    fn mul(self, rhs: f64) -> ScaleExpr<'a> {
+        ScaleExpr { s: rhs, a: self }
+    }
+}
+
+/// Lazy transpose expression (evaluates via the O(nnz) counting
+/// transpose).
+#[derive(Clone, Copy, Debug)]
+pub struct TransposeExpr<'a> {
+    a: &'a CsrMatrix,
+}
+
+impl Expression for TransposeExpr<'_> {
+    type Output = CsrMatrix;
+    fn eval(&self) -> CsrMatrix {
+        self.a.transpose()
+    }
+}
+
+/// Extension trait providing `.t()` on matrix references.
+pub trait TransposeExt {
+    /// Lazy transpose.
+    fn t(&self) -> TransposeExpr<'_>;
+}
+
+impl TransposeExt for CsrMatrix {
+    fn t(&self) -> TransposeExpr<'_> {
+        TransposeExpr { a: self }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_fixed_per_row;
+    use crate::sparse::DenseMatrix;
+
+    #[test]
+    fn add_sub_scale_match_dense() {
+        let a = random_fixed_per_row(12, 10, 3, 1);
+        let b = random_fixed_per_row(12, 10, 4, 2);
+        let da = DenseMatrix::from_csr(&a);
+        let db = DenseMatrix::from_csr(&b);
+
+        let sum = (&a + &b).eval();
+        let dif = (&a - &b).eval();
+        let sc = (2.5 * &a).eval();
+        let sc2 = (&a * 2.5).eval();
+
+        for r in 0..12 {
+            for c in 0..10 {
+                assert!((sum.get(r, c) - (da[(r, c)] + db[(r, c)])).abs() < 1e-14);
+                assert!((dif.get(r, c) - (da[(r, c)] - db[(r, c)])).abs() < 1e-14);
+                assert!((sc.get(r, c) - 2.5 * da[(r, c)]).abs() < 1e-14);
+            }
+        }
+        assert!(sc.approx_eq(&sc2, 0.0));
+    }
+
+    #[test]
+    fn self_subtraction_is_structurally_empty() {
+        let a = random_fixed_per_row(8, 8, 3, 9);
+        let z = (&a - &a).eval();
+        assert_eq!(z.nnz(), 0, "exact cancellation dropped");
+    }
+
+    #[test]
+    fn transpose_expression() {
+        let a = random_fixed_per_row(6, 9, 2, 4);
+        let t = a.t().eval();
+        assert_eq!(t.rows(), 9);
+        for (r, c, v) in a.iter() {
+            assert_eq!(t.get(c, r), v);
+        }
+    }
+
+    #[test]
+    fn scale_by_zero_prunes() {
+        let a = random_fixed_per_row(5, 5, 2, 8);
+        let z = (0.0 * &a).eval();
+        assert_eq!(z.nnz(), 0);
+    }
+}

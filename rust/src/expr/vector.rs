@@ -1,0 +1,99 @@
+//! Dense-vector helpers for the iterative-solver examples (the CG
+//! algorithm of the companion study [12] in the paper's related work).
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = x + beta * y` (the CG direction update).
+pub fn xpby(x: &[f64], beta: f64, y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = xi + beta * *yi;
+    }
+}
+
+/// Conjugate-gradient solve of `A x = b` for symmetric positive-definite
+/// CSR `A`; returns (solution, iterations, final residual norm).
+pub fn cg(
+    a: &crate::sparse::CsrMatrix,
+    b: &[f64],
+    tol: f64,
+    max_iter: usize,
+) -> (Vec<f64>, usize, f64) {
+    use crate::kernels::spmv::spmv;
+    let n = b.len();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n];
+    let mut rr = dot(&r, &r);
+    let b_norm = norm2(b).max(f64::MIN_POSITIVE);
+    for it in 0..max_iter {
+        if rr.sqrt() / b_norm <= tol {
+            return (x, it, rr.sqrt());
+        }
+        spmv(a, &p, &mut ap);
+        let alpha = rr / dot(&p, &ap);
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rr_new = dot(&r, &r);
+        let beta = rr_new / rr;
+        xpby(&r, beta, &mut p);
+        rr = rr_new;
+    }
+    let res = rr.sqrt();
+    (x, max_iter, res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{fd_poisson_2d, fd_rhs_ones};
+    use crate::kernels::spmv::spmv;
+
+    #[test]
+    fn vector_ops() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[1.0, 2.0], &mut y);
+        assert_eq!(y, vec![3.0, 5.0]);
+        let mut p = vec![1.0, 1.0];
+        xpby(&[2.0, 2.0], 0.5, &mut p);
+        assert_eq!(p, vec![2.5, 2.5]);
+    }
+
+    #[test]
+    fn cg_solves_poisson() {
+        let k = 12;
+        let a = fd_poisson_2d(k);
+        let b = fd_rhs_ones(k);
+        let (x, iters, res) = cg(&a, &b, 1e-10, 2000);
+        assert!(iters < 2000, "converged in {iters} iterations");
+        assert!(res < 1e-8);
+        // Residual check: ||A x - b|| small.
+        let mut ax = vec![0.0; k * k];
+        spmv(&a, &x, &mut ax);
+        let mut r = ax;
+        axpy(-1.0, &b, &mut r);
+        assert!(norm2(&r) < 1e-7, "residual {}", norm2(&r));
+        // Solution is positive in the interior (max principle).
+        assert!(x.iter().all(|&v| v > 0.0));
+    }
+}

@@ -1,0 +1,97 @@
+//! Workload generators — the paper's two test-case families (§III) plus
+//! extensions used by examples and ablations.
+//!
+//! All generators are deterministic in their seed, fulfilling the
+//! Blazemark requirement that "randomly generated numbers and structures
+//! are identical for all tested libraries": every kernel/baseline in a
+//! comparison receives the *same* matrix objects, generated once.
+
+mod bands;
+mod fd;
+mod random;
+
+pub use bands::banded;
+pub use fd::{fd_poisson_2d, fd_rhs_ones};
+pub use random::{random_fill_ratio, random_fixed_per_row, random_rectangular};
+
+use crate::sparse::CsrMatrix;
+use crate::util::rng::Pcg64;
+
+/// The two workloads of the paper's evaluation, plus the Figure-8
+/// fill-ratio variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// Five-band matrix from a 5-point FD discretization of a Dirichlet
+    /// problem on a square — graphs marked "(FD)".
+    FiveBandFd,
+    /// Five random values at random locations per row — "(random)".
+    RandomFixed5,
+    /// Random values with a fixed 0.1% fill ratio per row (Figure 8).
+    RandomFill01Pct,
+}
+
+impl Workload {
+    /// Generate the N×N operand for this workload.
+    ///
+    /// For `FiveBandFd`, `n` is the matrix dimension and is rounded down
+    /// to the nearest perfect square's dimension (grid k×k with k²≤n,
+    /// k≥1) — the paper sweeps the number of matrix rows.
+    pub fn generate(self, n: usize, seed: u64) -> CsrMatrix {
+        match self {
+            Workload::FiveBandFd => {
+                let k = (n as f64).sqrt().floor() as usize;
+                fd_poisson_2d(k.max(1))
+            }
+            Workload::RandomFixed5 => random_fixed_per_row(n, n, 5, seed),
+            Workload::RandomFill01Pct => random_fill_ratio(n, n, 0.001, seed),
+        }
+    }
+
+    /// Short tag used in reports ("FD" / "random" per the paper's figure
+    /// captions).
+    pub fn tag(self) -> &'static str {
+        match self {
+            Workload::FiveBandFd => "FD",
+            Workload::RandomFixed5 => "random",
+            Workload::RandomFill01Pct => "random-0.1%",
+        }
+    }
+}
+
+/// Generate a pair (A, B) of same-workload operands with decorrelated
+/// seeds, as Blazemark does for `C = A * B`.
+pub fn operand_pair(w: Workload, n: usize, seed: u64) -> (CsrMatrix, CsrMatrix) {
+    let mut mix = Pcg64::new(seed);
+    let sa = mix.next_u64();
+    let sb = mix.next_u64();
+    (w.generate(n, sa), w.generate(n, sb))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseShape;
+
+    #[test]
+    fn workload_tags() {
+        assert_eq!(Workload::FiveBandFd.tag(), "FD");
+        assert_eq!(Workload::RandomFixed5.tag(), "random");
+    }
+
+    #[test]
+    fn operand_pair_is_deterministic_and_decorrelated() {
+        let (a1, b1) = operand_pair(Workload::RandomFixed5, 64, 42);
+        let (a2, b2) = operand_pair(Workload::RandomFixed5, 64, 42);
+        assert!(a1.approx_eq(&a2, 0.0));
+        assert!(b1.approx_eq(&b2, 0.0));
+        assert!(!a1.approx_eq(&b1, 0.0), "A and B differ");
+    }
+
+    #[test]
+    fn fd_workload_rounds_to_square() {
+        let m = Workload::FiveBandFd.generate(100, 0);
+        assert_eq!(m.rows(), 100); // 10x10 grid
+        let m = Workload::FiveBandFd.generate(99, 0);
+        assert_eq!(m.rows(), 81); // 9x9 grid
+    }
+}

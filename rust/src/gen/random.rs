@@ -1,0 +1,109 @@
+//! Randomly structured sparse matrices.
+//!
+//! Paper §III: "For each matrix five random numbers are placed on random
+//! locations in each row" — [`random_fixed_per_row`] with `per_row = 5`.
+//! Figure 8 uses "the same matrix generation algorithm ... but the fill
+//! ratio is 0.1% for each row instead of the fixed five elements" —
+//! [`random_fill_ratio`].
+
+use crate::sparse::CsrMatrix;
+use crate::util::rng::Pcg64;
+
+/// `rows × cols` matrix with exactly `per_row` nonzeros at distinct
+/// random locations in every row (clamped to `cols`), values uniform in
+/// `[-1, 1) \ {0}`.
+pub fn random_fixed_per_row(rows: usize, cols: usize, per_row: usize, seed: u64) -> CsrMatrix {
+    let mut rng = Pcg64::new(seed);
+    let k = per_row.min(cols);
+    let mut m = CsrMatrix::new(rows, cols);
+    m.reserve(rows * k);
+    for _ in 0..rows {
+        for c in rng.distinct_sorted(k, cols) {
+            m.append(c, rng.nonzero_value());
+        }
+        m.finalize_row();
+    }
+    m
+}
+
+/// `rows × cols` matrix where each row holds `round(fill * cols)` (at
+/// least 1) nonzeros at distinct random locations — the Figure-8
+/// generator with `fill = 0.001`.
+pub fn random_fill_ratio(rows: usize, cols: usize, fill: f64, seed: u64) -> CsrMatrix {
+    assert!((0.0..=1.0).contains(&fill), "fill ratio in [0,1]");
+    let per_row = ((fill * cols as f64).round() as usize).clamp(1, cols.max(1));
+    random_fixed_per_row(rows, cols, per_row, seed)
+}
+
+/// Rectangular random matrix with a Bernoulli(p) pattern — used by the
+/// rigid-body example for contact Jacobians, where row counts vary.
+pub fn random_rectangular(rows: usize, cols: usize, p: f64, seed: u64) -> CsrMatrix {
+    let mut rng = Pcg64::new(seed);
+    let mut m = CsrMatrix::new(rows, cols);
+    for _ in 0..rows {
+        for c in 0..cols {
+            if rng.bernoulli(p) {
+                m.append(c, rng.nonzero_value());
+            }
+        }
+        m.finalize_row();
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseShape;
+
+    #[test]
+    fn fixed_per_row_structure() {
+        let m = random_fixed_per_row(50, 80, 5, 1);
+        assert_eq!(m.rows(), 50);
+        assert_eq!(m.cols(), 80);
+        assert_eq!(m.nnz(), 250);
+        for r in 0..50 {
+            assert_eq!(m.row_nnz(r), 5);
+            let idx = m.row_indices(r);
+            assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = random_fixed_per_row(20, 20, 5, 9);
+        let b = random_fixed_per_row(20, 20, 5, 9);
+        let c = random_fixed_per_row(20, 20, 5, 10);
+        assert!(a.approx_eq(&b, 0.0));
+        assert!(!a.approx_eq(&c, 0.0));
+    }
+
+    #[test]
+    fn per_row_clamped_to_cols() {
+        let m = random_fixed_per_row(4, 3, 10, 2);
+        for r in 0..4 {
+            assert_eq!(m.row_nnz(r), 3);
+        }
+    }
+
+    #[test]
+    fn fill_ratio_matches() {
+        // 0.1% of 10000 columns = 10 per row.
+        let m = random_fill_ratio(100, 10_000, 0.001, 3);
+        for r in 0..100 {
+            assert_eq!(m.row_nnz(r), 10);
+        }
+        // Tiny matrices still get >= 1 per row.
+        let m = random_fill_ratio(5, 50, 0.001, 3);
+        for r in 0..5 {
+            assert_eq!(m.row_nnz(r), 1);
+        }
+    }
+
+    #[test]
+    fn rectangular_probabilistic() {
+        let m = random_rectangular(200, 100, 0.1, 5);
+        let fill = m.fill_ratio();
+        assert!((0.05..0.15).contains(&fill), "fill {fill} near 0.1");
+    }
+}

@@ -1,0 +1,124 @@
+//! The "classic" spMMM kernel (paper §IV-A): a sparse-dot-product between
+//! a row of A (CSR) and a column of B (CSC) *for each element of the
+//! resulting matrix*.
+//!
+//! This kernel exists as the paper's negative exemplar: both vectors are
+//! sparse, the merge suffers branch mispredictions, and "the results of
+//! these 'dot products' are zero most of the time" — its cost grows with
+//! N² index-merge work regardless of nnz, so "the classic approach does
+//! not show any significant performance for problem sizes greater than
+//! N = 200".
+
+use super::store::Sink;
+use super::tracer::{addr_of, MemTracer};
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
+
+/// Sparse dot product of a CSR row and a CSC column by two-pointer merge.
+/// Returns the scalar value; traces index loads for every comparison and
+/// value loads + 2 flops per index match.
+#[inline]
+fn sparse_dot<T: MemTracer>(
+    a_idx: &[usize],
+    a_val: &[f64],
+    b_idx: &[usize],
+    b_val: &[f64],
+    tr: &mut T,
+) -> f64 {
+    let mut sum = 0.0;
+    let (mut p, mut q) = (0usize, 0usize);
+    while p < a_idx.len() && q < b_idx.len() {
+        tr.load(addr_of(a_idx, p), 8);
+        tr.load(addr_of(b_idx, q), 8);
+        let (ia, ib) = (a_idx[p], b_idx[q]);
+        if ia == ib {
+            tr.load(addr_of(a_val, p), 8);
+            tr.load(addr_of(b_val, q), 8);
+            tr.flops(2);
+            sum += a_val[p] * b_val[q];
+            p += 1;
+            q += 1;
+        } else if ia < ib {
+            p += 1;
+        } else {
+            q += 1;
+        }
+    }
+    sum
+}
+
+/// Pure computation variant of the classic kernel: compute every element
+/// of C, never store, return a checksum (Figures 2 and 3, series
+/// "classic CSR × CSC").
+pub fn pure_classic<T: MemTracer>(a: &CsrMatrix, b: &CscMatrix, tr: &mut T) -> f64 {
+    assert_eq!(a.cols(), b.rows(), "inner dimension");
+    let mut checksum = 0.0;
+    for i in 0..a.rows() {
+        let (a_idx, a_val) = a.row(i);
+        for j in 0..b.cols() {
+            let (b_idx, b_val) = b.col(j);
+            checksum += sparse_dot(a_idx, a_val, b_idx, b_val, tr);
+        }
+    }
+    checksum
+}
+
+/// Full classic kernel: CSR × CSC → CSR, appending each nonzero dot
+/// product. The output arrives naturally in row-major sorted order, so
+/// the streaming `append`/`finalize_row` interface applies directly.
+pub fn spmmm_classic<T: MemTracer>(a: &CsrMatrix, b: &CscMatrix, tr: &mut T) -> CsrMatrix {
+    assert_eq!(a.cols(), b.rows(), "inner dimension");
+    let mut out = CsrMatrix::new(a.rows(), b.cols());
+    out.reserve(super::flops::required_multiplications_csc(a, b) as usize);
+    for i in 0..a.rows() {
+        let (a_idx, a_val) = a.row(i);
+        for j in 0..b.cols() {
+            let (b_idx, b_val) = b.col(j);
+            let v = sparse_dot(a_idx, a_val, b_idx, b_val, tr);
+            if v != 0.0 {
+                tr.store(out.tail_addr(), 16);
+                out.append(j, v);
+            }
+        }
+        out.finalize_row();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_fixed_per_row;
+    use crate::kernels::tracer::NullTracer;
+    use crate::sparse::convert::csr_to_csc;
+    use crate::sparse::DenseMatrix;
+
+    #[test]
+    fn matches_dense_oracle() {
+        let a = random_fixed_per_row(25, 30, 4, 7);
+        let b = random_fixed_per_row(30, 20, 5, 8);
+        let c = spmmm_classic(&a, &csr_to_csc(&b), &mut NullTracer);
+        let oracle = DenseMatrix::from_csr(&a).matmul(&DenseMatrix::from_csr(&b));
+        assert!(DenseMatrix::from_csr(&c).max_abs_diff(&oracle) < 1e-12);
+    }
+
+    #[test]
+    fn pure_checksum_matches_full_sum() {
+        let a = random_fixed_per_row(12, 12, 3, 1);
+        let b_csc = csr_to_csc(&random_fixed_per_row(12, 12, 3, 2));
+        let cs = pure_classic(&a, &b_csc, &mut NullTracer);
+        let full = spmmm_classic(&a, &b_csc, &mut NullTracer);
+        let sum: f64 = full.values().iter().sum();
+        assert!((cs - sum).abs() < 1e-10);
+    }
+
+    #[test]
+    fn sparse_dot_disjoint_and_overlap() {
+        let mut t = NullTracer;
+        assert_eq!(sparse_dot(&[0, 2], &[1.0, 2.0], &[1, 3], &[5.0, 5.0], &mut t), 0.0);
+        assert_eq!(
+            sparse_dot(&[0, 2, 5], &[1.0, 2.0, 3.0], &[2, 5], &[10.0, 100.0], &mut t),
+            320.0
+        );
+        assert_eq!(sparse_dot(&[], &[], &[1], &[1.0], &mut t), 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Flop counting and nonzero estimation (paper §III and §IV-B).
+
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
+
+/// Number of multiplications required for `C = A * B`:
+///
+/// Σ_{k} ā_k · b̄_k, where ā_k = nnz in column k of A and b̄_k = nnz in
+/// row k of B (paper §III). Computed in O(nnz(A)) by summing b̄ over A's
+/// entries — no per-column counting pass needed when A is CSR.
+pub fn required_multiplications(a: &CsrMatrix, b: &CsrMatrix) -> u64 {
+    assert_eq!(a.cols(), b.rows(), "inner dimension");
+    let mut mults = 0u64;
+    for &k in a.col_idx() {
+        mults += b.row_nnz(k) as u64;
+    }
+    mults
+}
+
+/// Same count with B in CSC format (needs B's per-row counts, O(nnz(B)) +
+/// O(rows(B)) scratch).
+pub fn required_multiplications_csc(a: &CsrMatrix, b: &CscMatrix) -> u64 {
+    assert_eq!(a.cols(), b.rows(), "inner dimension");
+    let mut row_nnz = vec![0u64; b.rows()];
+    for &r in b.row_idx() {
+        row_nnz[r] += 1;
+    }
+    a.col_idx().iter().map(|&k| row_nnz[k]).sum()
+}
+
+/// The flop count used for MFlop/s reporting: "the overall number of
+/// floating point operations is approximately twice the number of
+/// multiplications" — the paper's worst-case assumption (§III).
+pub fn spmmm_flops(a: &CsrMatrix, b: &CsrMatrix) -> u64 {
+    2 * required_multiplications(a, b)
+}
+
+/// Estimate of nnz(C) for pre-allocation (§IV-B): the number of required
+/// multiplications. "Each intermediate result either takes a place which
+/// is still zero or is added to another intermediate result. Due to this
+/// fact the number is always equal or higher than the number of non-zeros
+/// in the resulting matrix." Also cheap to improve: the estimate can
+/// never exceed rows·cols.
+pub fn nnz_estimate(a: &CsrMatrix, b: &CsrMatrix) -> usize {
+    let mults = required_multiplications(a, b) as usize;
+    mults.min(a.rows().saturating_mul(b.cols()))
+}
+
+/// Per-row upper bound on nnz of row r of C (used by the BSR scheduler
+/// and the Combined decision ablation): Σ_{k ∈ row r of A} b̄_k.
+pub fn row_nnz_estimate(a: &CsrMatrix, b: &CsrMatrix, r: usize) -> usize {
+    a.row_indices(r).iter().map(|&k| b.row_nnz(k)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{fd_poisson_2d, random_fixed_per_row};
+    use crate::sparse::convert::csr_to_csc;
+    use crate::sparse::DenseMatrix;
+
+    #[test]
+    fn count_matches_definition() {
+        // Direct Σ ā_k b̄_k with explicit column counts.
+        let a = random_fixed_per_row(30, 25, 4, 1);
+        let b = random_fixed_per_row(25, 40, 3, 2);
+        let mut a_col = vec![0u64; a.cols()];
+        for &c in a.col_idx() {
+            a_col[c] += 1;
+        }
+        let direct: u64 = (0..a.cols()).map(|k| a_col[k] * b.row_nnz(k) as u64).sum();
+        assert_eq!(required_multiplications(&a, &b), direct);
+        assert_eq!(spmmm_flops(&a, &b), 2 * direct);
+    }
+
+    #[test]
+    fn csr_and_csc_variants_agree() {
+        let a = random_fixed_per_row(20, 20, 5, 3);
+        let b = random_fixed_per_row(20, 20, 5, 4);
+        let b_csc = csr_to_csc(&b);
+        assert_eq!(
+            required_multiplications(&a, &b),
+            required_multiplications_csc(&a, &b_csc)
+        );
+    }
+
+    #[test]
+    fn estimate_never_underestimates() {
+        for seed in 0..10 {
+            let a = random_fixed_per_row(40, 40, 5, seed);
+            let b = random_fixed_per_row(40, 40, 5, seed + 100);
+            let est = nnz_estimate(&a, &b);
+            let exact = DenseMatrix::from_csr(&a)
+                .matmul(&DenseMatrix::from_csr(&b))
+                .to_csr()
+                .nnz();
+            assert!(est >= exact, "estimate {est} < exact {exact} (seed {seed})");
+        }
+    }
+
+    #[test]
+    fn estimate_capped_by_dense() {
+        // Dense-ish operands: mults would exceed rows*cols.
+        let a = random_fixed_per_row(10, 10, 10, 1);
+        let b = random_fixed_per_row(10, 10, 10, 2);
+        assert_eq!(nnz_estimate(&a, &b), 100);
+    }
+
+    #[test]
+    fn fd_counts() {
+        let a = fd_poisson_2d(8);
+        let m = required_multiplications(&a, &a);
+        // Every entry of A contributes b̄_k <= 5, and nnz(A) <= 5N.
+        assert!(m <= 25 * 64);
+        assert!(m > 0);
+        let row_est: usize = (0..a.rows()).map(|r| row_nnz_estimate(&a, &a, r)).sum();
+        assert_eq!(row_est as u64, m);
+    }
+}

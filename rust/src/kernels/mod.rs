@@ -1,0 +1,24 @@
+//! The paper's spMMM kernels.
+//!
+//! Organization follows §IV: the *pure computation* (Gustavson row-major
+//! traversal into a dense temporary, [`gustavson`]; the classic
+//! dot-product kernel, [`classic`]) is split from the *storing* of the
+//! result ([`store`]: Brute-Force double/bool/char, MinMax, MinMax+char,
+//! Sort, and the heuristic Combined strategy). [`spmmm`] composes the two
+//! into the full kernels the figures benchmark, [`flops`] provides the
+//! paper's flop count and nonzero estimation, and [`tracer`] lets the
+//! cache simulator replay the *identical* kernel code path for the
+//! model-guided analysis.
+
+pub mod classic;
+pub mod combined_pre;
+pub mod flops;
+pub mod gustavson;
+pub mod parallel;
+pub mod spmmm;
+pub mod spmv;
+pub mod store;
+pub mod tracer;
+
+pub use spmmm::{spmmm, spmmm_csc, spmmm_csr_csc, spmmm_traced, Strategy};
+pub use tracer::{MemTracer, NullTracer};

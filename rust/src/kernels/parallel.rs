@@ -1,0 +1,130 @@
+//! Shared-memory parallel spMMM — the paper's first future-work item
+//! (§VI: "the next step to improve the Blaze library is to include
+//! shared memory parallelization to exploit many- and multicore
+//! architectures").
+//!
+//! Row-major Gustavson parallelizes naturally over output rows: each
+//! worker computes a contiguous slab of C's rows with its own dense
+//! accumulator into a private CSR fragment; fragments concatenate in
+//! order (row_ptr offsets shifted). The result is bit-identical to the
+//! serial kernel. The expected "contention and saturation effects" of
+//! the paper show up as sub-linear scaling once the combined working
+//! set saturates the memory interface — the `ablation_threads` bench
+//! measures exactly that.
+
+use crate::kernels::store::{Accumulator, Combined};
+use crate::kernels::tracer::NullTracer;
+use crate::sparse::{CsrMatrix, SparseShape};
+
+/// Parallel `C = A · B` with the Combined storing strategy over
+/// `threads` workers. `threads == 1` degenerates to the serial kernel.
+pub fn par_spmmm(a: &CsrMatrix, b: &CsrMatrix, threads: usize) -> CsrMatrix {
+    assert_eq!(a.cols(), b.rows(), "inner dimension");
+    let threads = threads.max(1).min(a.rows().max(1));
+    if threads == 1 {
+        return crate::kernels::spmmm(a, b, crate::kernels::Strategy::Combined);
+    }
+    // Slab bounds: contiguous row ranges balanced by *row count* (a
+    // flop-balanced split is a perf-pass refinement measured in the
+    // ablation bench).
+    let rows = a.rows();
+    let bounds: Vec<(usize, usize)> = (0..threads)
+        .map(|t| (rows * t / threads, rows * (t + 1) / threads))
+        .collect();
+
+    let fragments: Vec<CsrMatrix> = std::thread::scope(|scope| {
+        let handles: Vec<_> = bounds
+            .iter()
+            .map(|&(lo, hi)| {
+                scope.spawn(move || {
+                    let mut acc = Combined::new(b.cols());
+                    let mut frag = CsrMatrix::new(hi - lo, b.cols());
+                    // Reserve this slab's share of the estimate.
+                    let est: usize =
+                        (lo..hi).map(|r| crate::kernels::flops::row_nnz_estimate(a, b, r)).sum();
+                    frag.reserve(est.min((hi - lo) * b.cols()));
+                    let mut tr = NullTracer;
+                    for r in lo..hi {
+                        let (a_idx, a_val) = a.row(r);
+                        for (&k, &va) in a_idx.iter().zip(a_val) {
+                            let (b_idx, b_val) = b.row(k);
+                            for (&j, &vb) in b_idx.iter().zip(b_val) {
+                                acc.update(j, va * vb, &mut tr);
+                            }
+                        }
+                        acc.flush(&mut frag, &mut tr);
+                        frag.finalize_row();
+                    }
+                    frag
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+
+    concat_row_slabs(a.rows(), b.cols(), &fragments)
+}
+
+/// Stitch row-slab fragments (in order) into one CSR matrix.
+fn concat_row_slabs(rows: usize, cols: usize, fragments: &[CsrMatrix]) -> CsrMatrix {
+    let total_nnz: usize = fragments.iter().map(|f| f.nnz()).sum();
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    let mut col_idx = Vec::with_capacity(total_nnz);
+    let mut values = Vec::with_capacity(total_nnz);
+    row_ptr.push(0usize);
+    let mut offset = 0usize;
+    for f in fragments {
+        for r in 0..f.rows() {
+            offset += f.row_nnz(r);
+            row_ptr.push(offset);
+        }
+        col_idx.extend_from_slice(f.col_idx());
+        values.extend_from_slice(f.values());
+    }
+    CsrMatrix::from_parts(rows, cols, row_ptr, col_idx, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{fd_poisson_2d, operand_pair, Workload};
+    use crate::kernels::{spmmm, Strategy};
+
+    #[test]
+    fn matches_serial_for_all_thread_counts() {
+        for w in [Workload::FiveBandFd, Workload::RandomFixed5] {
+            let (a, b) = operand_pair(w, 500, 3);
+            let serial = spmmm(&a, &b, Strategy::Combined);
+            for threads in [1, 2, 3, 4, 7, 16] {
+                let par = par_spmmm(&a, &b, threads);
+                assert!(par.approx_eq(&serial, 0.0), "{w:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let a = fd_poisson_2d(3); // 9 rows
+        let c = par_spmmm(&a, &a, 64);
+        let serial = spmmm(&a, &a, Strategy::Combined);
+        assert!(c.approx_eq(&serial, 0.0));
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = CsrMatrix::from_parts(4, 4, vec![0; 5], vec![], vec![]);
+        let c = par_spmmm(&a, &a, 4);
+        assert_eq!(c.nnz(), 0);
+        assert!(c.is_finalized());
+    }
+
+    #[test]
+    fn concat_preserves_row_structure() {
+        let (a, b) = operand_pair(Workload::RandomFixed5, 101, 9); // odd split
+        let serial = spmmm(&a, &b, Strategy::Combined);
+        let par = par_spmmm(&a, &b, 3);
+        for r in 0..101 {
+            assert_eq!(par.row(r), serial.row(r), "row {r}");
+        }
+    }
+}

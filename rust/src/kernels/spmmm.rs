@@ -1,0 +1,262 @@
+//! The full spMMM entry points: Gustavson compute + a storing strategy,
+//! composed per paper §IV, with automatic format conversion for
+//! mixed-storage-order operands.
+
+use super::gustavson;
+use super::store::{
+    Accumulator, BruteForceBool, BruteForceChar, BruteForceDouble, Combined, MinMax,
+    MinMaxChar, Sort, SortRadix,
+};
+use super::tracer::{MemTracer, NullTracer};
+use crate::sparse::convert::csc_to_csr;
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
+
+/// The storing strategies of paper §IV-B.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Scan the whole temporary ("Brute Force"-double).
+    BruteForceDouble,
+    /// Whole-vector scan gated by a bit-field lookup ("Brute Force"-bool).
+    BruteForceBool,
+    /// Whole-vector scan gated by a byte lookup ("Brute Force"-char).
+    BruteForceChar,
+    /// Scan only the `[min, max]` touched region.
+    MinMax,
+    /// MinMax with a byte lookup (paper: hurts considerably).
+    MinMaxChar,
+    /// Collect + sort touched indices, append only those.
+    Sort,
+    /// Sort with LSD radix sorting (§VI future-work ablation).
+    SortRadix,
+    /// Per-row MinMax/Sort decision — Blaze's shipped kernel.
+    Combined,
+}
+
+impl Strategy {
+    /// All strategies, in the order the paper introduces them.
+    pub const ALL: [Strategy; 8] = [
+        Strategy::BruteForceDouble,
+        Strategy::BruteForceBool,
+        Strategy::BruteForceChar,
+        Strategy::MinMax,
+        Strategy::MinMaxChar,
+        Strategy::Sort,
+        Strategy::SortRadix,
+        Strategy::Combined,
+    ];
+
+    /// Display name matching the paper's figure legends.
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::BruteForceDouble => BruteForceDouble::name(),
+            Strategy::BruteForceBool => BruteForceBool::name(),
+            Strategy::BruteForceChar => BruteForceChar::name(),
+            Strategy::MinMax => MinMax::name(),
+            Strategy::MinMaxChar => MinMaxChar::name(),
+            Strategy::Sort => Sort::name(),
+            Strategy::SortRadix => SortRadix::name(),
+            Strategy::Combined => Combined::name(),
+        }
+    }
+
+    /// Parse from the CLI/report name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Strategy> {
+        let l = s.to_ascii_lowercase();
+        Strategy::ALL
+            .into_iter()
+            .find(|st| st.name().to_ascii_lowercase() == l)
+            .or(match l.as_str() {
+                "bf-double" | "double" => Some(Strategy::BruteForceDouble),
+                "bf-bool" | "bool" => Some(Strategy::BruteForceBool),
+                "bf-char" | "char" => Some(Strategy::BruteForceChar),
+                "minmax" => Some(Strategy::MinMax),
+                "sort" => Some(Strategy::Sort),
+            "sort-radix" | "radix" => Some(Strategy::SortRadix),
+                "combined" => Some(Strategy::Combined),
+                _ => None,
+            })
+    }
+}
+
+fn run<A: Accumulator, T: MemTracer>(a: &CsrMatrix, b: &CsrMatrix, tr: &mut T) -> CsrMatrix {
+    let mut out = CsrMatrix::new(a.rows(), b.cols());
+    // Single allocation up front (paper §IV-B): reserve the
+    // never-underestimating multiplication count.
+    out.reserve(super::flops::nnz_estimate(a, b));
+    let mut acc = A::new(b.cols());
+    gustavson::rows_into(a, b, &mut acc, &mut out, tr);
+    out
+}
+
+/// Full spMMM `C = A · B` for CSR operands with the given storing
+/// strategy, memory-traffic-traced through `tr`.
+pub fn spmmm_traced<T: MemTracer>(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    strategy: Strategy,
+    tr: &mut T,
+) -> CsrMatrix {
+    match strategy {
+        Strategy::BruteForceDouble => run::<BruteForceDouble, T>(a, b, tr),
+        Strategy::BruteForceBool => run::<BruteForceBool, T>(a, b, tr),
+        Strategy::BruteForceChar => run::<BruteForceChar, T>(a, b, tr),
+        Strategy::MinMax => run::<MinMax, T>(a, b, tr),
+        Strategy::MinMaxChar => run::<MinMaxChar, T>(a, b, tr),
+        Strategy::Sort => run::<Sort, T>(a, b, tr),
+        Strategy::SortRadix => run::<SortRadix, T>(a, b, tr),
+        Strategy::Combined => run::<Combined, T>(a, b, tr),
+    }
+}
+
+/// Full spMMM `C = A · B` for CSR operands (untraced production path).
+pub fn spmmm(a: &CsrMatrix, b: &CsrMatrix, strategy: Strategy) -> CsrMatrix {
+    spmmm_traced(a, b, strategy, &mut NullTracer)
+}
+
+/// Mixed-order multiply CSR × CSC → CSR: converts the right-hand side to
+/// CSR first (linear in nnz, §IV-A) and then runs the row-major kernel —
+/// the "CSR × CSC (with conversion)" series of Figures 2/3 and the
+/// Blaze behaviour benchmarked in Figures 11/12.
+pub fn spmmm_csr_csc(a: &CsrMatrix, b: &CscMatrix, strategy: Strategy) -> CsrMatrix {
+    let b_csr = csc_to_csr(b);
+    spmmm(a, &b_csr, strategy)
+}
+
+/// Column-major multiply CSC × CSC → CSC via the column Gustavson
+/// algorithm.
+pub fn spmmm_csc(a: &CscMatrix, b: &CscMatrix, strategy: Strategy) -> CscMatrix {
+    fn run_csc<A: Accumulator>(a: &CscMatrix, b: &CscMatrix) -> CscMatrix {
+        let mut out = CscMatrix::new(a.rows(), b.cols());
+        let a_csr = csc_to_csr(a); // only for the estimate; O(nnz)
+        let b_csr = csc_to_csr(b);
+        out.reserve(super::flops::nnz_estimate(&a_csr, &b_csr));
+        let mut acc = A::new(a.rows());
+        gustavson::cols_into(a, b, &mut acc, &mut out, &mut NullTracer);
+        out
+    }
+    match strategy {
+        Strategy::BruteForceDouble => run_csc::<BruteForceDouble>(a, b),
+        Strategy::BruteForceBool => run_csc::<BruteForceBool>(a, b),
+        Strategy::BruteForceChar => run_csc::<BruteForceChar>(a, b),
+        Strategy::MinMax => run_csc::<MinMax>(a, b),
+        Strategy::MinMaxChar => run_csc::<MinMaxChar>(a, b),
+        Strategy::Sort => run_csc::<Sort>(a, b),
+        Strategy::SortRadix => run_csc::<SortRadix>(a, b),
+        Strategy::Combined => run_csc::<Combined>(a, b),
+    }
+}
+
+/// Convenience: CSR×CSR multiply with the shipped default (Combined).
+pub fn multiply(a: &CsrMatrix, b: &CsrMatrix) -> CsrMatrix {
+    spmmm(a, b, Strategy::Combined)
+}
+
+/// Ablation entry: Combined with a custom decision factor (default 2).
+pub fn spmmm_combined_factor(a: &CsrMatrix, b: &CsrMatrix, factor: usize) -> CsrMatrix {
+    let mut out = CsrMatrix::new(a.rows(), b.cols());
+    out.reserve(super::flops::nnz_estimate(a, b));
+    let mut acc = Combined::with_factor(b.cols(), factor);
+    gustavson::rows_into(a, b, &mut acc, &mut out, &mut NullTracer);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{fd_poisson_2d, random_fixed_per_row};
+    use crate::sparse::DenseMatrix;
+
+    #[test]
+    fn all_strategies_match_oracle_and_each_other() {
+        let a = random_fixed_per_row(30, 30, 5, 21);
+        let b = random_fixed_per_row(30, 30, 5, 22);
+        let oracle = DenseMatrix::from_csr(&a).matmul(&DenseMatrix::from_csr(&b));
+        let reference = spmmm(&a, &b, Strategy::BruteForceDouble);
+        assert!(DenseMatrix::from_csr(&reference).max_abs_diff(&oracle) < 1e-12);
+        for s in Strategy::ALL {
+            let c = spmmm(&a, &b, s);
+            assert!(
+                c.approx_eq(&reference, 0.0),
+                "strategy {} differs from reference",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fd_squared_matches_oracle() {
+        let a = fd_poisson_2d(9);
+        let c = multiply(&a, &a);
+        let oracle = DenseMatrix::from_csr(&a).matmul(&DenseMatrix::from_csr(&a));
+        assert!(DenseMatrix::from_csr(&c).max_abs_diff(&oracle) < 1e-12);
+        // A² of the 5-point stencil is a 9-point-ish stencil: bounded row
+        // population.
+        assert!((0..c.rows()).all(|r| c.row_nnz(r) <= 13));
+    }
+
+    #[test]
+    fn csr_csc_with_conversion_matches() {
+        let a = random_fixed_per_row(20, 25, 4, 1);
+        let b = random_fixed_per_row(25, 15, 3, 2);
+        let b_csc = crate::sparse::convert::csr_to_csc(&b);
+        let via_conv = spmmm_csr_csc(&a, &b_csc, Strategy::Combined);
+        let direct = spmmm(&a, &b, Strategy::Combined);
+        assert!(via_conv.approx_eq(&direct, 0.0));
+    }
+
+    #[test]
+    fn csc_kernel_matches_row_major() {
+        let a = random_fixed_per_row(18, 22, 4, 5);
+        let b = random_fixed_per_row(22, 19, 3, 6);
+        let c_row = spmmm(&a, &b, Strategy::Combined);
+        let c_col = spmmm_csc(
+            &crate::sparse::convert::csr_to_csc(&a),
+            &crate::sparse::convert::csr_to_csc(&b),
+            Strategy::Combined,
+        );
+        let d_row = DenseMatrix::from_csr(&c_row);
+        let d_col = DenseMatrix::from_csc(&c_col);
+        assert!(d_row.max_abs_diff(&d_col) < 1e-12);
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        let a = random_fixed_per_row(7, 40, 5, 9);
+        let b = random_fixed_per_row(40, 3, 2, 10);
+        let c = multiply(&a, &b);
+        assert_eq!(c.rows(), 7);
+        assert_eq!(c.cols(), 3);
+        let oracle = DenseMatrix::from_csr(&a).matmul(&DenseMatrix::from_csr(&b));
+        assert!(DenseMatrix::from_csr(&c).max_abs_diff(&oracle) < 1e-12);
+    }
+
+    #[test]
+    fn result_capacity_single_allocation() {
+        let a = random_fixed_per_row(50, 50, 5, 3);
+        let b = random_fixed_per_row(50, 50, 5, 4);
+        let est = crate::kernels::flops::nnz_estimate(&a, &b);
+        let c = spmmm(&a, &b, Strategy::Combined);
+        assert!(c.nnz() <= est, "estimate is an upper bound");
+        assert!(c.capacity() >= c.nnz());
+    }
+
+    #[test]
+    fn strategy_parse_round_trip() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::parse("minmax"), Some(Strategy::MinMax));
+        assert_eq!(Strategy::parse("nope"), None);
+    }
+
+    #[test]
+    fn combined_factor_ablation_same_result() {
+        let a = random_fixed_per_row(25, 25, 5, 7);
+        let b = random_fixed_per_row(25, 25, 5, 8);
+        let c2 = multiply(&a, &b);
+        for factor in [1usize, 4, 16] {
+            let c = spmmm_combined_factor(&a, &b, factor);
+            assert!(c.approx_eq(&c2, 0.0), "factor {factor}");
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Sparse matrix–vector multiplication.
+//!
+//! Not a figure of this paper, but part of the Blaze framework the paper
+//! situates itself in (the companion study [12] benchmarks the CG
+//! algorithm). Used by the CG example and the expression layer.
+
+use super::tracer::{addr_of, MemTracer, NullTracer};
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
+
+/// `y = A · x` for CSR `A` (traced).
+pub fn spmv_traced<T: MemTracer>(a: &CsrMatrix, x: &[f64], y: &mut [f64], tr: &mut T) {
+    assert_eq!(x.len(), a.cols(), "x length");
+    assert_eq!(y.len(), a.rows(), "y length");
+    for r in 0..a.rows() {
+        let (idx, val) = a.row(r);
+        let mut sum = 0.0;
+        for (p, (&c, &v)) in idx.iter().zip(val).enumerate() {
+            tr.load(addr_of(idx, p), 8);
+            tr.load(addr_of(val, p), 8);
+            tr.load(addr_of(x, c), 8);
+            tr.flops(2);
+            sum += v * x[c];
+        }
+        tr.store(addr_of(y, r), 8);
+        y[r] = sum;
+    }
+}
+
+/// `y = A · x` for CSR `A`.
+pub fn spmv(a: &CsrMatrix, x: &[f64], y: &mut [f64]) {
+    spmv_traced(a, x, y, &mut NullTracer)
+}
+
+/// `y = A · x` for CSC `A` (scatter form).
+pub fn spmv_csc(a: &CscMatrix, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), a.cols(), "x length");
+    assert_eq!(y.len(), a.rows(), "y length");
+    y.fill(0.0);
+    for c in 0..a.cols() {
+        let xc = x[c];
+        if xc == 0.0 {
+            continue;
+        }
+        let (idx, val) = a.col(c);
+        for (&r, &v) in idx.iter().zip(val) {
+            y[r] += v * xc;
+        }
+    }
+}
+
+/// `y = Aᵀ · x` for CSR `A` (gather on columns = scatter over rows).
+pub fn spmv_transpose(a: &CsrMatrix, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), a.rows(), "x length");
+    assert_eq!(y.len(), a.cols(), "y length");
+    y.fill(0.0);
+    for r in 0..a.rows() {
+        let xr = x[r];
+        if xr == 0.0 {
+            continue;
+        }
+        let (idx, val) = a.row(r);
+        for (&c, &v) in idx.iter().zip(val) {
+            y[c] += v * xr;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{fd_poisson_2d, random_fixed_per_row};
+    use crate::sparse::convert::csr_to_csc;
+    use crate::sparse::DenseMatrix;
+
+    fn dense_spmv(a: &DenseMatrix, x: &[f64]) -> Vec<f64> {
+        (0..a.rows())
+            .map(|r| a.row(r).iter().zip(x).map(|(&v, &xv)| v * xv).sum())
+            .collect()
+    }
+
+    #[test]
+    fn matches_dense() {
+        let a = random_fixed_per_row(30, 20, 4, 3);
+        let x: Vec<f64> = (0..20).map(|i| i as f64 * 0.5 - 3.0).collect();
+        let mut y = vec![0.0; 30];
+        spmv(&a, &x, &mut y);
+        let oracle = dense_spmv(&DenseMatrix::from_csr(&a), &x);
+        for (a, b) in y.iter().zip(&oracle) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn csc_and_transpose_variants() {
+        let a = random_fixed_per_row(15, 25, 5, 7);
+        let x: Vec<f64> = (0..25).map(|i| (i as f64).sin()).collect();
+        let mut y1 = vec![0.0; 15];
+        spmv(&a, &x, &mut y1);
+        let mut y2 = vec![0.0; 15];
+        spmv_csc(&csr_to_csc(&a), &x, &mut y2);
+        for (p, q) in y1.iter().zip(&y2) {
+            assert!((p - q).abs() < 1e-12);
+        }
+        // Transpose: A^T x == (x^T A)^T.
+        let xr: Vec<f64> = (0..15).map(|i| i as f64 + 1.0).collect();
+        let mut yt = vec![0.0; 25];
+        spmv_transpose(&a, &xr, &mut yt);
+        let at = a.transpose();
+        let mut yt2 = vec![0.0; 25];
+        spmv(&at, &xr, &mut yt2);
+        for (p, q) in yt.iter().zip(&yt2) {
+            assert!((p - q).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn laplacian_of_constant_vector() {
+        // For the FD Laplacian, interior rows sum to zero.
+        let k = 6;
+        let a = fd_poisson_2d(k);
+        let x = vec![1.0; k * k];
+        let mut y = vec![0.0; k * k];
+        spmv(&a, &x, &mut y);
+        // Interior point (2,2):
+        let interior = 2 * k + 2;
+        assert_eq!(y[interior], 0.0);
+        // Corner: 4 - 2 = 2.
+        assert_eq!(y[0], 2.0);
+    }
+}

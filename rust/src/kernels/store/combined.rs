@@ -1,0 +1,202 @@
+//! The "Combined" storing strategy (paper §IV-B, Figures 6/7) — the
+//! kernel shipped as Blaze's fastest: per row, choose between the MinMax
+//! scan and the Sort path. "The current implementation uses 'MinMax' if
+//! its region is smaller than twice the number of non-zero values in this
+//! row and 'Sort' in all other cases. ... it is more important that the
+//! decision can be done quickly than that it is precise."
+
+use super::{Accumulator, Sink};
+use crate::kernels::tracer::{addr_of, MemTracer};
+
+/// Combined MinMax/Sort strategy with a per-row decision.
+#[derive(Clone, Debug)]
+pub struct Combined {
+    temp: Vec<f64>,
+    stamps: Vec<u64>,
+    stamp: u64,
+    indices: Vec<usize>,
+    min: usize,
+    max: usize,
+    /// `region < factor * touched` chooses MinMax; the paper uses 2.
+    factor: usize,
+    /// Decision counters (exposed for the ablation bench).
+    pub minmax_rows: u64,
+    /// Rows stored via the Sort path.
+    pub sort_rows: u64,
+}
+
+impl Combined {
+    /// Variant with a non-default decision factor (ablation of the
+    /// paper's future-work item "the decision criterion ... might be
+    /// further improved").
+    pub fn with_factor(size: usize, factor: usize) -> Self {
+        let mut c = <Self as Accumulator>::new(size);
+        c.factor = factor;
+        c
+    }
+}
+
+impl Accumulator for Combined {
+    fn new(size: usize) -> Self {
+        Combined {
+            temp: vec![0.0; size],
+            stamps: vec![0; size],
+            // 1, not 0: zero-initialized stamps must not look "touched".
+            stamp: 1,
+            indices: Vec::new(),
+            min: usize::MAX,
+            max: 0,
+            factor: 2,
+            minmax_rows: 0,
+            sort_rows: 0,
+        }
+    }
+
+    #[inline(always)]
+    fn update<T: MemTracer>(&mut self, idx: usize, delta: f64, tr: &mut T) {
+        // Perf notes (§Perf log, changes 2+3): first touch overwrites
+        // (no zero-load), and the min/max tracking lives in the
+        // first-touch branch only — repeat touches of the same index
+        // cannot move the bounds.
+        tr.load(addr_of(&self.stamps, idx), 8);
+        if self.stamps[idx] != self.stamp {
+            tr.store(addr_of(&self.stamps, idx), 8);
+            self.stamps[idx] = self.stamp;
+            self.indices.push(idx);
+            tr.store(self.indices.as_ptr() as usize + 8 * (self.indices.len() - 1), 8);
+            tr.store(addr_of(&self.temp, idx), 8);
+            self.temp[idx] = delta;
+            self.min = self.min.min(idx);
+            self.max = self.max.max(idx);
+        } else {
+            tr.load(addr_of(&self.temp, idx), 8);
+            tr.store(addr_of(&self.temp, idx), 8);
+            self.temp[idx] += delta;
+        }
+    }
+
+    fn flush_sink<S: Sink, T: MemTracer>(&mut self, out: &mut S, tr: &mut T) {
+        if self.indices.is_empty() {
+            self.stamp += 1;
+            return;
+        }
+        let region = self.max - self.min + 1;
+        if region < self.factor * self.indices.len() {
+            // MinMax path: dense scan of the touched region. Untouched
+            // positions in the region are zero (all-zero invariant), so
+            // the value test suffices.
+            self.minmax_rows += 1;
+            for j in self.min..=self.max {
+                tr.load(addr_of(&self.temp, j), 8);
+                let v = self.temp[j];
+                if v != 0.0 {
+                    tr.store(out.tail_addr(), 16);
+                    out.append_entry(j, v);
+                    tr.store(addr_of(&self.temp, j), 8);
+                    self.temp[j] = 0.0;
+                }
+            }
+        } else {
+            // Sort path.
+            self.sort_rows += 1;
+            super::Sort::sort_indices(&mut self.indices, tr);
+            for &j in &self.indices {
+                tr.load(addr_of(&self.temp, j), 8);
+                let v = self.temp[j];
+                if v != 0.0 {
+                    tr.store(out.tail_addr(), 16);
+                    out.append_entry(j, v);
+                }
+                tr.store(addr_of(&self.temp, j), 8);
+                self.temp[j] = 0.0;
+            }
+        }
+        self.indices.clear();
+        self.stamp += 1;
+        self.min = usize::MAX;
+        self.max = 0;
+    }
+
+    fn name() -> &'static str {
+        "Combined"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseShape;
+    use crate::kernels::tracer::NullTracer;
+    use crate::sparse::CsrMatrix;
+
+    #[test]
+    fn dense_row_takes_minmax_path() {
+        let mut acc = Combined::new(100);
+        let mut out = CsrMatrix::new(1, 100);
+        let mut tr = NullTracer;
+        // 10 touches in a region of 10: region(10) < 2*10 -> MinMax.
+        for j in 20..30 {
+            acc.update(j, 1.0, &mut tr);
+        }
+        acc.flush(&mut out, &mut tr);
+        out.finalize_row();
+        assert_eq!(acc.minmax_rows, 1);
+        assert_eq!(acc.sort_rows, 0);
+        assert_eq!(out.nnz(), 10);
+    }
+
+    #[test]
+    fn scattered_row_takes_sort_path() {
+        let mut acc = Combined::new(1000);
+        let mut out = CsrMatrix::new(1, 1000);
+        let mut tr = NullTracer;
+        // 3 touches spread over 900: region >= 2*3 -> Sort.
+        for j in [10usize, 500, 909] {
+            acc.update(j, 2.0, &mut tr);
+        }
+        acc.flush(&mut out, &mut tr);
+        out.finalize_row();
+        assert_eq!(acc.sort_rows, 1);
+        assert_eq!(out.row(0).0, &[10usize, 500, 909][..]);
+    }
+
+    #[test]
+    fn paths_interleave_cleanly() {
+        let mut acc = Combined::new(64);
+        let mut out = CsrMatrix::new(3, 64);
+        let mut tr = NullTracer;
+        // Row 0: dense -> minmax.
+        for j in 0..8 {
+            acc.update(j, 1.0, &mut tr);
+        }
+        acc.flush(&mut out, &mut tr);
+        out.finalize_row();
+        // Row 1: scattered -> sort.
+        acc.update(1, 1.0, &mut tr);
+        acc.update(60, 1.0, &mut tr);
+        acc.flush(&mut out, &mut tr);
+        out.finalize_row();
+        // Row 2: empty.
+        acc.flush(&mut out, &mut tr);
+        out.finalize_row();
+        assert_eq!(acc.minmax_rows, 1);
+        assert_eq!(acc.sort_rows, 1);
+        assert_eq!(out.row_nnz(0), 8);
+        assert_eq!(out.row_nnz(1), 2);
+        assert_eq!(out.row_nnz(2), 0);
+    }
+
+    #[test]
+    fn custom_factor_changes_decision() {
+        // factor=1: region(10) >= 1*10 -> Sort even for the dense row.
+        let mut acc = Combined::with_factor(100, 1);
+        let mut out = CsrMatrix::new(1, 100);
+        let mut tr = NullTracer;
+        for j in 20..30 {
+            acc.update(j, 1.0, &mut tr);
+        }
+        acc.flush(&mut out, &mut tr);
+        out.finalize_row();
+        assert_eq!(acc.sort_rows, 1);
+    }
+}

@@ -1,0 +1,186 @@
+//! Storing strategies for the spMMM result (paper §IV-B).
+//!
+//! The Gustavson driver computes a dense temporary representation of each
+//! result row; "the way the temporary vector is converted to a sparse row
+//! is crucial". Each strategy here is an [`Accumulator`]: it receives the
+//! `temp[j] += value` updates of the inner loop (adding its own
+//! bookkeeping) and then flushes the row into the result matrix through
+//! the streaming `append`/`finalize` interface:
+//!
+//! * [`BruteForceDouble`] — scan the whole temporary, append nonzeros;
+//! * [`BruteForceBool`] — additional bit-field lookup vector (the
+//!   `std::vector<bool>` of the paper: 512 positions per cache line,
+//!   but extra Boolean ops per entry — the worst performer);
+//! * [`BruteForceChar`] — additional byte lookup vector;
+//! * [`MinMax`] — track the lowest/highest touched index, scan only that
+//!   region;
+//! * [`MinMaxChar`] — MinMax plus a char lookup (the paper shows the
+//!   lookup *hurts* here);
+//! * [`Sort`] — collect touched indices in a small vector, sort it, and
+//!   append only those positions;
+//! * [`Combined`] — per-row heuristic choice between MinMax and Sort
+//!   (the kernel shipped as Blaze's fastest).
+//!
+//! Invariant shared by all strategies: outside of a row computation the
+//! dense temporary is entirely zero, and `flush` appends exactly the
+//! positions whose value is nonzero, in increasing index order. This
+//! makes every strategy produce bit-identical result matrices — a
+//! property test relies on it.
+
+mod brute_force;
+mod combined;
+mod minmax;
+mod radix;
+mod sort;
+
+pub use brute_force::{BruteForceBool, BruteForceChar, BruteForceDouble};
+pub use combined::Combined;
+pub use minmax::{MinMax, MinMaxChar};
+pub use radix::{radix_sort, SortRadix};
+pub use sort::Sort;
+
+use super::tracer::MemTracer;
+use crate::sparse::{CscMatrix, CsrMatrix};
+
+/// Where a flushed row/column lands. Implemented by [`CsrMatrix`]
+/// (row-major flush) and [`CscMatrix`] (column-major flush), so every
+/// strategy works for both storage orders.
+pub trait Sink {
+    /// Append an entry to the current row/column (increasing index
+    /// order).
+    fn append_entry(&mut self, idx: usize, value: f64);
+    /// Address just past the last stored value (for store tracing).
+    fn tail_addr(&self) -> usize;
+}
+
+impl Sink for CsrMatrix {
+    #[inline(always)]
+    fn append_entry(&mut self, idx: usize, value: f64) {
+        self.append(idx, value);
+    }
+    #[inline(always)]
+    fn tail_addr(&self) -> usize {
+        self.values().as_ptr() as usize + 8 * self.values().len()
+    }
+}
+
+impl Sink for CscMatrix {
+    #[inline(always)]
+    fn append_entry(&mut self, idx: usize, value: f64) {
+        self.append(idx, value);
+    }
+    #[inline(always)]
+    fn tail_addr(&self) -> usize {
+        self.values().as_ptr() as usize + 8 * self.values().len()
+    }
+}
+
+/// A dense-temporary accumulator with a row-flush policy — one per paper
+/// storing strategy.
+pub trait Accumulator {
+    /// Create for a temporary of length `size` (the column count of C
+    /// for row-major, the row count for column-major).
+    fn new(size: usize) -> Self;
+
+    /// `temp[idx] += delta`, plus strategy bookkeeping. Called from the
+    /// Gustavson inner loop; `tr` observes this strategy's real traffic.
+    fn update<T: MemTracer>(&mut self, idx: usize, delta: f64, tr: &mut T);
+
+    /// Convert the accumulated dense row into sparse appends on `out`
+    /// and restore the all-zero invariant.
+    fn flush_sink<S: Sink, T: MemTracer>(&mut self, out: &mut S, tr: &mut T);
+
+    /// Row-major flush.
+    #[inline(always)]
+    fn flush<T: MemTracer>(&mut self, out: &mut CsrMatrix, tr: &mut T) {
+        self.flush_sink(out, tr);
+    }
+
+    /// Column-major flush.
+    #[inline(always)]
+    fn flush_csc<T: MemTracer>(&mut self, out: &mut CscMatrix, tr: &mut T) {
+        self.flush_sink(out, tr);
+    }
+
+    /// Human-readable strategy name (reports/benchmarks).
+    fn name() -> &'static str;
+}
+
+/// A plain bit vector (u64 words) modeling `std::vector<bool>`'s packed
+/// representation: "holds information for 512 positions per cache line
+/// instead of 8 doubles or 64 chars".
+#[derive(Clone, Debug, Default)]
+pub struct BitVec {
+    words: Vec<u64>,
+}
+
+impl BitVec {
+    /// All-false bit vector of length >= `len`.
+    pub fn zeros(len: usize) -> Self {
+        BitVec { words: vec![0u64; len.div_ceil(64)] }
+    }
+
+    /// Address of the word holding bit `i` (for tracing).
+    #[inline(always)]
+    pub fn word_addr(&self, i: usize) -> usize {
+        self.words.as_ptr() as usize + 8 * (i / 64)
+    }
+
+    /// Set bit `i`.
+    #[inline(always)]
+    pub fn set(&mut self, i: usize) {
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Clear bit `i`.
+    #[inline(always)]
+    pub fn clear(&mut self, i: usize) {
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    /// Read bit `i`.
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> bool {
+        (self.words[i / 64] >> (i % 64)) & 1 != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitvec_set_get_clear() {
+        let mut b = BitVec::zeros(130);
+        assert!(!b.get(0));
+        b.set(0);
+        b.set(63);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(63) && b.get(64) && b.get(129));
+        assert!(!b.get(1) && !b.get(65) && !b.get(128));
+        b.clear(64);
+        assert!(!b.get(64));
+        assert!(b.get(63));
+    }
+
+    #[test]
+    fn bitvec_word_addresses() {
+        let b = BitVec::zeros(256);
+        assert_eq!(b.word_addr(63), b.word_addr(0));
+        assert_eq!(b.word_addr(64) - b.word_addr(0), 8);
+    }
+
+    #[test]
+    fn sink_appends_for_both_orders() {
+        let mut csr = CsrMatrix::new(1, 4);
+        Sink::append_entry(&mut csr, 1, 2.0);
+        csr.finalize_row();
+        assert_eq!(csr.get(0, 1), 2.0);
+
+        let mut csc = CscMatrix::new(4, 1);
+        Sink::append_entry(&mut csc, 2, 3.0);
+        csc.finalize_col();
+        assert_eq!(csc.get(2, 0), 3.0);
+    }
+}

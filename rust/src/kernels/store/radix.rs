@@ -1,0 +1,171 @@
+//! Radix-sort variant of the Sort strategy — the paper's future-work
+//! item (§VI): "Alternative sorting algorithms which are better suited
+//! to sort short lists of unique integral numbers may also be
+//! advantageous."
+//!
+//! LSD radix sort with 8-bit digits and a pass count derived from the
+//! column count (indices are bounded by C's columns, so wide matrices
+//! take more passes). The `ablation_sort` bench compares it with the
+//! comparison sort across row populations.
+
+use super::{Accumulator, Sink};
+use crate::kernels::tracer::{addr_of, MemTracer};
+
+/// LSD radix sort for index lists bounded by `max_value`.
+pub fn radix_sort(indices: &mut Vec<usize>, scratch: &mut Vec<usize>, max_value: usize) {
+    let n = indices.len();
+    if n <= 1 {
+        return;
+    }
+    // Small lists: insertion sort beats any counting pass.
+    if n <= 16 {
+        for i in 1..n {
+            let v = indices[i];
+            let mut j = i;
+            while j > 0 && indices[j - 1] > v {
+                indices[j] = indices[j - 1];
+                j -= 1;
+            }
+            indices[j] = v;
+        }
+        return;
+    }
+    let bits = usize::BITS - max_value.max(1).leading_zeros();
+    let passes = bits.div_ceil(8).max(1);
+    scratch.clear();
+    scratch.resize(n, 0);
+    let mut counts = [0usize; 256];
+    for p in 0..passes {
+        let shift = 8 * p;
+        counts.fill(0);
+        for &v in indices.iter() {
+            counts[(v >> shift) & 0xff] += 1;
+        }
+        let mut sum = 0usize;
+        for c in counts.iter_mut() {
+            let cur = *c;
+            *c = sum;
+            sum += cur;
+        }
+        for &v in indices.iter() {
+            let d = (v >> shift) & 0xff;
+            scratch[counts[d]] = v;
+            counts[d] += 1;
+        }
+        std::mem::swap(indices, scratch);
+    }
+}
+
+/// The Sort strategy with radix sorting of the index list.
+#[derive(Clone, Debug)]
+pub struct SortRadix {
+    temp: Vec<f64>,
+    stamps: Vec<u64>,
+    stamp: u64,
+    indices: Vec<usize>,
+    scratch: Vec<usize>,
+    max_value: usize,
+}
+
+impl Accumulator for SortRadix {
+    fn new(size: usize) -> Self {
+        SortRadix {
+            temp: vec![0.0; size],
+            stamps: vec![0; size],
+            stamp: 1,
+            indices: Vec::new(),
+            scratch: Vec::new(),
+            max_value: size.saturating_sub(1),
+        }
+    }
+
+    #[inline(always)]
+    fn update<T: MemTracer>(&mut self, idx: usize, delta: f64, tr: &mut T) {
+        tr.load(addr_of(&self.stamps, idx), 8);
+        if self.stamps[idx] != self.stamp {
+            tr.store(addr_of(&self.stamps, idx), 8);
+            self.stamps[idx] = self.stamp;
+            self.indices.push(idx);
+            tr.store(self.indices.as_ptr() as usize + 8 * (self.indices.len() - 1), 8);
+            tr.store(addr_of(&self.temp, idx), 8);
+            self.temp[idx] = delta;
+        } else {
+            tr.load(addr_of(&self.temp, idx), 8);
+            tr.store(addr_of(&self.temp, idx), 8);
+            self.temp[idx] += delta;
+        }
+    }
+
+    fn flush_sink<S: Sink, T: MemTracer>(&mut self, out: &mut S, tr: &mut T) {
+        // Charge radix passes: each pass reads + writes the list once.
+        let passes = ((usize::BITS - self.max_value.max(1).leading_zeros()).div_ceil(8)).max(1);
+        if self.indices.len() > 16 {
+            let base = self.indices.as_ptr() as usize;
+            for _ in 0..passes {
+                for i in 0..self.indices.len() {
+                    tr.load(base + 8 * i, 8);
+                    tr.store(base + 8 * i, 8);
+                }
+            }
+        }
+        radix_sort(&mut self.indices, &mut self.scratch, self.max_value);
+        for &j in &self.indices {
+            tr.load(addr_of(&self.temp, j), 8);
+            let v = self.temp[j];
+            if v != 0.0 {
+                tr.store(out.tail_addr(), 16);
+                out.append_entry(j, v);
+            }
+            tr.store(addr_of(&self.temp, j), 8);
+            self.temp[j] = 0.0;
+        }
+        self.indices.clear();
+        self.stamp += 1;
+    }
+
+    fn name() -> &'static str {
+        "Sort-radix"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::tracer::NullTracer;
+    use crate::sparse::CsrMatrix;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn radix_sort_correct_across_sizes() {
+        let mut rng = Pcg64::new(5);
+        let mut scratch = Vec::new();
+        for n in [0usize, 1, 2, 15, 16, 17, 100, 1000] {
+            for max in [10usize, 255, 256, 70000, 1 << 24] {
+                let mut v: Vec<usize> = (0..n).map(|_| rng.below(max + 1)).collect();
+                let mut expect = v.clone();
+                expect.sort_unstable();
+                radix_sort(&mut v, &mut scratch, max);
+                assert_eq!(v, expect, "n={n} max={max}");
+            }
+        }
+    }
+
+    #[test]
+    fn strategy_appends_sorted() {
+        let mut acc = SortRadix::new(100_000);
+        let mut out = CsrMatrix::new(1, 100_000);
+        let mut tr = NullTracer;
+        let mut rng = Pcg64::new(7);
+        let mut cols: Vec<usize> = (0..50).map(|_| rng.below(100_000)).collect();
+        cols.sort_unstable();
+        cols.dedup();
+        let mut shuffled = cols.clone();
+        rng.shuffle(&mut shuffled);
+        for &c in &shuffled {
+            acc.update(c, 1.0, &mut tr);
+        }
+        acc.flush(&mut out, &mut tr);
+        out.finalize_row();
+        assert_eq!(out.row_indices(0), &cols[..]);
+    }
+}

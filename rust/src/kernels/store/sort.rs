@@ -1,0 +1,163 @@
+//! The "Sort" storing strategy (paper §IV-B, Figures 6/7): "store all
+//! indices for non-zero elements within a row in a separate vector, which
+//! is usually small enough to fit into any cache level. After the
+//! complete row is calculated the few entries of the vector that hold the
+//! indices are sorted using std::sort, and then only these positions of
+//! the temporary vector are appended to the resulting matrix."
+//!
+//! First-touch detection uses a row-stamp marker array (robust against
+//! intermediate results that cancel to exact zero, unlike a `temp == 0`
+//! test). The index list is reused across rows and stays cache-resident.
+
+use super::{Accumulator, Sink};
+use crate::kernels::tracer::{addr_of, MemTracer};
+
+/// Sort-based storing strategy.
+#[derive(Clone, Debug)]
+pub struct Sort {
+    temp: Vec<f64>,
+    /// `stamps[j] == stamp` ⇔ position j was touched in the current row.
+    stamps: Vec<u64>,
+    stamp: u64,
+    /// Touched indices of the current row, unsorted.
+    indices: Vec<usize>,
+}
+
+impl Sort {
+    /// Sort the index list, charging the tracer for the comparison loads
+    /// (std sort does ~n·log n comparisons of 8-byte keys). Shared with
+    /// the [`super::Combined`] strategy's Sort path.
+    pub(crate) fn sort_indices<T: MemTracer>(indices: &mut [usize], tr: &mut T) {
+        // Perf note (§Perf log, change 1): a counting comparator here
+        // defeated the specialized integer sort and cost ~25% of the
+        // whole Sort kernel. Sort plainly and charge the tracer an
+        // n·log2(n) comparison estimate instead.
+        indices.sort_unstable();
+        let n = indices.len();
+        if n > 1 {
+            let base = indices.as_ptr() as usize;
+            let comparisons = (n as f64 * (n as f64).log2()).ceil() as usize;
+            for c in 0..comparisons {
+                tr.load(base + 8 * (c % n), 8);
+                tr.load(base, 8);
+            }
+        }
+    }
+}
+
+impl Accumulator for Sort {
+    fn new(size: usize) -> Self {
+        // stamp starts at 1: the zero-initialized stamps array must not
+        // look "touched" for the first row.
+        Sort { temp: vec![0.0; size], stamps: vec![0; size], stamp: 1, indices: Vec::new() }
+    }
+
+    #[inline(always)]
+    fn update<T: MemTracer>(&mut self, idx: usize, delta: f64, tr: &mut T) {
+        // Perf note (§Perf log, change 2): first touch overwrites instead
+        // of loading + adding to a zero — one fewer dependent load on the
+        // critical path.
+        tr.load(addr_of(&self.stamps, idx), 8);
+        if self.stamps[idx] != self.stamp {
+            tr.store(addr_of(&self.stamps, idx), 8);
+            self.stamps[idx] = self.stamp;
+            self.indices.push(idx);
+            tr.store(self.indices.as_ptr() as usize + 8 * (self.indices.len() - 1), 8);
+            tr.store(addr_of(&self.temp, idx), 8);
+            self.temp[idx] = delta;
+        } else {
+            tr.load(addr_of(&self.temp, idx), 8);
+            tr.store(addr_of(&self.temp, idx), 8);
+            self.temp[idx] += delta;
+        }
+    }
+
+    fn flush_sink<S: Sink, T: MemTracer>(&mut self, out: &mut S, tr: &mut T) {
+        Self::sort_indices(&mut self.indices, tr);
+        for &j in &self.indices {
+            tr.load(addr_of(&self.temp, j), 8);
+            let v = self.temp[j];
+            if v != 0.0 {
+                tr.store(out.tail_addr(), 16);
+                out.append_entry(j, v);
+            }
+            // Reset to keep the all-zero invariant (paper's kernel resets
+            // through the index list as well).
+            tr.store(addr_of(&self.temp, j), 8);
+            self.temp[j] = 0.0;
+        }
+        self.indices.clear();
+        self.stamp += 1;
+    }
+
+    fn name() -> &'static str {
+        "Sort"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseShape;
+    use crate::kernels::tracer::{CountingTracer, NullTracer};
+    use crate::sparse::CsrMatrix;
+
+    #[test]
+    fn appends_sorted() {
+        let mut acc = Sort::new(100);
+        let mut out = CsrMatrix::new(1, 100);
+        let mut tr = NullTracer;
+        for &(j, v) in &[(90usize, 1.0f64), (5, 2.0), (42, 3.0), (90, 1.0)] {
+            acc.update(j, v, &mut tr);
+        }
+        acc.flush(&mut out, &mut tr);
+        out.finalize_row();
+        assert_eq!(out.row(0), (&[5usize, 42, 90][..], &[2.0, 3.0, 2.0][..]));
+    }
+
+    #[test]
+    fn cancellation_dropped_but_reset() {
+        let mut acc = Sort::new(10);
+        let mut out = CsrMatrix::new(2, 10);
+        let mut tr = NullTracer;
+        acc.update(4, 1.0, &mut tr);
+        acc.update(4, -1.0, &mut tr);
+        acc.flush(&mut out, &mut tr);
+        out.finalize_row();
+        assert_eq!(out.nnz(), 0);
+        // Next row must not see stale state.
+        acc.update(4, 7.0, &mut tr);
+        acc.flush(&mut out, &mut tr);
+        out.finalize_row();
+        assert_eq!(out.get(1, 4), 7.0);
+    }
+
+    #[test]
+    fn flush_traffic_scales_with_row_not_vector() {
+        let mut acc = Sort::new(1_000_000);
+        let mut out = CsrMatrix::new(1, 1_000_000);
+        let mut tr = CountingTracer::default();
+        for j in [999_999usize, 3, 500_000] {
+            acc.update(j, 1.0, &mut tr);
+        }
+        let before = tr.traffic();
+        acc.flush(&mut out, &mut tr);
+        out.finalize_row();
+        let flush_traffic = tr.traffic() - before;
+        // Small: sort comparisons + 3 loads + 3 appends + 3 resets.
+        assert!(flush_traffic < 400, "flush traffic {flush_traffic}");
+    }
+
+    #[test]
+    fn stamp_never_reset_wraps_many_rows() {
+        let mut acc = Sort::new(4);
+        let mut out = CsrMatrix::new(100, 4);
+        let mut tr = NullTracer;
+        for r in 0..100 {
+            acc.update(r % 4, 1.0, &mut tr);
+            acc.flush(&mut out, &mut tr);
+            out.finalize_row();
+        }
+        assert_eq!(out.nnz(), 100);
+    }
+}

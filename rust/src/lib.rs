@@ -1,0 +1,44 @@
+//! # blazert
+//!
+//! A reproduction of *Model-guided Performance Analysis of the Sparse
+//! Matrix-Matrix Multiplication* (Scharpff, Iglberger, Hager, Rüde, 2013)
+//! — the Blaze Smart-Expression-Template spMMM study — as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate provides:
+//!
+//! * sparse matrix formats ([`sparse`]: CSR, CSC, COO, dense oracle) with
+//!   the paper's low-level `append`/`finalize` streaming store interface,
+//! * the paper's spMMM kernels ([`kernels`]: classic dot-product,
+//!   Gustavson row/column-major, and the Brute-Force / MinMax / Sort /
+//!   Combined storing strategies),
+//! * a Smart-Expression-Template-style lazy expression layer ([`expr`]:
+//!   `(&a * &b).eval()` with assign-time kernel selection),
+//! * reimplementations of the compared libraries' strategies
+//!   ([`baselines`]: uBLAS-, MTL4-, Eigen3-like),
+//! * the bandwidth-based performance model ([`model`]) and a
+//!   cache-hierarchy simulator ([`simulator`]) that together produce the
+//!   paper's model-guided analysis on simulated Sandy Bridge hardware,
+//! * the Blazemark benchmarking methodology ([`blazemark`]) and workload
+//!   generators ([`gen`]),
+//! * a PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas
+//!   artifacts and a block-sparse spMMM ([`bsr`]) scheduled onto them,
+//! * a job-pipeline coordinator ([`coordinator`]).
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper figure to a bench target.
+
+pub mod baselines;
+pub mod blazemark;
+pub mod bsr;
+pub mod coordinator;
+pub mod expr;
+pub mod gen;
+pub mod kernels;
+pub mod model;
+pub mod runtime;
+pub mod simulator;
+pub mod sparse;
+pub mod util;
+
+pub use sparse::{CooMatrix, CscMatrix, CsrMatrix, DenseMatrix};

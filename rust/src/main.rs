@@ -1,0 +1,280 @@
+//! `blazert` — the CLI entry point (leader process).
+//!
+//! Subcommands map to the deliverables: `bench` regenerates paper
+//! figures, `model` runs the model-guided analysis on the simulated
+//! Sandy Bridge (or the calibrated host), `pipeline` drives the
+//! multi-threaded job pipeline, `bsr` exercises the BSR/XLA path through
+//! the AOT artifacts, `info` prints the environment.
+
+use blazert::blazemark::{self, BenchConfig};
+use blazert::coordinator::{run_jobs, Job, JobKind};
+use blazert::gen::Workload;
+use blazert::kernels::gustavson::pure_row_major;
+use blazert::kernels::{spmmm_traced, Strategy};
+use blazert::model::{predict, Machine};
+use blazert::simulator::Hierarchy;
+use blazert::sparse::SparseShape;
+use blazert::util::cli::{Args, OptSpec};
+use blazert::util::table::Table;
+use blazert::util::timer::Stopwatch;
+
+const SPECS: &[OptSpec] = &[
+    OptSpec { name: "figure", help: "figure number 2..12, or 'all'", takes_value: true },
+    OptSpec { name: "full", help: "paper protocol (2s, best-of-5, full sizes)", takes_value: false },
+    OptSpec { name: "workload", help: "fd | random | random-fill", takes_value: true },
+    OptSpec { name: "n", help: "problem size (rows)", takes_value: true },
+    OptSpec { name: "strategy", help: "storing strategy name", takes_value: true },
+    OptSpec { name: "host", help: "use the calibrated host machine model", takes_value: true },
+    OptSpec { name: "jobs", help: "pipeline job count", takes_value: true },
+    OptSpec { name: "threads", help: "pipeline worker threads", takes_value: true },
+    OptSpec { name: "tile", help: "BSR tile size", takes_value: true },
+    OptSpec { name: "seed", help: "workload seed", takes_value: true },
+];
+
+const COMMANDS: &[(&str, &str)] = &[
+    ("bench", "regenerate a paper figure (or all): Blazemark protocol"),
+    ("model", "model-guided analysis: simulated traffic + light-speed ceilings"),
+    ("pipeline", "run the multi-threaded spMMM job pipeline"),
+    ("bsr", "block-sparse spMMM through the AOT XLA artifacts"),
+    ("info", "environment, machine model, artifact status"),
+];
+
+fn parse_workload(s: &str) -> Result<Workload, String> {
+    match s {
+        "fd" => Ok(Workload::FiveBandFd),
+        "random" => Ok(Workload::RandomFixed5),
+        "random-fill" => Ok(Workload::RandomFill01Pct),
+        other => Err(format!("unknown workload '{other}' (fd|random|random-fill)")),
+    }
+}
+
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let which = args.get_or("figure", "all");
+    if args.flag("full") {
+        std::env::set_var("BLAZEMARK_FULL", "1");
+    }
+    let cfg = BenchConfig::from_env();
+    let ids: Vec<u32> = if which == "all" {
+        (2..=12).collect()
+    } else {
+        vec![which.parse().map_err(|e| format!("--figure {which}: {e}"))?]
+    };
+    for id in ids {
+        let fig = blazemark::figure_by_id(id).ok_or(format!("no figure {id}"))?;
+        let res = blazemark::run_figure(fig, &cfg, args.get_parsed_or("seed", 0xb1a2e)?, true);
+        println!("{}", res.render_table());
+        println!("{}", res.render_chart());
+        if let Ok(p) = res.write_csv() {
+            eprintln!("wrote {}", p.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_model(args: &Args) -> Result<(), String> {
+    let workload = parse_workload(&args.get_or("workload", "fd"))?;
+    let n = args.get_parsed_or("n", 16384usize)?;
+    let strategy = Strategy::parse(&args.get_or("strategy", "Combined"))
+        .ok_or("bad --strategy")?;
+    let machine = if args.get("host").map(|v| v == "1" || v == "true").unwrap_or(false) {
+        eprintln!("calibrating host machine (triad + clock)...");
+        Machine::host_calibrated()
+    } else {
+        Machine::sandy_bridge_i7_2600()
+    };
+    let seed = args.get_parsed_or("seed", 42u64)?;
+    let (a, b) = blazert::gen::operand_pair(workload, n, seed);
+    println!(
+        "machine: {}\nworkload: {} N={} nnz(A)={} nnz(B)={}",
+        machine.name,
+        workload.tag(),
+        a.rows(),
+        a.nnz(),
+        b.nnz()
+    );
+
+    // Pure computation analysis (paper §IV-A).
+    let mut h = Hierarchy::of_machine(&machine);
+    let _ = pure_row_major(&a, &b, &mut h);
+    let report = h.report();
+    println!("\n== pure computation (row-major Gustavson) ==");
+    println!("{}", report.render());
+    let p = predict(&machine, &report);
+    // Wall-clock measurement on this host for the efficiency line.
+    let flops = blazert::kernels::flops::spmmm_flops(&a, &b);
+    let m = blazemark::measure(&BenchConfig::quick(), || {
+        std::hint::black_box(pure_row_major(&a, &b, &mut blazert::kernels::NullTracer));
+    });
+    println!("{}", p.render(Some(m.mflops(flops) * 1e6)));
+
+    // Full kernel analysis (compute + store).
+    let mut h2 = Hierarchy::of_machine(&machine);
+    let _ = spmmm_traced(&a, &b, strategy, &mut h2);
+    let report2 = h2.report();
+    println!("== full spMMM ({}) ==", strategy.name());
+    println!("{}", report2.render());
+    let p2 = predict(&machine, &report2);
+    let m2 = blazemark::measure(&BenchConfig::quick(), || {
+        std::hint::black_box(blazert::kernels::spmmm(&a, &b, strategy));
+    });
+    println!("{}", p2.render(Some(m2.mflops(flops) * 1e6)));
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<(), String> {
+    let njobs = args.get_parsed_or("jobs", 16usize)?;
+    let threads = args.get_parsed_or("threads", 4usize)?;
+    let n = args.get_parsed_or("n", 4096usize)?;
+    let workload = parse_workload(&args.get_or("workload", "random"))?;
+    let jobs: Vec<Job> = (0..njobs)
+        .map(|i| Job {
+            id: i,
+            workload,
+            n,
+            kind: JobKind::Scalar(Strategy::Combined),
+            seed: i as u64,
+            verify: false,
+        })
+        .collect();
+    let sw = Stopwatch::start();
+    let results = run_jobs(jobs, threads);
+    let wall = sw.seconds();
+    let mut t = Table::new(["job", "N", "nnz(C)", "MFlop/s", "worker"]);
+    for r in &results {
+        t.row([
+            r.id.to_string(),
+            r.n.to_string(),
+            r.nnz_c.to_string(),
+            format!("{:.1}", r.mflops),
+            r.worker.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let agg: f64 = results.iter().map(|r| r.mflops).sum::<f64>() / results.len() as f64;
+    println!(
+        "{} jobs on {} threads in {:.2}s — mean per-job {:.0} MFlop/s, throughput {:.1} jobs/s",
+        results.len(),
+        threads,
+        wall,
+        agg,
+        results.len() as f64 / wall
+    );
+    Ok(())
+}
+
+fn cmd_bsr(args: &Args) -> Result<(), String> {
+    let n = args.get_parsed_or("n", 1024usize)?;
+    let tile = args.get_parsed_or("tile", 32usize)?;
+    let workload = parse_workload(&args.get_or("workload", "fd"))?;
+    let seed = args.get_parsed_or("seed", 7u64)?;
+    let (a, b) = blazert::gen::operand_pair(workload, n, seed);
+    let ab = blazert::bsr::BsrMatrix::from_csr(&a, tile);
+    let bb = blazert::bsr::BsrMatrix::from_csr(&b, tile);
+    println!(
+        "BSR operands: {}x{} tile={} blocks A={} B={} fill-in A={:.1}%",
+        a.rows(),
+        a.cols(),
+        tile,
+        ab.nblocks(),
+        bb.nblocks(),
+        100.0 * ab.fill_in_ratio(a.nnz())
+    );
+    if blazert::runtime::Runtime::artifacts_available() && tile == 32 {
+        let mut engine = blazert::runtime::TileEngine::load_default().map_err(|e| e.to_string())?;
+        println!("PJRT platform: {}", engine.platform());
+        let sw = Stopwatch::start();
+        let c = blazert::bsr::bsr_spmmm(&ab, &bb, &mut engine).map_err(|e| e.to_string())?;
+        let secs = sw.seconds();
+        println!(
+            "XLA path: {:.3}s, {} backend calls, {} slots ({} padded)",
+            secs, engine.calls, engine.slots, engine.padded_slots
+        );
+        verify_and_report(&a, &b, &c, secs);
+    } else {
+        if tile != 32 {
+            eprintln!("(artifacts are built for tile=32; using the native backend)");
+        } else {
+            eprintln!("(no artifacts — run `make artifacts`; using the native backend)");
+        }
+        let mut backend = blazert::bsr::NativeBackend { tile };
+        let sw = Stopwatch::start();
+        let c = blazert::bsr::bsr_spmmm(&ab, &bb, &mut backend).map_err(|e| e.to_string())?;
+        verify_and_report(&a, &b, &c, sw.seconds());
+    }
+    Ok(())
+}
+
+fn verify_and_report(
+    a: &blazert::CsrMatrix,
+    b: &blazert::CsrMatrix,
+    c: &blazert::bsr::BsrMatrix,
+    secs: f64,
+) {
+    let reference = blazert::kernels::spmmm(a, b, Strategy::Combined);
+    let d1 = blazert::sparse::DenseMatrix::from_csr(&c.to_csr());
+    let d2 = blazert::sparse::DenseMatrix::from_csr(&reference);
+    let scale = d2.frobenius().max(1.0);
+    let rel = d1.max_abs_diff(&d2) / scale;
+    let flops = blazert::kernels::flops::spmmm_flops(a, b);
+    println!(
+        "result: nnz(C)={} rel-err={:.2e} ({}) — {:.1} MFlop/s effective",
+        reference.nnz(),
+        rel,
+        if rel < 1e-5 { "VERIFIED" } else { "MISMATCH" },
+        flops as f64 / secs / 1e6
+    );
+}
+
+fn cmd_info() {
+    println!("blazert — Blaze spMMM reproduction (three-layer Rust + JAX + Pallas)");
+    let m = Machine::sandy_bridge_i7_2600();
+    println!("\nreference machine model: {}", m.name);
+    println!(
+        "  peak {:.1} GFlop/s, mem {:.1} GB/s, LLC {} MB",
+        m.peak_flops() / 1e9,
+        m.mem_bandwidth / 1e9,
+        m.llc_bytes() / (1024 * 1024)
+    );
+    println!(
+        "  light speed at 16 B/Flop: L1 {:.0} MFlop/s, memory {:.0} MFlop/s (paper: 3800 / 1140)",
+        blazert::model::lightspeed(&m, Some(0), 16.0) / 1e6,
+        blazert::model::lightspeed(&m, None, 16.0) / 1e6
+    );
+    println!("\nartifacts: {}", if blazert::runtime::Runtime::artifacts_available() {
+        "present (BSR/XLA path available)"
+    } else {
+        "absent — run `make artifacts`"
+    });
+    println!("\nfigures:");
+    for f in blazert::blazemark::FIGURES.iter() {
+        println!("  {:>2}  {}", f.id, f.title);
+    }
+}
+
+fn main() {
+    let args = match Args::parse(true, SPECS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("bench") => cmd_bench(&args),
+        Some("model") => cmd_model(&args),
+        Some("pipeline") => cmd_pipeline(&args),
+        Some("bsr") => cmd_bsr(&args),
+        Some("info") => {
+            cmd_info();
+            Ok(())
+        }
+        _ => {
+            print!("{}", args.usage(COMMANDS));
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

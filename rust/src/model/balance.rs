@@ -1,0 +1,94 @@
+//! Symbolic code-balance accounting for the kernels of this crate —
+//! the paper's hand analysis of Listing 2, as code.
+
+use crate::kernels::flops;
+use crate::sparse::{CsrMatrix, SparseShape};
+
+/// Code balance (Bytes/Flop) of the Gustavson inner loop (paper §IV-A):
+/// LD index (8) + LD value (8) + LD temp (8) + ST temp (8) per
+/// mul + add ⇒ 32 B / 2 Flop = 16 B/Flop. Best-case: ignores
+/// non-consecutive access excess, exactly as the paper states.
+pub const GUSTAVSON_INNER_BALANCE: f64 = 16.0;
+
+/// Expected best-case traffic (bytes) of the *pure computation* kernel:
+/// 32 B per multiplication for the inner loop plus 16 B per entry of A
+/// for the outer loop (index + value), plus the reset re-traversal
+/// (24 B per multiplication: index + temp load + temp store).
+#[derive(Clone, Copy, Debug)]
+pub struct PureComputeTraffic {
+    /// Inner accumulation loop bytes.
+    pub inner_bytes: u64,
+    /// Outer loop (A traversal) bytes.
+    pub outer_bytes: u64,
+    /// Reset traversal bytes.
+    pub reset_bytes: u64,
+    /// Flops (2 × multiplications).
+    pub flops: u64,
+}
+
+impl PureComputeTraffic {
+    /// Derive for operands A·B.
+    pub fn of(a: &CsrMatrix, b: &CsrMatrix) -> Self {
+        let mults = flops::required_multiplications(a, b);
+        PureComputeTraffic {
+            inner_bytes: 32 * mults,
+            outer_bytes: 16 * a.nnz() as u64,
+            reset_bytes: 24 * mults,
+            flops: 2 * mults,
+        }
+    }
+
+    /// Total bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.inner_bytes + self.outer_bytes + self.reset_bytes
+    }
+
+    /// Whole-kernel best-case code balance (Bytes/Flop).
+    pub fn balance(&self) -> f64 {
+        self.total_bytes() as f64 / self.flops as f64
+    }
+
+    /// Inner-loop-only balance — the figure the paper quotes (16).
+    pub fn inner_balance(&self) -> f64 {
+        self.inner_bytes as f64 / self.flops as f64
+    }
+}
+
+/// Best-case *memory-level* traffic of the pure compute kernel for
+/// streaming operands (every operand byte loaded once, temp in cache):
+/// 16 B per nnz of A and of B-rows-as-visited; for a fair lower bound we
+/// count unique data: nnz(A) + nnz(B) entries + temp once.
+pub fn streaming_lower_bound_bytes(a: &CsrMatrix, b: &CsrMatrix) -> u64 {
+    (16 * (a.nnz() + b.nnz()) + 8 * b.cols()) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::fd_poisson_2d;
+
+    #[test]
+    fn inner_balance_is_sixteen() {
+        let a = fd_poisson_2d(12);
+        let t = PureComputeTraffic::of(&a, &a);
+        assert!((t.inner_balance() - GUSTAVSON_INNER_BALANCE).abs() < 1e-12);
+        assert!(t.balance() > GUSTAVSON_INNER_BALANCE, "reset/outer add traffic");
+    }
+
+    #[test]
+    fn traffic_scales_with_mults() {
+        let a = fd_poisson_2d(8);
+        let b = fd_poisson_2d(16);
+        let ta = PureComputeTraffic::of(&a, &a);
+        let tb = PureComputeTraffic::of(&b, &b);
+        assert!(tb.total_bytes() > ta.total_bytes());
+        assert!(tb.flops > ta.flops);
+    }
+
+    #[test]
+    fn lower_bound_below_best_case() {
+        let a = fd_poisson_2d(10);
+        let t = PureComputeTraffic::of(&a, &a);
+        assert!(streaming_lower_bound_bytes(&a, &a) < t.total_bytes());
+    }
+}

@@ -1,0 +1,28 @@
+//! The paper's bandwidth-based performance model (§IV-A).
+//!
+//! > "In order to arrive at a realistic upper performance limit for our
+//! > computational kernels we employ a simple bandwidth-based performance
+//! > model: The maximum performance for a loop is
+//! > P = min(P_max, b_max / B_c), where b_max is the bandwidth of the
+//! > relevant data path and B_c is the loop's code balance
+//! > (data traffic / flops)."
+//!
+//! (The paper's formula prints `max`; the semantics — a *limit* — is the
+//! min of the in-core peak and the bandwidth ceiling, as in the roofline
+//! model it cites.)
+//!
+//! [`machine`] describes the hardware (the paper's i7-2600 and a
+//! calibrated description of the current host), [`balance`] derives code
+//! balances for the kernels of this crate, [`roofline`] evaluates the
+//! light-speed formula, and [`predict`] combines a simulated traffic
+//! report with a machine into the model-guided analysis the paper runs by
+//! hand.
+
+pub mod balance;
+pub mod machine;
+pub mod predict;
+pub mod roofline;
+
+pub use machine::{CacheLevel, Machine};
+pub use predict::{predict, Prediction};
+pub use roofline::lightspeed;

@@ -1,0 +1,192 @@
+//! Model-guided prediction: combine a simulated traffic report with a
+//! machine description to produce per-data-path performance ceilings and
+//! an efficiency verdict — the analysis the paper performs for each
+//! figure, automated.
+
+use super::machine::Machine;
+use super::roofline::lightspeed_for;
+use crate::simulator::TrafficReport;
+use crate::util::table::Table;
+
+/// One data path's contribution to the prediction.
+#[derive(Clone, Debug)]
+pub struct PathCeiling {
+    /// Data path name ("L1", "L2", "L3", "MEM").
+    pub name: &'static str,
+    /// Observed traffic over this path (bytes).
+    pub bytes: u64,
+    /// Code balance over this path (Bytes/Flop).
+    pub balance: f64,
+    /// Light-speed ceiling (Flop/s).
+    pub ceiling: f64,
+}
+
+/// The model's verdict for one kernel run.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    /// Per-path ceilings, innermost first, memory last.
+    pub paths: Vec<PathCeiling>,
+    /// In-core peak (Flop/s).
+    pub peak: f64,
+    /// min over paths and peak — the light speed for this run.
+    pub predicted: f64,
+    /// Flops of the run.
+    pub flops: u64,
+}
+
+impl Prediction {
+    /// The limiting data path's name ("core" if peak-bound).
+    pub fn bottleneck(&self) -> &'static str {
+        let mut best = "core";
+        let mut min = self.peak;
+        for p in &self.paths {
+            if p.ceiling < min {
+                min = p.ceiling;
+                best = p.name;
+            }
+        }
+        best
+    }
+
+    /// Efficiency of a measured performance vs the model (0..1+).
+    pub fn efficiency(&self, measured_flops_per_s: f64) -> f64 {
+        measured_flops_per_s / self.predicted
+    }
+
+    /// Render as a table plus verdict line; if `measured` is given, an
+    /// efficiency row is appended.
+    pub fn render(&self, measured: Option<f64>) -> String {
+        let mut t = Table::new(["path", "traffic MB", "balance B/F", "ceiling MFlop/s"]);
+        for p in &self.paths {
+            t.row([
+                p.name.to_string(),
+                format!("{:.3}", p.bytes as f64 / 1e6),
+                format!("{:.2}", p.balance),
+                format!("{:.0}", p.ceiling / 1e6),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "peak {:.0} MFlop/s | predicted light speed {:.0} MFlop/s (bound: {})\n",
+            self.peak / 1e6,
+            self.predicted / 1e6,
+            self.bottleneck()
+        ));
+        if let Some(m) = measured {
+            out.push_str(&format!(
+                "measured {:.0} MFlop/s -> {:.0}% of model\n",
+                m / 1e6,
+                100.0 * self.efficiency(m)
+            ));
+        }
+        out
+    }
+}
+
+/// Build the prediction for a traced run on `machine`.
+///
+/// Path traffic: L1 sees every load/store the kernel issues
+/// (instruction-level bytes); L2/L3 see the inbound fill+writeback bytes
+/// of the level inside them; memory sees the DRAM interface bytes. Each
+/// path's ceiling is `min(P_max, b_path / B_path)`; the overall
+/// prediction is the minimum — the multi-level generalization of the
+/// paper's two-point (L1, memory) analysis.
+pub fn predict(machine: &Machine, report: &TrafficReport) -> Prediction {
+    let flops = report.flops.max(1);
+    let mut paths = Vec::new();
+    // L1 data path: instruction-level traffic.
+    let l1_bytes = report.l1_bytes();
+    paths.push(PathCeiling {
+        name: "L1",
+        bytes: l1_bytes,
+        balance: l1_bytes as f64 / flops as f64,
+        ceiling: lightspeed_for(
+            machine.peak_flops(),
+            machine.levels[0].bandwidth,
+            l1_bytes as f64 / flops as f64,
+        ),
+    });
+    // Outer cache levels: traffic feeding the level inside them.
+    for (i, lvl) in report.levels.iter().enumerate().skip(1) {
+        let bytes = report.levels[i - 1].inbound_bytes;
+        let bw = machine.levels.get(i).map(|l| l.bandwidth).unwrap_or(machine.mem_bandwidth);
+        let _ = lvl;
+        let balance = bytes as f64 / flops as f64;
+        paths.push(PathCeiling {
+            name: machine.levels.get(i).map(|l| l.name).unwrap_or("MEM"),
+            bytes,
+            balance,
+            ceiling: lightspeed_for(machine.peak_flops(), bw, balance),
+        });
+    }
+    // Memory interface.
+    let mem_balance = report.mem_bytes as f64 / flops as f64;
+    paths.push(PathCeiling {
+        name: "MEM",
+        bytes: report.mem_bytes,
+        balance: mem_balance,
+        ceiling: lightspeed_for(machine.peak_flops(), machine.mem_bandwidth, mem_balance),
+    });
+    let predicted = paths
+        .iter()
+        .map(|p| p.ceiling)
+        .fold(machine.peak_flops(), f64::min);
+    Prediction { paths, peak: machine.peak_flops(), predicted, flops: report.flops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::fd_poisson_2d;
+    use crate::kernels::gustavson::pure_row_major;
+    use crate::simulator::Hierarchy;
+
+    #[test]
+    fn small_fd_is_cache_resident() {
+        // A 16x16-grid FD matrix (N=256) fits far inside L3: the memory
+        // path must see only compulsory traffic and not be the
+        // bottleneck after warm-up.
+        let a = fd_poisson_2d(16);
+        let m = Machine::sandy_bridge_i7_2600();
+        let mut h = Hierarchy::of_machine(&m);
+        // Warm run then measured run (paper §V: in-cache data preloaded).
+        let _ = pure_row_major(&a, &a, &mut h);
+        let warm_mem = h.mem_bytes;
+        h.flops = 0;
+        let before = h.mem_bytes;
+        let _ = pure_row_major(&a, &a, &mut h);
+        let second_pass_mem = h.mem_bytes - before;
+        assert!(second_pass_mem < warm_mem / 10, "warm pass mostly cached");
+        let p = predict(&m, &h.report());
+        assert!(p.predicted > 0.0);
+        assert!(p.flops > 0);
+    }
+
+    #[test]
+    fn large_fd_is_memory_bound() {
+        // N = 128^2 = 16384 rows: operands+result ~ several MB with
+        // traffic > L3; memory path must constrain the prediction to
+        // roughly the paper's 1140 MFlop/s regime.
+        let a = fd_poisson_2d(128);
+        let m = Machine::sandy_bridge_i7_2600();
+        let mut h = Hierarchy::of_machine(&m);
+        let _ = pure_row_major(&a, &a, &mut h);
+        let p = predict(&m, &h.report());
+        // The prediction can't exceed the L1 analytic limit and must be
+        // below peak.
+        assert!(p.predicted <= 3.8e9 * 1.05);
+        assert!(p.predicted < m.peak_flops());
+    }
+
+    #[test]
+    fn render_mentions_bottleneck() {
+        let a = fd_poisson_2d(24);
+        let m = Machine::sandy_bridge_i7_2600();
+        let mut h = Hierarchy::of_machine(&m);
+        let _ = pure_row_major(&a, &a, &mut h);
+        let p = predict(&m, &h.report());
+        let s = p.render(Some(1.0e9));
+        assert!(s.contains("predicted light speed"));
+        assert!(s.contains("% of model"));
+    }
+}

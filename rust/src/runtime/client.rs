@@ -1,0 +1,239 @@
+//! PJRT client wrapper + artifact manifest.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One line of `artifacts/manifest.txt` (written by `python -m
+/// compile.aot`): the entry point name, its HLO file and the call
+/// geometry.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    /// Entry point name ("tile_mma", ...).
+    pub name: String,
+    /// HLO text file name (relative to the artifact dir).
+    pub file: String,
+    /// Element dtype tag ("f32").
+    pub dtype: String,
+    /// Argument shapes, e.g. `[[64,32,32], [64,32,32], [64,32,32]]`.
+    pub args: Vec<Vec<usize>>,
+    /// Free-form key/value geometry (tile, batch, groups, ...).
+    pub params: HashMap<String, usize>,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// Entries by name.
+    pub entries: HashMap<String, ManifestEntry>,
+    /// Directory the artifacts live in.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Parse `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields = HashMap::new();
+            for kv in line.split_whitespace() {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("manifest line {}: bad field {kv}", lineno + 1))?;
+                fields.insert(k.to_string(), v.to_string());
+            }
+            let get = |k: &str| -> Result<String> {
+                fields.get(k).cloned().ok_or_else(|| anyhow!("manifest line {}: missing {k}", lineno + 1))
+            };
+            let args = get("args")?
+                .split(',')
+                .map(|tag| {
+                    tag.split('x')
+                        .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d}: {e}")))
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            let mut params = HashMap::new();
+            for (k, v) in &fields {
+                if let Ok(n) = v.parse::<usize>() {
+                    params.insert(k.clone(), n);
+                }
+            }
+            let entry = ManifestEntry {
+                name: get("name")?,
+                file: get("file")?,
+                dtype: get("dtype")?,
+                args,
+                params,
+            };
+            entries.insert(entry.name.clone(), entry);
+        }
+        Ok(Manifest { entries, dir: dir.to_path_buf() })
+    }
+
+    /// Geometry parameter lookup across entries (they all carry the same
+    /// values).
+    pub fn param(&self, key: &str) -> Option<usize> {
+        self.entries.values().find_map(|e| e.params.get(key).copied())
+    }
+}
+
+/// A PJRT CPU runtime holding compiled executables for the artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Default artifact location: `$BLAZERT_ARTIFACTS` or `./artifacts`.
+    pub fn artifact_dir() -> PathBuf {
+        std::env::var("BLAZERT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Whether artifacts are present (used by tests/examples to skip
+    /// gracefully with a notice instead of failing).
+    pub fn artifacts_available() -> bool {
+        Self::artifact_dir().join("manifest.txt").exists()
+    }
+
+    /// Create a CPU PJRT client and load the manifest (executables are
+    /// compiled lazily per entry point).
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&Self::artifact_dir())
+    }
+
+    /// Create from an explicit artifact directory.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, executables: HashMap::new() })
+    }
+
+    /// Platform string of the PJRT backend.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch the cached) executable for an entry point.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let entry = self
+                .manifest
+                .entries
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown entry point '{name}'"))?;
+            let path = self.manifest.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute an entry point on f32 buffers. `inputs` are (data, shape)
+    /// pairs matching the manifest geometry; returns the flattened f32
+    /// output of the (single-output) tuple.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        // Validate against the manifest before handing buffers to XLA.
+        let entry = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown entry point '{name}'"))?;
+        if entry.args.len() != inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", entry.args.len(), inputs.len());
+        }
+        for (i, ((data, shape), expect)) in inputs.iter().zip(&entry.args).enumerate() {
+            if *shape != expect.as_slice() {
+                bail!("{name}: input {i} shape {shape:?} != manifest {expect:?}");
+            }
+            let elems: usize = shape.iter().product();
+            if data.len() != elems {
+                bail!("{name}: input {i} has {} elems, shape wants {elems}", data.len());
+            }
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join(format!("blazert_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "name=tile_mma file=tile_mma.hlo.txt dtype=f32 args=64x32x32,64x32x32,64x32x32 tile=32 batch=64\n\
+             # comment\n\
+             name=dense_mm file=dense_mm.hlo.txt dtype=f32 args=256x256,256x256 tile=32 batch=64\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = &m.entries["tile_mma"];
+        assert_eq!(e.args.len(), 3);
+        assert_eq!(e.args[0], vec![64, 32, 32]);
+        assert_eq!(m.param("tile"), Some(32));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_is_error() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn manifest_rejects_bad_lines() {
+        let dir = std::env::temp_dir().join(format!("blazert_badmanifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "name=x no_equals_here\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // Execution paths are covered by rust/tests/integration_runtime.rs
+    // (they need built artifacts).
+}

@@ -1,0 +1,19 @@
+//! The PJRT runtime: loads AOT-compiled JAX/Pallas artifacts (HLO text
+//! under `artifacts/`) and executes them from Rust.
+//!
+//! This is the L3-L2 bridge of the three-layer architecture: Python runs
+//! once at build time (`make artifacts`); afterwards the Rust binary is
+//! self-contained — `PjRtClient::cpu()` compiles the HLO text and the
+//! hot path calls `execute` with `Literal` buffers. No Python on the
+//! request path.
+//!
+//! [`client`] owns artifact discovery (manifest parsing) and executable
+//! caching; [`tile_engine`] is the typed facade the BSR layer uses
+//! (batched tile multiply-accumulate, grouped reductions, dense
+//! verification products).
+
+pub mod client;
+pub mod tile_engine;
+
+pub use client::{Manifest, ManifestEntry, Runtime};
+pub use tile_engine::TileEngine;

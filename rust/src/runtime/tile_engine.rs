@@ -1,0 +1,142 @@
+//! Typed facade over the artifact entry points, with padding and
+//! batch-splitting so callers can hand over any number of tile triples.
+
+use anyhow::{bail, Result};
+
+use super::client::Runtime;
+
+/// Executes batched tile operations through the AOT artifacts.
+pub struct TileEngine {
+    rt: Runtime,
+    /// Tile edge length (manifest `tile`).
+    pub tile: usize,
+    /// Fixed batch size of `tile_mma` (manifest `batch`).
+    pub batch: usize,
+    /// Group count of `tile_group_mma` (manifest `groups`).
+    pub groups: usize,
+    /// Per-group reduction depth of `tile_group_mma` (manifest
+    /// `group_k`).
+    pub group_k: usize,
+    /// Dense verification product size (manifest `dense_n`).
+    pub dense_n: usize,
+    /// Executions performed (telemetry).
+    pub calls: u64,
+    /// Total tile-MMA slots (incl. padding) pushed through the engine.
+    pub slots: u64,
+    /// Padding slots wasted (telemetry for batch-size tuning).
+    pub padded_slots: u64,
+}
+
+impl TileEngine {
+    /// Wrap a loaded runtime, reading the geometry from its manifest.
+    pub fn new(rt: Runtime) -> Result<TileEngine> {
+        let need = |k: &str| -> Result<usize> {
+            rt.manifest()
+                .param(k)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing param {k}"))
+        };
+        Ok(TileEngine {
+            tile: need("tile")?,
+            batch: need("batch")?,
+            groups: need("groups")?,
+            group_k: need("group_k")?,
+            dense_n: need("dense_n")?,
+            rt,
+            calls: 0,
+            slots: 0,
+            padded_slots: 0,
+        })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<TileEngine> {
+        Self::new(Runtime::load_default()?)
+    }
+
+    /// Bytes per tile.
+    pub fn tile_elems(&self) -> usize {
+        self.tile * self.tile
+    }
+
+    /// Batched multiply-accumulate over an arbitrary number of triples:
+    /// `out[i] = acc[i] + a[i] @ b[i]`. Inputs are concatenated tiles
+    /// (`n * tile * tile` each); the engine splits into fixed-size
+    /// artifact batches and zero-pads the tail (A=B=0 ⇒ out = acc, so
+    /// padding is harmless).
+    pub fn mma(&mut self, a: &[f32], b: &[f32], acc: &[f32]) -> Result<Vec<f32>> {
+        let te = self.tile_elems();
+        if a.len() != b.len() || a.len() != acc.len() || a.len() % te != 0 {
+            bail!("mma: inputs must be equal multiples of {te} elems");
+        }
+        let n = a.len() / te;
+        let shape = [self.batch, self.tile, self.tile];
+        let mut out = Vec::with_capacity(n * te);
+        let per_batch = self.batch * te;
+        let mut zeros = Vec::new();
+        for start in (0..n).step_by(self.batch) {
+            let count = (n - start).min(self.batch);
+            let (pa, pb, pacc);
+            let (sa, sb, sacc) = if count == self.batch {
+                (
+                    &a[start * te..start * te + per_batch],
+                    &b[start * te..start * te + per_batch],
+                    &acc[start * te..start * te + per_batch],
+                )
+            } else {
+                // Zero-pad the tail batch.
+                if zeros.is_empty() {
+                    zeros = vec![0f32; per_batch];
+                }
+                let pad = |src: &[f32]| {
+                    let mut v = zeros.clone();
+                    v[..count * te].copy_from_slice(&src[start * te..(start + count) * te]);
+                    v
+                };
+                pa = pad(a);
+                pb = pad(b);
+                pacc = pad(acc);
+                self.padded_slots += (self.batch - count) as u64;
+                (&pa[..], &pb[..], &pacc[..])
+            };
+            let res = self.rt.execute_f32("tile_mma", &[(sa, &shape), (sb, &shape), (sacc, &shape)])?;
+            out.extend_from_slice(&res[..count * te]);
+            self.calls += 1;
+            self.slots += self.batch as u64;
+        }
+        Ok(out)
+    }
+
+    /// Grouped reduction: `out[g] = Σ_k a[g,k] @ b[g,k]` for exactly
+    /// `groups × group_k` tile pairs (callers pad with zero tiles).
+    pub fn group_mma(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let te = self.tile_elems();
+        let want = self.groups * self.group_k * te;
+        if a.len() != want || b.len() != want {
+            bail!("group_mma: expected {want} elems, got {}", a.len());
+        }
+        let shape = [self.groups, self.group_k, self.tile, self.tile];
+        let res = self.rt.execute_f32("tile_group_mma", &[(a, &shape), (b, &shape)])?;
+        self.calls += 1;
+        self.slots += (self.groups * self.group_k) as u64;
+        Ok(res)
+    }
+
+    /// Dense `dense_n × dense_n` product (verification path).
+    pub fn dense_mm(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let n = self.dense_n;
+        if a.len() != n * n || b.len() != n * n {
+            bail!("dense_mm: expected {}x{} operands", n, n);
+        }
+        let shape = [n, n];
+        self.calls += 1;
+        self.rt.execute_f32("dense_mm", &[(a, &shape), (b, &shape)])
+    }
+
+    /// PJRT platform tag.
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+}
+
+// Execution tests live in rust/tests/integration_runtime.rs (need
+// artifacts).

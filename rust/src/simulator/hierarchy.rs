@@ -1,0 +1,305 @@
+//! The multi-level hierarchy: L1 → L2 → L3 → memory, with inclusive
+//! line-granular fills, write-allocate and write-back propagation.
+
+use super::cache::{Access, Cache, CacheConfig};
+use super::stats::{LevelStats, TrafficReport};
+use crate::kernels::tracer::MemTracer;
+use crate::model::machine::Machine;
+
+/// A simulated cache hierarchy implementing [`MemTracer`]: hand it to any
+/// traced kernel and read the per-level traffic afterwards.
+#[derive(Clone, Debug)]
+pub struct Hierarchy {
+    levels: Vec<Cache>,
+    /// Bytes that crossed the memory interface (line fills from DRAM +
+    /// write-backs to DRAM).
+    pub mem_bytes: u64,
+    /// Line fills served by DRAM.
+    pub mem_fills: u64,
+    /// Write-backs that reached DRAM.
+    pub mem_writebacks: u64,
+    /// Flops reported by the kernel.
+    pub flops: u64,
+    /// Total load/store operations observed (instruction-level, before
+    /// cache filtering).
+    pub load_ops: u64,
+    /// Store operations observed.
+    pub store_ops: u64,
+}
+
+impl Hierarchy {
+    /// Build from explicit level configurations (innermost first).
+    pub fn new(configs: Vec<CacheConfig>) -> Self {
+        assert!(!configs.is_empty(), "at least one cache level");
+        Hierarchy {
+            levels: configs.into_iter().map(Cache::new).collect(),
+            mem_bytes: 0,
+            mem_fills: 0,
+            mem_writebacks: 0,
+            flops: 0,
+            load_ops: 0,
+            store_ops: 0,
+        }
+    }
+
+    /// The hierarchy of a [`Machine`] description.
+    pub fn of_machine(machine: &Machine) -> Self {
+        Self::new(
+            machine
+                .levels
+                .iter()
+                .map(|l| CacheConfig {
+                    name: l.name,
+                    size_bytes: l.size_bytes,
+                    line_bytes: l.line_bytes,
+                    assoc: l.assoc,
+                })
+                .collect(),
+        )
+    }
+
+    /// The paper's testbed (Sandy Bridge i7-2600).
+    pub fn sandy_bridge() -> Self {
+        Self::of_machine(&Machine::sandy_bridge_i7_2600())
+    }
+
+    /// One line-granular access at `addr`; propagates misses outward and
+    /// write-backs to the next level.
+    fn access_line(&mut self, addr: usize, write: bool) {
+        let mut level = 0usize;
+        let mut write_at_level = write;
+        loop {
+            if level == self.levels.len() {
+                // Served by DRAM.
+                let line = self.levels.last().expect("levels nonempty").config().line_bytes;
+                self.mem_bytes += line as u64;
+                self.mem_fills += 1;
+                break;
+            }
+            match self.levels[level].access(addr, write_at_level) {
+                Access::Hit => break,
+                Access::Miss { victim } => {
+                    if let Some((vaddr, true)) = victim {
+                        // Dirty victim: write it back one level out,
+                        // cascading further evictions.
+                        self.push_writeback(level + 1, vaddr);
+                    }
+                    // The fill into this level is a read from outward,
+                    // regardless of whether the CPU access was a write.
+                    write_at_level = false;
+                    level += 1;
+                }
+            }
+        }
+    }
+
+    /// Deliver a write-back into `level` (== `levels.len()` means DRAM),
+    /// cascading dirty evictions outward.
+    fn push_writeback(&mut self, mut level: usize, mut addr: usize) {
+        loop {
+            if level == self.levels.len() {
+                let line = self.levels.last().expect("levels nonempty").config().line_bytes;
+                self.mem_bytes += line as u64;
+                self.mem_writebacks += 1;
+                return;
+            }
+            match self.levels[level].insert_writeback(addr) {
+                Some((vaddr, true)) => {
+                    level += 1;
+                    addr = vaddr;
+                }
+                _ => return,
+            }
+        }
+    }
+
+    /// Per-level statistics plus the memory interface, as a report.
+    pub fn report(&self) -> TrafficReport {
+        let mut levels = Vec::new();
+        for (i, c) in self.levels.iter().enumerate() {
+            let line = c.config().line_bytes as u64;
+            // Bytes this level received from the outer side: its misses,
+            // plus write-back traffic charged to it.
+            let inbound = c.misses * line + c.inbound_writeback_bytes;
+            levels.push(LevelStats {
+                name: c.config().name,
+                hits: c.hits,
+                misses: c.misses,
+                writebacks: c.writebacks,
+                hit_ratio: c.hit_ratio(),
+                inbound_bytes: inbound,
+                _level: i,
+            });
+        }
+        TrafficReport {
+            levels,
+            mem_bytes: self.mem_bytes,
+            mem_fills: self.mem_fills,
+            mem_writebacks: self.mem_writebacks,
+            flops: self.flops,
+            load_ops: self.load_ops,
+            store_ops: self.store_ops,
+        }
+    }
+
+    /// Reset contents and counters.
+    pub fn reset(&mut self) {
+        for l in &mut self.levels {
+            l.reset();
+        }
+        self.mem_bytes = 0;
+        self.mem_fills = 0;
+        self.mem_writebacks = 0;
+        self.flops = 0;
+        self.load_ops = 0;
+        self.store_ops = 0;
+    }
+
+    /// Warm the hierarchy with a read sweep over an address range (the
+    /// paper: "for all in-cache benchmarks we make sure that the data has
+    /// already been loaded to the cache").
+    pub fn warm(&mut self, base: usize, bytes: usize) {
+        let line = self.levels[0].config().line_bytes;
+        let mut a = base & !(line - 1);
+        while a < base + bytes {
+            self.access_line(a, false);
+            a += line;
+        }
+    }
+}
+
+impl MemTracer for Hierarchy {
+    #[inline]
+    fn load(&mut self, addr: usize, bytes: usize) {
+        self.load_ops += 1;
+        let line = self.levels[0].config().line_bytes;
+        let first = addr & !(line - 1);
+        let last = (addr + bytes.max(1) - 1) & !(line - 1);
+        let mut a = first;
+        loop {
+            self.access_line(a, false);
+            if a == last {
+                break;
+            }
+            a += line;
+        }
+    }
+
+    #[inline]
+    fn store(&mut self, addr: usize, bytes: usize) {
+        self.store_ops += 1;
+        let line = self.levels[0].config().line_bytes;
+        let first = addr & !(line - 1);
+        let last = (addr + bytes.max(1) - 1) & !(line - 1);
+        let mut a = first;
+        loop {
+            self.access_line(a, true);
+            if a == last {
+                break;
+            }
+            a += line;
+        }
+    }
+
+    #[inline]
+    fn flops(&mut self, n: u64) {
+        self.flops += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_hierarchy() -> Hierarchy {
+        Hierarchy::new(vec![
+            CacheConfig { name: "L1", size_bytes: 1024, line_bytes: 64, assoc: 2 },
+            CacheConfig { name: "L2", size_bytes: 4096, line_bytes: 64, assoc: 4 },
+        ])
+    }
+
+    #[test]
+    fn fill_path_and_hits() {
+        let mut h = small_hierarchy();
+        h.load(0, 8);
+        // Cold: miss L1, miss L2, one line from memory.
+        assert_eq!(h.mem_bytes, 64);
+        h.load(8, 8);
+        let r = h.report();
+        assert_eq!(r.levels[0].hits, 1);
+        assert_eq!(h.mem_bytes, 64);
+    }
+
+    #[test]
+    fn l2_serves_l1_capacity_misses() {
+        let mut h = small_hierarchy();
+        // Stream 2 KiB (> L1 1 KiB, < L2 4 KiB).
+        for i in 0..32 {
+            h.load(i * 64, 8);
+        }
+        let mem_after_first = h.mem_bytes;
+        assert_eq!(mem_after_first, 32 * 64);
+        // Second pass: L1 misses on the evicted front, L2 hits, no new
+        // memory traffic.
+        for i in 0..32 {
+            h.load(i * 64, 8);
+        }
+        assert_eq!(h.mem_bytes, mem_after_first, "second pass served by L2");
+        let r = h.report();
+        assert!(r.levels[1].hits > 0);
+    }
+
+    #[test]
+    fn straddling_access_touches_two_lines() {
+        let mut h = small_hierarchy();
+        h.load(60, 8); // crosses lines 0 and 64
+        assert_eq!(h.mem_bytes, 128);
+    }
+
+    #[test]
+    fn stores_write_back_on_eviction() {
+        let mut h = small_hierarchy();
+        // Dirty the whole L2 then stream past it: write-backs must reach
+        // memory.
+        let lines = 4096 / 64;
+        for i in 0..(2 * lines) {
+            h.store(i * 64, 8);
+        }
+        assert!(h.mem_writebacks > 0, "dirty evictions reached memory");
+        let r = h.report();
+        assert_eq!(r.flops, 0);
+        assert_eq!(r.store_ops, (2 * lines) as u64);
+    }
+
+    #[test]
+    fn flops_and_reset() {
+        let mut h = small_hierarchy();
+        h.flops(42);
+        h.load(0, 8);
+        h.reset();
+        assert_eq!(h.flops, 0);
+        assert_eq!(h.mem_bytes, 0);
+        assert_eq!(h.report().levels[0].misses, 0);
+    }
+
+    #[test]
+    fn warm_preloads() {
+        let mut h = small_hierarchy();
+        let v = vec![0u8; 512];
+        let base = v.as_ptr() as usize;
+        h.warm(base, 512);
+        let misses_before = h.report().levels[0].misses;
+        h.load(base, 8);
+        h.load(base + 256, 8);
+        assert_eq!(h.report().levels[0].misses, misses_before, "warmed = hits");
+    }
+
+    #[test]
+    fn sandy_bridge_shape() {
+        let h = Hierarchy::sandy_bridge();
+        let r = h.report();
+        assert_eq!(r.levels.len(), 3);
+        assert_eq!(r.levels[0].name, "L1");
+        assert_eq!(r.levels[2].name, "L3");
+    }
+}

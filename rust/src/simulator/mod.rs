@@ -1,0 +1,18 @@
+//! Cache-hierarchy simulator — the stand-in for the paper's testbed.
+//!
+//! The paper benchmarks an Intel Sandy Bridge i7-2600 (32 kB L1 / 256 kB
+//! L2 / 8 MB L3, 18.5 GB/s STREAM). That machine is not available here,
+//! so the model-guided analysis replays the *same kernel code* (via the
+//! [`crate::kernels::tracer::MemTracer`] hooks every kernel carries)
+//! against a set-associative, write-allocate/write-back LRU hierarchy
+//! configured exactly like the i7-2600. The per-level traffic it measures
+//! feeds the bandwidth model of [`crate::model`], giving the "light
+//! speed" performance ceilings of §IV without the original hardware.
+
+mod cache;
+mod hierarchy;
+mod stats;
+
+pub use cache::{Cache, CacheConfig};
+pub use hierarchy::Hierarchy;
+pub use stats::{LevelStats, TrafficReport};

@@ -1,0 +1,153 @@
+//! Traffic reports produced by the simulated hierarchy.
+
+use crate::util::table::Table;
+
+/// Statistics of one cache level.
+#[derive(Clone, Debug)]
+pub struct LevelStats {
+    /// Level name ("L1", "L2", "L3").
+    pub name: &'static str,
+    /// Hits at this level.
+    pub hits: u64,
+    /// Misses at this level.
+    pub misses: u64,
+    /// Dirty evictions out of this level.
+    pub writebacks: u64,
+    /// hits / (hits + misses).
+    pub hit_ratio: f64,
+    /// Bytes this level received from outside (line fills + inbound
+    /// write-back traffic) — the traffic over the data path *feeding*
+    /// this level.
+    pub inbound_bytes: u64,
+    pub(crate) _level: usize,
+}
+
+/// Full report of a traced kernel run.
+#[derive(Clone, Debug)]
+pub struct TrafficReport {
+    /// Innermost-first cache level statistics.
+    pub levels: Vec<LevelStats>,
+    /// Bytes over the memory interface (fills + write-backs).
+    pub mem_bytes: u64,
+    /// DRAM line fills.
+    pub mem_fills: u64,
+    /// Write-backs that reached DRAM.
+    pub mem_writebacks: u64,
+    /// Flops the kernel reported.
+    pub flops: u64,
+    /// Load instructions observed.
+    pub load_ops: u64,
+    /// Store instructions observed.
+    pub store_ops: u64,
+}
+
+impl TrafficReport {
+    /// Instruction-level (L1) traffic in bytes: every load/store touches
+    /// the L1 data path — the paper's 16 B/Flop accounting happens here.
+    pub fn l1_bytes(&self) -> u64 {
+        // 8 bytes per op is the dominant width in these kernels; the
+        // exact per-op widths were already applied by the tracer, so
+        // derive from ops only when needed. Here: hits+misses at L1 ×
+        // nothing — instead expose the op counts and let the model use
+        // code balance from actual byte counts (loads are counted at
+        // issue width by the CountingTracer; in the hierarchy we count
+        // line-level). Approximation: ops × 8.
+        8 * (self.load_ops + self.store_ops)
+    }
+
+    /// Code balance seen by the memory interface (Bytes/Flop).
+    pub fn mem_balance(&self) -> f64 {
+        if self.flops == 0 {
+            f64::INFINITY
+        } else {
+            self.mem_bytes as f64 / self.flops as f64
+        }
+    }
+
+    /// Code balance at the L1 data path (Bytes/Flop) — compare with the
+    /// paper's hand-derived 16 B/Flop for the Gustavson inner loop.
+    pub fn l1_balance(&self) -> f64 {
+        if self.flops == 0 {
+            f64::INFINITY
+        } else {
+            self.l1_bytes() as f64 / self.flops as f64
+        }
+    }
+
+    /// Render as an aligned table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(["level", "hits", "misses", "hit%", "writebacks", "inbound MB"]);
+        for l in &self.levels {
+            t.row([
+                l.name.to_string(),
+                l.hits.to_string(),
+                l.misses.to_string(),
+                format!("{:.1}", 100.0 * l.hit_ratio),
+                l.writebacks.to_string(),
+                format!("{:.3}", l.inbound_bytes as f64 / 1e6),
+            ]);
+        }
+        t.row([
+            "MEM".to_string(),
+            "-".to_string(),
+            self.mem_fills.to_string(),
+            "-".to_string(),
+            self.mem_writebacks.to_string(),
+            format!("{:.3}", self.mem_bytes as f64 / 1e6),
+        ]);
+        format!(
+            "{}\nflops={}  L1 balance={:.2} B/F  mem balance={:.2} B/F\n",
+            t.render(),
+            self.flops,
+            self.l1_balance(),
+            self.mem_balance()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> TrafficReport {
+        TrafficReport {
+            levels: vec![LevelStats {
+                name: "L1",
+                hits: 90,
+                misses: 10,
+                writebacks: 2,
+                hit_ratio: 0.9,
+                inbound_bytes: 640,
+                _level: 0,
+            }],
+            mem_bytes: 640,
+            mem_fills: 10,
+            mem_writebacks: 0,
+            flops: 100,
+            load_ops: 150,
+            store_ops: 50,
+        }
+    }
+
+    #[test]
+    fn balances() {
+        let r = report();
+        assert!((r.mem_balance() - 6.4).abs() < 1e-12);
+        assert!((r.l1_balance() - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let s = report().render();
+        assert!(s.contains("L1"));
+        assert!(s.contains("MEM"));
+        assert!(s.contains("16.00 B/F"));
+    }
+
+    #[test]
+    fn zero_flops_infinite_balance() {
+        let mut r = report();
+        r.flops = 0;
+        assert!(r.mem_balance().is_infinite());
+    }
+}

@@ -1,0 +1,136 @@
+//! O(nnz) storage-order conversions (CSR ↔ CSC).
+//!
+//! Paper §IV-A: "In case one of the two matrices is available in CSR
+//! format and the other in CSC format it turns out to be more efficient
+//! to convert one of the matrices to the other format instead of
+//! providing a fallback to the 'classic' algorithm. The effort to convert
+//! the format is linear in the number of non-zero entries." These
+//! conversions are exactly that linear-effort counting-sort pass; the
+//! expression layer inserts them automatically for mixed-order operands,
+//! and Figures 2/3 ("CSR × CSC (with conversion)") and 11/12 charge their
+//! cost to the kernel.
+
+use super::{CscMatrix, CsrMatrix, SparseShape};
+
+/// Convert CSR → CSC in O(nnz + rows + cols) with one counting pass and
+/// one scatter pass.
+pub fn csr_to_csc(a: &CsrMatrix) -> CscMatrix {
+    let nnz = a.nnz();
+    // Pass 1: count entries per column.
+    let mut col_ptr = vec![0usize; a.cols() + 1];
+    for &c in a.col_idx() {
+        col_ptr[c + 1] += 1;
+    }
+    for i in 0..a.cols() {
+        col_ptr[i + 1] += col_ptr[i];
+    }
+    // Pass 2: scatter. Row-major traversal guarantees ascending row
+    // indices within each output column.
+    let mut row_idx = vec![0usize; nnz];
+    let mut values = vec![0f64; nnz];
+    let mut next = col_ptr.clone();
+    for r in 0..a.rows() {
+        let (idx, val) = a.row(r);
+        for (&c, &v) in idx.iter().zip(val) {
+            let p = next[c];
+            row_idx[p] = r;
+            values[p] = v;
+            next[c] += 1;
+        }
+    }
+    CscMatrix::from_parts(a.rows(), a.cols(), col_ptr, row_idx, values)
+}
+
+/// Convert CSC → CSR in O(nnz + rows + cols); mirror image of
+/// [`csr_to_csc`].
+pub fn csc_to_csr(a: &CscMatrix) -> CsrMatrix {
+    let nnz = a.nnz();
+    let mut row_ptr = vec![0usize; a.rows() + 1];
+    for &r in a.row_idx() {
+        row_ptr[r + 1] += 1;
+    }
+    for i in 0..a.rows() {
+        row_ptr[i + 1] += row_ptr[i];
+    }
+    let mut col_idx = vec![0usize; nnz];
+    let mut values = vec![0f64; nnz];
+    let mut next = row_ptr.clone();
+    for c in 0..a.cols() {
+        let (idx, val) = a.col(c);
+        for (&r, &v) in idx.iter().zip(val) {
+            let p = next[r];
+            col_idx[p] = c;
+            values[p] = v;
+            next[r] += 1;
+        }
+    }
+    CsrMatrix::from_parts(a.rows(), a.cols(), row_ptr, col_idx, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::DenseMatrix;
+    use crate::util::rng::Pcg64;
+
+    fn random_csr(rng: &mut Pcg64, rows: usize, cols: usize, per_row: usize) -> CsrMatrix {
+        let mut m = CsrMatrix::new(rows, cols);
+        for _ in 0..rows {
+            let k = per_row.min(cols);
+            for c in rng.distinct_sorted(k, cols) {
+                m.append(c, rng.nonzero_value());
+            }
+            m.finalize_row();
+        }
+        m
+    }
+
+    #[test]
+    fn round_trip_identity() {
+        let mut rng = Pcg64::new(77);
+        for _ in 0..20 {
+            let rows = rng.range(1, 40);
+            let cols = rng.range(1, 40);
+            let per_row = rng.below(cols.min(6) + 1);
+            let a = random_csr(&mut rng, rows, cols, per_row);
+            let csc = csr_to_csc(&a);
+            let back = csc_to_csr(&csc);
+            assert!(back.approx_eq(&a, 0.0), "round trip must be exact");
+        }
+    }
+
+    #[test]
+    fn conversion_preserves_values() {
+        let mut rng = Pcg64::new(3);
+        let a = random_csr(&mut rng, 15, 12, 4);
+        let csc = csr_to_csc(&a);
+        let da = DenseMatrix::from_csr(&a);
+        let dc = DenseMatrix::from_csc(&csc);
+        assert_eq!(da.max_abs_diff(&dc), 0.0);
+        assert_eq!(a.nnz(), csc.nnz());
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let a = CsrMatrix::new(0, 0);
+        // 0x0: must not panic.
+        let csc = csr_to_csc(&{
+            let mut m = a.clone();
+            debug_assert!(m.finalized_rows() == 0);
+            m.shrink_to_fit();
+            m
+        });
+        assert_eq!(csc.nnz(), 0);
+
+        // Matrix with empty rows/cols.
+        let mut m = CsrMatrix::new(3, 3);
+        m.finalize_row();
+        m.append(0, 2.0);
+        m.finalize_row();
+        m.finalize_row();
+        let c = csr_to_csc(&m);
+        assert_eq!(c.get(1, 0), 2.0);
+        assert_eq!(c.col_nnz(1), 0);
+        assert_eq!(c.col_nnz(2), 0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Coordinate (triplet) format — the assembly format.
+
+use super::{CscMatrix, CsrMatrix, SparseShape, StorageOrder};
+
+/// A coordinate-format matrix: unsorted `(row, col, value)` triplets.
+///
+/// Not used on any hot path; this is the convenient assembly format for
+/// generators, examples and tests. Duplicate coordinates are *summed*
+/// on conversion (the usual FEM-assembly semantics).
+#[derive(Clone, Debug, Default)]
+pub struct CooMatrix {
+    rows: usize,
+    cols: usize,
+    entries: Vec<(usize, usize, f64)>,
+}
+
+impl CooMatrix {
+    /// An empty `rows × cols` triplet list.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        CooMatrix { rows, cols, entries: Vec::new() }
+    }
+
+    /// Add a triplet.
+    pub fn push(&mut self, row: usize, col: usize, value: f64) {
+        assert!(row < self.rows && col < self.cols, "({row},{col}) out of bounds");
+        self.entries.push((row, col, value));
+    }
+
+    /// Raw triplets (unsorted, possibly with duplicates).
+    pub fn entries(&self) -> &[(usize, usize, f64)] {
+        &self.entries
+    }
+
+    /// Sort triplets row-major and sum duplicates.
+    fn canonical_row_major(&self) -> Vec<(usize, usize, f64)> {
+        let mut e = self.entries.clone();
+        e.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut out: Vec<(usize, usize, f64)> = Vec::with_capacity(e.len());
+        for (r, c, v) in e {
+            match out.last_mut() {
+                Some(last) if last.0 == r && last.1 == c => last.2 += v,
+                _ => out.push((r, c, v)),
+            }
+        }
+        // Entries that summed to exact zero remain structural nonzeros —
+        // same semantics as Blaze (no implicit pruning).
+        out
+    }
+
+    /// Convert to CSR (sorting + duplicate summation).
+    pub fn to_csr(&self) -> CsrMatrix {
+        let canon = self.canonical_row_major();
+        let mut m = CsrMatrix::new(self.rows, self.cols);
+        m.reserve(canon.len());
+        let mut row = 0usize;
+        for (r, c, v) in canon {
+            while row < r {
+                m.finalize_row();
+                row += 1;
+            }
+            m.append(c, v);
+        }
+        while row < self.rows {
+            m.finalize_row();
+            row += 1;
+        }
+        m
+    }
+
+    /// Convert to CSC (sorting + duplicate summation).
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut e = self.entries.clone();
+        e.sort_unstable_by_key(|&(r, c, _)| (c, r));
+        let mut m = CscMatrix::new(self.rows, self.cols);
+        m.reserve(e.len());
+        let mut col = 0usize;
+        let mut last: Option<(usize, usize)> = None;
+        let mut pending: Option<(usize, usize, f64)> = None;
+        let flush = |m: &mut CscMatrix, p: Option<(usize, usize, f64)>, col: &mut usize| {
+            if let Some((r, c, v)) = p {
+                while *col < c {
+                    m.finalize_col();
+                    *col += 1;
+                }
+                m.append(r, v);
+            }
+        };
+        for (r, c, v) in e {
+            if last == Some((r, c)) {
+                if let Some(p) = pending.as_mut() {
+                    p.2 += v;
+                }
+            } else {
+                flush(&mut m, pending.take(), &mut col);
+                pending = Some((r, c, v));
+                last = Some((r, c));
+            }
+        }
+        flush(&mut m, pending.take(), &mut col);
+        while col < self.cols {
+            m.finalize_col();
+            col += 1;
+        }
+        m
+    }
+}
+
+impl SparseShape for CooMatrix {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    /// Triplet count (duplicates counted individually).
+    fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+    fn order(&self) -> StorageOrder {
+        StorageOrder::RowMajor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_csr_sorts_and_sums() {
+        let mut m = CooMatrix::new(2, 3);
+        m.push(1, 2, 1.0);
+        m.push(0, 1, 2.0);
+        m.push(1, 2, 3.0); // duplicate -> summed
+        m.push(0, 0, 4.0);
+        let csr = m.to_csr();
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.get(0, 0), 4.0);
+        assert_eq!(csr.get(0, 1), 2.0);
+        assert_eq!(csr.get(1, 2), 4.0);
+    }
+
+    #[test]
+    fn to_csc_matches_to_csr() {
+        let mut m = CooMatrix::new(3, 3);
+        for &(r, c, v) in
+            &[(2usize, 0usize, 1.0f64), (0, 2, 2.0), (1, 1, 3.0), (2, 2, 4.0), (0, 2, 0.5)]
+        {
+            m.push(r, c, v);
+        }
+        let csr = m.to_csr();
+        let csc = m.to_csc();
+        assert_eq!(csr.nnz(), csc.nnz());
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(csr.get(r, c), csc.get(r, c), "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = CooMatrix::new(4, 4);
+        let csr = m.to_csr();
+        assert!(csr.is_finalized());
+        assert_eq!(csr.nnz(), 0);
+        let csc = m.to_csc();
+        assert!(csc.is_finalized());
+        assert_eq!(csc.nnz(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn bounds_checked() {
+        let mut m = CooMatrix::new(2, 2);
+        m.push(2, 0, 1.0);
+    }
+}

@@ -1,0 +1,242 @@
+//! Compressed Sparse Column storage.
+
+use super::{SparseShape, StorageOrder};
+
+/// A column-major compressed sparse matrix (CSC), Blaze's
+/// `CompressedMatrix<double,columnMajor>`.
+///
+/// Layout: `col_ptr[c]..col_ptr[c+1]` indexes into `row_idx`/`values`
+/// for column `c`. Within a column, entries are sorted by row index.
+/// The streaming interface (`append`/`finalize_col`) is the column-wise
+/// analog of the CSR one ("the CSC format is handled accordingly",
+/// paper §IV-B).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CscMatrix {
+    rows: usize,
+    cols: usize,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// An empty `rows × cols` matrix ready for streaming construction.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        let mut col_ptr = Vec::with_capacity(cols + 1);
+        col_ptr.push(0);
+        CscMatrix { rows, cols, col_ptr, row_idx: Vec::new(), values: Vec::new() }
+    }
+
+    /// Construct from raw parts; validates the invariants.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        assert_eq!(col_ptr.len(), cols + 1, "col_ptr length");
+        assert_eq!(*col_ptr.first().unwrap(), 0, "col_ptr[0]");
+        assert_eq!(*col_ptr.last().unwrap(), row_idx.len(), "col_ptr[cols]");
+        assert_eq!(row_idx.len(), values.len(), "row_idx/values length");
+        assert!(col_ptr.windows(2).all(|w| w[0] <= w[1]), "col_ptr monotone");
+        for c in 0..cols {
+            let s = &row_idx[col_ptr[c]..col_ptr[c + 1]];
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "col {c} sorted/unique");
+            if let Some(&last) = s.last() {
+                assert!(last < rows, "col {c} row bound");
+            }
+        }
+        CscMatrix { rows, cols, col_ptr, row_idx, values }
+    }
+
+    /// Pre-allocate space for `nnz` entries (single-allocation contract,
+    /// see [`super::CsrMatrix::reserve`]).
+    pub fn reserve(&mut self, nnz: usize) {
+        self.row_idx.reserve(nnz.saturating_sub(self.row_idx.len()));
+        self.values.reserve(nnz.saturating_sub(self.values.len()));
+    }
+
+    /// Allocated capacity in entries.
+    pub fn capacity(&self) -> usize {
+        self.row_idx.capacity().min(self.values.capacity())
+    }
+
+    /// Append an entry to the current (not yet finalized) column; entries
+    /// must arrive in increasing column order and increasing row order
+    /// within a column.
+    #[inline]
+    pub fn append(&mut self, row: usize, value: f64) {
+        debug_assert!(row < self.rows, "row {row} out of bounds {}", self.rows);
+        debug_assert!(
+            self.row_idx.len() == *self.col_ptr.last().unwrap()
+                || *self.row_idx.last().unwrap() < row,
+            "append out of order within column"
+        );
+        self.row_idx.push(row);
+        self.values.push(value);
+    }
+
+    /// Mark the end of the current column.
+    #[inline]
+    pub fn finalize_col(&mut self) {
+        debug_assert!(self.col_ptr.len() <= self.cols, "finalize_col called too often");
+        self.col_ptr.push(self.row_idx.len());
+    }
+
+    /// Number of columns finalized so far.
+    pub fn finalized_cols(&self) -> usize {
+        self.col_ptr.len() - 1
+    }
+
+    /// True when every column has been finalized.
+    pub fn is_finalized(&self) -> bool {
+        self.finalized_cols() == self.cols
+    }
+
+    /// Row indices of column `c`.
+    #[inline]
+    pub fn col_indices(&self, c: usize) -> &[usize] {
+        &self.row_idx[self.col_ptr[c]..self.col_ptr[c + 1]]
+    }
+
+    /// Values of column `c`.
+    #[inline]
+    pub fn col_values(&self, c: usize) -> &[f64] {
+        &self.values[self.col_ptr[c]..self.col_ptr[c + 1]]
+    }
+
+    /// `(indices, values)` of column `c`.
+    #[inline]
+    pub fn col(&self, c: usize) -> (&[usize], &[f64]) {
+        let span = self.col_ptr[c]..self.col_ptr[c + 1];
+        (&self.row_idx[span.clone()], &self.values[span])
+    }
+
+    /// Number of nonzeros in column `c` (the b̄_c of the flop formula).
+    #[inline]
+    pub fn col_nnz(&self, c: usize) -> usize {
+        self.col_ptr[c + 1] - self.col_ptr[c]
+    }
+
+    /// Iterate `(row, col, value)` over all entries in storage order
+    /// (column-major).
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
+        (0..self.cols).flat_map(move |c| {
+            let (idx, val) = self.col(c);
+            idx.iter().zip(val).map(move |(&r, &v)| (r, c, v))
+        })
+    }
+
+    /// Value at `(r, c)` (binary search), 0.0 if not stored.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (idx, val) = self.col(c);
+        match idx.binary_search(&r) {
+            Ok(p) => val[p],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Raw column pointer array (length `cols + 1`).
+    pub fn col_ptr(&self) -> &[usize] {
+        &self.col_ptr
+    }
+
+    /// Raw row index array.
+    pub fn row_idx(&self) -> &[usize] {
+        &self.row_idx
+    }
+
+    /// Raw value array.
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Structural + numerical equality within `tol` (for tests).
+    pub fn approx_eq(&self, other: &CscMatrix, tol: f64) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.col_ptr == other.col_ptr
+            && self.row_idx == other.row_idx
+            && self
+                .values
+                .iter()
+                .zip(&other.values)
+                .all(|(a, b)| (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0))
+    }
+}
+
+impl SparseShape for CscMatrix {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+    fn order(&self) -> StorageOrder {
+        StorageOrder::ColumnMajor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 3x2 matrix [[1,0],[0,3],[2,0]] built column-wise.
+    fn small() -> CscMatrix {
+        let mut m = CscMatrix::new(3, 2);
+        m.append(0, 1.0);
+        m.append(2, 2.0);
+        m.finalize_col();
+        m.append(1, 3.0);
+        m.finalize_col();
+        m
+    }
+
+    #[test]
+    fn streaming_construction() {
+        let m = small();
+        assert!(m.is_finalized());
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.col(0), (&[0usize, 2][..], &[1.0, 2.0][..]));
+        assert_eq!(m.col_nnz(1), 1);
+        assert_eq!(m.order(), StorageOrder::ColumnMajor);
+    }
+
+    #[test]
+    fn get_and_iter() {
+        let m = small();
+        assert_eq!(m.get(2, 0), 2.0);
+        assert_eq!(m.get(2, 1), 0.0);
+        let entries: Vec<_> = m.iter().collect();
+        assert_eq!(entries, vec![(0, 0, 1.0), (2, 0, 2.0), (1, 1, 3.0)]);
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        let m = CscMatrix::from_parts(2, 2, vec![0, 1, 2], vec![1, 0], vec![1.0, 2.0]);
+        assert_eq!(m.get(1, 0), 1.0);
+        assert_eq!(m.get(0, 1), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted")]
+    fn from_parts_rejects_unsorted_cols() {
+        CscMatrix::from_parts(3, 1, vec![0, 2], vec![2, 0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn empty_cols() {
+        let mut m = CscMatrix::new(2, 3);
+        m.finalize_col();
+        m.append(1, 4.0);
+        m.finalize_col();
+        m.finalize_col();
+        assert!(m.is_finalized());
+        assert_eq!(m.col_nnz(0), 0);
+        assert_eq!(m.col_nnz(1), 1);
+    }
+}

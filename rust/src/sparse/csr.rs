@@ -1,0 +1,320 @@
+//! Compressed Sparse Row storage.
+
+use super::{SparseShape, StorageOrder};
+
+/// A row-major compressed sparse matrix (CSR), Blaze's
+/// `CompressedMatrix<double,rowMajor>`.
+///
+/// Layout: `row_ptr[r]..row_ptr[r+1]` indexes into `col_idx`/`values`
+/// for row `r`. Within a row, entries are sorted by column index.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// An empty `rows × cols` matrix ready for streaming construction
+    /// (`reserve` + `append` + `finalize_row`).
+    pub fn new(rows: usize, cols: usize) -> Self {
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        row_ptr.push(0);
+        CsrMatrix { rows, cols, row_ptr, col_idx: Vec::new(), values: Vec::new() }
+    }
+
+    /// Construct from raw parts; validates the invariants.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        assert_eq!(row_ptr.len(), rows + 1, "row_ptr length");
+        assert_eq!(*row_ptr.first().unwrap(), 0, "row_ptr[0]");
+        assert_eq!(*row_ptr.last().unwrap(), col_idx.len(), "row_ptr[rows]");
+        assert_eq!(col_idx.len(), values.len(), "col_idx/values length");
+        assert!(row_ptr.windows(2).all(|w| w[0] <= w[1]), "row_ptr monotone");
+        for r in 0..rows {
+            let s = &col_idx[row_ptr[r]..row_ptr[r + 1]];
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "row {r} sorted/unique");
+            if let Some(&last) = s.last() {
+                assert!(last < cols, "row {r} column bound");
+            }
+        }
+        CsrMatrix { rows, cols, row_ptr, col_idx, values }
+    }
+
+    /// Pre-allocate space for `nnz` entries.
+    ///
+    /// The paper stresses that the nonzero estimate (never an
+    /// under-estimate) makes this the *only* allocation of the kernel:
+    /// "the memory allocation is only done once at the beginning".
+    pub fn reserve(&mut self, nnz: usize) {
+        self.col_idx.reserve(nnz.saturating_sub(self.col_idx.len()));
+        self.values.reserve(nnz.saturating_sub(self.values.len()));
+    }
+
+    /// Allocated capacity in entries.
+    pub fn capacity(&self) -> usize {
+        self.col_idx.capacity().min(self.values.capacity())
+    }
+
+    /// Append an entry to the *current* (not yet finalized) row.
+    ///
+    /// Caller contract (paper §IV-B): values are appended in increasing
+    /// row order and, within each row, in increasing column order.
+    /// Checked in debug builds only — this is the hot store path.
+    #[inline]
+    pub fn append(&mut self, col: usize, value: f64) {
+        debug_assert!(col < self.cols, "column {col} out of bounds {}", self.cols);
+        debug_assert!(
+            self.col_idx.len() == *self.row_ptr.last().unwrap()
+                || *self.col_idx.last().unwrap() < col,
+            "append out of order within row"
+        );
+        self.col_idx.push(col);
+        self.values.push(value);
+    }
+
+    /// Mark the end of the current row (paper §IV-B `finalize`). Must be
+    /// called exactly once per row, after which the matrix is consistent
+    /// up to and including that row.
+    #[inline]
+    pub fn finalize_row(&mut self) {
+        debug_assert!(self.row_ptr.len() <= self.rows, "finalize_row called too often");
+        self.row_ptr.push(self.col_idx.len());
+    }
+
+    /// Number of rows finalized so far (== `rows()` when construction is
+    /// complete).
+    pub fn finalized_rows(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    /// True when every row has been finalized.
+    pub fn is_finalized(&self) -> bool {
+        self.finalized_rows() == self.rows
+    }
+
+    /// Column indices of row `r`.
+    #[inline]
+    pub fn row_indices(&self, r: usize) -> &[usize] {
+        &self.col_idx[self.row_ptr[r]..self.row_ptr[r + 1]]
+    }
+
+    /// Values of row `r`.
+    #[inline]
+    pub fn row_values(&self, r: usize) -> &[f64] {
+        &self.values[self.row_ptr[r]..self.row_ptr[r + 1]]
+    }
+
+    /// `(indices, values)` of row `r` — the paper's `begin(r)`/`end(r)`.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[usize], &[f64]) {
+        let span = self.row_ptr[r]..self.row_ptr[r + 1];
+        (&self.col_idx[span.clone()], &self.values[span])
+    }
+
+    /// Number of nonzeros in row `r` (the ā_r of the flop formula).
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// Iterate `(row, col, value)` over all entries in storage order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
+        (0..self.rows).flat_map(move |r| {
+            let (idx, val) = self.row(r);
+            idx.iter().zip(val).map(move |(&c, &v)| (r, c, v))
+        })
+    }
+
+    /// Value at `(r, c)` (binary search), 0.0 if not stored.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (idx, val) = self.row(r);
+        match idx.binary_search(&c) {
+            Ok(p) => val[p],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Raw row pointer array (length `rows + 1`).
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
+    /// Raw column index array.
+    pub fn col_idx(&self) -> &[usize] {
+        &self.col_idx
+    }
+
+    /// Raw value array.
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Release excess capacity (after construction with an over-estimate).
+    pub fn shrink_to_fit(&mut self) {
+        self.col_idx.shrink_to_fit();
+        self.values.shrink_to_fit();
+    }
+
+    /// Structural + numerical equality within `tol` (for tests).
+    pub fn approx_eq(&self, other: &CsrMatrix, tol: f64) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.row_ptr == other.row_ptr
+            && self.col_idx == other.col_idx
+            && self
+                .values
+                .iter()
+                .zip(&other.values)
+                .all(|(a, b)| (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0))
+    }
+
+    /// Transpose (yields a CSR of the transposed matrix in O(nnz)).
+    pub fn transpose(&self) -> CsrMatrix {
+        // A CSR transpose has the same layout computation as CSR→CSC.
+        let mut col_counts = vec![0usize; self.cols + 1];
+        for &c in &self.col_idx {
+            col_counts[c + 1] += 1;
+        }
+        for i in 0..self.cols {
+            col_counts[i + 1] += col_counts[i];
+        }
+        let mut row_ptr = col_counts;
+        let mut col_idx = vec![0usize; self.nnz()];
+        let mut values = vec![0f64; self.nnz()];
+        let mut next = row_ptr.clone();
+        for r in 0..self.rows {
+            let (idx, val) = self.row(r);
+            for (&c, &v) in idx.iter().zip(val) {
+                let p = next[c];
+                col_idx[p] = r;
+                values[p] = v;
+                next[c] += 1;
+            }
+        }
+        row_ptr.truncate(self.cols + 1);
+        CsrMatrix { rows: self.cols, cols: self.rows, row_ptr, col_idx, values }
+    }
+}
+
+impl SparseShape for CsrMatrix {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+    fn order(&self) -> StorageOrder {
+        StorageOrder::RowMajor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2x3 matrix [[1,0,2],[0,3,0]].
+    fn small() -> CsrMatrix {
+        let mut m = CsrMatrix::new(2, 3);
+        m.append(0, 1.0);
+        m.append(2, 2.0);
+        m.finalize_row();
+        m.append(1, 3.0);
+        m.finalize_row();
+        m
+    }
+
+    #[test]
+    fn streaming_construction() {
+        let m = small();
+        assert!(m.is_finalized());
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row(0), (&[0usize, 2][..], &[1.0, 2.0][..]));
+        assert_eq!(m.row(1), (&[1usize][..], &[3.0][..]));
+        assert_eq!(m.row_nnz(0), 2);
+    }
+
+    #[test]
+    fn get_and_iter() {
+        let m = small();
+        assert_eq!(m.get(0, 2), 2.0);
+        assert_eq!(m.get(0, 1), 0.0);
+        assert_eq!(m.get(1, 1), 3.0);
+        let entries: Vec<_> = m.iter().collect();
+        assert_eq!(entries, vec![(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0)]);
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let mut m = CsrMatrix::new(3, 3);
+        m.finalize_row();
+        m.append(0, 5.0);
+        m.finalize_row();
+        m.finalize_row();
+        assert!(m.is_finalized());
+        assert_eq!(m.row_nnz(0), 0);
+        assert_eq!(m.row_nnz(1), 1);
+        assert_eq!(m.row_nnz(2), 0);
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        let m = CsrMatrix::from_parts(2, 2, vec![0, 1, 2], vec![1, 0], vec![1.0, 2.0]);
+        assert_eq!(m.get(0, 1), 1.0);
+        assert_eq!(m.get(1, 0), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted")]
+    fn from_parts_rejects_unsorted_rows() {
+        CsrMatrix::from_parts(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row_ptr length")]
+    fn from_parts_rejects_bad_ptr() {
+        CsrMatrix::from_parts(2, 2, vec![0, 1], vec![0], vec![1.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = small();
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.cols(), 2);
+        assert_eq!(t.get(2, 0), 2.0);
+        assert_eq!(t.get(1, 1), 3.0);
+        let back = t.transpose();
+        assert!(back.approx_eq(&m, 0.0));
+    }
+
+    #[test]
+    fn reserve_prevents_reallocation() {
+        let mut m = CsrMatrix::new(1, 1000);
+        m.reserve(100);
+        let cap = m.capacity();
+        assert!(cap >= 100);
+        for c in 0..100 {
+            m.append(c, 1.0);
+        }
+        m.finalize_row();
+        assert_eq!(m.capacity(), cap, "no reallocation after reserve");
+    }
+
+    #[test]
+    fn fill_ratio() {
+        let m = small();
+        assert!((m.fill_ratio() - 3.0 / 6.0).abs() < 1e-15);
+        assert_eq!(m.payload_bytes(), 3 * 16);
+    }
+}

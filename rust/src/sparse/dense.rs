@@ -1,0 +1,174 @@
+//! Dense matrix — the correctness oracle.
+
+use super::{CscMatrix, CsrMatrix, SparseShape};
+
+/// A row-major dense matrix used as the reference ("oracle") for every
+/// sparse kernel in the test-suite, and as the dense accumulator in a few
+/// examples. Not a performance-relevant type.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Zero-filled `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// From a row-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length");
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row-major backing slice.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Row `r` as a slice.
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Classic triple-loop matmul (the oracle).
+    pub fn matmul(&self, other: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, other.rows, "shape mismatch");
+        let mut out = DenseMatrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Densify a CSR matrix.
+    pub fn from_csr(m: &CsrMatrix) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(m.rows(), m.cols());
+        for (r, c, v) in m.iter() {
+            out[(r, c)] += v;
+        }
+        out
+    }
+
+    /// Densify a CSC matrix.
+    pub fn from_csc(m: &CscMatrix) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(m.rows(), m.cols());
+        for (r, c, v) in m.iter() {
+            out[(r, c)] += v;
+        }
+        out
+    }
+
+    /// Sparsify: store entries with `|v| > 0` as a CSR matrix.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut out = CsrMatrix::new(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let v = self[(r, c)];
+                if v != 0.0 {
+                    out.append(c, v);
+                }
+            }
+            out.finalize_row();
+        }
+        out
+    }
+
+    /// Max absolute element-wise difference.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DenseMatrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DenseMatrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let i = DenseMatrix::identity(2);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = DenseMatrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = DenseMatrix::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn csr_round_trip() {
+        let d = DenseMatrix::from_vec(2, 3, vec![0.0, 1.0, 0.0, 2.0, 0.0, 3.0]);
+        let s = d.to_csr();
+        assert_eq!(s.nnz(), 3);
+        let back = DenseMatrix::from_csr(&s);
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn norms() {
+        let d = DenseMatrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((d.frobenius() - 5.0).abs() < 1e-15);
+        let e = DenseMatrix::from_vec(1, 2, vec![3.0, 5.0]);
+        assert_eq!(d.max_abs_diff(&e), 1.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Sparse (and dense-oracle) matrix formats.
+//!
+//! The paper's Blaze `CompressedMatrix<double,rowMajor>` and
+//! `CompressedMatrix<double,columnMajor>` map to [`CsrMatrix`] and
+//! [`CscMatrix`]. Both provide the paper's low-level streaming store
+//! interface (§IV-B): [`CsrMatrix::append`] appends an entry to the
+//! current row (caller keeps entries ordered) and
+//! [`CsrMatrix::finalize_row`] marks the end of a row, leaving the matrix
+//! in a consistent state; the CSC format is handled accordingly
+//! column-wise.
+//!
+//! Values are `f64` and indices are machine words, matching the paper's
+//! "double precision floating point number and an index as a 64-bit
+//! integral value" (§III): 16 bytes per stored nonzero.
+
+mod coo;
+mod csc;
+mod csr;
+mod dense;
+
+pub mod convert;
+
+pub use coo::CooMatrix;
+pub use csc::CscMatrix;
+pub use csr::CsrMatrix;
+pub use dense::DenseMatrix;
+
+/// Storage order tag, mirroring Blaze's `rowMajor` / `columnMajor`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StorageOrder {
+    RowMajor,
+    ColumnMajor,
+}
+
+/// Bytes occupied by one stored nonzero (value + index), per paper §III.
+pub const BYTES_PER_NNZ: usize = 16;
+
+/// Common shape/occupancy queries for all sparse formats.
+pub trait SparseShape {
+    /// Number of rows.
+    fn rows(&self) -> usize;
+    /// Number of columns.
+    fn cols(&self) -> usize;
+    /// Number of stored (structural) nonzeros.
+    fn nnz(&self) -> usize;
+    /// Storage order of the format.
+    fn order(&self) -> StorageOrder;
+
+    /// Fill ratio nnz / (rows*cols); 0 for an empty shape.
+    fn fill_ratio(&self) -> f64 {
+        let cells = self.rows() * self.cols();
+        if cells == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / cells as f64
+        }
+    }
+
+    /// Approximate resident bytes of the nonzero payload (paper §III
+    /// accounting: 8 B value + 8 B index per entry), excluding the
+    /// pointer array.
+    fn payload_bytes(&self) -> usize {
+        self.nnz() * BYTES_PER_NNZ
+    }
+}

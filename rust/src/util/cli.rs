@@ -1,0 +1,203 @@
+//! Minimal command-line argument parser.
+//!
+//! `clap` is not available offline; this covers what the `blazert` binary,
+//! the benches and the examples need: subcommands, `--flag`,
+//! `--key value` / `--key=value`, positionals, typed getters with
+//! defaults, and a generated usage string.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative description of one option (for usage text only).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+}
+
+/// Parsed arguments: flags, key-value options and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    program: String,
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (first element = program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        iter: I,
+        with_subcommand: bool,
+        specs: &[OptSpec],
+    ) -> Result<Self, String> {
+        let mut it = iter.into_iter();
+        let program = it.next().unwrap_or_else(|| "blazert".into());
+        let mut args = Args { program, specs: specs.to_vec(), ..Default::default() };
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        if with_subcommand {
+            if let Some(first) = rest.first() {
+                if !first.starts_with('-') {
+                    args.subcommand = Some(first.clone());
+                    i = 1;
+                }
+            }
+        }
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    let takes_value = specs
+                        .iter()
+                        .find(|s| s.name == stripped)
+                        .map(|s| s.takes_value)
+                        // Unknown option: guess from the next token.
+                        .unwrap_or_else(|| rest.get(i + 1).map_or(false, |n| !n.starts_with("--")));
+                    if takes_value {
+                        let v = rest
+                            .get(i + 1)
+                            .ok_or_else(|| format!("option --{stripped} expects a value"))?;
+                        args.options.insert(stripped.to_string(), v.clone());
+                        i += 1;
+                    } else {
+                        args.flags.push(stripped.to_string());
+                    }
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments.
+    pub fn parse(with_subcommand: bool, specs: &[OptSpec]) -> Result<Self, String> {
+        Self::parse_from(std::env::args(), with_subcommand, specs)
+    }
+
+    /// Is a bare `--name` flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw string value of `--name`.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// String value with a default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed value with a default; errors mention the offending text.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|e| format!("--{name}={s}: {e}")),
+        }
+    }
+
+    /// Comma-separated list value, e.g. `--sizes 100,1000,10000`.
+    pub fn get_list_or<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| p.trim().parse::<T>().map_err(|e| format!("--{name}: '{p}': {e}")))
+                .collect(),
+        }
+    }
+
+    /// Generated usage text.
+    pub fn usage(&self, subcommands: &[(&str, &str)]) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "usage: {} <command> [options]", self.program);
+        if !subcommands.is_empty() {
+            let _ = writeln!(out, "\ncommands:");
+            for (name, help) in subcommands {
+                let _ = writeln!(out, "  {name:<14} {help}");
+            }
+        }
+        if !self.specs.is_empty() {
+            let _ = writeln!(out, "\noptions:");
+            for s in &self.specs {
+                let v = if s.takes_value { " <v>" } else { "" };
+                let _ = writeln!(out, "  --{}{v:<6} {}", s.name, s.help);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPECS: &[OptSpec] = &[
+        OptSpec { name: "sizes", help: "sweep sizes", takes_value: true },
+        OptSpec { name: "full", help: "paper-scale sweep", takes_value: false },
+    ];
+
+    #[test]
+    fn parses_subcommand_options_flags_positionals() {
+        let a = Args::parse_from(
+            sv(&["blazert", "bench", "--sizes", "10,20", "--full", "pos1", "--k=v"]),
+            true,
+            SPECS,
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get("sizes"), Some("10,20"));
+        assert!(a.flag("full"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+        assert_eq!(a.get("k"), Some("v"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse_from(sv(&["p", "--n=42"]), false, &[]).unwrap();
+        assert_eq!(a.get_parsed_or("n", 0usize).unwrap(), 42);
+        assert_eq!(a.get_parsed_or("missing", 7usize).unwrap(), 7);
+        assert!(a.get_parsed_or("n", 0u8).is_ok());
+    }
+
+    #[test]
+    fn list_getter() {
+        let a = Args::parse_from(sv(&["p", "--sizes=1,2,3"]), false, SPECS).unwrap();
+        assert_eq!(a.get_list_or::<usize>("sizes", &[9]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.get_list_or::<usize>("other", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = Args::parse_from(sv(&["p", "--sizes"]), false, SPECS);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports_text() {
+        let a = Args::parse_from(sv(&["p", "--n=abc"]), false, &[]).unwrap();
+        let e = a.get_parsed_or("n", 0usize).unwrap_err();
+        assert!(e.contains("abc"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline and only the crates vendored for
+//! the `xla` dependency are available, so the pieces one would normally
+//! pull from crates.io (a seeded RNG, a CLI parser, a table printer, a
+//! property-testing harness, timing helpers) live here.
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use timer::Stopwatch;

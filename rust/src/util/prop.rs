@@ -1,0 +1,142 @@
+//! A small property-based testing harness.
+//!
+//! `proptest` cannot be used offline, so this module provides the subset
+//! the test-suite needs: run a property over many seeded random cases and,
+//! on failure, report the seed so the case replays deterministically.
+//! Structured inputs are produced by the caller from the provided
+//! [`Pcg64`] (the generators in [`crate::gen`] are themselves seeded, so
+//! "arbitrary sparse matrix" is one call away).
+
+use super::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: u32,
+    /// Base seed; case `i` uses seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Honor BLAZERT_PROP_CASES / BLAZERT_PROP_SEED for reproduction.
+        let cases = std::env::var("BLAZERT_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let base_seed = std::env::var("BLAZERT_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xb1a2_e000);
+        Config { cases, base_seed }
+    }
+}
+
+/// Run `property(rng, case_index)` for each case; panic with the seed on
+/// the first failure (either a returned `Err` or a panic inside).
+pub fn check<F>(name: &str, cfg: Config, mut property: F)
+where
+    F: FnMut(&mut Pcg64, u32) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(i as u64);
+        let mut rng = Pcg64::new(seed);
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut rng, i))) {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property '{name}' failed on case {i} (replay: BLAZERT_PROP_SEED={seed} BLAZERT_PROP_CASES=1): {msg}"
+            ),
+            Err(p) => {
+                let msg = p
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property '{name}' panicked on case {i} (replay: BLAZERT_PROP_SEED={seed} BLAZERT_PROP_CASES=1): {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// Convenience: run with the default configuration.
+pub fn check_default<F>(name: &str, property: F)
+where
+    F: FnMut(&mut Pcg64, u32) -> Result<(), String>,
+{
+    check(name, Config::default(), property)
+}
+
+/// Assert two f64 slices are element-wise close.
+pub fn assert_allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("count", Config { cases: 10, base_seed: 1 }, |_rng, _i| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay")]
+    fn failing_property_reports_seed() {
+        check("fails", Config { cases: 5, base_seed: 2 }, |_rng, i| {
+            if i == 3 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn panicking_property_reports_seed() {
+        check("panics", Config { cases: 2, base_seed: 3 }, |_rng, i| {
+            assert!(i == 0, "inner assert");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn allclose_works() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9, 1e-9).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-9, 1e-9).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-9, 1e-9).is_err());
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut first = Vec::new();
+        check("det1", Config { cases: 4, base_seed: 9 }, |rng, _| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("det2", Config { cases: 4, base_seed: 9 }, |rng, _| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,198 @@
+//! Aligned text tables and CSV output for benchmark reports.
+//!
+//! The Blazemark reports print one row per problem size and one column
+//! per kernel/library — the same rows/series as the paper's figures.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table with a header row.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers.
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no data rows have been added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Append a row; panics if the arity does not match the header.
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                // Right-align numeric-looking cells, left-align the rest.
+                let numeric = c.chars().next().map_or(false, |ch| ch.is_ascii_digit() || ch == '-' || ch == '+');
+                if numeric {
+                    let _ = write!(out, "{c:>width$}", width = widths[i]);
+                } else {
+                    let _ = write!(out, "{c:<width$}", width = widths[i]);
+                }
+            }
+            out.push('\n');
+        };
+        fmt_row(&mut out, &self.header);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol.saturating_sub(1));
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(&mut out, row);
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write CSV to a file, creating parent directories.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// Render an ASCII line chart: one series per (name, points) pair, log-x.
+///
+/// Good enough to eyeball the figure shapes (flat FD curves, degrading
+/// random curves, crossovers) directly in the terminal.
+pub fn ascii_chart(series: &[(String, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let mut ymax = f64::NEG_INFINITY;
+    for (_, pts) in series {
+        for &(x, y) in pts {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymax = ymax.max(y);
+        }
+    }
+    if !xmin.is_finite() || xmin <= 0.0 || xmax <= xmin || ymax <= 0.0 {
+        return String::from("(no data)\n");
+    }
+    let marks = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let mut grid = vec![vec![' '; width]; height];
+    let lx = |x: f64| {
+        let t = (x.ln() - xmin.ln()) / (xmax.ln() - xmin.ln());
+        ((t * (width - 1) as f64).round() as usize).min(width - 1)
+    };
+    let ly = |y: f64| {
+        let t = (y / ymax).clamp(0.0, 1.0);
+        height - 1 - ((t * (height - 1) as f64).round() as usize).min(height - 1)
+    };
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let m = marks[si % marks.len()];
+        for &(x, y) in pts {
+            grid[ly(y)][lx(x)] = m;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "y: 0..{ymax:.0} MFlop/s   x: {xmin:.0}..{xmax:.0} (log)");
+    for row in &grid {
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "  {} {}", marks[si % marks.len()], name);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_render_alignment() {
+        let mut t = Table::new(["N", "kernel", "MFlop/s"]);
+        t.row(["100", "row-major", "1234.5"]);
+        t.row(["10000", "classic", "56.7"]);
+        let s = t.render();
+        assert!(s.contains("N"));
+        assert!(s.contains("row-major"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4); // header, rule, two rows
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new(["name", "v"]);
+        t.row(["has,comma", "1"]);
+        t.row(["has\"quote", "2"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"has,comma\""));
+        assert!(csv.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    fn chart_handles_empty_and_plots() {
+        assert!(ascii_chart(&[], 40, 10).contains("no data"));
+        let s = ascii_chart(
+            &[("k".into(), vec![(10.0, 100.0), (100.0, 200.0), (1000.0, 150.0)])],
+            40,
+            10,
+        );
+        assert!(s.contains('*'));
+        assert!(s.lines().count() > 10);
+    }
+}

@@ -1,0 +1,74 @@
+//! Monotonic timing helpers for the benchmark harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch over `Instant`.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn seconds(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the elapsed duration of the previous lap.
+    pub fn lap(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+///
+/// Equivalent in spirit to `criterion::black_box`; uses a volatile read,
+/// which is stable-Rust safe (no inline asm required).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.seconds();
+        let b = sw.seconds();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let lap = sw.lap();
+        assert!(lap >= Duration::from_millis(1));
+        // After lap, elapsed restarts near zero.
+        assert!(sw.elapsed() < lap + Duration::from_millis(50));
+    }
+
+    #[test]
+    fn black_box_identity() {
+        assert_eq!(black_box(42), 42);
+        let v = vec![1.0, 2.0];
+        assert_eq!(black_box(v.clone()), v);
+    }
+}

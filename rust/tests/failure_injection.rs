@@ -1,0 +1,147 @@
+//! Failure injection: corrupt inputs, bad geometry, contract violations.
+//! The library must fail loudly and precisely, not corrupt results.
+
+use blazert::gen::random_fixed_per_row;
+use blazert::kernels::{spmmm, Strategy};
+use blazert::runtime::Manifest;
+use blazert::simulator::{Cache, CacheConfig};
+use blazert::sparse::{CooMatrix, CsrMatrix};
+use std::path::Path;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("blazert_fi_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn spmmm_rejects_dimension_mismatch() {
+    let a = random_fixed_per_row(10, 20, 3, 1);
+    let b = random_fixed_per_row(21, 10, 3, 2); // 20 != 21
+    let r = std::panic::catch_unwind(|| spmmm(&a, &b, Strategy::Combined));
+    assert!(r.is_err(), "mismatched inner dimension must panic");
+}
+
+#[test]
+fn from_parts_rejects_corrupt_structures() {
+    // Out-of-bounds column index.
+    let r = std::panic::catch_unwind(|| {
+        CsrMatrix::from_parts(1, 2, vec![0, 1], vec![5], vec![1.0])
+    });
+    assert!(r.is_err());
+    // Non-monotone row_ptr.
+    let r = std::panic::catch_unwind(|| {
+        CsrMatrix::from_parts(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 2.0])
+    });
+    assert!(r.is_err());
+    // Duplicate column within a row.
+    let r = std::panic::catch_unwind(|| {
+        CsrMatrix::from_parts(1, 3, vec![0, 2], vec![1, 1], vec![1.0, 2.0])
+    });
+    assert!(r.is_err());
+}
+
+#[test]
+fn coo_rejects_out_of_bounds() {
+    let mut m = CooMatrix::new(3, 3);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| m.push(0, 3, 1.0)));
+    assert!(r.is_err());
+}
+
+#[test]
+fn manifest_corruption_modes() {
+    // Missing directory.
+    assert!(Manifest::load(Path::new("/definitely/not/here")).is_err());
+
+    // Garbled field.
+    let d = tmpdir("garbled");
+    std::fs::write(d.join("manifest.txt"), "name=x file\n").unwrap();
+    assert!(Manifest::load(&d).is_err());
+
+    // Non-numeric shape.
+    let d2 = tmpdir("shape");
+    std::fs::write(d2.join("manifest.txt"), "name=x file=x.hlo dtype=f32 args=axb\n").unwrap();
+    assert!(Manifest::load(&d2).is_err());
+
+    // Missing required key.
+    let d3 = tmpdir("missing");
+    std::fs::write(d3.join("manifest.txt"), "file=x.hlo dtype=f32 args=2x2\n").unwrap();
+    assert!(Manifest::load(&d3).is_err());
+
+    for d in [d, d2, d3] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn runtime_rejects_corrupt_hlo() {
+    if !blazert::runtime::Runtime::artifacts_available() {
+        eprintln!("[runtime_rejects_corrupt_hlo] no artifacts; skipping");
+        return;
+    }
+    // Copy the real manifest but point an entry at corrupt HLO text.
+    let d = tmpdir("badhlo");
+    std::fs::write(
+        d.join("manifest.txt"),
+        "name=tile_mma file=bad.hlo.txt dtype=f32 args=64x32x32,64x32x32,64x32x32 tile=32 batch=64 groups=16 group_k=8 dense_n=256\n",
+    )
+    .unwrap();
+    std::fs::write(d.join("bad.hlo.txt"), "HloModule garbage\nENTRY oops { broken }\n").unwrap();
+    let rt = blazert::runtime::Runtime::load(&d);
+    // Loading the manifest succeeds; compilation of the bad entry fails.
+    let mut rt = rt.expect("manifest itself parses");
+    let te = 64 * 32 * 32;
+    let z = vec![0f32; te];
+    let shape = [64usize, 32, 32];
+    let err = rt.execute_f32("tile_mma", &[(&z, &shape), (&z, &shape), (&z, &shape)]);
+    assert!(err.is_err(), "corrupt HLO must fail compilation");
+    std::fs::remove_dir_all(d).ok();
+}
+
+#[test]
+fn cache_config_validation() {
+    // Non-power-of-two line size.
+    let r = std::panic::catch_unwind(|| {
+        Cache::new(CacheConfig { name: "X", size_bytes: 512, line_bytes: 48, assoc: 2 })
+    });
+    assert!(r.is_err());
+    // Zero sets (assoc too large).
+    let r = std::panic::catch_unwind(|| {
+        Cache::new(CacheConfig { name: "X", size_bytes: 64, line_bytes: 64, assoc: 2 })
+    });
+    assert!(r.is_err());
+}
+
+#[test]
+fn bsr_backend_tile_mismatch_is_checked() {
+    use blazert::bsr::{bsr_spmmm, BsrMatrix, NativeBackend};
+    let a = random_fixed_per_row(16, 16, 3, 1);
+    let ab = BsrMatrix::from_csr(&a, 8);
+    let mut wrong = NativeBackend { tile: 4 };
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        bsr_spmmm(&ab, &ab, &mut wrong)
+    }));
+    assert!(r.is_err(), "backend tile mismatch must be rejected");
+}
+
+#[test]
+fn cli_parser_failure_modes() {
+    use blazert::util::cli::{Args, OptSpec};
+    const SPECS: &[OptSpec] =
+        &[OptSpec { name: "n", help: "size", takes_value: true }];
+    // Trailing option without value.
+    let e = Args::parse_from(
+        ["p".to_string(), "--n".to_string()].into_iter(),
+        false,
+        SPECS,
+    );
+    assert!(e.is_err());
+    // Unparseable typed value surfaces the text.
+    let a = Args::parse_from(
+        ["p".to_string(), "--n=zz".to_string()].into_iter(),
+        false,
+        SPECS,
+    )
+    .unwrap();
+    assert!(a.get_parsed_or("n", 0usize).unwrap_err().contains("zz"));
+}

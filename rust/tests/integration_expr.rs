@@ -1,0 +1,82 @@
+//! Integration: the Smart-Expression-Template layer end to end.
+
+use blazert::expr::vector::{cg, dot, norm2};
+use blazert::expr::{Expression, TransposeExt};
+use blazert::gen::{fd_poisson_2d, fd_rhs_ones, random_fixed_per_row};
+use blazert::kernels::{spmmm, Strategy};
+use blazert::sparse::convert::csr_to_csc;
+use blazert::sparse::{DenseMatrix, SparseShape};
+
+#[test]
+fn listing_one_equivalence() {
+    // C = A * B via expressions == direct kernel call.
+    let a = random_fixed_per_row(128, 128, 5, 1);
+    let b = random_fixed_per_row(128, 128, 5, 2);
+    let c_expr = (&a * &b).eval();
+    let c_kernel = spmmm(&a, &b, Strategy::Combined);
+    assert!(c_expr.approx_eq(&c_kernel, 0.0));
+}
+
+#[test]
+fn composite_expression_pipeline() {
+    // G = (J * M) * J^T with scaling and addition mixed in.
+    let j = random_fixed_per_row(60, 90, 4, 3);
+    let m = DenseMatrix::identity(90).to_csr();
+    let jt = j.t().eval();
+    let jm = (&j * &m).eval();
+    let g = (&jm * &jt).eval();
+    let g_scaled = (2.0 * &g).eval();
+    let g_sum = (&g + &g).eval();
+    assert!(g_scaled.approx_eq(&g_sum, 1e-12), "2G == G+G");
+    // Symmetry of J J^T.
+    assert!(g.approx_eq(&g.transpose(), 1e-12));
+}
+
+#[test]
+fn mixed_order_assignment_matches_rowmajor() {
+    let a = random_fixed_per_row(70, 80, 5, 5);
+    let b = random_fixed_per_row(80, 50, 4, 6);
+    let b_csc = csr_to_csc(&b);
+    let mixed = (&a * &b_csc).eval();
+    let direct = (&a * &b).eval();
+    assert!(mixed.approx_eq(&direct, 0.0));
+    // CSC x CSC path.
+    let a_csc = csr_to_csc(&a);
+    let both_csc = (&a_csc * &b_csc).eval();
+    assert!(
+        DenseMatrix::from_csc(&both_csc).max_abs_diff(&DenseMatrix::from_csr(&direct)) < 1e-12
+    );
+}
+
+#[test]
+fn subtraction_cancellation_prunes_structurally() {
+    let a = random_fixed_per_row(30, 30, 5, 7);
+    let z = (&a - &a).eval();
+    assert_eq!(z.nnz(), 0);
+}
+
+#[test]
+fn spmv_expression_in_cg() {
+    // Full CG through the expression layer pieces on the FD system.
+    let k = 24;
+    let a = fd_poisson_2d(k);
+    let b = fd_rhs_ones(k);
+    let (x, iters, _res) = cg(&a, &b, 1e-9, 5000);
+    assert!(iters < 5000);
+    let ax = (&a * &x).eval();
+    let r: Vec<f64> = ax.iter().zip(&b).map(|(p, q)| p - q).collect();
+    assert!(norm2(&r) < 1e-6);
+    assert!(dot(&x, &b) > 0.0, "energy positive");
+}
+
+#[test]
+fn expression_objects_are_cheap() {
+    // Building an expression must not touch the data (laziness): the
+    // expression object is Copy and tiny.
+    let a = random_fixed_per_row(1000, 1000, 5, 9);
+    let b = random_fixed_per_row(1000, 1000, 5, 10);
+    let e = &a * &b;
+    let e2 = e; // Copy
+    assert!(std::mem::size_of_val(&e) <= 2 * std::mem::size_of::<usize>());
+    let _ = (e, e2);
+}

@@ -1,0 +1,141 @@
+//! Integration: the PJRT runtime + BSR/XLA path. These tests need
+//! `make artifacts`; without artifacts they print a notice and pass
+//! vacuously (so `cargo test` works on a fresh checkout).
+
+use blazert::bsr::{bsr_spmmm, BsrMatrix, NativeBackend, TileBackend};
+use blazert::gen::{operand_pair, Workload};
+use blazert::kernels::{spmmm, Strategy};
+use blazert::runtime::{Runtime, TileEngine};
+use blazert::sparse::{DenseMatrix, SparseShape};
+use blazert::util::rng::Pcg64;
+
+fn engine_or_skip(test: &str) -> Option<TileEngine> {
+    if !Runtime::artifacts_available() {
+        eprintln!("[{test}] artifacts/ missing — run `make artifacts`; skipping");
+        return None;
+    }
+    Some(TileEngine::load_default().expect("engine loads"))
+}
+
+#[test]
+fn tile_mma_matches_native_backend() {
+    let Some(mut engine) = engine_or_skip("tile_mma_matches_native_backend") else {
+        return;
+    };
+    let te = engine.tile_elems();
+    let mut rng = Pcg64::new(1);
+    // 100 tiles: exercises batch splitting (64 + padded 36).
+    let n = 100;
+    let gen = |rng: &mut Pcg64| -> Vec<f32> {
+        (0..n * te).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect()
+    };
+    let a = gen(&mut rng);
+    let b = gen(&mut rng);
+    let acc = gen(&mut rng);
+    let xla = engine.mma(&a, &b, &acc).expect("xla mma");
+    let mut native = NativeBackend { tile: engine.tile };
+    let expect = native.mma(&a, &b, &acc).expect("native mma");
+    assert_eq!(xla.len(), expect.len());
+    let max_diff = xla
+        .iter()
+        .zip(&expect)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-2, "f32 tile mma diff {max_diff}");
+    assert!(engine.calls >= 2, "batch splitting happened");
+    assert!(engine.padded_slots > 0, "tail was padded");
+}
+
+#[test]
+fn group_mma_matches_reference() {
+    let Some(mut engine) = engine_or_skip("group_mma_matches_reference") else {
+        return;
+    };
+    let te = engine.tile_elems();
+    let want = engine.groups * engine.group_k * te;
+    let mut rng = Pcg64::new(2);
+    let a: Vec<f32> = (0..want).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..want).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let out = engine.group_mma(&a, &b).expect("group mma");
+    assert_eq!(out.len(), engine.groups * te);
+    // Reference: sum over k of native tile products.
+    let mut native = NativeBackend { tile: engine.tile };
+    let mut expect = vec![0f32; engine.groups * te];
+    for g in 0..engine.groups {
+        let mut acc = vec![0f32; te];
+        for k in 0..engine.group_k {
+            let off = (g * engine.group_k + k) * te;
+            acc = native.mma(&a[off..off + te], &b[off..off + te], &acc).unwrap();
+        }
+        expect[g * te..(g + 1) * te].copy_from_slice(&acc);
+    }
+    let max_diff = out.iter().zip(&expect).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+    assert!(max_diff < 1e-2, "group mma diff {max_diff}");
+}
+
+#[test]
+fn dense_mm_smoke() {
+    let Some(mut engine) = engine_or_skip("dense_mm_smoke") else {
+        return;
+    };
+    let n = engine.dense_n;
+    // Identity x M == M.
+    let mut eye = vec![0f32; n * n];
+    for i in 0..n {
+        eye[i * n + i] = 1.0;
+    }
+    let mut rng = Pcg64::new(3);
+    let m: Vec<f32> = (0..n * n).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let out = engine.dense_mm(&eye, &m).expect("dense mm");
+    let max_diff = out.iter().zip(&m).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+    assert!(max_diff < 1e-5);
+}
+
+#[test]
+fn bsr_spmmm_xla_equals_scalar_kernel() {
+    let Some(mut engine) = engine_or_skip("bsr_spmmm_xla_equals_scalar_kernel") else {
+        return;
+    };
+    let tile = engine.tile;
+    for (w, n) in [(Workload::FiveBandFd, 1024), (Workload::RandomFixed5, 512)] {
+        let (a, b) = operand_pair(w, n, 17);
+        let ab = BsrMatrix::from_csr(&a, tile);
+        let bb = BsrMatrix::from_csr(&b, tile);
+        let c = bsr_spmmm(&ab, &bb, &mut engine).expect("bsr spmmm");
+        let reference = spmmm(&a, &b, Strategy::Combined);
+        let d1 = DenseMatrix::from_csr(&c.to_csr());
+        let d2 = DenseMatrix::from_csr(&reference);
+        let rel = d1.max_abs_diff(&d2) / d2.frobenius().max(1.0);
+        assert!(rel < 1e-5, "{w:?}: rel err {rel}");
+        assert_eq!(c.to_csr().nnz(), reference.nnz(), "{w:?}: structural match");
+    }
+}
+
+#[test]
+fn runtime_rejects_shape_mismatches() {
+    let Some(mut engine) = engine_or_skip("runtime_rejects_shape_mismatches") else {
+        return;
+    };
+    let te = engine.tile_elems();
+    // Wrong multiple.
+    assert!(engine.mma(&vec![0f32; te + 1], &vec![0f32; te + 1], &vec![0f32; te + 1]).is_err());
+    // Mismatched lengths.
+    assert!(engine.mma(&vec![0f32; te], &vec![0f32; 2 * te], &vec![0f32; te]).is_err());
+    // Wrong group geometry.
+    assert!(engine.group_mma(&vec![0f32; te], &vec![0f32; te]).is_err());
+}
+
+#[test]
+fn manifest_geometry_sane() {
+    if !Runtime::artifacts_available() {
+        eprintln!("[manifest_geometry_sane] artifacts missing; skipping");
+        return;
+    }
+    let rt = Runtime::load_default().expect("runtime");
+    let m = rt.manifest();
+    for name in ["tile_mma", "tile_group_mma", "dense_mm"] {
+        assert!(m.entries.contains_key(name), "{name} in manifest");
+    }
+    assert_eq!(m.param("tile"), Some(32));
+    assert!(m.param("batch").unwrap() > 0);
+}

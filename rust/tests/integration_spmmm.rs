@@ -1,0 +1,137 @@
+//! Integration: every spMMM path (kernels × strategies × workloads ×
+//! baselines × storage orders) against the dense oracle and each other.
+
+use blazert::baselines::Library;
+use blazert::gen::{banded, fd_poisson_2d, operand_pair, random_fixed_per_row, Workload};
+use blazert::kernels::classic::spmmm_classic;
+use blazert::kernels::{spmmm, spmmm_csc, spmmm_csr_csc, NullTracer, Strategy};
+use blazert::sparse::convert::{csc_to_csr, csr_to_csc};
+use blazert::sparse::{DenseMatrix, SparseShape};
+
+fn oracle(a: &blazert::CsrMatrix, b: &blazert::CsrMatrix) -> DenseMatrix {
+    DenseMatrix::from_csr(a).matmul(&DenseMatrix::from_csr(b))
+}
+
+#[test]
+fn every_strategy_on_every_workload() {
+    for w in [Workload::FiveBandFd, Workload::RandomFixed5, Workload::RandomFill01Pct] {
+        let (a, b) = operand_pair(w, 400, 3);
+        let expect = oracle(&a, &b);
+        for s in Strategy::ALL {
+            let c = spmmm(&a, &b, s);
+            assert!(
+                DenseMatrix::from_csr(&c).max_abs_diff(&expect) < 1e-10,
+                "{w:?} {}",
+                s.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn classic_and_conversion_paths() {
+    let (a, b) = operand_pair(Workload::RandomFixed5, 300, 11);
+    let b_csc = csr_to_csc(&b);
+    let expect = oracle(&a, &b);
+    let classic = spmmm_classic(&a, &b_csc, &mut NullTracer);
+    assert!(DenseMatrix::from_csr(&classic).max_abs_diff(&expect) < 1e-10);
+    let with_conv = spmmm_csr_csc(&a, &b_csc, Strategy::Combined);
+    assert!(DenseMatrix::from_csr(&with_conv).max_abs_diff(&expect) < 1e-10);
+    let csc_path = spmmm_csc(&csr_to_csc(&a), &b_csc, Strategy::Combined);
+    assert!(DenseMatrix::from_csc(&csc_path).max_abs_diff(&expect) < 1e-10);
+}
+
+#[test]
+fn all_libraries_and_all_orders_agree() {
+    for w in [Workload::FiveBandFd, Workload::RandomFixed5] {
+        let (a, b) = operand_pair(w, 256, 5);
+        let b_csc = csr_to_csc(&b);
+        let reference = spmmm(&a, &b, Strategy::Combined);
+        for lib in Library::ALL {
+            assert!(lib.multiply_csr_csr(&a, &b).approx_eq(&reference, 1e-12), "{}", lib.name());
+            assert!(lib.multiply_csr_csc(&a, &b_csc).approx_eq(&reference, 1e-12), "{}", lib.name());
+        }
+    }
+}
+
+#[test]
+fn fd_squared_structure() {
+    // A² of the 5-point stencil is the 9-point-plus pattern: row nnz <=
+    // 13, bandwidth doubles, symmetric.
+    let k = 20;
+    let a = fd_poisson_2d(k);
+    let c = spmmm(&a, &a, Strategy::Combined);
+    for r in 0..c.rows() {
+        assert!(c.row_nnz(r) <= 13);
+    }
+    let ct = c.transpose();
+    assert!(c.approx_eq(&ct, 1e-12), "A^2 symmetric");
+}
+
+#[test]
+fn chained_band_products_grow_bandwidth() {
+    let n = 200;
+    let t = banded(n, &[-1, 0, 1], 9);
+    let t2 = spmmm(&t, &t, Strategy::Combined);
+    let t4 = spmmm(&t2, &t2, Strategy::Combined);
+    // Tridiagonal^2 -> pentadiagonal -> 9-diagonal.
+    for r in 5..n - 5 {
+        assert_eq!(t2.row_nnz(r), 5, "row {r}");
+        assert_eq!(t4.row_nnz(r), 9, "row {r}");
+    }
+}
+
+#[test]
+fn rectangular_chains() {
+    let a = random_fixed_per_row(40, 100, 5, 1);
+    let b = random_fixed_per_row(100, 7, 3, 2);
+    let c = spmmm(&a, &b, Strategy::Combined);
+    assert_eq!((c.rows(), c.cols()), (40, 7));
+    assert!(DenseMatrix::from_csr(&c).max_abs_diff(&oracle(&a, &b)) < 1e-10);
+}
+
+#[test]
+fn empty_and_identity_cases() {
+    // Zero matrix times anything is structurally empty.
+    let z = blazert::CsrMatrix::from_parts(50, 50, vec![0; 51], vec![], vec![]);
+    let r = random_fixed_per_row(50, 50, 5, 8);
+    for s in Strategy::ALL {
+        assert_eq!(spmmm(&z, &r, s).nnz(), 0);
+        assert_eq!(spmmm(&r, &z, s).nnz(), 0);
+    }
+    // Identity preserves.
+    let eye = DenseMatrix::identity(50).to_csr();
+    let c = spmmm(&eye, &r, Strategy::Combined);
+    assert!(c.approx_eq(&r, 1e-15));
+    let c2 = spmmm(&r, &eye, Strategy::Combined);
+    assert!(c2.approx_eq(&r, 1e-15));
+}
+
+#[test]
+fn conversion_round_trips_on_workloads() {
+    for w in [Workload::FiveBandFd, Workload::RandomFixed5] {
+        let (a, _) = operand_pair(w, 500, 21);
+        let back = csc_to_csr(&csr_to_csc(&a));
+        assert!(back.approx_eq(&a, 0.0));
+    }
+}
+
+#[test]
+fn combined_counters_reflect_workload() {
+    // FD rows are tight -> MinMax path dominates at small N; random rows
+    // scatter -> Sort path dominates at large N.
+    use blazert::kernels::gustavson::rows_into;
+    use blazert::kernels::store::{Accumulator, Combined};
+
+    let a = fd_poisson_2d(10); // N=100: region ~4*10=40 vs 2*13=26 -> mixed
+    let mut acc = Combined::new(a.cols());
+    let mut out = blazert::CsrMatrix::new(a.rows(), a.cols());
+    rows_into(&a, &a, &mut acc, &mut out, &mut NullTracer);
+    assert_eq!(acc.minmax_rows + acc.sort_rows, 100);
+
+    let r = random_fixed_per_row(400, 400, 5, 2);
+    let mut acc2 = Combined::new(400);
+    let mut out2 = blazert::CsrMatrix::new(400, 400);
+    rows_into(&r, &r, &mut acc2, &mut out2, &mut NullTracer);
+    assert!(acc2.sort_rows > acc2.minmax_rows, "random large-N prefers Sort");
+}
