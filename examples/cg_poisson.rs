@@ -7,7 +7,6 @@
 
 use blazert::expr::vector::{cg, norm2};
 use blazert::gen::{fd_poisson_2d, fd_rhs_ones};
-use blazert::kernels::spmv::spmv;
 use blazert::sparse::SparseShape;
 use blazert::util::timer::Stopwatch;
 
@@ -24,9 +23,10 @@ fn main() {
     let (x, iters, res) = cg(&a, &b, 1e-10, 10 * n);
     let dt = sw.seconds();
 
-    // Verify: residual + discrete max principle.
+    // Verify: residual + discrete max principle. The residual SpMV goes
+    // through the expression layer's no-allocation form.
     let mut ax = vec![0.0; n];
-    spmv(&a, &x, &mut ax);
+    (&a * &x).eval_into(&mut ax);
     let r: Vec<f64> = ax.iter().zip(&b).map(|(p, q)| p - q).collect();
     let max_u = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
     println!(
@@ -49,8 +49,9 @@ fn main() {
     let sw = Stopwatch::start();
     let reps = 50;
     let mut y = vec![0.0; n];
+    let ax_expr = &a * &x;
     for _ in 0..reps {
-        spmv(&a, &x, &mut y);
+        ax_expr.eval_into(&mut y);
         std::hint::black_box(&y);
     }
     let per = sw.seconds() / reps as f64;

@@ -1,12 +1,15 @@
 //! Quickstart: the Smart-Expression-Template API on the paper's two
-//! workloads — the Rust rendering of the paper's Listing 1.
+//! workloads — the Rust rendering of the paper's Listing 1, extended to
+//! the composable expression graph with model-guided assign-time
+//! scheduling.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use blazert::expr::Expression;
+use blazert::expr::{choose_strategy, EvalContext, Expression, SparseOperand};
 use blazert::gen::{fd_poisson_2d, random_fixed_per_row};
 use blazert::kernels::{flops, Strategy};
-use blazert::sparse::SparseShape;
+use blazert::model::Machine;
+use blazert::sparse::{CsrMatrix, SparseShape};
 use blazert::util::timer::Stopwatch;
 
 fn main() {
@@ -16,7 +19,7 @@ fn main() {
     let a = fd_poisson_2d(64); // 4096 x 4096 five-band FD matrix
     let b = fd_poisson_2d(64);
     let sw = Stopwatch::start();
-    let c = (&a * &b).eval(); // assign-time kernel selection: Combined
+    let c = (&a * &b).eval(); // assign-time, model-guided kernel selection
     let dt = sw.seconds();
     println!(
         "FD:      ({}x{}, nnz={}) * (nnz={}) -> nnz={} in {:.2} ms  [{:.0} MFlop/s]",
@@ -29,12 +32,20 @@ fn main() {
         flops::spmmm_flops(&a, &b) as f64 / dt / 1e6
     );
 
-    // --- Random workload, explicit strategy ----------------------------
+    // --- The model's assign-time choices -------------------------------
+    let machine = Machine::sandy_bridge_i7_2600();
     let ar = random_fixed_per_row(4096, 4096, 5, 1);
     let br = random_fixed_per_row(4096, 4096, 5, 2);
+    println!(
+        "model:   FD picks {}, random picks {} (bandwidth-model roofline)",
+        choose_strategy(&machine, &a, &b).name(),
+        choose_strategy(&machine, &ar, &br).name()
+    );
+
+    // --- Explicit strategy via the uniform EvalContext -----------------
     for strategy in [Strategy::MinMax, Strategy::Sort, Strategy::Combined] {
         let sw = Stopwatch::start();
-        let cr = (&ar * &br).eval_with(strategy);
+        let cr = (&ar * &br).eval_with(&mut EvalContext::using(strategy));
         let dt = sw.seconds();
         println!(
             "random:  {:<18} nnz={} in {:.2} ms  [{:.0} MFlop/s]",
@@ -44,6 +55,18 @@ fn main() {
             flops::spmmm_flops(&ar, &br) as f64 / dt / 1e6
         );
     }
+
+    // --- Composable graphs: no intermediate .eval() calls --------------
+    let sw = Stopwatch::start();
+    let g = (2.0 * (&a * &b) + &a).eval();
+    let abc = (&a * &b * &a).eval(); // association order chosen by the model
+    let dt = sw.seconds();
+    println!(
+        "graph:   2*(A*B)+A nnz={}, A*B*A nnz={} in {:.2} ms total",
+        g.nnz(),
+        abc.nnz(),
+        dt * 1e3
+    );
 
     // --- Mixed storage orders: conversion inserted automatically -------
     let b_csc = blazert::sparse::convert::csr_to_csc(&br);
@@ -62,11 +85,29 @@ fn main() {
         y.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     );
 
+    // --- No-allocation assignment: C is reused across evaluations ------
+    let mut out = CsrMatrix::new(0, 0);
+    (&ar * &br).assign_to(&mut out, &mut EvalContext::new());
+    let cap = out.capacity();
+    (&ar * &br).assign_to(&mut out, &mut EvalContext::new());
+    println!(
+        "assign:  C reused across assignments (capacity {} -> {}, no realloc)",
+        cap,
+        out.capacity()
+    );
+
     // The estimate the paper's single-allocation store relies on:
     let est = flops::nnz_estimate(&ar, &br);
-    let real = {
-        let c = (&ar * &br).eval();
-        c.nnz()
-    };
-    println!("alloc:   nnz estimate {est} >= actual {real} (never underestimates)");
+    println!("alloc:   nnz estimate {est} >= actual {} (never underestimates)", out.nnz());
+
+    // --- Parallel evaluation through the same context ------------------
+    let sw = Stopwatch::start();
+    let cp = (&ar * &br).eval_with(&mut EvalContext::new().with_threads(4));
+    let dt = sw.seconds();
+    println!(
+        "threads: 4-way parallel eval nnz={} in {:.2} ms  [{:.0} MFlop/s]",
+        cp.nnz(),
+        dt * 1e3,
+        flops::spmmm_flops(&ar, &br) as f64 / dt / 1e6
+    );
 }

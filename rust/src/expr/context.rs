@@ -1,0 +1,180 @@
+//! The uniform evaluation context for the expression graph.
+//!
+//! Every expression node evaluates through an [`EvalContext`], which
+//! carries the three assign-time decisions the paper's Smart-ET design
+//! centralizes in the assignment operator:
+//!
+//! * the **storing strategy** — either an explicit override or, by
+//!   default, the model-guided choice of [`super::schedule`];
+//! * the **worker count** for [`crate::kernels::parallel`];
+//! * an optional [`MemTracer`] so the cache simulator can replay whole
+//!   expression trees through the identical kernel code paths.
+
+use super::schedule;
+use crate::kernels::tracer::MemTracer;
+use crate::kernels::{
+    combined_pre, parallel, spmmm, spmmm_into, spmmm_into_traced, spmmm_traced, Strategy,
+};
+use crate::model::Machine;
+use crate::sparse::CsrMatrix;
+
+/// Context for one expression evaluation. Defaults: model-guided
+/// strategy selection, one thread, no tracing, the paper's Sandy Bridge
+/// machine model for cost estimates.
+pub struct EvalContext<'t> {
+    /// Storing-strategy override; `None` selects per product via the
+    /// bandwidth model.
+    pub strategy: Option<Strategy>,
+    /// Worker threads for product evaluation (`1` = serial kernels).
+    pub threads: usize,
+    /// Machine description driving the cost model (strategy choice and
+    /// chain association).
+    pub machine: Machine,
+    /// Optional memory tracer; when set, products run the traced serial
+    /// kernels so a cache simulator observes the whole tree.
+    pub tracer: Option<&'t mut dyn MemTracer>,
+}
+
+impl EvalContext<'static> {
+    /// The default context: model-guided, serial, untraced.
+    pub fn new() -> Self {
+        EvalContext {
+            strategy: None,
+            threads: 1,
+            machine: Machine::sandy_bridge_i7_2600(),
+            tracer: None,
+        }
+    }
+
+    /// Context with a fixed storing strategy (the old
+    /// `eval_with(Strategy)` API, uniform across all expression kinds).
+    pub fn using(strategy: Strategy) -> Self {
+        EvalContext { strategy: Some(strategy), ..EvalContext::new() }
+    }
+}
+
+impl Default for EvalContext<'static> {
+    fn default() -> Self {
+        EvalContext::new()
+    }
+}
+
+impl<'t> EvalContext<'t> {
+    /// Override the storing strategy for every product in the tree.
+    pub fn with_strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = Some(strategy);
+        self
+    }
+
+    /// Set the worker-thread count for product evaluation.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Use a different machine description for the cost model.
+    pub fn with_machine(mut self, machine: Machine) -> Self {
+        self.machine = machine;
+        self
+    }
+
+    /// Attach a memory tracer (e.g. [`crate::simulator::Hierarchy`]);
+    /// products then run serially through the traced kernels.
+    pub fn with_tracer<'u>(self, tracer: &'u mut dyn MemTracer) -> EvalContext<'u> {
+        EvalContext {
+            strategy: self.strategy,
+            threads: self.threads,
+            machine: self.machine,
+            tracer: Some(tracer),
+        }
+    }
+
+    /// The storing strategy for one concrete product: the override if
+    /// set, otherwise the bandwidth model's pick.
+    pub fn strategy_for(&self, a: &CsrMatrix, b: &CsrMatrix) -> Strategy {
+        match self.strategy {
+            Some(s) => s,
+            None => schedule::choose_strategy(&self.machine, a, b),
+        }
+    }
+
+    /// Evaluate one scheduled product `A · B` under this context.
+    pub fn product(&mut self, a: &CsrMatrix, b: &CsrMatrix) -> CsrMatrix {
+        let strategy = self.strategy_for(a, b);
+        if let Some(tr) = self.tracer.as_mut() {
+            let mut dyn_tr: &mut dyn MemTracer = &mut **tr;
+            return spmmm_traced(a, b, strategy, &mut dyn_tr);
+        }
+        if self.threads > 1 {
+            return parallel::par_spmmm_with(a, b, self.threads, strategy);
+        }
+        if strategy == Strategy::Combined {
+            // The shipped pre-decided Combined kernel (§Perf change 5).
+            // Its prologue recomputes the B-row metadata the scheduler
+            // already derived — an accepted O(rows + nnz(A)) overlap,
+            // small next to the O(mults) product itself.
+            return combined_pre::spmmm_combined_pre(a, b);
+        }
+        spmmm(a, b, strategy)
+    }
+
+    /// Evaluate one scheduled product into `out`, reusing its buffers.
+    ///
+    /// Caveat: the no-allocation guarantee holds for the serial paths
+    /// only. With `threads > 1` the parallel kernel assembles its result
+    /// in fresh buffers (per-worker fragments + stitch), which then
+    /// *replace* `out`'s storage.
+    pub fn product_into(&mut self, a: &CsrMatrix, b: &CsrMatrix, out: &mut CsrMatrix) {
+        let strategy = self.strategy_for(a, b);
+        if let Some(tr) = self.tracer.as_mut() {
+            let mut dyn_tr: &mut dyn MemTracer = &mut **tr;
+            spmmm_into_traced(a, b, strategy, out, &mut dyn_tr);
+            return;
+        }
+        if self.threads > 1 {
+            *out = parallel::par_spmmm_with(a, b, self.threads, strategy);
+            return;
+        }
+        spmmm_into(a, b, strategy, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_fixed_per_row;
+    use crate::kernels::tracer::CountingTracer;
+
+    #[test]
+    fn context_product_matches_kernel_for_all_paths() {
+        let a = random_fixed_per_row(50, 50, 5, 1);
+        let b = random_fixed_per_row(50, 50, 5, 2);
+        let reference = spmmm(&a, &b, Strategy::Combined);
+
+        let model_guided = EvalContext::new().product(&a, &b);
+        assert!(model_guided.approx_eq(&reference, 0.0));
+
+        let fixed = EvalContext::using(Strategy::Sort).product(&a, &b);
+        assert!(fixed.approx_eq(&reference, 0.0));
+
+        let parallel = EvalContext::new().with_threads(3).product(&a, &b);
+        assert!(parallel.approx_eq(&reference, 0.0));
+
+        let mut tr = CountingTracer::default();
+        let traced = EvalContext::new().with_tracer(&mut tr).product(&a, &b);
+        assert!(traced.approx_eq(&reference, 0.0));
+        assert_eq!(tr.flops, crate::kernels::flops::spmmm_flops(&a, &b));
+    }
+
+    #[test]
+    fn product_into_reuses_out() {
+        let a = random_fixed_per_row(40, 40, 4, 3);
+        let b = random_fixed_per_row(40, 40, 4, 4);
+        let mut out = CsrMatrix::new(0, 0);
+        EvalContext::new().product_into(&a, &b, &mut out);
+        let cap = out.capacity();
+        EvalContext::new().product_into(&a, &b, &mut out);
+        assert_eq!(out.capacity(), cap);
+        assert!(out.approx_eq(&spmmm(&a, &b, Strategy::Combined), 0.0));
+    }
+}

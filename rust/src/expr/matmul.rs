@@ -1,63 +1,91 @@
-//! Multiplication expressions: sparse × sparse (all storage-order
-//! combinations) and sparse × vector.
+//! Multiplication expressions: the generic product node of the
+//! composable graph (covering CSR × CSR and mixed CSR × CSC), the
+//! column-major product expressions, and sparse × vector.
 
-use super::Expression;
-use crate::kernels::spmv::spmv;
-use crate::kernels::{spmmm, spmmm_csc, spmmm_csr_csc, Strategy};
+use super::schedule;
+use super::{EvalContext, Expression, SparseOperand};
+use crate::kernels::spmv::{spmv, spmv_traced};
+use crate::kernels::{spmmm_csc, spmmm_csc_traced, MemTracer};
 use crate::sparse::convert::csr_to_csc;
 use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
+use std::borrow::Cow;
 
-/// Lazy `CSR × CSR` product.
+/// Lazy product of two operands — matrices or sub-expressions. Chains
+/// flatten at evaluation time so the scheduler can pick the association
+/// order; each concrete multiplication gets a model-guided storing
+/// strategy (unless the context overrides it).
 #[derive(Clone, Copy, Debug)]
-pub struct MatMulExpr<'a> {
-    a: &'a CsrMatrix,
-    b: &'a CsrMatrix,
+pub struct MatMulExpr<L, R> {
+    a: L,
+    b: R,
 }
 
-impl<'a> MatMulExpr<'a> {
-    /// Evaluate with an explicit storing strategy (the default `eval`
-    /// uses Combined — Blaze's shipped kernel).
-    pub fn eval_with(&self, strategy: Strategy) -> CsrMatrix {
-        spmmm(self.a, self.b, strategy)
+/// Backward-compatible name for the mixed-order product `&CSR × &CSC`
+/// (the conversion of §IV-A now happens in the CSC leaf's evaluation).
+pub type MatMulMixedExpr<'a, 'b> = MatMulExpr<&'a CsrMatrix, &'b CscMatrix>;
+
+impl<L: SparseOperand, R: SparseOperand> MatMulExpr<L, R> {
+    /// Build the lazy product, checking shapes eagerly (the paper's
+    /// compile-time/assign-time split: structure errors surface when the
+    /// expression is *built*, cost decisions when it is *assigned*).
+    pub fn new(a: L, b: R) -> Self {
+        assert_eq!(a.op_cols(), b.op_rows(), "dimension mismatch in A * B");
+        MatMulExpr { a, b }
     }
 }
 
-impl Expression for MatMulExpr<'_> {
+impl<L: SparseOperand, R: SparseOperand> SparseOperand for MatMulExpr<L, R> {
+    fn op_rows(&self) -> usize {
+        self.a.op_rows()
+    }
+
+    fn op_cols(&self) -> usize {
+        self.b.op_cols()
+    }
+
+    fn flatten_product<'s>(
+        &'s self,
+        ctx: &mut EvalContext<'_>,
+        factors: &mut Vec<Cow<'s, CsrMatrix>>,
+    ) {
+        self.a.flatten_product(ctx, factors);
+        self.b.flatten_product(ctx, factors);
+    }
+
+    fn eval_ctx<'s>(&'s self, ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix> {
+        let mut factors = Vec::new();
+        self.flatten_product(ctx, &mut factors);
+        Cow::Owned(schedule::eval_chain(&factors, ctx))
+    }
+
+    fn assign_to(&self, out: &mut CsrMatrix, ctx: &mut EvalContext<'_>) {
+        let mut factors = Vec::new();
+        self.flatten_product(ctx, &mut factors);
+        schedule::eval_chain_into(&factors, ctx, out);
+    }
+}
+
+impl<L: SparseOperand, R: SparseOperand> Expression for MatMulExpr<L, R> {
     type Output = CsrMatrix;
-    fn eval(&self) -> CsrMatrix {
-        // The shipped kernel: pre-decided Combined (§Perf change 5).
-        crate::kernels::combined_pre::spmmm_combined_pre(self.a, self.b)
+
+    fn eval_with(&self, ctx: &mut EvalContext<'_>) -> CsrMatrix {
+        self.eval_ctx(ctx).into_owned()
     }
 }
 
-impl<'a> std::ops::Mul<&'a CsrMatrix> for &'a CsrMatrix {
-    type Output = MatMulExpr<'a>;
-    fn mul(self, rhs: &'a CsrMatrix) -> MatMulExpr<'a> {
-        assert_eq!(self.cols(), rhs.rows(), "dimension mismatch in A * B");
-        MatMulExpr { a: self, b: rhs }
+impl<'a, 'b> std::ops::Mul<&'b CsrMatrix> for &'a CsrMatrix {
+    type Output = MatMulExpr<&'a CsrMatrix, &'b CsrMatrix>;
+
+    fn mul(self, rhs: &'b CsrMatrix) -> Self::Output {
+        MatMulExpr::new(self, rhs)
     }
 }
 
-/// Lazy mixed-order `CSR × CSC` product; evaluation inserts the §IV-A
-/// storage-order conversion of the right-hand side.
-#[derive(Clone, Copy, Debug)]
-pub struct MatMulMixedExpr<'a> {
-    a: &'a CsrMatrix,
-    b: &'a CscMatrix,
-}
+impl<'a, 'b> std::ops::Mul<&'b CscMatrix> for &'a CsrMatrix {
+    type Output = MatMulExpr<&'a CsrMatrix, &'b CscMatrix>;
 
-impl Expression for MatMulMixedExpr<'_> {
-    type Output = CsrMatrix;
-    fn eval(&self) -> CsrMatrix {
-        spmmm_csr_csc(self.a, self.b, Strategy::Combined)
-    }
-}
-
-impl<'a> std::ops::Mul<&'a CscMatrix> for &'a CsrMatrix {
-    type Output = MatMulMixedExpr<'a>;
-    fn mul(self, rhs: &'a CscMatrix) -> MatMulMixedExpr<'a> {
-        assert_eq!(self.cols(), rhs.rows(), "dimension mismatch in A * B");
-        MatMulMixedExpr { a: self, b: rhs }
+    fn mul(self, rhs: &'b CscMatrix) -> Self::Output {
+        MatMulExpr::new(self, rhs)
     }
 }
 
@@ -70,20 +98,37 @@ pub struct MatMulCscExpr<'a> {
 
 impl Expression for MatMulCscExpr<'_> {
     type Output = CscMatrix;
-    fn eval(&self) -> CscMatrix {
-        spmmm_csc(self.a, self.b, Strategy::Combined)
+
+    /// Column-major products honor the context's strategy override,
+    /// model-guided selection (via the conversion-free column-major
+    /// analysis), and tracer — the simulator replays the same column
+    /// Gustavson kernel production runs. `ctx.threads` is ignored
+    /// here: the column kernel has no parallel variant yet.
+    fn eval_with(&self, ctx: &mut EvalContext<'_>) -> CscMatrix {
+        let strategy = match ctx.strategy {
+            Some(s) => s,
+            None => schedule::choose_strategy_csc(&ctx.machine, self.a, self.b),
+        };
+        if let Some(tr) = ctx.tracer.as_mut() {
+            let mut dyn_tr: &mut dyn MemTracer = &mut **tr;
+            return spmmm_csc_traced(self.a, self.b, strategy, &mut dyn_tr);
+        }
+        spmmm_csc(self.a, self.b, strategy)
     }
 }
 
 impl<'a> std::ops::Mul<&'a CscMatrix> for &'a CscMatrix {
     type Output = MatMulCscExpr<'a>;
+
     fn mul(self, rhs: &'a CscMatrix) -> MatMulCscExpr<'a> {
         assert_eq!(self.cols(), rhs.rows(), "dimension mismatch in A * B");
         MatMulCscExpr { a: self, b: rhs }
     }
 }
 
-/// Lazy mixed-order `CSC × CSR` product; converts the *left* operand.
+/// Lazy mixed-order `CSC × CSR` product; evaluation converts the
+/// *right* (row-major) operand to CSC — one O(nnz) pass, §IV-A — and
+/// keeps the column-major result format.
 #[derive(Clone, Copy, Debug)]
 pub struct MatMulCscCsrExpr<'a> {
     a: &'a CscMatrix,
@@ -92,14 +137,28 @@ pub struct MatMulCscCsrExpr<'a> {
 
 impl Expression for MatMulCscCsrExpr<'_> {
     type Output = CscMatrix;
-    fn eval(&self) -> CscMatrix {
+
+    /// Converts the right-hand side and runs the column kernel (traced
+    /// when the context carries a tracer); strategy comes from the
+    /// override or the column-major model analysis. `ctx.threads` is
+    /// ignored here.
+    fn eval_with(&self, ctx: &mut EvalContext<'_>) -> CscMatrix {
         let b_csc = csr_to_csc(self.b);
-        spmmm_csc(self.a, &b_csc, Strategy::Combined)
+        let strategy = match ctx.strategy {
+            Some(s) => s,
+            None => schedule::choose_strategy_csc(&ctx.machine, self.a, &b_csc),
+        };
+        if let Some(tr) = ctx.tracer.as_mut() {
+            let mut dyn_tr: &mut dyn MemTracer = &mut **tr;
+            return spmmm_csc_traced(self.a, &b_csc, strategy, &mut dyn_tr);
+        }
+        spmmm_csc(self.a, &b_csc, strategy)
     }
 }
 
 impl<'a> std::ops::Mul<&'a CsrMatrix> for &'a CscMatrix {
     type Output = MatMulCscCsrExpr<'a>;
+
     fn mul(self, rhs: &'a CsrMatrix) -> MatMulCscCsrExpr<'a> {
         assert_eq!(self.cols(), rhs.rows(), "dimension mismatch in A * B");
         MatMulCscCsrExpr { a: self, b: rhs }
@@ -115,9 +174,10 @@ pub struct MatVecExpr<'a> {
 
 impl Expression for MatVecExpr<'_> {
     type Output = Vec<f64>;
-    fn eval(&self) -> Vec<f64> {
+
+    fn eval_with(&self, ctx: &mut EvalContext<'_>) -> Vec<f64> {
         let mut y = vec![0.0; self.a.rows()];
-        spmv(self.a, self.x, &mut y);
+        self.eval_into_ctx(&mut y, ctx);
         y
     }
 }
@@ -128,10 +188,21 @@ impl MatVecExpr<'_> {
     pub fn eval_into(&self, y: &mut [f64]) {
         spmv(self.a, self.x, y);
     }
+
+    /// [`MatVecExpr::eval_into`] under a context (honors the tracer).
+    pub fn eval_into_ctx(&self, y: &mut [f64], ctx: &mut EvalContext<'_>) {
+        if let Some(tr) = ctx.tracer.as_mut() {
+            let mut dyn_tr: &mut dyn MemTracer = &mut **tr;
+            spmv_traced(self.a, self.x, y, &mut dyn_tr);
+        } else {
+            spmv(self.a, self.x, y);
+        }
+    }
 }
 
 impl<'a> std::ops::Mul<&'a Vec<f64>> for &'a CsrMatrix {
     type Output = MatVecExpr<'a>;
+
     fn mul(self, rhs: &'a Vec<f64>) -> MatVecExpr<'a> {
         assert_eq!(self.cols(), rhs.len(), "dimension mismatch in A * x");
         MatVecExpr { a: self, x: rhs }
@@ -140,6 +211,7 @@ impl<'a> std::ops::Mul<&'a Vec<f64>> for &'a CsrMatrix {
 
 impl<'a> std::ops::Mul<&'a [f64]> for &'a CsrMatrix {
     type Output = MatVecExpr<'a>;
+
     fn mul(self, rhs: &'a [f64]) -> MatVecExpr<'a> {
         assert_eq!(self.cols(), rhs.len(), "dimension mismatch in A * x");
         MatVecExpr { a: self, x: rhs }
@@ -150,6 +222,7 @@ impl<'a> std::ops::Mul<&'a [f64]> for &'a CsrMatrix {
 mod tests {
     use super::*;
     use crate::gen::random_fixed_per_row;
+    use crate::kernels::Strategy;
     use crate::sparse::DenseMatrix;
 
     #[test]
@@ -177,12 +250,34 @@ mod tests {
     }
 
     #[test]
-    fn eval_with_strategy() {
+    fn eval_with_strategy_context() {
         let a = random_fixed_per_row(12, 12, 4, 5);
         let b = random_fixed_per_row(12, 12, 4, 6);
-        let c1 = (&a * &b).eval_with(Strategy::Sort);
+        let c1 = (&a * &b).eval_with(&mut EvalContext::using(Strategy::Sort));
         let c2 = (&a * &b).eval();
         assert!(c1.approx_eq(&c2, 0.0));
+    }
+
+    #[test]
+    fn uniform_context_across_all_product_kinds() {
+        // The eval_with(Strategy) parity gap is closed: every product
+        // expression takes the same EvalContext.
+        let a = random_fixed_per_row(16, 16, 4, 7);
+        let b = random_fixed_per_row(16, 16, 4, 8);
+        let a_csc = csr_to_csc(&a);
+        let b_csc = csr_to_csc(&b);
+        let reference = DenseMatrix::from_csr(&(&a * &b).eval());
+        for strategy in [Strategy::MinMax, Strategy::Sort, Strategy::Combined] {
+            let mut ctx = EvalContext::using(strategy);
+            let rr = (&a * &b).eval_with(&mut ctx);
+            let rm = (&a * &b_csc).eval_with(&mut ctx);
+            let cc = (&a_csc * &b_csc).eval_with(&mut ctx);
+            let cm = (&a_csc * &b).eval_with(&mut ctx);
+            assert!(DenseMatrix::from_csr(&rr).max_abs_diff(&reference) < 1e-12);
+            assert!(DenseMatrix::from_csr(&rm).max_abs_diff(&reference) < 1e-12);
+            assert!(DenseMatrix::from_csc(&cc).max_abs_diff(&reference) < 1e-12);
+            assert!(DenseMatrix::from_csc(&cm).max_abs_diff(&reference) < 1e-12);
+        }
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! The Smart-Expression-Template layer, in Rust.
+//! The Smart-Expression-Template layer, in Rust — now a *composable
+//! expression graph* with model-guided assign-time scheduling.
 //!
 //! The paper's Listing 1 is the design goal:
 //!
@@ -8,49 +9,199 @@
 //! ```
 //!
 //! In Rust, operator overloading on *references* gives the same lazy
-//! semantics without garbage temporaries: `&a * &b` builds a zero-size
-//! expression object, and assignment-time kernel selection happens in
-//! [`Expression::eval`]:
+//! semantics without garbage temporaries. Every operand — a concrete
+//! matrix reference or any expression node — implements
+//! [`SparseOperand`], so arbitrary nested trees build lazily with zero
+//! allocation and evaluate in one shot:
 //!
 //! ```
-//! use blazert::expr::Expression;
+//! use blazert::expr::{EvalContext, Expression, SparseOperand, TransposeExt};
 //! use blazert::gen::fd_poisson_2d;
-//! use blazert::sparse::SparseShape;
+//! use blazert::sparse::{CsrMatrix, SparseShape};
 //!
 //! let a = fd_poisson_2d(8);
 //! let b = fd_poisson_2d(8);
-//! let c = (&a * &b).eval();            // Gustavson + Combined storing
-//! let d = (2.0 * &a).eval();           // scalar expression
-//! let e = (&a + &b).eval();            // sparse addition
-//! let y = (&a * &vec![1.0; 64]).eval(); // SpMV
-//! assert_eq!(c.rows(), 64);
-//! # let _ = (d, e, y);
+//! let c = fd_poisson_2d(8);
+//!
+//! // Single products, sums, scalings — as before:
+//! let p = (&a * &b).eval();
+//! let s = (&a + &b).eval();
+//!
+//! // Composable graphs — no intermediate `.eval()` calls:
+//! let d = (&a * &b + &c).eval();
+//! let e = (&a * &b * &c).eval();             // association chosen by the model
+//! let f = (2.0 * (&a * &b) + &c.t()).eval();
+//!
+//! // Uniform context-driven evaluation (strategy override, threads,
+//! // optional memory tracer for the cache simulator):
+//! let g = (&a * &b).eval_with(&mut EvalContext::new().with_threads(2));
+//!
+//! // No-allocation assignment into an existing matrix:
+//! let mut out = CsrMatrix::new(0, 0);
+//! (&a * &b).assign_to(&mut out, &mut EvalContext::new());
+//! assert!(out.approx_eq(&p, 0.0));
+//! assert_eq!(d.rows(), 64);
+//! # let _ = (e, f, g, s);
 //! ```
 //!
-//! Smart-ET features reproduced from the paper:
+//! Smart-ET features reproduced from the paper, upgraded to a graph:
 //!
-//! * **kernel encapsulation** — `eval` of a matrix product dispatches to
-//!   the fastest kernel (Combined) rather than naively looping;
+//! * **kernel encapsulation** — `eval` dispatches every product to the
+//!   fastest kernel for *this* operand pair: the storing strategy
+//!   (MinMax / Sort / Combined) is chosen at assignment time from the
+//!   crate's own bandwidth model ([`schedule::choose_strategy`] feeds
+//!   per-strategy analytic traffic into
+//!   [`crate::model::roofline_seconds`]);
 //! * **assign-time format handling** — `&csr * &csc` inserts the linear
-//!   storage-order conversion of §IV-A automatically;
+//!   storage-order conversion of §IV-A automatically (the CSC leaf
+//!   converts when the graph is evaluated);
+//! * **assign-time association** — chained products (`&a * &b * &c`)
+//!   flatten into one factor list and a matrix-chain plan picks the
+//!   cheapest multiplication order by estimated roofline cost
+//!   ([`schedule::chain_plan`]);
 //! * **no hidden temporaries** — expression objects only borrow their
 //!   operands; evaluation allocates exactly the result (plus the
-//!   kernel's dense temporary).
+//!   kernel's dense temporary), and [`SparseOperand::assign_to`] reuses
+//!   an existing result matrix's buffers.
 
+mod context;
 mod matmul;
 mod ops;
+pub mod schedule;
 pub mod vector;
 
-pub use matmul::{MatMulCscExpr, MatMulExpr, MatMulMixedExpr, MatVecExpr};
+pub use context::EvalContext;
+pub use matmul::{MatMulCscCsrExpr, MatMulCscExpr, MatMulExpr, MatMulMixedExpr, MatVecExpr};
 pub use ops::{MatAddExpr, MatSubExpr, ScaleExpr, TransposeExpr, TransposeExt};
+pub use schedule::{
+    chain_plan, choose_strategy, choose_strategy_csc, ChainPlan, FactorMeta, ProductStats,
+};
+
+use crate::sparse::convert::csc_to_csr;
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
+use std::borrow::Cow;
 
 /// A lazily evaluated expression; `eval` performs assign-time kernel
 /// selection (the "smart" in Smart Expression Templates).
+///
+/// Every expression type evaluates uniformly through an
+/// [`EvalContext`]: `eval()` is sugar for `eval_with` on a default
+/// context (model-guided strategy, one thread, no tracer).
 pub trait Expression {
     /// Result type of evaluating the expression.
     type Output;
-    /// Evaluate, choosing the appropriate kernel.
-    fn eval(&self) -> Self::Output;
+
+    /// Evaluate under an explicit context (strategy override, thread
+    /// count, optional memory tracer).
+    fn eval_with(&self, ctx: &mut EvalContext<'_>) -> Self::Output;
+
+    /// Evaluate with the default context, choosing the appropriate
+    /// kernel per operand pair.
+    fn eval(&self) -> Self::Output {
+        self.eval_with(&mut EvalContext::new())
+    }
+}
+
+/// A node of the composable expression graph: anything that can act as a
+/// sparse-matrix operand — concrete matrices (`&CsrMatrix`,
+/// `&CscMatrix`) and every expression node alike.
+///
+/// The canonical evaluation format is CSR (row-major, like Blaze's
+/// default); CSC leaves insert the §IV-A linear conversion when
+/// evaluated. Borrowing is preserved where possible: a concrete matrix
+/// leaf evaluates to `Cow::Borrowed`, so building `&a * &b` out of
+/// leaves copies nothing.
+pub trait SparseOperand {
+    /// Rows of the operand's value.
+    fn op_rows(&self) -> usize;
+
+    /// Columns of the operand's value.
+    fn op_cols(&self) -> usize;
+
+    /// Evaluate this operand to a (canonically CSR) matrix under `ctx`.
+    fn eval_ctx<'s>(&'s self, ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix>;
+
+    /// Flatten a product chain rooted here into evaluated factors.
+    /// Non-product nodes evaluate themselves (one factor); product
+    /// nodes recurse so `a * b * c` yields `[a, b, c]` and the
+    /// scheduler can pick the association order.
+    fn flatten_product<'s>(
+        &'s self,
+        ctx: &mut EvalContext<'_>,
+        factors: &mut Vec<Cow<'s, CsrMatrix>>,
+    ) {
+        factors.push(self.eval_ctx(ctx));
+    }
+
+    /// Evaluate into an existing matrix — the matrix analogue of
+    /// [`MatVecExpr::eval_into`]. Product, sum, difference, and scaling
+    /// roots stream their result directly into `out`'s buffers (no
+    /// allocation once capacity is established); the default for other
+    /// roots evaluates first and then moves or copies into `out`.
+    fn assign_to(&self, out: &mut CsrMatrix, ctx: &mut EvalContext<'_>) {
+        match self.eval_ctx(ctx) {
+            Cow::Owned(m) => *out = m,
+            Cow::Borrowed(m) => out.copy_from(m),
+        }
+    }
+}
+
+impl SparseOperand for CsrMatrix {
+    fn op_rows(&self) -> usize {
+        SparseShape::rows(self)
+    }
+
+    fn op_cols(&self) -> usize {
+        SparseShape::cols(self)
+    }
+
+    fn eval_ctx<'s>(&'s self, _ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix> {
+        Cow::Borrowed(self)
+    }
+}
+
+impl SparseOperand for CscMatrix {
+    fn op_rows(&self) -> usize {
+        SparseShape::rows(self)
+    }
+
+    fn op_cols(&self) -> usize {
+        SparseShape::cols(self)
+    }
+
+    /// Assign-time format handling (§IV-A): the CSC leaf converts to the
+    /// canonical row-major format in O(nnz) when the graph evaluates.
+    fn eval_ctx<'s>(&'s self, _ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix> {
+        Cow::Owned(csc_to_csr(self))
+    }
+}
+
+/// References to operands are operands (so `&a`, `&(expr)`, and
+/// `&c.t()` all compose).
+impl<'x, T: SparseOperand + ?Sized> SparseOperand for &'x T {
+    fn op_rows(&self) -> usize {
+        (**self).op_rows()
+    }
+
+    fn op_cols(&self) -> usize {
+        (**self).op_cols()
+    }
+
+    fn eval_ctx<'s>(&'s self, ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix> {
+        (**self).eval_ctx(ctx)
+    }
+
+    fn flatten_product<'s>(
+        &'s self,
+        ctx: &mut EvalContext<'_>,
+        factors: &mut Vec<Cow<'s, CsrMatrix>>,
+    ) {
+        (**self).flatten_product(ctx, factors)
+    }
+
+    fn assign_to(&self, out: &mut CsrMatrix, ctx: &mut EvalContext<'_>) {
+        (**self).assign_to(out, ctx)
+    }
 }
 
 #[cfg(test)]
@@ -79,14 +230,52 @@ mod tests {
     }
 
     #[test]
-    fn chained_product() {
+    fn chained_product_single_expression() {
         let a = random_fixed_per_row(12, 12, 3, 5);
         let b = random_fixed_per_row(12, 12, 3, 6);
         let c = random_fixed_per_row(12, 12, 3, 7);
-        let abc = (&(&a * &b).eval() * &c).eval();
+        // The redesigned graph: one expression, no manual temporaries.
+        let abc = (&a * &b * &c).eval();
         let oracle = DenseMatrix::from_csr(&a)
             .matmul(&DenseMatrix::from_csr(&b))
             .matmul(&DenseMatrix::from_csr(&c));
         assert!(DenseMatrix::from_csr(&abc).max_abs_diff(&oracle) < 1e-10);
+        // The pre-redesign style still works and agrees.
+        let staged = (&(&a * &b).eval() * &c).eval();
+        assert!(DenseMatrix::from_csr(&staged).max_abs_diff(&oracle) < 1e-10);
+    }
+
+    #[test]
+    fn nested_graph_with_scaling_and_transpose() {
+        let a = random_fixed_per_row(14, 14, 3, 8);
+        let b = random_fixed_per_row(14, 14, 3, 9);
+        let c = random_fixed_per_row(14, 14, 3, 10);
+        let got = (2.0 * (&a * &b) + &c.t()).eval();
+        let da = DenseMatrix::from_csr(&a);
+        let db = DenseMatrix::from_csr(&b);
+        let dc = DenseMatrix::from_csr(&c);
+        let prod = da.matmul(&db);
+        let mut want = vec![0.0; 14 * 14];
+        for r in 0..14 {
+            for col in 0..14 {
+                want[r * 14 + col] = 2.0 * prod[(r, col)] + dc[(col, r)];
+            }
+        }
+        let want = DenseMatrix::from_vec(14, 14, want);
+        assert!(DenseMatrix::from_csr(&got).max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn assign_to_matches_eval_and_reuses_capacity() {
+        let a = random_fixed_per_row(30, 30, 4, 11);
+        let b = random_fixed_per_row(30, 30, 4, 12);
+        let reference = (&a * &b).eval();
+        let mut out = CsrMatrix::new(0, 0);
+        (&a * &b).assign_to(&mut out, &mut EvalContext::new());
+        assert!(out.approx_eq(&reference, 0.0));
+        let cap = out.capacity();
+        (&a * &b).assign_to(&mut out, &mut EvalContext::new());
+        assert!(out.approx_eq(&reference, 0.0));
+        assert_eq!(out.capacity(), cap, "re-assignment allocates nothing");
     }
 }

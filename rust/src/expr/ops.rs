@@ -1,15 +1,29 @@
-//! Non-product matrix expressions: addition, subtraction, scaling,
-//! transposition.
+//! Non-product expression nodes — addition, subtraction, scaling,
+//! transposition — generic over any [`SparseOperand`], plus the
+//! operator impls that let matrices and nodes compose freely:
+//! `(2.0 * (&a * &b) + &c.t()).eval()`.
+//!
+//! Operator coverage (by design of Rust's coherence rules):
+//!
+//! * node ⊗ anything-operand (`expr * &m`, `expr + other_expr`, …) via
+//!   a generic right-hand side;
+//! * `f64 * node` and `f64 * &matrix` (scalar on the *left*; nodes are
+//!   `Copy`, so reuse after scaling is free);
+//! * `&matrix ⊗ node` via per-node impls (matrices keep their concrete
+//!   scalar/vector operators, so a generic right-hand side is not
+//!   possible there).
 
-use super::Expression;
+use super::matmul::MatMulExpr;
+use super::{EvalContext, Expression, SparseOperand};
 use crate::sparse::{CsrMatrix, SparseShape};
+use std::borrow::Cow;
 
 /// Merge two CSR rows with a combiner; appends results in sorted order.
 fn merge_rows(
     out: &mut CsrMatrix,
     (ai, av): (&[usize], &[f64]),
     (bi, bv): (&[usize], &[f64]),
-    f: impl Fn(f64, f64) -> f64,
+    f: &impl Fn(f64, f64) -> f64,
 ) {
     let (mut p, mut q) = (0usize, 0usize);
     while p < ai.len() || q < bi.len() {
@@ -33,135 +47,374 @@ fn merge_rows(
     }
 }
 
-/// Lazy sparse matrix addition.
-#[derive(Clone, Copy, Debug)]
-pub struct MatAddExpr<'a> {
-    a: &'a CsrMatrix,
-    b: &'a CsrMatrix,
-}
-
-impl Expression for MatAddExpr<'_> {
-    type Output = CsrMatrix;
-    fn eval(&self) -> CsrMatrix {
-        let mut out = CsrMatrix::new(self.a.rows(), self.a.cols());
-        out.reserve(self.a.nnz() + self.b.nnz());
-        for r in 0..self.a.rows() {
-            merge_rows(&mut out, self.a.row(r), self.b.row(r), |x, y| x + y);
-            out.finalize_row();
-        }
-        out
+/// Element-wise merge of two same-shape matrices into `out`, reusing
+/// its buffers (streaming `assign_to` path for sums/differences).
+fn merge_into(out: &mut CsrMatrix, a: &CsrMatrix, b: &CsrMatrix, f: impl Fn(f64, f64) -> f64) {
+    out.reset(a.rows(), a.cols());
+    out.reserve(a.nnz() + b.nnz());
+    for r in 0..a.rows() {
+        merge_rows(out, a.row(r), b.row(r), &f);
+        out.finalize_row();
     }
 }
 
-impl<'a> std::ops::Add<&'a CsrMatrix> for &'a CsrMatrix {
-    type Output = MatAddExpr<'a>;
-    fn add(self, rhs: &'a CsrMatrix) -> MatAddExpr<'a> {
+/// Element-wise merge of two same-shape matrices.
+fn merge_matrices(a: &CsrMatrix, b: &CsrMatrix, f: impl Fn(f64, f64) -> f64) -> CsrMatrix {
+    let mut out = CsrMatrix::new(0, 0);
+    merge_into(&mut out, a, b, f);
+    out
+}
+
+/// Scale `m` by `s` into `out`, reusing its buffers; prunes entries
+/// that scale to exact zero.
+fn scale_into(out: &mut CsrMatrix, m: &CsrMatrix, s: f64) {
+    out.reset(m.rows(), m.cols());
+    out.reserve(m.nnz());
+    for r in 0..m.rows() {
+        let (idx, val) = m.row(r);
+        for (&c, &v) in idx.iter().zip(val) {
+            let sv = s * v;
+            if sv != 0.0 {
+                out.append(c, sv);
+            }
+        }
+        out.finalize_row();
+    }
+}
+
+/// Lazy sparse matrix addition of two operands.
+#[derive(Clone, Copy, Debug)]
+pub struct MatAddExpr<L, R> {
+    a: L,
+    b: R,
+}
+
+impl<L: SparseOperand, R: SparseOperand> MatAddExpr<L, R> {
+    /// Build the lazy sum, checking shapes eagerly.
+    pub fn new(a: L, b: R) -> Self {
         assert_eq!(
-            (self.rows(), self.cols()),
-            (rhs.rows(), rhs.cols()),
+            (a.op_rows(), a.op_cols()),
+            (b.op_rows(), b.op_cols()),
             "dimension mismatch in A + B"
         );
-        MatAddExpr { a: self, b: rhs }
+        MatAddExpr { a, b }
     }
 }
 
-/// Lazy sparse matrix subtraction.
-#[derive(Clone, Copy, Debug)]
-pub struct MatSubExpr<'a> {
-    a: &'a CsrMatrix,
-    b: &'a CsrMatrix,
+impl<L: SparseOperand, R: SparseOperand> SparseOperand for MatAddExpr<L, R> {
+    fn op_rows(&self) -> usize {
+        self.a.op_rows()
+    }
+
+    fn op_cols(&self) -> usize {
+        self.a.op_cols()
+    }
+
+    fn eval_ctx<'s>(&'s self, ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix> {
+        let a = self.a.eval_ctx(ctx);
+        let b = self.b.eval_ctx(ctx);
+        Cow::Owned(merge_matrices(a.as_ref(), b.as_ref(), |x, y| x + y))
+    }
+
+    fn assign_to(&self, out: &mut CsrMatrix, ctx: &mut EvalContext<'_>) {
+        let a = self.a.eval_ctx(ctx);
+        let b = self.b.eval_ctx(ctx);
+        merge_into(out, a.as_ref(), b.as_ref(), |x, y| x + y);
+    }
 }
 
-impl Expression for MatSubExpr<'_> {
+impl<L: SparseOperand, R: SparseOperand> Expression for MatAddExpr<L, R> {
     type Output = CsrMatrix;
-    fn eval(&self) -> CsrMatrix {
-        let mut out = CsrMatrix::new(self.a.rows(), self.a.cols());
-        out.reserve(self.a.nnz() + self.b.nnz());
-        for r in 0..self.a.rows() {
-            merge_rows(&mut out, self.a.row(r), self.b.row(r), |x, y| x - y);
-            out.finalize_row();
-        }
-        out
+
+    fn eval_with(&self, ctx: &mut EvalContext<'_>) -> CsrMatrix {
+        self.eval_ctx(ctx).into_owned()
     }
 }
 
-impl<'a> std::ops::Sub<&'a CsrMatrix> for &'a CsrMatrix {
-    type Output = MatSubExpr<'a>;
-    fn sub(self, rhs: &'a CsrMatrix) -> MatSubExpr<'a> {
+/// Lazy sparse matrix subtraction of two operands.
+#[derive(Clone, Copy, Debug)]
+pub struct MatSubExpr<L, R> {
+    a: L,
+    b: R,
+}
+
+impl<L: SparseOperand, R: SparseOperand> MatSubExpr<L, R> {
+    /// Build the lazy difference, checking shapes eagerly.
+    pub fn new(a: L, b: R) -> Self {
         assert_eq!(
-            (self.rows(), self.cols()),
-            (rhs.rows(), rhs.cols()),
+            (a.op_rows(), a.op_cols()),
+            (b.op_rows(), b.op_cols()),
             "dimension mismatch in A - B"
         );
-        MatSubExpr { a: self, b: rhs }
+        MatSubExpr { a, b }
     }
 }
 
-/// Lazy scalar × matrix expression.
-#[derive(Clone, Copy, Debug)]
-pub struct ScaleExpr<'a> {
-    s: f64,
-    a: &'a CsrMatrix,
+impl<L: SparseOperand, R: SparseOperand> SparseOperand for MatSubExpr<L, R> {
+    fn op_rows(&self) -> usize {
+        self.a.op_rows()
+    }
+
+    fn op_cols(&self) -> usize {
+        self.a.op_cols()
+    }
+
+    fn eval_ctx<'s>(&'s self, ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix> {
+        let a = self.a.eval_ctx(ctx);
+        let b = self.b.eval_ctx(ctx);
+        Cow::Owned(merge_matrices(a.as_ref(), b.as_ref(), |x, y| x - y))
+    }
+
+    fn assign_to(&self, out: &mut CsrMatrix, ctx: &mut EvalContext<'_>) {
+        let a = self.a.eval_ctx(ctx);
+        let b = self.b.eval_ctx(ctx);
+        merge_into(out, a.as_ref(), b.as_ref(), |x, y| x - y);
+    }
 }
 
-impl Expression for ScaleExpr<'_> {
+impl<L: SparseOperand, R: SparseOperand> Expression for MatSubExpr<L, R> {
     type Output = CsrMatrix;
-    fn eval(&self) -> CsrMatrix {
-        let mut out = CsrMatrix::new(self.a.rows(), self.a.cols());
-        out.reserve(self.a.nnz());
-        for r in 0..self.a.rows() {
-            let (idx, val) = self.a.row(r);
-            for (&c, &v) in idx.iter().zip(val) {
-                let sv = self.s * v;
-                if sv != 0.0 {
-                    out.append(c, sv);
-                }
-            }
-            out.finalize_row();
-        }
-        out
+
+    fn eval_with(&self, ctx: &mut EvalContext<'_>) -> CsrMatrix {
+        self.eval_ctx(ctx).into_owned()
     }
 }
 
-impl<'a> std::ops::Mul<&'a CsrMatrix> for f64 {
-    type Output = ScaleExpr<'a>;
-    fn mul(self, rhs: &'a CsrMatrix) -> ScaleExpr<'a> {
-        ScaleExpr { s: self, a: rhs }
+/// Lazy scalar × operand expression.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleExpr<E> {
+    s: f64,
+    a: E,
+}
+
+impl<E: SparseOperand> ScaleExpr<E> {
+    /// Build the lazy scaling.
+    pub fn new(s: f64, a: E) -> Self {
+        ScaleExpr { s, a }
     }
 }
 
-impl<'a> std::ops::Mul<f64> for &'a CsrMatrix {
-    type Output = ScaleExpr<'a>;
-    fn mul(self, rhs: f64) -> ScaleExpr<'a> {
-        ScaleExpr { s: rhs, a: self }
+impl<E: SparseOperand> SparseOperand for ScaleExpr<E> {
+    fn op_rows(&self) -> usize {
+        self.a.op_rows()
+    }
+
+    fn op_cols(&self) -> usize {
+        self.a.op_cols()
+    }
+
+    fn eval_ctx<'s>(&'s self, ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix> {
+        let m = self.a.eval_ctx(ctx);
+        let mut out = CsrMatrix::new(0, 0);
+        scale_into(&mut out, m.as_ref(), self.s);
+        Cow::Owned(out)
+    }
+
+    fn assign_to(&self, out: &mut CsrMatrix, ctx: &mut EvalContext<'_>) {
+        let m = self.a.eval_ctx(ctx);
+        scale_into(out, m.as_ref(), self.s);
+    }
+}
+
+impl<E: SparseOperand> Expression for ScaleExpr<E> {
+    type Output = CsrMatrix;
+
+    fn eval_with(&self, ctx: &mut EvalContext<'_>) -> CsrMatrix {
+        self.eval_ctx(ctx).into_owned()
     }
 }
 
 /// Lazy transpose expression (evaluates via the O(nnz) counting
 /// transpose).
 #[derive(Clone, Copy, Debug)]
-pub struct TransposeExpr<'a> {
-    a: &'a CsrMatrix,
+pub struct TransposeExpr<E> {
+    a: E,
 }
 
-impl Expression for TransposeExpr<'_> {
-    type Output = CsrMatrix;
-    fn eval(&self) -> CsrMatrix {
-        self.a.transpose()
+impl<E: SparseOperand> TransposeExpr<E> {
+    /// Build the lazy transpose.
+    pub fn new(a: E) -> Self {
+        TransposeExpr { a }
     }
 }
 
-/// Extension trait providing `.t()` on matrix references.
+impl<E: SparseOperand> SparseOperand for TransposeExpr<E> {
+    fn op_rows(&self) -> usize {
+        self.a.op_cols()
+    }
+
+    fn op_cols(&self) -> usize {
+        self.a.op_rows()
+    }
+
+    fn eval_ctx<'s>(&'s self, ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix> {
+        Cow::Owned(self.a.eval_ctx(ctx).transpose())
+    }
+}
+
+impl<E: SparseOperand> Expression for TransposeExpr<E> {
+    type Output = CsrMatrix;
+
+    fn eval_with(&self, ctx: &mut EvalContext<'_>) -> CsrMatrix {
+        self.eval_ctx(ctx).into_owned()
+    }
+}
+
+/// Extension trait providing `.t()` on matrices.
 pub trait TransposeExt {
     /// Lazy transpose.
-    fn t(&self) -> TransposeExpr<'_>;
+    fn t(&self) -> TransposeExpr<&CsrMatrix>;
 }
 
 impl TransposeExt for CsrMatrix {
-    fn t(&self) -> TransposeExpr<'_> {
-        TransposeExpr { a: self }
+    fn t(&self) -> TransposeExpr<&CsrMatrix> {
+        TransposeExpr::new(self)
     }
 }
+
+// ---------------------------------------------------------------------
+// Concrete-matrix operators (scalar / addition / subtraction), as in
+// the original single-level API.
+// ---------------------------------------------------------------------
+
+impl<'a> std::ops::Mul<&'a CsrMatrix> for f64 {
+    type Output = ScaleExpr<&'a CsrMatrix>;
+
+    fn mul(self, rhs: &'a CsrMatrix) -> Self::Output {
+        ScaleExpr::new(self, rhs)
+    }
+}
+
+impl<'a> std::ops::Mul<f64> for &'a CsrMatrix {
+    type Output = ScaleExpr<&'a CsrMatrix>;
+
+    fn mul(self, rhs: f64) -> Self::Output {
+        ScaleExpr::new(rhs, self)
+    }
+}
+
+impl<'a, 'b> std::ops::Add<&'b CsrMatrix> for &'a CsrMatrix {
+    type Output = MatAddExpr<&'a CsrMatrix, &'b CsrMatrix>;
+
+    fn add(self, rhs: &'b CsrMatrix) -> Self::Output {
+        MatAddExpr::new(self, rhs)
+    }
+}
+
+impl<'a, 'b> std::ops::Sub<&'b CsrMatrix> for &'a CsrMatrix {
+    type Output = MatSubExpr<&'a CsrMatrix, &'b CsrMatrix>;
+
+    fn sub(self, rhs: &'b CsrMatrix) -> Self::Output {
+        MatSubExpr::new(self, rhs)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Node operators: every expression node composes with any operand on
+// its right, and with `f64` / `&CsrMatrix` on its left.
+// ---------------------------------------------------------------------
+
+macro_rules! impl_node_operators {
+    ($node:ident<$($gen:ident),+>) => {
+        impl<$($gen: SparseOperand,)+ Rhs: SparseOperand> std::ops::Mul<Rhs>
+            for $node<$($gen),+>
+        {
+            type Output = MatMulExpr<Self, Rhs>;
+
+            fn mul(self, rhs: Rhs) -> Self::Output {
+                MatMulExpr::new(self, rhs)
+            }
+        }
+
+        impl<$($gen: SparseOperand,)+ Rhs: SparseOperand> std::ops::Add<Rhs>
+            for $node<$($gen),+>
+        {
+            type Output = MatAddExpr<Self, Rhs>;
+
+            fn add(self, rhs: Rhs) -> Self::Output {
+                MatAddExpr::new(self, rhs)
+            }
+        }
+
+        impl<$($gen: SparseOperand,)+ Rhs: SparseOperand> std::ops::Sub<Rhs>
+            for $node<$($gen),+>
+        {
+            type Output = MatSubExpr<Self, Rhs>;
+
+            fn sub(self, rhs: Rhs) -> Self::Output {
+                MatSubExpr::new(self, rhs)
+            }
+        }
+
+        impl<$($gen: SparseOperand),+> std::ops::Mul<$node<$($gen),+>> for f64 {
+            type Output = ScaleExpr<$node<$($gen),+>>;
+
+            fn mul(self, rhs: $node<$($gen),+>) -> Self::Output {
+                ScaleExpr::new(self, rhs)
+            }
+        }
+
+        impl<'l, $($gen: SparseOperand),+> std::ops::Mul<$node<$($gen),+>> for &'l CsrMatrix {
+            type Output = MatMulExpr<&'l CsrMatrix, $node<$($gen),+>>;
+
+            fn mul(self, rhs: $node<$($gen),+>) -> Self::Output {
+                MatMulExpr::new(self, rhs)
+            }
+        }
+
+        impl<'l, 'r, $($gen: SparseOperand),+> std::ops::Mul<&'r $node<$($gen),+>>
+            for &'l CsrMatrix
+        {
+            type Output = MatMulExpr<&'l CsrMatrix, &'r $node<$($gen),+>>;
+
+            fn mul(self, rhs: &'r $node<$($gen),+>) -> Self::Output {
+                MatMulExpr::new(self, rhs)
+            }
+        }
+
+        impl<'l, $($gen: SparseOperand),+> std::ops::Add<$node<$($gen),+>> for &'l CsrMatrix {
+            type Output = MatAddExpr<&'l CsrMatrix, $node<$($gen),+>>;
+
+            fn add(self, rhs: $node<$($gen),+>) -> Self::Output {
+                MatAddExpr::new(self, rhs)
+            }
+        }
+
+        impl<'l, 'r, $($gen: SparseOperand),+> std::ops::Add<&'r $node<$($gen),+>>
+            for &'l CsrMatrix
+        {
+            type Output = MatAddExpr<&'l CsrMatrix, &'r $node<$($gen),+>>;
+
+            fn add(self, rhs: &'r $node<$($gen),+>) -> Self::Output {
+                MatAddExpr::new(self, rhs)
+            }
+        }
+
+        impl<'l, $($gen: SparseOperand),+> std::ops::Sub<$node<$($gen),+>> for &'l CsrMatrix {
+            type Output = MatSubExpr<&'l CsrMatrix, $node<$($gen),+>>;
+
+            fn sub(self, rhs: $node<$($gen),+>) -> Self::Output {
+                MatSubExpr::new(self, rhs)
+            }
+        }
+
+        impl<'l, 'r, $($gen: SparseOperand),+> std::ops::Sub<&'r $node<$($gen),+>>
+            for &'l CsrMatrix
+        {
+            type Output = MatSubExpr<&'l CsrMatrix, &'r $node<$($gen),+>>;
+
+            fn sub(self, rhs: &'r $node<$($gen),+>) -> Self::Output {
+                MatSubExpr::new(self, rhs)
+            }
+        }
+    };
+}
+
+impl_node_operators!(MatMulExpr<L, R>);
+impl_node_operators!(MatAddExpr<L, R>);
+impl_node_operators!(MatSubExpr<L, R>);
+impl_node_operators!(ScaleExpr<E>);
+impl_node_operators!(TransposeExpr<E>);
 
 #[cfg(test)]
 mod tests {
@@ -213,5 +466,37 @@ mod tests {
         let a = random_fixed_per_row(5, 5, 2, 8);
         let z = (0.0 * &a).eval();
         assert_eq!(z.nnz(), 0);
+    }
+
+    #[test]
+    fn nodes_compose_with_leaves_on_either_side() {
+        let a = random_fixed_per_row(9, 9, 3, 21);
+        let b = random_fixed_per_row(9, 9, 3, 22);
+        let c = random_fixed_per_row(9, 9, 3, 23);
+        let da = DenseMatrix::from_csr(&a);
+        let db = DenseMatrix::from_csr(&b);
+        let dc = DenseMatrix::from_csr(&c);
+
+        // leaf * node, node - leaf, scalar * node, leaf + &node.
+        let lhs = (&a * (&b + &c)).eval();
+        let oracle = {
+            let sum = merge_matrices(&b, &c, |x, y| x + y);
+            da.matmul(&DenseMatrix::from_csr(&sum))
+        };
+        assert!(DenseMatrix::from_csr(&lhs).max_abs_diff(&oracle) < 1e-12);
+
+        let scaled = (3.0 * (&a + &b)).eval();
+        for r in 0..9 {
+            for col in 0..9 {
+                assert!((scaled.get(r, col) - 3.0 * (da[(r, col)] + db[(r, col)])).abs() < 1e-12);
+            }
+        }
+
+        let with_ref = (&a + &c.t()).eval();
+        for r in 0..9 {
+            for col in 0..9 {
+                assert!((with_ref.get(r, col) - (da[(r, col)] + dc[(col, r)])).abs() < 1e-12);
+            }
+        }
     }
 }

@@ -1,0 +1,435 @@
+//! Model-guided assign-time scheduling for the expression graph.
+//!
+//! The paper's Smart-ET thesis is that the *assignment operator* is the
+//! right place to pick kernels, because only there are both operands and
+//! the destination known. This module turns the crate's bandwidth model
+//! from an offline analysis tool into that live scheduler. Two decisions
+//! are made per evaluation:
+//!
+//! 1. **Storing strategy per product** ([`choose_strategy`]): a single
+//!    O(nnz(A) + rows) metadata pass ([`product_stats`]) derives, per
+//!    result row, the exact touched region `[min, max]` and a
+//!    never-underestimating population bound (the §IV-B quantities the
+//!    Combined kernel's per-row heuristic uses). From these the pass
+//!    accumulates analytic traffic totals for the MinMax, Sort, and
+//!    Combined storing strategies; [`crate::model::roofline_seconds`]
+//!    converts each to a predicted execution time on the context's
+//!    machine and the cheapest strategy wins. On a banded FD stencil
+//!    (tight regions) this selects MinMax, on wide random matrices Sort,
+//!    and on mixed-row workloads Combined — the paper's Figures 4–7
+//!    ranking, now decided automatically at assignment time.
+//!
+//! 2. **Association order of chained products** ([`chain_plan`]): a
+//!    product chain `A · B · C · …` is flattened into factors and a
+//!    classic matrix-chain dynamic program runs over *estimated* costs:
+//!    the multiplication count of each candidate pair is estimated as
+//!    `nnz(L) · nnz(R) / rows(R)` (the paper's Σ āₖ·b̄ₖ under a uniform
+//!    row-population assumption), converted to seconds through the same
+//!    roofline hook. The cheapest parenthesization is then evaluated.
+
+use crate::kernels::Strategy;
+use crate::model::{roofline_seconds, Machine};
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
+use std::borrow::Cow;
+
+use super::EvalContext;
+
+/// The Combined kernel's region-vs-population decision factor (§IV-B:
+/// MinMax when `region < factor · population`; the paper ships 2).
+pub const DECISION_FACTOR: usize = 2;
+
+/// Analytic per-product statistics: one metadata pass over B's rows plus
+/// A's structure, O(nnz(A) + rows(A) + rows(B)).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProductStats {
+    /// Exact required multiplications Σ āₖ·b̄ₖ (== `flops::required_multiplications`).
+    pub mults: u64,
+    /// Never-underestimating nnz(C) bound (per-row capped — at least as
+    /// tight as `flops::nnz_estimate`).
+    pub nnz_estimate: usize,
+    /// Rows the §IV-B factor rule assigns to the MinMax path.
+    pub minmax_rows: usize,
+    /// Rows the factor rule assigns to the Sort path.
+    pub sort_rows: usize,
+    /// Inner-loop traffic (A rows + B rows + temporary read-modify-write).
+    pub compute_bytes: u64,
+    /// Storing traffic if every row used the MinMax scan.
+    pub minmax_store_bytes: u64,
+    /// Storing traffic if every row used Sort (the factor rule's
+    /// `factor · population` scan-equivalent cost model).
+    pub sort_store_bytes: u64,
+    /// Storing traffic of the per-row Combined choice, including its
+    /// per-row decision-metadata overhead.
+    pub combined_store_bytes: u64,
+}
+
+impl ProductStats {
+    /// Flops of the product (2 per multiplication, §III).
+    pub fn flops(&self) -> u64 {
+        2 * self.mults
+    }
+}
+
+/// Compute [`ProductStats`] for `C = A · B`.
+pub fn product_stats(a: &CsrMatrix, b: &CsrMatrix) -> ProductStats {
+    assert_eq!(a.cols(), b.rows(), "inner dimension");
+    // Per-row metadata of B — the same helper the pre-decided Combined
+    // kernel uses, so the model's inputs match the kernel's decisions.
+    let (bmin, bmax, bnnz) = crate::kernels::flops::row_metadata(b);
+
+    let mut s = ProductStats::default();
+    for r in 0..a.rows() {
+        let a_idx = a.row_indices(r);
+        let mut lo = usize::MAX;
+        let mut hi = 0usize;
+        let mut est = 0usize;
+        for &k in a_idx {
+            if bnnz[k] > 0 {
+                lo = lo.min(bmin[k]);
+                hi = hi.max(bmax[k]);
+                est += bnnz[k];
+            }
+        }
+        if est == 0 {
+            continue;
+        }
+        s.mults += est as u64;
+        let region = hi - lo + 1;
+        let pop = est.min(region);
+        s.nnz_estimate += pop;
+        // MinMax: scan the touched region (8 B/read) and append at most
+        // `pop` entries (16 B each).
+        let minmax_row = (8 * region + 16 * pop) as u64;
+        // Sort: the factor rule's effective cost — `factor · pop`
+        // scan-equivalents of bookkeeping plus the appends.
+        let sort_row = (8 * DECISION_FACTOR * pop + 16 * pop) as u64;
+        if region < DECISION_FACTOR * pop {
+            s.minmax_rows += 1;
+        } else {
+            s.sort_rows += 1;
+        }
+        s.minmax_store_bytes += minmax_row;
+        s.sort_store_bytes += sort_row;
+        // Combined picks per row but pays the decision metadata reads.
+        s.combined_store_bytes += minmax_row.min(sort_row) + 8 * a_idx.len() as u64;
+    }
+    s.compute_bytes = 16 * a.nnz() as u64 + 32 * s.mults;
+    s
+}
+
+/// [`product_stats`] for the column-major product `C = A · B` (CSC
+/// operands, column Gustavson): the same region/population analysis
+/// with the roles mirrored — B's columns drive the outer loop and the
+/// touched region lives in A's row indices. No format conversion.
+pub fn product_stats_csc(a: &CscMatrix, b: &CscMatrix) -> ProductStats {
+    assert_eq!(a.cols(), b.rows(), "inner dimension");
+    let (amin, amax, annz) = crate::kernels::flops::col_metadata(a);
+
+    let mut s = ProductStats::default();
+    for j in 0..b.cols() {
+        let b_idx = b.col_indices(j);
+        let mut lo = usize::MAX;
+        let mut hi = 0usize;
+        let mut est = 0usize;
+        for &k in b_idx {
+            if annz[k] > 0 {
+                lo = lo.min(amin[k]);
+                hi = hi.max(amax[k]);
+                est += annz[k];
+            }
+        }
+        if est == 0 {
+            continue;
+        }
+        s.mults += est as u64;
+        let region = hi - lo + 1;
+        let pop = est.min(region);
+        s.nnz_estimate += pop;
+        let minmax_col = (8 * region + 16 * pop) as u64;
+        let sort_col = (8 * DECISION_FACTOR * pop + 16 * pop) as u64;
+        if region < DECISION_FACTOR * pop {
+            s.minmax_rows += 1;
+        } else {
+            s.sort_rows += 1;
+        }
+        s.minmax_store_bytes += minmax_col;
+        s.sort_store_bytes += sort_col;
+        s.combined_store_bytes += minmax_col.min(sort_col) + 8 * b_idx.len() as u64;
+    }
+    s.compute_bytes = 16 * b.nnz() as u64 + 32 * s.mults;
+    s
+}
+
+/// Model-guided storing-strategy choice for one product: predicted
+/// roofline time of MinMax vs Sort vs Combined, cheapest wins.
+pub fn choose_strategy(machine: &Machine, a: &CsrMatrix, b: &CsrMatrix) -> Strategy {
+    choose_from_stats(machine, &product_stats(a, b))
+}
+
+/// [`choose_strategy`] for column-major (CSC × CSC) products — no
+/// format conversion needed for the analysis.
+pub fn choose_strategy_csc(machine: &Machine, a: &CscMatrix, b: &CscMatrix) -> Strategy {
+    choose_from_stats(machine, &product_stats_csc(a, b))
+}
+
+/// [`choose_strategy`] on precomputed stats.
+pub fn choose_from_stats(machine: &Machine, s: &ProductStats) -> Strategy {
+    if s.mults == 0 {
+        return Strategy::Combined;
+    }
+    let flops = s.flops() as f64;
+    let mut best = Strategy::Combined;
+    let mut best_secs = f64::INFINITY;
+    for (strategy, store_bytes) in [
+        (Strategy::MinMax, s.minmax_store_bytes),
+        (Strategy::Sort, s.sort_store_bytes),
+        (Strategy::Combined, s.combined_store_bytes),
+    ] {
+        let secs = roofline_seconds(machine, flops, (s.compute_bytes + store_bytes) as f64);
+        if secs < best_secs {
+            best = strategy;
+            best_secs = secs;
+        }
+    }
+    best
+}
+
+/// Scheduling metadata of one chain factor (or estimated intermediate).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FactorMeta {
+    /// Rows of the factor.
+    pub rows: usize,
+    /// Columns of the factor.
+    pub cols: usize,
+    /// (Estimated) nonzero count.
+    pub nnz: f64,
+}
+
+impl FactorMeta {
+    /// Exact metadata of a concrete matrix.
+    pub fn of(m: &CsrMatrix) -> FactorMeta {
+        FactorMeta { rows: m.rows(), cols: m.cols(), nnz: m.nnz() as f64 }
+    }
+}
+
+/// Estimated cost (seconds) of multiplying two factors, plus the
+/// metadata of the resulting product.
+pub fn pair_cost(machine: &Machine, l: &FactorMeta, r: &FactorMeta) -> (f64, FactorMeta) {
+    let mults = if r.rows == 0 { 0.0 } else { l.nnz * (r.nnz / r.rows as f64) };
+    let dense = l.rows as f64 * r.cols as f64;
+    let nnz_c = mults.min(dense);
+    let flops = 2.0 * mults;
+    // Inner-loop traffic (16 B per A entry, 32 B per multiplication)
+    // plus an order-of-magnitude storing term (scan + append).
+    let bytes = 16.0 * l.nnz + 32.0 * mults + 24.0 * nnz_c;
+    let meta = FactorMeta { rows: l.rows, cols: r.cols, nnz: nnz_c };
+    (roofline_seconds(machine, flops, bytes), meta)
+}
+
+/// A matrix-chain evaluation plan.
+#[derive(Clone, Debug)]
+pub struct ChainPlan {
+    /// Estimated total cost (seconds) of the chosen parenthesization.
+    pub cost: f64,
+    /// `split[i][j]` = the k at which the optimal plan splits the
+    /// subchain `i..=j` into `(i..=k) · (k+1..=j)`.
+    pub split: Vec<Vec<usize>>,
+}
+
+/// Matrix-chain ordering over estimated roofline costs (classic O(n³)
+/// dynamic program; chains are short, n is typically 2–5).
+pub fn chain_plan(machine: &Machine, metas: &[FactorMeta]) -> ChainPlan {
+    let n = metas.len();
+    assert!(n >= 1, "empty product chain");
+    let mut cost = vec![vec![0.0f64; n]; n];
+    let mut split = vec![vec![0usize; n]; n];
+    let mut meta = vec![vec![FactorMeta { rows: 0, cols: 0, nnz: 0.0 }; n]; n];
+    for (i, m) in metas.iter().enumerate() {
+        meta[i][i] = *m;
+    }
+    for span in 2..=n {
+        for i in 0..=(n - span) {
+            let j = i + span - 1;
+            let mut best = f64::INFINITY;
+            for k in i..j {
+                let (secs, prod) = pair_cost(machine, &meta[i][k], &meta[k + 1][j]);
+                let total = cost[i][k] + cost[k + 1][j] + secs;
+                if total < best {
+                    best = total;
+                    split[i][j] = k;
+                    meta[i][j] = prod;
+                }
+            }
+            cost[i][j] = best;
+        }
+    }
+    ChainPlan { cost: cost[0][n - 1], split }
+}
+
+/// Evaluate a flattened product chain under `ctx`, multiplying in the
+/// model-chosen association order.
+pub(crate) fn eval_chain(factors: &[Cow<'_, CsrMatrix>], ctx: &mut EvalContext<'_>) -> CsrMatrix {
+    match factors.len() {
+        0 => panic!("empty product chain"),
+        1 => factors[0].clone().into_owned(),
+        2 => ctx.product(factors[0].as_ref(), factors[1].as_ref()),
+        n => {
+            let plan = plan_for(factors, ctx, n);
+            eval_range(factors, &plan.split, 0, n - 1, ctx)
+        }
+    }
+}
+
+/// [`eval_chain`] streaming the final multiplication into `out`.
+pub(crate) fn eval_chain_into(
+    factors: &[Cow<'_, CsrMatrix>],
+    ctx: &mut EvalContext<'_>,
+    out: &mut CsrMatrix,
+) {
+    match factors.len() {
+        0 => panic!("empty product chain"),
+        1 => out.copy_from(factors[0].as_ref()),
+        2 => ctx.product_into(factors[0].as_ref(), factors[1].as_ref(), out),
+        n => {
+            let plan = plan_for(factors, ctx, n);
+            let k = plan.split[0][n - 1];
+            let (left, right) = split_eval(factors, &plan.split, 0, n - 1, k, ctx);
+            ctx.product_into(left.as_ref(), right.as_ref(), out);
+        }
+    }
+}
+
+fn plan_for(factors: &[Cow<'_, CsrMatrix>], ctx: &EvalContext<'_>, n: usize) -> ChainPlan {
+    debug_assert_eq!(factors.len(), n);
+    let metas: Vec<FactorMeta> = factors.iter().map(|f| FactorMeta::of(f.as_ref())).collect();
+    chain_plan(&ctx.machine, &metas)
+}
+
+/// Evaluate the two sides of a split without cloning single factors.
+fn split_eval<'f>(
+    factors: &'f [Cow<'f, CsrMatrix>],
+    split: &[Vec<usize>],
+    i: usize,
+    j: usize,
+    k: usize,
+    ctx: &mut EvalContext<'_>,
+) -> (Cow<'f, CsrMatrix>, Cow<'f, CsrMatrix>) {
+    let left = if i == k {
+        Cow::Borrowed(factors[i].as_ref())
+    } else {
+        Cow::Owned(eval_range(factors, split, i, k, ctx))
+    };
+    let right = if k + 1 == j {
+        Cow::Borrowed(factors[j].as_ref())
+    } else {
+        Cow::Owned(eval_range(factors, split, k + 1, j, ctx))
+    };
+    (left, right)
+}
+
+fn eval_range(
+    factors: &[Cow<'_, CsrMatrix>],
+    split: &[Vec<usize>],
+    i: usize,
+    j: usize,
+    ctx: &mut EvalContext<'_>,
+) -> CsrMatrix {
+    if i == j {
+        return factors[i].clone().into_owned();
+    }
+    let k = split[i][j];
+    let (left, right) = split_eval(factors, split, i, j, k, ctx);
+    ctx.product(left.as_ref(), right.as_ref())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{fd_poisson_2d, random_fixed_per_row};
+    use crate::kernels::flops;
+
+    #[test]
+    fn stats_mults_match_flops_module() {
+        let a = random_fixed_per_row(30, 25, 4, 1);
+        let b = random_fixed_per_row(25, 40, 3, 2);
+        let s = product_stats(&a, &b);
+        assert_eq!(s.mults, flops::required_multiplications(&a, &b));
+        assert_eq!(s.flops(), flops::spmmm_flops(&a, &b));
+        assert!(s.nnz_estimate <= flops::nnz_estimate(&a, &b), "per-row cap is tighter");
+        assert_eq!(s.minmax_rows + s.sort_rows, 30);
+    }
+
+    #[test]
+    fn fd_stencil_prefers_minmax_random_prefers_sort() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        let fd = fd_poisson_2d(8);
+        assert_eq!(choose_strategy(&machine, &fd, &fd), Strategy::MinMax);
+        let a = random_fixed_per_row(256, 256, 5, 11);
+        let b = random_fixed_per_row(256, 256, 5, 12);
+        assert_eq!(choose_strategy(&machine, &a, &b), Strategy::Sort);
+    }
+
+    #[test]
+    fn csc_stats_agree_on_mult_count() {
+        use crate::sparse::convert::csr_to_csc;
+        let a = random_fixed_per_row(24, 30, 4, 3);
+        let b = random_fixed_per_row(30, 20, 3, 4);
+        let s_row = product_stats(&a, &b);
+        let s_col = product_stats_csc(&csr_to_csc(&a), &csr_to_csc(&b));
+        assert_eq!(s_row.mults, s_col.mults, "Σ āₖ·b̄ₖ is layout-independent");
+        // FD stencil: symmetric structure, so the column analysis picks
+        // MinMax exactly like the row analysis.
+        let machine = Machine::sandy_bridge_i7_2600();
+        let fd = fd_poisson_2d(8);
+        let fd_csc = csr_to_csc(&fd);
+        assert_eq!(choose_strategy_csc(&machine, &fd_csc, &fd_csc), Strategy::MinMax);
+    }
+
+    #[test]
+    fn empty_product_defaults_to_combined() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        let z = CsrMatrix::from_parts(4, 4, vec![0; 5], vec![], vec![]);
+        assert_eq!(choose_strategy(&machine, &z, &z), Strategy::Combined);
+    }
+
+    #[test]
+    fn chain_plan_picks_cheap_association() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        // A (40x200) · B (200x200) · C (200x2): right association
+        // (A·(B·C)) avoids the large A·B intermediate.
+        let metas = [
+            FactorMeta { rows: 40, cols: 200, nnz: 4000.0 },
+            FactorMeta { rows: 200, cols: 200, nnz: 4000.0 },
+            FactorMeta { rows: 200, cols: 2, nnz: 200.0 },
+        ];
+        let plan = chain_plan(&machine, &metas);
+        assert_eq!(plan.split[0][2], 0, "expected right association");
+        // And the plan's cost is exactly the min over both orders.
+        let (c_ab, ab) = pair_cost(&machine, &metas[0], &metas[1]);
+        let (c_ab_c, _) = pair_cost(&machine, &ab, &metas[2]);
+        let (c_bc, bc) = pair_cost(&machine, &metas[1], &metas[2]);
+        let (c_a_bc, _) = pair_cost(&machine, &metas[0], &bc);
+        let left = c_ab + c_ab_c;
+        let right = c_bc + c_a_bc;
+        assert!(plan.cost <= left.min(right) * (1.0 + 1e-12));
+        assert!(plan.cost <= left.max(right));
+    }
+
+    #[test]
+    fn pair_cost_estimate_caps_at_dense() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        // mults estimate 100*100/10 = 1000, dense cap 3*3 = 9.
+        let l = FactorMeta { rows: 3, cols: 10, nnz: 100.0 };
+        let r = FactorMeta { rows: 10, cols: 3, nnz: 100.0 };
+        let (secs, prod) = pair_cost(&machine, &l, &r);
+        assert!(secs > 0.0);
+        assert_eq!(prod.rows, 3);
+        assert_eq!(prod.cols, 3);
+        assert_eq!(prod.nnz, 9.0, "intermediate nnz capped at dense size");
+        // Degenerate inner dimension: zero cost, empty product.
+        let z = FactorMeta { rows: 0, cols: 5, nnz: 0.0 };
+        let (zsecs, zprod) = pair_cost(&machine, &l, &z);
+        assert_eq!(zprod.nnz, 0.0);
+        assert!(zsecs >= 0.0);
+    }
+}

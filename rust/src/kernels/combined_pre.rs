@@ -36,19 +36,9 @@ pub fn spmmm_combined_pre_traced<T: MemTracer>(
     let mut out = CsrMatrix::new(a.rows(), cols);
     out.reserve(super::flops::nnz_estimate(a, b));
 
-    // Per-row metadata of B: min/max column and population. One pass,
-    // O(rows(B)) + O(1) per row (slices are sorted).
-    let mut bmin = vec![usize::MAX; b.rows()];
-    let mut bmax = vec![0usize; b.rows()];
-    let mut bnnz = vec![0usize; b.rows()];
-    for k in 0..b.rows() {
-        let idx = b.row_indices(k);
-        if let (Some(&first), Some(&last)) = (idx.first(), idx.last()) {
-            bmin[k] = first;
-            bmax[k] = last;
-            bnnz[k] = idx.len();
-        }
-    }
+    // Per-row metadata of B: min/max column and population (shared with
+    // the expression scheduler's strategy-choice pass).
+    let (bmin, bmax, bnnz) = super::flops::row_metadata(b);
 
     let mut temp = vec![0.0f64; cols];
     let mut stamps = vec![0u64; cols];

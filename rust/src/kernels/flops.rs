@@ -51,6 +51,43 @@ pub fn row_nnz_estimate(a: &CsrMatrix, b: &CsrMatrix, r: usize) -> usize {
     a.row_indices(r).iter().map(|&k| b.row_nnz(k)).sum()
 }
 
+/// Per-row metadata of `b` — `(min column, max column, nnz)` per row,
+/// with `(usize::MAX, 0, 0)` for empty rows. One O(rows) pass (row
+/// slices are sorted). This is the §IV-B decision input shared by the
+/// pre-decided Combined kernel and the expression scheduler's
+/// strategy-choice pass; keep the rule in one place.
+pub fn row_metadata(b: &CsrMatrix) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+    let mut bmin = vec![usize::MAX; b.rows()];
+    let mut bmax = vec![0usize; b.rows()];
+    let mut bnnz = vec![0usize; b.rows()];
+    for k in 0..b.rows() {
+        let idx = b.row_indices(k);
+        if let (Some(&first), Some(&last)) = (idx.first(), idx.last()) {
+            bmin[k] = first;
+            bmax[k] = last;
+            bnnz[k] = idx.len();
+        }
+    }
+    (bmin, bmax, bnnz)
+}
+
+/// Column-wise mirror of [`row_metadata`]: `(min row, max row, nnz)`
+/// per column of `a` — the decision input of the column-major kernels.
+pub fn col_metadata(a: &CscMatrix) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+    let mut amin = vec![usize::MAX; a.cols()];
+    let mut amax = vec![0usize; a.cols()];
+    let mut annz = vec![0usize; a.cols()];
+    for k in 0..a.cols() {
+        let idx = a.col_indices(k);
+        if let (Some(&first), Some(&last)) = (idx.first(), idx.last()) {
+            amin[k] = first;
+            amax[k] = last;
+            annz[k] = idx.len();
+        }
+    }
+    (amin, amax, annz)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,6 +140,30 @@ mod tests {
         let a = random_fixed_per_row(10, 10, 10, 1);
         let b = random_fixed_per_row(10, 10, 10, 2);
         assert_eq!(nnz_estimate(&a, &b), 100);
+    }
+
+    #[test]
+    fn row_and_col_metadata_mirror_each_other() {
+        let a = random_fixed_per_row(12, 9, 3, 7);
+        let (bmin, bmax, bnnz) = row_metadata(&a);
+        for r in 0..12 {
+            let idx = a.row_indices(r);
+            assert_eq!(bnnz[r], idx.len());
+            if !idx.is_empty() {
+                assert_eq!(bmin[r], idx[0]);
+                assert_eq!(bmax[r], *idx.last().unwrap());
+            } else {
+                assert_eq!(bmin[r], usize::MAX);
+                assert_eq!(bmax[r], 0);
+            }
+        }
+        // Column metadata of the CSC form equals row metadata of the
+        // transpose.
+        let (cmin, cmax, cnnz) = col_metadata(&csr_to_csc(&a));
+        let (tmin, tmax, tnnz) = row_metadata(&a.transpose());
+        assert_eq!(cmin, tmin);
+        assert_eq!(cmax, tmax);
+        assert_eq!(cnnz, tnnz);
     }
 
     #[test]

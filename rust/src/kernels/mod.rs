@@ -10,6 +10,50 @@
 //! cache simulator replay the *identical* kernel code path for the
 //! model-guided analysis.
 
+/// The single `Strategy` → `Accumulator` dispatch point: expands `$body`
+/// with `$A` bound to the accumulator type of `$strategy`. Every
+/// strategy-generic kernel entry (serial, traced, into, CSC, parallel)
+/// goes through this macro, so a new strategy variant is wired up in one
+/// place.
+macro_rules! with_strategy_accumulator {
+    ($strategy:expr, $A:ident => $body:expr) => {
+        match $strategy {
+            $crate::kernels::Strategy::BruteForceDouble => {
+                type $A = $crate::kernels::store::BruteForceDouble;
+                $body
+            }
+            $crate::kernels::Strategy::BruteForceBool => {
+                type $A = $crate::kernels::store::BruteForceBool;
+                $body
+            }
+            $crate::kernels::Strategy::BruteForceChar => {
+                type $A = $crate::kernels::store::BruteForceChar;
+                $body
+            }
+            $crate::kernels::Strategy::MinMax => {
+                type $A = $crate::kernels::store::MinMax;
+                $body
+            }
+            $crate::kernels::Strategy::MinMaxChar => {
+                type $A = $crate::kernels::store::MinMaxChar;
+                $body
+            }
+            $crate::kernels::Strategy::Sort => {
+                type $A = $crate::kernels::store::Sort;
+                $body
+            }
+            $crate::kernels::Strategy::SortRadix => {
+                type $A = $crate::kernels::store::SortRadix;
+                $body
+            }
+            $crate::kernels::Strategy::Combined => {
+                type $A = $crate::kernels::store::Combined;
+                $body
+            }
+        }
+    };
+}
+
 pub mod classic;
 pub mod combined_pre;
 pub mod flops;
@@ -20,5 +64,8 @@ pub mod spmv;
 pub mod store;
 pub mod tracer;
 
-pub use spmmm::{spmmm, spmmm_csc, spmmm_csr_csc, spmmm_traced, Strategy};
+pub use spmmm::{
+    spmmm, spmmm_csc, spmmm_csc_traced, spmmm_csr_csc, spmmm_into, spmmm_into_traced,
+    spmmm_traced, spmmm_with, Strategy,
+};
 pub use tracer::{MemTracer, NullTracer};

@@ -12,18 +12,35 @@
 //! set saturates the memory interface — the `ablation_threads` bench
 //! measures exactly that.
 
-use crate::kernels::store::{Accumulator, Combined};
+use crate::kernels::store::Accumulator;
 use crate::kernels::tracer::NullTracer;
+use crate::kernels::Strategy;
 use crate::sparse::{CsrMatrix, SparseShape};
 
 /// Parallel `C = A · B` with the Combined storing strategy over
 /// `threads` workers. `threads == 1` degenerates to the serial kernel.
 pub fn par_spmmm(a: &CsrMatrix, b: &CsrMatrix, threads: usize) -> CsrMatrix {
+    par_spmmm_with(a, b, threads, Strategy::Combined)
+}
+
+/// Parallel `C = A · B` with an explicit storing strategy — the
+/// expression layer's [`crate::expr::EvalContext`] entry point, so
+/// model-guided strategy selection composes with multi-threading.
+pub fn par_spmmm_with(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    threads: usize,
+    strategy: Strategy,
+) -> CsrMatrix {
     assert_eq!(a.cols(), b.rows(), "inner dimension");
     let threads = threads.max(1).min(a.rows().max(1));
     if threads == 1 {
-        return crate::kernels::spmmm(a, b, crate::kernels::Strategy::Combined);
+        return crate::kernels::spmmm(a, b, strategy);
     }
+    with_strategy_accumulator!(strategy, A => par_run::<A>(a, b, threads))
+}
+
+fn par_run<A: Accumulator>(a: &CsrMatrix, b: &CsrMatrix, threads: usize) -> CsrMatrix {
     // Slab bounds: contiguous row ranges balanced by *row count* (a
     // flop-balanced split is a perf-pass refinement measured in the
     // ablation bench).
@@ -37,7 +54,7 @@ pub fn par_spmmm(a: &CsrMatrix, b: &CsrMatrix, threads: usize) -> CsrMatrix {
             .iter()
             .map(|&(lo, hi)| {
                 scope.spawn(move || {
-                    let mut acc = Combined::new(b.cols());
+                    let mut acc = A::new(b.cols());
                     let mut frag = CsrMatrix::new(hi - lo, b.cols());
                     // Reserve this slab's share of the estimate.
                     let est: usize =
@@ -99,6 +116,16 @@ mod tests {
                 let par = par_spmmm(&a, &b, threads);
                 assert!(par.approx_eq(&serial, 0.0), "{w:?} threads={threads}");
             }
+        }
+    }
+
+    #[test]
+    fn strategies_match_serial_in_parallel() {
+        let (a, b) = operand_pair(Workload::RandomFixed5, 200, 5);
+        let serial = spmmm(&a, &b, Strategy::Combined);
+        for s in [Strategy::MinMax, Strategy::Sort, Strategy::Combined] {
+            let par = par_spmmm_with(&a, &b, 3, s);
+            assert!(par.approx_eq(&serial, 0.0), "{}", s.name());
         }
     }
 

@@ -3,10 +3,7 @@
 //! mixed-storage-order operands.
 
 use super::gustavson;
-use super::store::{
-    Accumulator, BruteForceBool, BruteForceChar, BruteForceDouble, Combined, MinMax,
-    MinMaxChar, Sort, SortRadix,
-};
+use super::store::{Accumulator, Combined};
 use super::tracer::{MemTracer, NullTracer};
 use crate::sparse::convert::csc_to_csr;
 use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
@@ -47,16 +44,7 @@ impl Strategy {
 
     /// Display name matching the paper's figure legends.
     pub fn name(self) -> &'static str {
-        match self {
-            Strategy::BruteForceDouble => BruteForceDouble::name(),
-            Strategy::BruteForceBool => BruteForceBool::name(),
-            Strategy::BruteForceChar => BruteForceChar::name(),
-            Strategy::MinMax => MinMax::name(),
-            Strategy::MinMaxChar => MinMaxChar::name(),
-            Strategy::Sort => Sort::name(),
-            Strategy::SortRadix => SortRadix::name(),
-            Strategy::Combined => Combined::name(),
-        }
+        with_strategy_accumulator!(self, A => A::name())
     }
 
     /// Parse from the CLI/report name (case-insensitive).
@@ -71,7 +59,7 @@ impl Strategy {
                 "bf-char" | "char" => Some(Strategy::BruteForceChar),
                 "minmax" => Some(Strategy::MinMax),
                 "sort" => Some(Strategy::Sort),
-            "sort-radix" | "radix" => Some(Strategy::SortRadix),
+                "sort-radix" | "radix" => Some(Strategy::SortRadix),
                 "combined" => Some(Strategy::Combined),
                 _ => None,
             })
@@ -96,16 +84,7 @@ pub fn spmmm_traced<T: MemTracer>(
     strategy: Strategy,
     tr: &mut T,
 ) -> CsrMatrix {
-    match strategy {
-        Strategy::BruteForceDouble => run::<BruteForceDouble, T>(a, b, tr),
-        Strategy::BruteForceBool => run::<BruteForceBool, T>(a, b, tr),
-        Strategy::BruteForceChar => run::<BruteForceChar, T>(a, b, tr),
-        Strategy::MinMax => run::<MinMax, T>(a, b, tr),
-        Strategy::MinMaxChar => run::<MinMaxChar, T>(a, b, tr),
-        Strategy::Sort => run::<Sort, T>(a, b, tr),
-        Strategy::SortRadix => run::<SortRadix, T>(a, b, tr),
-        Strategy::Combined => run::<Combined, T>(a, b, tr),
-    }
+    with_strategy_accumulator!(strategy, A => run::<A, T>(a, b, tr))
 }
 
 /// Full spMMM `C = A · B` for CSR operands (untraced production path).
@@ -123,26 +102,73 @@ pub fn spmmm_csr_csc(a: &CsrMatrix, b: &CscMatrix, strategy: Strategy) -> CsrMat
 }
 
 /// Column-major multiply CSC × CSC → CSC via the column Gustavson
-/// algorithm.
-pub fn spmmm_csc(a: &CscMatrix, b: &CscMatrix, strategy: Strategy) -> CscMatrix {
-    fn run_csc<A: Accumulator>(a: &CscMatrix, b: &CscMatrix) -> CscMatrix {
+/// algorithm, memory-traffic-traced — so the cache simulator replays
+/// the *same* column kernel the production path runs.
+pub fn spmmm_csc_traced<T: MemTracer>(
+    a: &CscMatrix,
+    b: &CscMatrix,
+    strategy: Strategy,
+    tr: &mut T,
+) -> CscMatrix {
+    fn run_csc<A: Accumulator, T: MemTracer>(
+        a: &CscMatrix,
+        b: &CscMatrix,
+        tr: &mut T,
+    ) -> CscMatrix {
         let mut out = CscMatrix::new(a.rows(), b.cols());
         let a_csr = csc_to_csr(a); // only for the estimate; O(nnz)
         let b_csr = csc_to_csr(b);
         out.reserve(super::flops::nnz_estimate(&a_csr, &b_csr));
         let mut acc = A::new(a.rows());
-        gustavson::cols_into(a, b, &mut acc, &mut out, &mut NullTracer);
+        gustavson::cols_into(a, b, &mut acc, &mut out, tr);
         out
     }
-    match strategy {
-        Strategy::BruteForceDouble => run_csc::<BruteForceDouble>(a, b),
-        Strategy::BruteForceBool => run_csc::<BruteForceBool>(a, b),
-        Strategy::BruteForceChar => run_csc::<BruteForceChar>(a, b),
-        Strategy::MinMax => run_csc::<MinMax>(a, b),
-        Strategy::MinMaxChar => run_csc::<MinMaxChar>(a, b),
-        Strategy::Sort => run_csc::<Sort>(a, b),
-        Strategy::SortRadix => run_csc::<SortRadix>(a, b),
-        Strategy::Combined => run_csc::<Combined>(a, b),
+    with_strategy_accumulator!(strategy, A => run_csc::<A, T>(a, b, tr))
+}
+
+/// Untraced [`spmmm_csc_traced`].
+pub fn spmmm_csc(a: &CscMatrix, b: &CscMatrix, strategy: Strategy) -> CscMatrix {
+    spmmm_csc_traced(a, b, strategy, &mut NullTracer)
+}
+
+/// Full spMMM evaluated *into* an existing matrix, memory-traffic-traced:
+/// `out` is reset to `a.rows() × b.cols()` and its buffers are reused —
+/// the matrix analogue of `MatVecExpr::eval_into`. Once `out` has enough
+/// capacity, repeated assignments allocate nothing.
+pub fn spmmm_into_traced<T: MemTracer>(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    strategy: Strategy,
+    out: &mut CsrMatrix,
+    tr: &mut T,
+) {
+    fn run_into<A: Accumulator, T: MemTracer>(
+        a: &CsrMatrix,
+        b: &CsrMatrix,
+        out: &mut CsrMatrix,
+        tr: &mut T,
+    ) {
+        let mut acc = A::new(b.cols());
+        gustavson::rows_into(a, b, &mut acc, out, tr);
+    }
+    out.reset(a.rows(), b.cols());
+    out.reserve(super::flops::nnz_estimate(a, b));
+    with_strategy_accumulator!(strategy, A => run_into::<A, T>(a, b, out, tr))
+}
+
+/// Untraced [`spmmm_into_traced`].
+pub fn spmmm_into(a: &CsrMatrix, b: &CsrMatrix, strategy: Strategy, out: &mut CsrMatrix) {
+    spmmm_into_traced(a, b, strategy, out, &mut NullTracer)
+}
+
+/// Context-style entry point: explicit strategy *and* worker count.
+/// `threads > 1` dispatches to the shared-memory parallel kernel
+/// (bit-identical results); `threads <= 1` is the serial kernel.
+pub fn spmmm_with(a: &CsrMatrix, b: &CsrMatrix, strategy: Strategy, threads: usize) -> CsrMatrix {
+    if threads > 1 {
+        super::parallel::par_spmmm_with(a, b, threads, strategy)
+    } else {
+        spmmm(a, b, strategy)
     }
 }
 
@@ -238,6 +264,31 @@ mod tests {
         let c = spmmm(&a, &b, Strategy::Combined);
         assert!(c.nnz() <= est, "estimate is an upper bound");
         assert!(c.capacity() >= c.nnz());
+    }
+
+    #[test]
+    fn spmmm_into_reuses_buffers_and_matches() {
+        let a = random_fixed_per_row(40, 40, 5, 11);
+        let b = random_fixed_per_row(40, 40, 5, 12);
+        let reference = spmmm(&a, &b, Strategy::Combined);
+        let mut out = CsrMatrix::new(0, 0);
+        spmmm_into(&a, &b, Strategy::Combined, &mut out);
+        assert!(out.approx_eq(&reference, 0.0));
+        let cap = out.capacity();
+        spmmm_into(&a, &b, Strategy::Sort, &mut out);
+        assert!(out.approx_eq(&reference, 0.0), "strategies are bit-identical");
+        assert_eq!(out.capacity(), cap, "second assignment allocates nothing");
+    }
+
+    #[test]
+    fn spmmm_with_threads_matches_serial() {
+        let a = random_fixed_per_row(60, 60, 5, 13);
+        let b = random_fixed_per_row(60, 60, 5, 14);
+        let serial = spmmm_with(&a, &b, Strategy::Sort, 1);
+        for threads in [2usize, 4] {
+            let par = spmmm_with(&a, &b, Strategy::Sort, threads);
+            assert!(par.approx_eq(&serial, 0.0), "threads={threads}");
+        }
     }
 
     #[test]

@@ -35,6 +35,26 @@ pub trait MemTracer {
     }
 }
 
+/// Forwarding impl so a `&mut dyn MemTracer` (e.g. the optional tracer
+/// carried by [`crate::expr::EvalContext`]) satisfies the generic
+/// `T: MemTracer` bound of every kernel entry point.
+impl<'a, T: MemTracer + ?Sized> MemTracer for &'a mut T {
+    #[inline(always)]
+    fn load(&mut self, addr: usize, bytes: usize) {
+        (**self).load(addr, bytes);
+    }
+
+    #[inline(always)]
+    fn store(&mut self, addr: usize, bytes: usize) {
+        (**self).store(addr, bytes);
+    }
+
+    #[inline(always)]
+    fn flops(&mut self, n: u64) {
+        (**self).flops(n);
+    }
+}
+
 /// The zero-cost tracer for production runs.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NullTracer;
@@ -134,6 +154,24 @@ mod tests {
         let mut t = CountingTracer::default();
         t.load(0, 8);
         assert!(t.code_balance().is_infinite());
+    }
+
+    #[test]
+    fn dyn_tracer_forwards() {
+        let mut t = CountingTracer::default();
+        {
+            let mut dyn_tr: &mut dyn MemTracer = &mut t;
+            // Exercise the &mut T forwarding impl through a generic fn.
+            fn drive<T: MemTracer>(tr: &mut T) {
+                tr.load(0, 8);
+                tr.store(8, 8);
+                tr.flops(2);
+            }
+            drive(&mut dyn_tr);
+        }
+        assert_eq!(t.loaded, 8);
+        assert_eq!(t.stored, 8);
+        assert_eq!(t.flops, 2);
     }
 
     #[test]

@@ -13,7 +13,11 @@
 //!   Gustavson row/column-major, and the Brute-Force / MinMax / Sort /
 //!   Combined storing strategies),
 //! * a Smart-Expression-Template-style lazy expression layer ([`expr`]:
-//!   `(&a * &b).eval()` with assign-time kernel selection),
+//!   a composable expression graph — `(&a * &b + &c).eval()`,
+//!   `(&a * &b * &c).eval()` — whose assign-time kernel selection is
+//!   driven by the crate's own bandwidth model: storing strategy and
+//!   product association order are chosen per operand pair via
+//!   [`model::roofline_seconds`]),
 //! * reimplementations of the compared libraries' strategies
 //!   ([`baselines`]: uBLAS-, MTL4-, Eigen3-like),
 //! * the bandwidth-based performance model ([`model`]) and a
@@ -24,6 +28,21 @@
 //! * a PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas
 //!   artifacts and a block-sparse spMMM ([`bsr`]) scheduled onto them,
 //! * a job-pipeline coordinator ([`coordinator`]).
+//!
+//! The paper's Listing 1 (`C = A * B;`) and its composable-graph
+//! generalization, in five lines:
+//!
+//! ```
+//! use blazert::expr::{EvalContext, Expression, SparseOperand};
+//! use blazert::gen::fd_poisson_2d;
+//!
+//! let (a, b, c) = (fd_poisson_2d(8), fd_poisson_2d(8), fd_poisson_2d(8));
+//! let d = (&a * &b + &c).eval();        // one graph, no temporaries
+//! let e = (&a * &b * &c).eval();        // association chosen by the model
+//! let mut out = blazert::sparse::CsrMatrix::new(0, 0);
+//! (&a * &b).assign_to(&mut out, &mut EvalContext::new()); // buffer reuse
+//! # let _ = (d, e);
+//! ```
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper figure to a bench target.

@@ -83,6 +83,25 @@ impl Prediction {
     }
 }
 
+/// Assign-time cost hook for the expression layer's model-guided
+/// scheduling: the light-speed execution time of a kernel phase that
+/// performs `flops` floating-point operations while moving `bytes` bytes
+/// over the memory interface.
+///
+/// This is the paper's `P = min(P_max, b_max / B_c)` formula solved for
+/// time: `t = flops / P = max(flops / P_max, bytes / b_max)`. The spMMM
+/// kernels sit far above the machine balance (≥ 16 B/Flop vs ~2.4), so
+/// in practice the estimate is the memory-interface transfer time — the
+/// quantity the expression layer minimizes when it picks a storing
+/// strategy and a product association order before evaluating.
+pub fn roofline_seconds(machine: &Machine, flops: f64, bytes: f64) -> f64 {
+    if flops <= 0.0 {
+        return if machine.mem_bandwidth > 0.0 { bytes / machine.mem_bandwidth } else { 0.0 };
+    }
+    let ceiling = lightspeed_for(machine.peak_flops(), machine.mem_bandwidth, bytes / flops);
+    flops / ceiling
+}
+
 /// Build the prediction for a traced run on `machine`.
 ///
 /// Path traffic: L1 sees every load/store the kernel issues
@@ -176,6 +195,20 @@ mod tests {
         // below peak.
         assert!(p.predicted <= 3.8e9 * 1.05);
         assert!(p.predicted < m.peak_flops());
+    }
+
+    #[test]
+    fn roofline_seconds_limits() {
+        let m = Machine::sandy_bridge_i7_2600();
+        // Memory-bound: 16 B/Flop >> machine balance -> transfer time.
+        let t = roofline_seconds(&m, 2.0e6, 32.0e6);
+        assert!((t - 32.0e6 / m.mem_bandwidth).abs() / t < 1e-12);
+        // Compute-bound: almost no traffic -> flops / peak.
+        let t2 = roofline_seconds(&m, 2.0e6, 8.0);
+        assert!((t2 - 2.0e6 / m.peak_flops()).abs() / t2 < 1e-12);
+        // Monotone in bytes; zero-flop edge is pure transfer.
+        assert!(roofline_seconds(&m, 1e6, 64e6) >= roofline_seconds(&m, 1e6, 32e6));
+        assert_eq!(roofline_seconds(&m, 0.0, 0.0), 0.0);
     }
 
     #[test]

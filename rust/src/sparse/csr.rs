@@ -157,6 +157,32 @@ impl CsrMatrix {
         &self.values
     }
 
+    /// Reset to an empty `rows × cols` matrix ready for streaming
+    /// construction, *keeping* the allocated buffers. The expression
+    /// layer's `assign_to` uses this so repeated assignments into the
+    /// same matrix allocate nothing once capacity has been established.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.row_ptr.clear();
+        self.row_ptr.push(0);
+        self.col_idx.clear();
+        self.values.clear();
+    }
+
+    /// Become a copy of `other`, reusing this matrix's buffers (unlike
+    /// `clone_from`, which reallocates through `clone`).
+    pub fn copy_from(&mut self, other: &CsrMatrix) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.row_ptr.clear();
+        self.row_ptr.extend_from_slice(&other.row_ptr);
+        self.col_idx.clear();
+        self.col_idx.extend_from_slice(&other.col_idx);
+        self.values.clear();
+        self.values.extend_from_slice(&other.values);
+    }
+
     /// Release excess capacity (after construction with an over-estimate).
     pub fn shrink_to_fit(&mut self) {
         self.col_idx.shrink_to_fit();
@@ -309,6 +335,22 @@ mod tests {
         }
         m.finalize_row();
         assert_eq!(m.capacity(), cap, "no reallocation after reserve");
+    }
+
+    #[test]
+    fn reset_and_copy_from_reuse_buffers() {
+        let mut m = small();
+        m.reserve(64);
+        let cap = m.capacity();
+        m.reset(3, 4);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 4);
+        assert_eq!(m.nnz(), 0);
+        assert!(m.capacity() >= cap, "reset keeps capacity");
+        let src = small();
+        m.copy_from(&src);
+        assert!(m.approx_eq(&src, 0.0));
+        assert!(m.capacity() >= cap, "copy_from keeps capacity");
     }
 
     #[test]

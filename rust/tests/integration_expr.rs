@@ -1,11 +1,14 @@
 //! Integration: the Smart-Expression-Template layer end to end.
 
 use blazert::expr::vector::{cg, dot, norm2};
-use blazert::expr::{Expression, TransposeExt};
+use blazert::expr::{choose_strategy, EvalContext, Expression, SparseOperand, TransposeExt};
 use blazert::gen::{fd_poisson_2d, fd_rhs_ones, random_fixed_per_row};
-use blazert::kernels::{spmmm, Strategy};
+use blazert::kernels::tracer::CountingTracer;
+use blazert::kernels::{flops, spmmm, Strategy};
+use blazert::model::Machine;
+use blazert::simulator::Hierarchy;
 use blazert::sparse::convert::csr_to_csc;
-use blazert::sparse::{DenseMatrix, SparseShape};
+use blazert::sparse::{CsrMatrix, DenseMatrix, SparseShape};
 
 #[test]
 fn listing_one_equivalence() {
@@ -78,5 +81,135 @@ fn expression_objects_are_cheap() {
     let e = &a * &b;
     let e2 = e; // Copy
     assert!(std::mem::size_of_val(&e) <= 2 * std::mem::size_of::<usize>());
-    let _ = (e, e2);
+    // Nested graphs stay allocation-free too: a three-factor chain is
+    // three references, nothing else.
+    let c = random_fixed_per_row(1000, 1000, 5, 11);
+    let chain = &a * &b * &c;
+    assert!(std::mem::size_of_val(&chain) <= 3 * std::mem::size_of::<usize>());
+    let _ = (e, e2, chain);
+}
+
+#[test]
+fn composable_graphs_match_dense_oracle() {
+    // Acceptance: `(&a * &b + &c).eval()` and `(&a * &b * &c).eval()`
+    // compile and match the dense oracle without intermediate `.eval()`.
+    let a = random_fixed_per_row(40, 40, 4, 31);
+    let b = random_fixed_per_row(40, 40, 4, 32);
+    let c = random_fixed_per_row(40, 40, 4, 33);
+    let da = DenseMatrix::from_csr(&a);
+    let db = DenseMatrix::from_csr(&b);
+    let dc = DenseMatrix::from_csr(&c);
+
+    let sum = (&a * &b + &c).eval();
+    let prod = da.matmul(&db);
+    for r in 0..40 {
+        for col in 0..40 {
+            assert!((sum.get(r, col) - (prod[(r, col)] + dc[(r, col)])).abs() < 1e-10);
+        }
+    }
+
+    let chain = (&a * &b * &c).eval();
+    let oracle = prod.matmul(&dc);
+    assert!(DenseMatrix::from_csr(&chain).max_abs_diff(&oracle) < 1e-9);
+
+    // Deep nesting with scaling and transpose in one graph.
+    let deep = (2.0 * (&a * &b) + &c.t()).eval();
+    for r in 0..40 {
+        for col in 0..40 {
+            assert!((deep.get(r, col) - (2.0 * prod[(r, col)] + dc[(col, r)])).abs() < 1e-10);
+        }
+    }
+}
+
+#[test]
+fn model_guided_strategy_differs_between_workloads() {
+    // Acceptance: assign-time strategy selection is driven by the
+    // model/flops estimates — an FD stencil (tight touched regions)
+    // selects MinMax while a wide random workload selects Sort.
+    let machine = Machine::sandy_bridge_i7_2600();
+    let fd = fd_poisson_2d(8);
+    let s_fd = choose_strategy(&machine, &fd, &fd);
+    let ar = random_fixed_per_row(256, 256, 5, 41);
+    let br = random_fixed_per_row(256, 256, 5, 42);
+    let s_rand = choose_strategy(&machine, &ar, &br);
+    assert_eq!(s_fd, Strategy::MinMax, "banded FD stencil favors the MinMax scan");
+    assert_eq!(s_rand, Strategy::Sort, "wide random rows favor Sort");
+    assert_ne!(s_fd, s_rand);
+    // Both choices produce the identical result (store invariant), so
+    // the model can never hurt correctness.
+    let via_model = (&ar * &br).eval();
+    assert!(via_model.approx_eq(&spmmm(&ar, &br, Strategy::Combined), 0.0));
+}
+
+#[test]
+fn eval_context_threads_and_strategy_override() {
+    let a = random_fixed_per_row(300, 300, 5, 51);
+    let b = random_fixed_per_row(300, 300, 5, 52);
+    let serial = (&a * &b).eval();
+    let parallel = (&a * &b).eval_with(&mut EvalContext::new().with_threads(4));
+    assert!(parallel.approx_eq(&serial, 0.0));
+    for strategy in [Strategy::MinMax, Strategy::Sort, Strategy::Combined] {
+        let forced = (&a * &b).eval_with(&mut EvalContext::using(strategy));
+        assert!(forced.approx_eq(&serial, 0.0));
+    }
+}
+
+#[test]
+fn tracer_replays_whole_expression_trees() {
+    // A counting tracer sees exactly the flops of both products in the
+    // chain; the cache simulator plugs in the same way.
+    let a = random_fixed_per_row(60, 60, 4, 61);
+    let b = random_fixed_per_row(60, 60, 4, 62);
+    let c = random_fixed_per_row(60, 60, 4, 63);
+    let serial = (&a * &b * &c).eval();
+
+    let mut counter = CountingTracer::default();
+    let traced = (&a * &b * &c).eval_with(&mut EvalContext::new().with_tracer(&mut counter));
+    assert!(traced.approx_eq(&serial, 0.0));
+    // Whatever association the model picked, two products ran and their
+    // flops were observed (2 per multiplication, nothing else).
+    assert!(counter.flops > 0);
+    let left_flops = {
+        let ab = spmmm(&a, &b, Strategy::Combined);
+        flops::spmmm_flops(&a, &b) + flops::spmmm_flops(&ab, &c)
+    };
+    let right_flops = {
+        let bc = spmmm(&b, &c, Strategy::Combined);
+        flops::spmmm_flops(&b, &c) + flops::spmmm_flops(&a, &bc)
+    };
+    assert!(
+        counter.flops == left_flops || counter.flops == right_flops,
+        "traced flops {} match one association ({left_flops} / {right_flops})",
+        counter.flops
+    );
+
+    // Full cache-hierarchy replay of the same tree.
+    let mut h = Hierarchy::sandy_bridge();
+    let _ = (&a * &b * &c).eval_with(&mut EvalContext::new().with_tracer(&mut h));
+    let report = h.report();
+    assert_eq!(report.flops, counter.flops, "simulator sees the same tree");
+    assert!(report.l1_bytes() > 0);
+}
+
+#[test]
+fn assign_to_is_the_no_allocation_assignment() {
+    let a = random_fixed_per_row(200, 200, 5, 71);
+    let b = random_fixed_per_row(200, 200, 5, 72);
+    let reference = (&a * &b).eval();
+
+    let mut out = CsrMatrix::new(0, 0);
+    (&a * &b).assign_to(&mut out, &mut EvalContext::new());
+    assert!(out.approx_eq(&reference, 0.0));
+    let cap = out.capacity();
+    // Re-assigning (even a different expression of the same shape)
+    // reuses the buffers: capacity is already established.
+    (&b * &a).assign_to(&mut out, &mut EvalContext::new());
+    assert!(out.approx_eq(&(&b * &a).eval(), 0.0));
+    assert_eq!(out.capacity(), cap, "no reallocation on re-assignment");
+
+    // Sum roots stream into the kept buffers too: nnz(A)+nnz(B) fits
+    // inside the capacity the product established, so no reallocation.
+    (&a + &b).assign_to(&mut out, &mut EvalContext::new());
+    assert!(out.approx_eq(&(&a + &b).eval(), 0.0));
+    assert_eq!(out.capacity(), cap, "sum assignment reuses buffers");
 }

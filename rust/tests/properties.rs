@@ -236,6 +236,130 @@ fn prop_scalar_expression_linearity() {
 }
 
 #[test]
+fn prop_nested_expression_trees_match_dense_oracle() {
+    use blazert::expr::{Expression, TransposeExt};
+
+    fn dmap(x: &DenseMatrix, y: &DenseMatrix, f: impl Fn(f64, f64) -> f64) -> DenseMatrix {
+        DenseMatrix::from_vec(
+            x.rows(),
+            x.cols(),
+            x.data().iter().zip(y.data()).map(|(p, q)| f(*p, *q)).collect(),
+        )
+    }
+    fn dscale(x: &DenseMatrix, s: f64) -> DenseMatrix {
+        DenseMatrix::from_vec(x.rows(), x.cols(), x.data().iter().map(|v| s * v).collect())
+    }
+    fn dtrans(x: &DenseMatrix) -> DenseMatrix {
+        let mut out = vec![0.0; x.rows() * x.cols()];
+        for r in 0..x.rows() {
+            for c in 0..x.cols() {
+                out[c * x.rows() + r] = x[(r, c)];
+            }
+        }
+        DenseMatrix::from_vec(x.cols(), x.rows(), out)
+    }
+
+    check_default("random nested expression trees == dense oracle", |rng, _| {
+        let n1 = rng.range(2, 20);
+        let n2 = rng.range(2, 20);
+        let n3 = rng.range(2, 20);
+        let n4 = rng.range(2, 20);
+        let a = random_fixed_per_row(n1, n2, rng.below(4) + 1, rng.next_u64());
+        let a2 = random_fixed_per_row(n1, n2, rng.below(4) + 1, rng.next_u64());
+        let b = random_fixed_per_row(n2, n3, rng.below(4) + 1, rng.next_u64());
+        let c = random_fixed_per_row(n3, n4, rng.below(4) + 1, rng.next_u64());
+        let d = random_fixed_per_row(n1, n3, rng.below(4) + 1, rng.next_u64());
+        let e = random_fixed_per_row(n4, n2, rng.below(4) + 1, rng.next_u64());
+        let s = rng.f64_range(-2.0, 2.0);
+        let da = DenseMatrix::from_csr(&a);
+        let da2 = DenseMatrix::from_csr(&a2);
+        let db = DenseMatrix::from_csr(&b);
+        let dc = DenseMatrix::from_csr(&c);
+        let dd = DenseMatrix::from_csr(&d);
+        let de = DenseMatrix::from_csr(&e);
+
+        let cases: Vec<(&str, blazert::sparse::CsrMatrix, DenseMatrix)> = vec![
+            ("A*B + D", (&a * &b + &d).eval(), dmap(&da.matmul(&db), &dd, |x, y| x + y)),
+            ("A*B*C", (&a * &b * &c).eval(), da.matmul(&db).matmul(&dc)),
+            (
+                "s*(A*B) - D",
+                (s * (&a * &b) - &d).eval(),
+                dmap(&dscale(&da.matmul(&db), s), &dd, |x, y| x - y),
+            ),
+            (
+                "(A+A2)*B",
+                ((&a + &a2) * &b).eval(),
+                dmap(&da, &da2, |x, y| x + y).matmul(&db),
+            ),
+            ("A*E^T", (&a * &e.t()).eval(), da.matmul(&dtrans(&de))),
+        ];
+        for (name, got, want) in cases {
+            let diff = DenseMatrix::from_csr(&got).max_abs_diff(&want);
+            if diff > 1e-9 {
+                return Err(format!("tree '{name}' differs from oracle by {diff}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chain_plan_never_exceeds_worse_association() {
+    use blazert::expr::schedule::pair_cost;
+    use blazert::expr::{chain_plan, FactorMeta};
+    use blazert::model::Machine;
+
+    check_default("chain plan <= worse 3-chain association", |rng, _| {
+        let machine = Machine::sandy_bridge_i7_2600();
+        let dims: Vec<usize> = (0..4).map(|_| rng.range(1, 400)).collect();
+        let metas: Vec<FactorMeta> = (0..3)
+            .map(|i| {
+                let dense = dims[i] * dims[i + 1];
+                FactorMeta {
+                    rows: dims[i],
+                    cols: dims[i + 1],
+                    nnz: rng.below(dense.max(1) + 1) as f64,
+                }
+            })
+            .collect();
+        let (c_ab, ab) = pair_cost(&machine, &metas[0], &metas[1]);
+        let (c_ab_c, _) = pair_cost(&machine, &ab, &metas[2]);
+        let left = c_ab + c_ab_c;
+        let (c_bc, bc) = pair_cost(&machine, &metas[1], &metas[2]);
+        let (c_a_bc, _) = pair_cost(&machine, &metas[0], &bc);
+        let right = c_bc + c_a_bc;
+        let plan = chain_plan(&machine, &metas);
+        let worse = left.max(right);
+        let best = left.min(right);
+        if plan.cost > worse * (1.0 + 1e-12) {
+            return Err(format!("plan cost {} exceeds worse association {}", plan.cost, worse));
+        }
+        if plan.cost > best * (1.0 + 1e-9) + 1e-300 {
+            return Err(format!("plan cost {} misses best association {}", plan.cost, best));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_assign_to_matches_eval() {
+    use blazert::expr::{EvalContext, Expression, SparseOperand};
+
+    check_default("assign_to == eval for product graphs", |rng, _| {
+        let a = arb_matrix(rng, 30);
+        let b = random_fixed_per_row(a.cols(), rng.range(1, 30), rng.below(4) + 1, rng.next_u64());
+        let expr = &a * &b;
+        let reference = expr.eval();
+        let mut out = CsrMatrix::new(0, 0);
+        expr.assign_to(&mut out, &mut EvalContext::new());
+        if !out.approx_eq(&reference, 0.0) {
+            return Err("assign_to differs from eval".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_flops_formula_vs_naive_count() {
     check_default("2x mults == spmmm_flops", |rng, _| {
         let a = arb_matrix(rng, 30);
