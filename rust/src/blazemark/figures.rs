@@ -1,5 +1,5 @@
 //! The experiment registry: one [`Figure`] per figure of the paper's
-//! evaluation (see DESIGN.md §6 for the index).
+//! evaluation (see DESIGN.md §4 for the index).
 
 use crate::baselines::Library;
 use crate::gen::Workload;

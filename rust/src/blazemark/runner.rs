@@ -1,5 +1,14 @@
-//! Adaptive repeat-until-deadline / best-of-N measurement core.
+//! Adaptive repeat-until-deadline / best-of-N measurement core, plus
+//! the persistent [`SweepSession`] that keeps one execution pool and
+//! one output matrix alive across a whole sweep — so the 2 s repeat
+//! protocol measures the kernel, not the allocator or the thread
+//! spawner.
 
+use crate::exec::{serial_spmmm_into, ExecPool, Partition};
+use crate::kernels::parallel::par_spmmm_into;
+use crate::kernels::Strategy;
+use crate::model::Machine;
+use crate::sparse::CsrMatrix;
 use crate::util::timer::Stopwatch;
 
 /// Measurement protocol parameters.
@@ -81,6 +90,55 @@ pub fn measure<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Measurement {
     Measurement { best_seconds: best.max(1e-12), reps, trials: cfg.trials.max(1) }
 }
 
+/// Persistent measurement state for a sweep: one [`ExecPool`] (workers
+/// + workspaces spawned once) and one reused output matrix. Every
+/// repetition of every point in the sweep multiplies into the same
+/// buffers, so after the first calibration execution the timed region
+/// is allocation-free.
+pub struct SweepSession {
+    pool: ExecPool,
+    machine: Machine,
+    out: CsrMatrix,
+}
+
+impl SweepSession {
+    /// A session whose pool owns `threads` persistent workers.
+    pub fn new(threads: usize) -> Self {
+        SweepSession {
+            pool: ExecPool::new(threads),
+            machine: Machine::sandy_bridge_i7_2600(),
+            out: CsrMatrix::new(0, 0),
+        }
+    }
+
+    /// The session's pool (for pipeline-style use).
+    pub fn pool(&self) -> &ExecPool {
+        &self.pool
+    }
+
+    /// Measure `C = A · B` under `cfg`, reusing the session's pool,
+    /// workspaces, and output across all repetitions and trials.
+    /// `threads <= 1` times the workspace-backed serial kernel.
+    pub fn measure_spmmm(
+        &mut self,
+        cfg: &BenchConfig,
+        a: &CsrMatrix,
+        b: &CsrMatrix,
+        strategy: Strategy,
+        threads: usize,
+        partition: Partition,
+    ) -> Measurement {
+        let SweepSession { pool, machine, out } = self;
+        measure(cfg, || {
+            if threads > 1 {
+                par_spmmm_into(pool, a, b, threads, strategy, partition, machine, out);
+            } else {
+                pool.with_local(|ws| serial_spmmm_into(ws, a, b, strategy, out));
+            }
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +176,27 @@ mod tests {
         let cfg = BenchConfig::from_env();
         assert!(cfg.trials >= 1);
         assert!(cfg.min_time_s > 0.0);
+    }
+
+    #[test]
+    fn sweep_session_measures_correct_kernels() {
+        use crate::gen::{operand_pair, Workload};
+        use crate::kernels::spmmm;
+        let cfg = BenchConfig { min_time_s: 0.001, trials: 1 };
+        let (a, b) = operand_pair(Workload::RandomFixed5, 120, 5);
+        let reference = spmmm(&a, &b, Strategy::Combined);
+        let mut session = SweepSession::new(2);
+        for threads in [1usize, 2] {
+            let m = session.measure_spmmm(
+                &cfg,
+                &a,
+                &b,
+                Strategy::Combined,
+                threads,
+                Partition::Flops,
+            );
+            assert!(m.best_seconds > 0.0);
+            assert!(session.out.approx_eq(&reference, 0.0), "threads={threads}");
+        }
     }
 }

@@ -1,15 +1,22 @@
-//! Multi-threaded spMMM job pipeline.
+//! Multi-threaded spMMM job pipeline on the persistent execution
+//! engine.
 //!
 //! Jobs are independent (generate → multiply → verify → measure), so the
-//! pool is a plain work queue: one `mpsc` channel feeds worker threads,
-//! results come back over another. This is also the substrate for the
-//! paper's future-work item "shared memory parallelization": the
-//! `threads` knob exposes the first-order scaling (independent multiplies
-//! scale; a single multiply does not — see the ablation bench).
+//! pipeline is a plain work queue drained by the [`ExecPool`]'s
+//! long-lived workers — no per-batch thread spawning, and each worker's
+//! [`Workspace`] carries the dense accumulator and the result matrix
+//! across jobs, so the measured multiply time excludes allocator noise.
+//! This is also the substrate for the paper's future-work item "shared
+//! memory parallelization": the `threads` knob exposes the first-order
+//! scaling (independent multiplies scale; a single multiply is the
+//! parallel kernel's job — see the ablation bench).
+//!
+//! Jobs run *on* pool workers and therefore must not re-enter the pool
+//! (serial kernels only inside `execute`).
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 
+use crate::exec::{serial_spmmm_into, ExecPool, Workspace};
 use crate::gen::{operand_pair, Workload};
 use crate::kernels::flops::spmmm_flops;
 use crate::kernels::{spmmm, Strategy};
@@ -64,19 +71,26 @@ pub struct JobResult {
     pub worker: usize,
 }
 
-fn execute(job: &Job) -> JobResult {
+fn execute(job: &Job, ws: &mut Workspace) -> JobResult {
     let (a, b) = operand_pair(job.workload, job.n, job.seed);
     let flops = spmmm_flops(&a, &b);
+    // The scalar path multiplies into the workspace's reusable result
+    // (taken out for the duration to keep the borrows disjoint).
+    let mut scratch = std::mem::take(&mut ws.csr_scratch);
     let sw = Stopwatch::start();
-    let c: CsrMatrix = match job.kind {
-        JobKind::Scalar(s) => spmmm(&a, &b, s),
+    let c: &CsrMatrix = match job.kind {
+        JobKind::Scalar(s) => {
+            serial_spmmm_into(ws, &a, &b, s, &mut scratch);
+            &scratch
+        }
         JobKind::BsrNative { tile } => {
             let ab = crate::bsr::BsrMatrix::from_csr(&a, tile);
             let bb = crate::bsr::BsrMatrix::from_csr(&b, tile);
             let mut backend = crate::bsr::NativeBackend { tile };
-            crate::bsr::bsr_spmmm(&ab, &bb, &mut backend)
+            scratch = crate::bsr::bsr_spmmm(&ab, &bb, &mut backend)
                 .expect("native backend cannot fail")
-                .to_csr()
+                .to_csr();
+            &scratch
         }
     };
     let seconds = sw.seconds();
@@ -86,14 +100,14 @@ fn execute(job: &Job) -> JobResult {
             JobKind::Scalar(_) => c.approx_eq(&reference, 1e-12),
             // f32 tile path: compare dense within f32 tolerance.
             JobKind::BsrNative { .. } => {
-                let d1 = crate::sparse::DenseMatrix::from_csr(&c);
+                let d1 = crate::sparse::DenseMatrix::from_csr(c);
                 let d2 = crate::sparse::DenseMatrix::from_csr(&reference);
                 let scale = d2.frobenius().max(1.0);
                 d1.max_abs_diff(&d2) / scale < 1e-5
             }
         }
     });
-    JobResult {
+    let result = JobResult {
         id: job.id,
         n: a.rows(),
         seconds,
@@ -101,39 +115,40 @@ fn execute(job: &Job) -> JobResult {
         nnz_c: c.nnz(),
         verified,
         worker: 0,
-    }
+    };
+    ws.csr_scratch = scratch;
+    result
 }
 
-/// Run jobs on a pool of `threads` workers; results are returned in
+/// Drain `jobs` on an existing pool's workers; results are returned in
 /// completion order.
-pub fn run_jobs(jobs: Vec<Job>, threads: usize) -> Vec<JobResult> {
-    let threads = threads.max(1);
-    let queue = Arc::new(Mutex::new(jobs.into_iter().collect::<Vec<_>>()));
-    let (tx, rx) = mpsc::channel::<JobResult>();
-    let mut handles = Vec::new();
-    for w in 0..threads {
-        let queue = Arc::clone(&queue);
-        let tx = tx.clone();
-        handles.push(std::thread::spawn(move || loop {
-            let job = { queue.lock().expect("queue lock").pop() };
-            match job {
-                Some(j) => {
-                    let mut r = execute(&j);
-                    r.worker = w;
-                    if tx.send(r).is_err() {
-                        return;
-                    }
-                }
-                None => return,
+pub fn run_jobs_on(pool: &ExecPool, jobs: Vec<Job>) -> Vec<JobResult> {
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let workers = pool.threads().min(jobs.len());
+    let queue = Mutex::new(jobs);
+    let results = Mutex::new(Vec::new());
+    pool.run(workers, &|w, ws| loop {
+        let job = queue.lock().expect("queue lock").pop();
+        match job {
+            Some(j) => {
+                let mut r = execute(&j, ws);
+                r.worker = w;
+                results.lock().expect("results lock").push(r);
             }
-        }));
-    }
-    drop(tx);
-    let results: Vec<JobResult> = rx.into_iter().collect();
-    for h in handles {
-        h.join().expect("worker panicked");
-    }
-    results
+            None => return,
+        }
+    });
+    results.into_inner().expect("results lock")
+}
+
+/// Run jobs on a dedicated pool of `threads` workers (spawned once per
+/// *batch*, not per job); long-running services should hold their own
+/// [`ExecPool`] and use [`run_jobs_on`].
+pub fn run_jobs(jobs: Vec<Job>, threads: usize) -> Vec<JobResult> {
+    let pool = ExecPool::new(threads.max(1));
+    run_jobs_on(&pool, jobs)
 }
 
 #[cfg(test)]
@@ -190,5 +205,15 @@ mod tests {
     #[test]
     fn empty_job_list() {
         assert!(run_jobs(Vec::new(), 4).is_empty());
+    }
+
+    #[test]
+    fn pool_reuse_across_batches() {
+        let pool = ExecPool::new(2);
+        let first = run_jobs_on(&pool, jobs(4));
+        let second = run_jobs_on(&pool, jobs(4));
+        assert_eq!(first.len(), 4);
+        assert_eq!(second.len(), 4);
+        assert!(second.iter().all(|r| r.verified == Some(true)));
     }
 }

@@ -1,0 +1,79 @@
+//! The persistent execution engine.
+//!
+//! The paper's §VI names shared-memory parallelization as the next step
+//! beyond its single-core analysis; the ROADMAP asks for a system that
+//! serves *repeated* heavy traffic at hardware speed. Both founder on
+//! per-call costs the kernels themselves never see: thread spawns, dense
+//! accumulator allocations, private result fragments, and the full-copy
+//! stitch that merged them. This module removes all four:
+//!
+//! * [`ExecPool`] — long-lived workers, reused across calls, dispatched
+//!   through allocation-free per-worker slots;
+//! * [`Workspace`] — a per-worker arena (dense accumulators per storing
+//!   strategy, model scratch, partition buffers, reusable matrices)
+//!   grown monotonically and never freed between calls;
+//! * [`Partition`] — model-guided flop-balanced slab partitioning for
+//!   the parallel kernel ([`crate::kernels::parallel`]), which now
+//!   sizes then fills a *single* preallocated output in place;
+//! * [`serial_spmmm_into`] — the serial kernel running out of a
+//!   workspace, so single-threaded repeated evaluation is also
+//!   allocation-free in steady state.
+//!
+//! `tests/alloc_steady_state.rs` pins the resulting guarantee: after one
+//! warm-up call, re-evaluating an expression tree through a warm pool
+//! performs zero heap allocations.
+
+mod partition;
+mod pool;
+mod workspace;
+
+pub use partition::{row_seconds, slab_bounds_into, Partition};
+pub use pool::{default_machine, ExecPool};
+pub use workspace::{Workspace, WsAccum};
+
+use crate::kernels::tracer::NullTracer;
+use crate::kernels::{with_strategy_accumulator, Strategy};
+use crate::sparse::{CsrMatrix, SparseShape};
+
+/// Serial `C = A · B` into `out`, running the storing strategy's
+/// accumulator out of `ws` — the workspace-backed analog of
+/// [`crate::kernels::spmmm_into`]. Once `ws` and `out` have warmed to
+/// the working size, repeated calls allocate nothing.
+pub fn serial_spmmm_into(
+    ws: &mut Workspace,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    strategy: Strategy,
+    out: &mut CsrMatrix,
+) {
+    assert_eq!(a.cols(), b.rows(), "inner dimension");
+    out.reset(a.rows(), b.cols());
+    out.reserve(crate::kernels::flops::nnz_estimate(a, b));
+    with_strategy_accumulator!(strategy, A => {
+        let acc = ws.accumulator::<A>(b.cols());
+        crate::kernels::gustavson::rows_into(a, b, acc, out, &mut NullTracer);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{operand_pair, Workload};
+    use crate::kernels::spmmm;
+
+    #[test]
+    fn serial_ws_kernel_matches_all_strategies() {
+        let (a, b) = operand_pair(Workload::RandomFixed5, 120, 3);
+        let mut ws = Workspace::new();
+        let mut out = CsrMatrix::new(0, 0);
+        for strategy in Strategy::ALL {
+            let reference = spmmm(&a, &b, strategy);
+            serial_spmmm_into(&mut ws, &a, &b, strategy, &mut out);
+            assert!(out.approx_eq(&reference, 0.0), "{}", strategy.name());
+        }
+        // Steady state: capacity stops moving after the first round.
+        let cap = out.capacity();
+        serial_spmmm_into(&mut ws, &a, &b, Strategy::Combined, &mut out);
+        assert_eq!(out.capacity(), cap);
+    }
+}

@@ -1,0 +1,229 @@
+//! Model-guided slab partitioning for the parallel spMMM.
+//!
+//! The old kernel split C's rows into slabs of equal *row count*; on
+//! skewed workloads (one hot row, power-law populations) the worker
+//! owning the hottest slab serializes the whole multiply. The exec
+//! engine instead prefix-sums a per-row cost and cuts the prefix into
+//! equal quantiles, so every slab carries (approximately) the same
+//! predicted work. Costs come from the paper's own quantities:
+//! [`Partition::Flops`] uses the §III multiplication count
+//! Σ b̄ₖ over row r of A ([`crate::kernels::flops::row_nnz_estimate`]);
+//! [`Partition::Model`] converts per-row flops *and* bytes to predicted
+//! seconds through the [`crate::model::roofline_seconds`] hook, which
+//! additionally weighs the storing traffic of wide rows.
+
+use crate::kernels::flops;
+use crate::model::{roofline_seconds, Machine};
+use crate::sparse::{CsrMatrix, SparseShape};
+
+/// How the parallel kernel splits C's rows into contiguous slabs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Partition {
+    /// Equal row counts per slab (the pre-engine behavior; the
+    /// `ablation_threads` baseline).
+    Rows,
+    /// Equal prefix-summed multiplication counts per slab — flop
+    /// balancing, the engine default.
+    #[default]
+    Flops,
+    /// Equal prefix-summed *predicted seconds* per slab (roofline model:
+    /// flops and memory traffic per row).
+    Model,
+}
+
+impl Partition {
+    /// All partition strategies (ablation sweeps).
+    pub const ALL: [Partition; 3] = [Partition::Rows, Partition::Flops, Partition::Model];
+
+    /// Display name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Partition::Rows => "row-balanced",
+            Partition::Flops => "flop-balanced",
+            Partition::Model => "model-guided",
+        }
+    }
+}
+
+/// Per-row predicted cost (seconds) of computing row `r` of `C = A·B`
+/// on `machine` — the quantity [`Partition::Model`] prefix-sums. Inner
+/// loop traffic (16 B per A entry + 32 B per multiplication, §IV-A)
+/// plus a storing term bounded by the row population.
+pub fn row_seconds(machine: &Machine, a: &CsrMatrix, b: &CsrMatrix, r: usize) -> f64 {
+    let est = flops::row_nnz_estimate(a, b, r) as f64;
+    let pop = est.min(b.cols() as f64);
+    let bytes = 16.0 * a.row_nnz(r) as f64 + 32.0 * est + 24.0 * pop;
+    roofline_seconds(machine, 2.0 * est, bytes)
+}
+
+/// Compute `slabs` contiguous row ranges of `C = A·B` into `bounds`,
+/// balanced per `partition`; `cost` is a reusable per-row scratch
+/// buffer. Bounds are contiguous, cover `0..a.rows()` exactly, and may
+/// contain empty slabs (a single hot row can consume several quantiles;
+/// `slabs > rows` always does).
+pub fn slab_bounds_into(
+    partition: Partition,
+    machine: &Machine,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    slabs: usize,
+    cost: &mut Vec<f64>,
+    bounds: &mut Vec<(usize, usize)>,
+) {
+    let rows = a.rows();
+    let slabs = slabs.max(1);
+    bounds.clear();
+    let total = match partition {
+        Partition::Rows => 0.0,
+        Partition::Flops => {
+            cost.clear();
+            cost.extend((0..rows).map(|r| flops::row_nnz_estimate(a, b, r) as f64));
+            cost.iter().sum()
+        }
+        Partition::Model => {
+            cost.clear();
+            cost.extend((0..rows).map(|r| row_seconds(machine, a, b, r)));
+            cost.iter().sum()
+        }
+    };
+    if partition == Partition::Rows || total <= 0.0 {
+        // Equal row counts (also the fallback for all-empty operands).
+        bounds.extend((0..slabs).map(|t| (rows * t / slabs, rows * (t + 1) / slabs)));
+        return;
+    }
+    let mut running = 0.0;
+    let mut lo = 0usize;
+    for s in 0..slabs {
+        let target =
+            if s + 1 == slabs { f64::INFINITY } else { total * (s + 1) as f64 / slabs as f64 };
+        let mut hi = lo;
+        while hi < rows && running < target {
+            let with = running + cost[hi];
+            // Closer-boundary rule: defer this row to the next slab when
+            // stopping here lands nearer the quantile than overshooting
+            // past it — this is what hands a hot row a slab of its own.
+            if with - target > target - running {
+                break;
+            }
+            running = with;
+            hi += 1;
+        }
+        bounds.push((lo, hi));
+        lo = hi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{random_fixed_per_row, random_power_law};
+
+    fn check_cover(bounds: &[(usize, usize)], rows: usize) {
+        let mut next = 0usize;
+        for &(lo, hi) in bounds {
+            assert_eq!(lo, next, "contiguous");
+            assert!(hi >= lo);
+            next = hi;
+        }
+        assert_eq!(next, rows, "covers all rows");
+    }
+
+    #[test]
+    fn all_partitions_cover_all_rows() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        let a = random_power_law(97, 97, 40, 1.0, 3);
+        let b = random_fixed_per_row(97, 97, 5, 4);
+        let (mut cost, mut bounds) = (Vec::new(), Vec::new());
+        for part in Partition::ALL {
+            for slabs in [1usize, 2, 3, 7, 97, 200] {
+                slab_bounds_into(part, &machine, &a, &b, slabs, &mut cost, &mut bounds);
+                assert_eq!(bounds.len(), slabs, "{part:?} slabs={slabs}");
+                check_cover(&bounds, 97);
+            }
+        }
+    }
+
+    #[test]
+    fn flop_balancing_beats_row_balancing_on_skew() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        // Deterministic strong skew: 8 hot rows (64 entries) at the
+        // front, 248 light rows (1 entry) — equal-row slabs put every
+        // hot row into the first slab.
+        let mut a = crate::sparse::CsrMatrix::new(256, 256);
+        for r in 0..256usize {
+            if r < 8 {
+                for c in (0..256).step_by(4) {
+                    a.append(c, 1.0);
+                }
+            } else {
+                a.append(r, 1.0);
+            }
+            a.finalize_row();
+        }
+        let b = random_fixed_per_row(256, 256, 5, 10);
+        let (mut cost, mut bounds) = (Vec::new(), Vec::new());
+        let max_slab_flops = |bounds: &[(usize, usize)]| -> f64 {
+            bounds
+                .iter()
+                .map(|&(lo, hi)| {
+                    (lo..hi).map(|r| flops::row_nnz_estimate(&a, &b, r) as f64).sum::<f64>()
+                })
+                .fold(0.0, f64::max)
+        };
+        slab_bounds_into(Partition::Rows, &machine, &a, &b, 8, &mut cost, &mut bounds);
+        let rows_max = max_slab_flops(&bounds);
+        slab_bounds_into(Partition::Flops, &machine, &a, &b, 8, &mut cost, &mut bounds);
+        let flops_max = max_slab_flops(&bounds);
+        assert!(
+            flops_max < rows_max,
+            "flop balancing should shrink the hottest slab: {flops_max} vs {rows_max}"
+        );
+    }
+
+    #[test]
+    fn hot_row_gets_its_own_slab() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        // Row 0 dense, everything else nearly empty.
+        let mut a = crate::sparse::CsrMatrix::new(64, 64);
+        for c in 0..64 {
+            a.append(c, 1.0);
+        }
+        a.finalize_row();
+        for r in 1..64 {
+            a.append(r % 64, 1.0);
+            a.finalize_row();
+        }
+        let b = random_fixed_per_row(64, 64, 5, 2);
+        let (mut cost, mut bounds) = (Vec::new(), Vec::new());
+        slab_bounds_into(Partition::Flops, &machine, &a, &b, 4, &mut cost, &mut bounds);
+        check_cover(&bounds, 64);
+        // Some slab holds exactly the hot row and nothing else.
+        assert!(bounds.contains(&(0, 1)), "hot row isolated: {bounds:?}");
+    }
+
+    #[test]
+    fn empty_operands_fall_back_to_rows() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        let z = crate::sparse::CsrMatrix::from_parts(10, 10, vec![0; 11], vec![], vec![]);
+        let (mut cost, mut bounds) = (Vec::new(), Vec::new());
+        slab_bounds_into(Partition::Flops, &machine, &z, &z, 3, &mut cost, &mut bounds);
+        check_cover(&bounds, 10);
+        assert!(bounds.iter().all(|&(lo, hi)| hi - lo <= 4));
+    }
+
+    #[test]
+    fn model_costs_are_positive_and_monotone_in_work() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        let a = random_power_law(64, 64, 32, 1.0, 5);
+        let b = random_fixed_per_row(64, 64, 5, 6);
+        let costs: Vec<f64> = (0..64).map(|r| row_seconds(&machine, &a, &b, r)).collect();
+        assert!(costs.iter().all(|&c| c >= 0.0));
+        // The row with the largest flop estimate also has the largest
+        // predicted time (bytes grow with the estimate).
+        let hottest = (0..64)
+            .max_by_key(|&r| flops::row_nnz_estimate(&a, &b, r))
+            .unwrap();
+        let max_cost = costs.iter().cloned().fold(0.0, f64::max);
+        assert_eq!(costs[hottest], max_cost);
+    }
+}

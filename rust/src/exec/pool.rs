@@ -1,0 +1,303 @@
+//! The persistent worker pool.
+//!
+//! Workers are spawned **once** and live as long as the pool; each owns
+//! a private [`Workspace`] that is never dropped between parallel
+//! regions. Dispatch is a per-worker slot (mutex + condvar) holding a
+//! borrowed job pointer — no boxing, no channel nodes — so a warm
+//! parallel region performs zero heap allocations end to end.
+//!
+//! Safety model: [`ExecPool::run`] erases the job closure's lifetime to
+//! hand it to the workers, then **blocks until every worker reports
+//! done** before returning — the same discipline `std::thread::scope`
+//! enforces, so the borrow can never outlive the call. A panicking job
+//! is caught on the worker, the worker's workspace is rebuilt (its
+//! invariants may be torn), and the panic is re-raised on the caller.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use super::workspace::Workspace;
+use crate::model::Machine;
+
+/// Lifetime-erased pointer to the shared job closure of one `run` call.
+struct JobPtr(*const (dyn Fn(usize, &mut Workspace) + Sync + 'static));
+
+// SAFETY: the pointee is `Sync` (shared invocation is safe) and `run`
+// keeps the referent alive until every worker has finished with it.
+unsafe impl Send for JobPtr {}
+
+enum SlotState {
+    /// No work assigned.
+    Idle,
+    /// Run the job as worker `index` of the active set.
+    Run(JobPtr, usize),
+    /// Job finished; `true` if it panicked.
+    Done(bool),
+    /// Pool is shutting down.
+    Shutdown,
+}
+
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+/// A persistent shared-memory execution pool: long-lived workers, each
+/// with a reusable [`Workspace`], plus one coordinator-side "local"
+/// workspace for serial paths ([`ExecPool::with_local`]).
+pub struct ExecPool {
+    slots: Vec<Arc<Slot>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes parallel regions: `run` borrows every worker slot.
+    dispatch: Mutex<()>,
+    /// Workspace for coordinator-side (serial) execution.
+    local: Mutex<Workspace>,
+}
+
+impl ExecPool {
+    /// Spawn a pool of `threads` persistent workers (at least one).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let mut slots = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let slot = Arc::new(Slot { state: Mutex::new(SlotState::Idle), cv: Condvar::new() });
+            slots.push(Arc::clone(&slot));
+            let handle = std::thread::Builder::new()
+                .name(format!("blazert-exec-{i}"))
+                .spawn(move || worker_loop(&slot))
+                .expect("spawn exec worker");
+            handles.push(handle);
+        }
+        ExecPool { slots, handles, dispatch: Mutex::new(()), local: Mutex::new(Workspace::new()) }
+    }
+
+    /// Number of persistent workers.
+    pub fn threads(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The process-wide default pool, sized to the available hardware
+    /// parallelism and spawned on first use. Lives for the process —
+    /// the classic `par_spmmm*` entry points run on it, so repeated
+    /// calls never re-spawn threads.
+    pub fn global() -> &'static ExecPool {
+        static POOL: OnceLock<ExecPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+            ExecPool::new(n.clamp(1, 32))
+        })
+    }
+
+    /// Run `job` on the first `active` workers (clamped to the pool
+    /// size), each invocation receiving its worker index and persistent
+    /// workspace, and block until all complete. The closure may borrow
+    /// from the caller's stack. Jobs must not re-enter the same pool
+    /// (no nested `run` / `with_local` from inside a job) — the
+    /// dispatch lock is held for the whole region.
+    pub fn run<'env>(&self, active: usize, job: &(dyn Fn(usize, &mut Workspace) + Sync + 'env)) {
+        let active = active.min(self.slots.len());
+        if active == 0 {
+            return;
+        }
+        // The region guard protects no data; recover it after a caught
+        // worker-panic re-raise (which unwinds while it is held).
+        let _region = self.dispatch.lock().unwrap_or_else(|poisoned| {
+            self.dispatch.clear_poison();
+            poisoned.into_inner()
+        });
+        // SAFETY: only the lifetime is erased; we do not return before
+        // every worker has set `Done`, so the borrow stays valid for
+        // the whole time any worker can dereference it.
+        let job: &(dyn Fn(usize, &mut Workspace) + Sync + 'static) =
+            unsafe { std::mem::transmute(job) };
+        for (w, slot) in self.slots[..active].iter().enumerate() {
+            let mut st = slot.state.lock().expect("slot lock");
+            debug_assert!(matches!(*st, SlotState::Idle));
+            *st = SlotState::Run(JobPtr(job as *const _), w);
+            slot.cv.notify_all();
+        }
+        let mut panicked = false;
+        for slot in &self.slots[..active] {
+            let mut st = slot.state.lock().expect("slot lock");
+            loop {
+                match *st {
+                    SlotState::Done(p) => {
+                        panicked |= p;
+                        *st = SlotState::Idle;
+                        break;
+                    }
+                    _ => st = slot.cv.wait(st).expect("slot wait"),
+                }
+            }
+        }
+        if panicked {
+            panic!("ExecPool worker panicked during a parallel region");
+        }
+    }
+
+    /// Borrow the coordinator-side workspace for a serial computation.
+    /// Do not call re-entrantly (the workspace is behind a plain mutex).
+    pub fn with_local<R>(&self, f: impl FnOnce(&mut Workspace) -> R) -> R {
+        let mut ws = self.local.lock().unwrap_or_else(|poisoned| {
+            // A panic unwound while the workspace was borrowed; its
+            // invariants may be torn — rebuild it and clear the poison
+            // so the pool stays usable after a caught panic.
+            let mut guard = poisoned.into_inner();
+            *guard = Workspace::new();
+            self.local.clear_poison();
+            guard
+        });
+        f(&mut ws)
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        // No region can be in flight here (`run` holds `&self`), so
+        // every slot is Idle and the overwrite cannot race a job.
+        for slot in &self.slots {
+            *slot.state.lock().expect("slot lock") = SlotState::Shutdown;
+            slot.cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(slot: &Slot) {
+    let mut ws = Workspace::new();
+    loop {
+        let job = {
+            let mut st = slot.state.lock().expect("slot lock");
+            loop {
+                match *st {
+                    SlotState::Run(..) | SlotState::Shutdown => break,
+                    _ => st = slot.cv.wait(st).expect("slot wait"),
+                }
+            }
+            match std::mem::replace(&mut *st, SlotState::Idle) {
+                SlotState::Run(job, index) => (job, index),
+                SlotState::Shutdown => return,
+                _ => unreachable!("guarded by the wait loop"),
+            }
+        };
+        let (JobPtr(ptr), index) = job;
+        let panicked = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: the coordinator keeps the closure alive until this
+            // worker publishes `Done` below.
+            let f = unsafe { &*ptr };
+            f(index, &mut ws);
+        }))
+        .is_err();
+        if panicked {
+            // The workspace invariants (all-zero temporaries, stamp
+            // counters) may be torn mid-row; rebuild from scratch.
+            ws = Workspace::new();
+        }
+        let mut st = slot.state.lock().expect("slot lock");
+        *st = SlotState::Done(panicked);
+        slot.cv.notify_all();
+    }
+}
+
+/// The machine description used by entry points that have no
+/// [`crate::expr::EvalContext`] carrying one — built once, so repeated
+/// kernel calls do not re-allocate the description.
+pub fn default_machine() -> &'static Machine {
+    static MACHINE: OnceLock<Machine> = OnceLock::new();
+    MACHINE.get_or_init(Machine::sandy_bridge_i7_2600)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn workers_persist_across_runs() {
+        let pool = ExecPool::new(3);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..5 {
+            pool.run(3, &|_, _| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 15);
+    }
+
+    #[test]
+    fn active_subset_and_indices() {
+        let pool = ExecPool::new(4);
+        let seen = Mutex::new(Vec::new());
+        pool.run(2, &|w, _| {
+            seen.lock().unwrap().push(w);
+        });
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1]);
+        // Requesting more than the pool has is clamped.
+        let n = AtomicUsize::new(0);
+        pool.run(64, &|_, _| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn worker_workspaces_are_persistent() {
+        let pool = ExecPool::new(2);
+        pool.run(2, &|_, ws| {
+            ws.cost.push(1.0);
+        });
+        let lens = Mutex::new(Vec::new());
+        pool.run(2, &|_, ws| {
+            lens.lock().unwrap().push(ws.cost.len());
+        });
+        assert_eq!(lens.into_inner().unwrap(), vec![1, 1], "state survives between regions");
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ExecPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, &|w, _| {
+                if w == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // The pool is still usable afterwards.
+        let n = AtomicUsize::new(0);
+        pool.run(2, &|_, _| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn with_local_reuses_one_workspace() {
+        let pool = ExecPool::new(1);
+        pool.with_local(|ws| ws.bounds.push((0, 1)));
+        let len = pool.with_local(|ws| ws.bounds.len());
+        assert_eq!(len, 1);
+    }
+
+    #[test]
+    fn local_workspace_recovers_from_poisoning() {
+        let pool = ExecPool::new(1);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.with_local(|_| panic!("torn mid-kernel"));
+        }));
+        assert!(result.is_err());
+        // The workspace was rebuilt and the mutex un-poisoned.
+        let len = pool.with_local(|ws| {
+            ws.cost.push(1.0);
+            ws.cost.len()
+        });
+        assert_eq!(len, 1);
+    }
+}

@@ -1,0 +1,144 @@
+//! Per-worker scratch arenas.
+//!
+//! A [`Workspace`] owns every piece of transient state a spMMM
+//! evaluation needs — the dense accumulator of each storing strategy,
+//! the model's row-metadata scratch, the partitioner's cost buffers,
+//! and reusable result matrices. All of it is grown monotonically and
+//! never freed between calls (the Armadillo-style internal-workspace
+//! design of Sanderson & Curtin 2018), so once a workspace has warmed
+//! up at a working size, re-evaluating through it performs **zero heap
+//! allocations** — the property `tests/alloc_steady_state.rs` asserts
+//! with a counting global allocator.
+
+use crate::kernels::flops::RowMeta;
+use crate::kernels::store::{
+    Accumulator, BruteForceBool, BruteForceChar, BruteForceDouble, Combined, MinMax, MinMaxChar,
+    Sort, SortRadix,
+};
+use crate::sparse::CsrMatrix;
+
+/// One worker's persistent scratch arena. Held by every [`super::ExecPool`]
+/// worker thread (plus one "local" instance for the coordinator-side
+/// serial paths) and reused across calls.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    // One lazily-built slot per storing strategy; [`Workspace::accumulator`]
+    // grows the cached instance monotonically via `Accumulator::ensure_size`.
+    bf_double: Option<BruteForceDouble>,
+    bf_bool: Option<BruteForceBool>,
+    bf_char: Option<BruteForceChar>,
+    minmax: Option<MinMax>,
+    minmax_char: Option<MinMaxChar>,
+    sort: Option<Sort>,
+    sort_radix: Option<SortRadix>,
+    combined: Option<Combined>,
+    /// Row-metadata scratch for the model-guided strategy choice
+    /// ([`crate::expr::schedule::product_stats_scratch`]).
+    pub meta: RowMeta,
+    /// Per-row cost buffer for slab partitioning.
+    pub cost: Vec<f64>,
+    /// Slab-bounds buffer of the partitioner.
+    pub bounds: Vec<(usize, usize)>,
+    /// Reusable row-major result matrix (the pipeline multiplies each
+    /// job into this).
+    pub csr_scratch: CsrMatrix,
+}
+
+impl Workspace {
+    /// A fresh, empty workspace (no buffers allocated yet).
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// The cached accumulator of strategy type `A`, grown to cover a
+    /// dense temporary of length `size`. First use allocates; every
+    /// later use at the same (or smaller) size reuses the buffers
+    /// untouched — the all-zero invariant guarantees no state leaks
+    /// between products.
+    pub fn accumulator<A: WsAccum>(&mut self, size: usize) -> &mut A {
+        let slot = A::slot(self);
+        match slot {
+            Some(acc) => acc.ensure_size(size),
+            None => *slot = Some(A::new(size)),
+        }
+        slot.as_mut().expect("slot just filled")
+    }
+}
+
+/// A storing strategy that has a cache slot in the [`Workspace`] — all
+/// eight paper strategies implement it, so any strategy-generic kernel
+/// can run workspace-backed.
+pub trait WsAccum: Accumulator + Sized {
+    /// The workspace slot caching this accumulator type.
+    fn slot(ws: &mut Workspace) -> &mut Option<Self>;
+}
+
+macro_rules! ws_slot {
+    ($ty:ty, $field:ident) => {
+        impl WsAccum for $ty {
+            fn slot(ws: &mut Workspace) -> &mut Option<Self> {
+                &mut ws.$field
+            }
+        }
+    };
+}
+
+ws_slot!(BruteForceDouble, bf_double);
+ws_slot!(BruteForceBool, bf_bool);
+ws_slot!(BruteForceChar, bf_char);
+ws_slot!(MinMax, minmax);
+ws_slot!(MinMaxChar, minmax_char);
+ws_slot!(Sort, sort);
+ws_slot!(SortRadix, sort_radix);
+ws_slot!(Combined, combined);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::tracer::NullTracer;
+    use crate::sparse::{CsrMatrix, SparseShape};
+
+    #[test]
+    fn accumulator_slots_are_cached_and_grow() {
+        let mut ws = Workspace::new();
+        {
+            let acc: &mut Combined = ws.accumulator(16);
+            let mut out = CsrMatrix::new(1, 16);
+            acc.update(3, 1.0, &mut NullTracer);
+            acc.flush(&mut out, &mut NullTracer);
+            out.finalize_row();
+            assert_eq!(out.nnz(), 1);
+        }
+        // Growing reuses the same instance (decision counters persist).
+        let acc: &mut Combined = ws.accumulator(64);
+        assert_eq!(acc.minmax_rows + acc.sort_rows, 1, "same cached instance");
+        // A *different* strategy gets its own slot.
+        let _: &mut Sort = ws.accumulator(64);
+    }
+
+    #[test]
+    fn grown_accumulator_matches_fresh_one() {
+        // Use at width 100, shrink request to 10: results must match a
+        // fresh width-10 accumulator (wider temp is invisible).
+        let mut ws = Workspace::new();
+        let mut out_ws = CsrMatrix::new(2, 100);
+        {
+            let acc: &mut Sort = ws.accumulator(100);
+            acc.update(90, 2.0, &mut NullTracer);
+            acc.flush(&mut out_ws, &mut NullTracer);
+            out_ws.finalize_row();
+        }
+        let acc: &mut Sort = ws.accumulator(10);
+        let mut fresh = Sort::new(10);
+        let mut out_fresh = CsrMatrix::new(1, 10);
+        for &(j, v) in &[(4usize, 1.5f64), (1, -2.0), (4, 0.5)] {
+            acc.update(j, v, &mut NullTracer);
+            fresh.update(j, v, &mut NullTracer);
+        }
+        acc.flush(&mut out_ws, &mut NullTracer);
+        out_ws.finalize_row();
+        fresh.flush(&mut out_fresh, &mut NullTracer);
+        out_fresh.finalize_row();
+        assert_eq!(out_ws.row(1), out_fresh.row(0));
+    }
+}

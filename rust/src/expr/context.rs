@@ -1,16 +1,22 @@
 //! The uniform evaluation context for the expression graph.
 //!
 //! Every expression node evaluates through an [`EvalContext`], which
-//! carries the three assign-time decisions the paper's Smart-ET design
+//! carries the assign-time decisions the paper's Smart-ET design
 //! centralizes in the assignment operator:
 //!
 //! * the **storing strategy** — either an explicit override or, by
 //!   default, the model-guided choice of [`super::schedule`];
-//! * the **worker count** for [`crate::kernels::parallel`];
+//! * the **worker count** and **slab partition** for
+//!   [`crate::kernels::parallel`];
+//! * an **exec handle** ([`ExecPool`]) — when attached, every product
+//!   runs out of persistent workspaces (and, for `threads > 1`, on the
+//!   pool's long-lived workers), so re-evaluating a tree in steady
+//!   state performs zero heap allocations;
 //! * an optional [`MemTracer`] so the cache simulator can replay whole
 //!   expression trees through the identical kernel code paths.
 
 use super::schedule;
+use crate::exec::{serial_spmmm_into, ExecPool, Partition};
 use crate::kernels::tracer::MemTracer;
 use crate::kernels::{
     combined_pre, parallel, spmmm, spmmm_into, spmmm_into_traced, spmmm_traced, Strategy,
@@ -19,29 +25,37 @@ use crate::model::Machine;
 use crate::sparse::CsrMatrix;
 
 /// Context for one expression evaluation. Defaults: model-guided
-/// strategy selection, one thread, no tracing, the paper's Sandy Bridge
-/// machine model for cost estimates.
+/// strategy selection, one thread, flop-balanced partitioning, no pool,
+/// no tracing, the paper's Sandy Bridge machine model for cost
+/// estimates.
 pub struct EvalContext<'t> {
     /// Storing-strategy override; `None` selects per product via the
     /// bandwidth model.
     pub strategy: Option<Strategy>,
     /// Worker threads for product evaluation (`1` = serial kernels).
     pub threads: usize,
-    /// Machine description driving the cost model (strategy choice and
-    /// chain association).
+    /// Slab partitioning for parallel products.
+    pub partition: Partition,
+    /// Machine description driving the cost model (strategy choice,
+    /// chain association, model-guided partitioning).
     pub machine: Machine,
+    /// Persistent execution pool; when set, products reuse its
+    /// workspaces (serial and parallel) instead of allocating per call.
+    pub exec: Option<&'t ExecPool>,
     /// Optional memory tracer; when set, products run the traced serial
     /// kernels so a cache simulator observes the whole tree.
     pub tracer: Option<&'t mut dyn MemTracer>,
 }
 
-impl EvalContext<'static> {
-    /// The default context: model-guided, serial, untraced.
+impl<'t> EvalContext<'t> {
+    /// The default context: model-guided, serial, pool-less, untraced.
     pub fn new() -> Self {
         EvalContext {
             strategy: None,
             threads: 1,
+            partition: Partition::default(),
             machine: Machine::sandy_bridge_i7_2600(),
+            exec: None,
             tracer: None,
         }
     }
@@ -51,15 +65,7 @@ impl EvalContext<'static> {
     pub fn using(strategy: Strategy) -> Self {
         EvalContext { strategy: Some(strategy), ..EvalContext::new() }
     }
-}
 
-impl Default for EvalContext<'static> {
-    fn default() -> Self {
-        EvalContext::new()
-    }
-}
-
-impl<'t> EvalContext<'t> {
     /// Override the storing strategy for every product in the tree.
     pub fn with_strategy(mut self, strategy: Strategy) -> Self {
         self.strategy = Some(strategy);
@@ -72,41 +78,68 @@ impl<'t> EvalContext<'t> {
         self
     }
 
+    /// Set the slab partitioning of parallel products.
+    pub fn with_partition(mut self, partition: Partition) -> Self {
+        self.partition = partition;
+        self
+    }
+
     /// Use a different machine description for the cost model.
     pub fn with_machine(mut self, machine: Machine) -> Self {
         self.machine = machine;
         self
     }
 
+    /// Attach a persistent execution pool: products evaluate out of its
+    /// reusable workspaces (zero steady-state allocation) and parallel
+    /// products run on its long-lived workers.
+    pub fn with_exec(mut self, pool: &'t ExecPool) -> Self {
+        self.exec = Some(pool);
+        self
+    }
+
     /// Attach a memory tracer (e.g. [`crate::simulator::Hierarchy`]);
     /// products then run serially through the traced kernels.
-    pub fn with_tracer<'u>(self, tracer: &'u mut dyn MemTracer) -> EvalContext<'u> {
+    pub fn with_tracer<'u>(self, tracer: &'u mut dyn MemTracer) -> EvalContext<'u>
+    where
+        't: 'u,
+    {
         EvalContext {
             strategy: self.strategy,
             threads: self.threads,
+            partition: self.partition,
             machine: self.machine,
+            exec: self.exec,
             tracer: Some(tracer),
         }
     }
 
     /// The storing strategy for one concrete product: the override if
-    /// set, otherwise the bandwidth model's pick.
+    /// set, otherwise the bandwidth model's pick (through the pool's
+    /// metadata scratch when a pool is attached).
     pub fn strategy_for(&self, a: &CsrMatrix, b: &CsrMatrix) -> Strategy {
         match self.strategy {
             Some(s) => s,
-            None => schedule::choose_strategy(&self.machine, a, b),
+            None => match self.exec {
+                Some(pool) => pool.with_local(|ws| {
+                    schedule::choose_strategy_scratch(&self.machine, a, b, &mut ws.meta)
+                }),
+                None => schedule::choose_strategy(&self.machine, a, b),
+            },
         }
     }
 
     /// Evaluate one scheduled product `A · B` under this context.
     pub fn product(&mut self, a: &CsrMatrix, b: &CsrMatrix) -> CsrMatrix {
+        if self.tracer.is_none() && (self.exec.is_some() || self.threads > 1) {
+            let mut out = CsrMatrix::new(0, 0);
+            self.product_into(a, b, &mut out);
+            return out;
+        }
         let strategy = self.strategy_for(a, b);
         if let Some(tr) = self.tracer.as_mut() {
             let mut dyn_tr: &mut dyn MemTracer = &mut **tr;
             return spmmm_traced(a, b, strategy, &mut dyn_tr);
-        }
-        if self.threads > 1 {
-            return parallel::par_spmmm_with(a, b, self.threads, strategy);
         }
         if strategy == Strategy::Combined {
             // The shipped pre-decided Combined kernel (§Perf change 5).
@@ -120,10 +153,9 @@ impl<'t> EvalContext<'t> {
 
     /// Evaluate one scheduled product into `out`, reusing its buffers.
     ///
-    /// Caveat: the no-allocation guarantee holds for the serial paths
-    /// only. With `threads > 1` the parallel kernel assembles its result
-    /// in fresh buffers (per-worker fragments + stitch), which then
-    /// *replace* `out`'s storage.
+    /// With a pool attached (or `threads > 1`), both the serial and the
+    /// parallel path run out of persistent workspaces and write `out`'s
+    /// buffers in place — zero heap allocation once everything is warm.
     pub fn product_into(&mut self, a: &CsrMatrix, b: &CsrMatrix, out: &mut CsrMatrix) {
         let strategy = self.strategy_for(a, b);
         if let Some(tr) = self.tracer.as_mut() {
@@ -132,10 +164,33 @@ impl<'t> EvalContext<'t> {
             return;
         }
         if self.threads > 1 {
-            *out = parallel::par_spmmm_with(a, b, self.threads, strategy);
+            let pool = match self.exec {
+                Some(p) => p,
+                None => ExecPool::global(),
+            };
+            parallel::par_spmmm_into(
+                pool,
+                a,
+                b,
+                self.threads,
+                strategy,
+                self.partition,
+                &self.machine,
+                out,
+            );
+            return;
+        }
+        if let Some(pool) = self.exec {
+            pool.with_local(|ws| serial_spmmm_into(ws, a, b, strategy, out));
             return;
         }
         spmmm_into(a, b, strategy, out);
+    }
+}
+
+impl<'t> Default for EvalContext<'t> {
+    fn default() -> Self {
+        EvalContext::new()
     }
 }
 
@@ -160,6 +215,12 @@ mod tests {
         let parallel = EvalContext::new().with_threads(3).product(&a, &b);
         assert!(parallel.approx_eq(&reference, 0.0));
 
+        let pool = ExecPool::new(2);
+        let pooled_serial = EvalContext::new().with_exec(&pool).product(&a, &b);
+        assert!(pooled_serial.approx_eq(&reference, 0.0));
+        let pooled_par = EvalContext::new().with_exec(&pool).with_threads(2).product(&a, &b);
+        assert!(pooled_par.approx_eq(&reference, 0.0));
+
         let mut tr = CountingTracer::default();
         let traced = EvalContext::new().with_tracer(&mut tr).product(&a, &b);
         assert!(traced.approx_eq(&reference, 0.0));
@@ -176,5 +237,22 @@ mod tests {
         EvalContext::new().product_into(&a, &b, &mut out);
         assert_eq!(out.capacity(), cap);
         assert!(out.approx_eq(&spmmm(&a, &b, Strategy::Combined), 0.0));
+    }
+
+    #[test]
+    fn pooled_product_into_reuses_out_for_both_widths() {
+        let a = random_fixed_per_row(60, 60, 5, 5);
+        let b = random_fixed_per_row(60, 60, 5, 6);
+        let reference = spmmm(&a, &b, Strategy::Combined);
+        let pool = ExecPool::new(2);
+        for threads in [1usize, 2] {
+            let mut ctx = EvalContext::new().with_exec(&pool).with_threads(threads);
+            let mut out = CsrMatrix::new(0, 0);
+            ctx.product_into(&a, &b, &mut out);
+            let cap = out.capacity();
+            ctx.product_into(&a, &b, &mut out);
+            assert!(out.approx_eq(&reference, 0.0), "threads={threads}");
+            assert_eq!(out.capacity(), cap, "threads={threads}: steady state");
+        }
     }
 }

@@ -59,6 +59,12 @@ impl<L: SparseOperand, R: SparseOperand> SparseOperand for MatMulExpr<L, R> {
     }
 
     fn assign_to(&self, out: &mut CsrMatrix, ctx: &mut EvalContext<'_>) {
+        // Leaf · leaf is the hot case: skip the factor-list allocation
+        // so warm pooled assignment stays allocation-free end to end.
+        if let (Some(a), Some(b)) = (self.a.as_csr_leaf(), self.b.as_csr_leaf()) {
+            ctx.product_into(a, b, out);
+            return;
+        }
         let mut factors = Vec::new();
         self.flatten_product(ctx, &mut factors);
         schedule::eval_chain_into(&factors, ctx, out);

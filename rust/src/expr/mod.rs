@@ -118,6 +118,14 @@ pub trait SparseOperand {
     /// Columns of the operand's value.
     fn op_cols(&self) -> usize;
 
+    /// The concrete CSR matrix behind this operand, if it is a plain
+    /// leaf. Lets `A · B` assignment skip the factor-list allocation
+    /// entirely — the hot path of the zero-steady-state-allocation
+    /// guarantee.
+    fn as_csr_leaf(&self) -> Option<&CsrMatrix> {
+        None
+    }
+
     /// Evaluate this operand to a (canonically CSR) matrix under `ctx`.
     fn eval_ctx<'s>(&'s self, ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix>;
 
@@ -155,6 +163,10 @@ impl SparseOperand for CsrMatrix {
         SparseShape::cols(self)
     }
 
+    fn as_csr_leaf(&self) -> Option<&CsrMatrix> {
+        Some(self)
+    }
+
     fn eval_ctx<'s>(&'s self, _ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix> {
         Cow::Borrowed(self)
     }
@@ -174,6 +186,13 @@ impl SparseOperand for CscMatrix {
     fn eval_ctx<'s>(&'s self, _ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix> {
         Cow::Owned(csc_to_csr(self))
     }
+
+    /// Assignment of a bare CSC leaf reuses `out`'s buffers through the
+    /// in-place conversion (the CSC analog of `CsrMatrix`'s
+    /// `reset`/`copy_from` reuse contract).
+    fn assign_to(&self, out: &mut CsrMatrix, _ctx: &mut EvalContext<'_>) {
+        crate::sparse::convert::csc_to_csr_into(self, out);
+    }
 }
 
 /// References to operands are operands (so `&a`, `&(expr)`, and
@@ -185,6 +204,10 @@ impl<'x, T: SparseOperand + ?Sized> SparseOperand for &'x T {
 
     fn op_cols(&self) -> usize {
         (**self).op_cols()
+    }
+
+    fn as_csr_leaf(&self) -> Option<&CsrMatrix> {
+        (**self).as_csr_leaf()
     }
 
     fn eval_ctx<'s>(&'s self, ctx: &mut EvalContext<'_>) -> Cow<'s, CsrMatrix> {

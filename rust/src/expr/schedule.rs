@@ -72,10 +72,23 @@ impl ProductStats {
 
 /// Compute [`ProductStats`] for `C = A · B`.
 pub fn product_stats(a: &CsrMatrix, b: &CsrMatrix) -> ProductStats {
+    let mut meta = crate::kernels::flops::RowMeta::default();
+    product_stats_scratch(a, b, &mut meta)
+}
+
+/// [`product_stats`] writing B's row metadata into a reusable scratch —
+/// the form the exec engine's warm paths use so repeated model-guided
+/// scheduling allocates nothing.
+pub fn product_stats_scratch(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    meta: &mut crate::kernels::flops::RowMeta,
+) -> ProductStats {
     assert_eq!(a.cols(), b.rows(), "inner dimension");
     // Per-row metadata of B — the same helper the pre-decided Combined
     // kernel uses, so the model's inputs match the kernel's decisions.
-    let (bmin, bmax, bnnz) = crate::kernels::flops::row_metadata(b);
+    crate::kernels::flops::row_metadata_into(b, meta);
+    let (bmin, bmax, bnnz) = (&meta.min, &meta.max, &meta.nnz);
 
     let mut s = ProductStats::default();
     for r in 0..a.rows() {
@@ -164,6 +177,17 @@ pub fn product_stats_csc(a: &CscMatrix, b: &CscMatrix) -> ProductStats {
 /// roofline time of MinMax vs Sort vs Combined, cheapest wins.
 pub fn choose_strategy(machine: &Machine, a: &CsrMatrix, b: &CsrMatrix) -> Strategy {
     choose_from_stats(machine, &product_stats(a, b))
+}
+
+/// [`choose_strategy`] on a reusable metadata scratch (allocation-free
+/// once the scratch has grown to the working size).
+pub fn choose_strategy_scratch(
+    machine: &Machine,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    meta: &mut crate::kernels::flops::RowMeta,
+) -> Strategy {
+    choose_from_stats(machine, &product_stats_scratch(a, b, meta))
 }
 
 /// [`choose_strategy`] for column-major (CSC × CSC) products — no

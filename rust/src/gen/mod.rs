@@ -12,7 +12,7 @@ mod random;
 
 pub use bands::banded;
 pub use fd::{fd_poisson_2d, fd_rhs_ones};
-pub use random::{random_fill_ratio, random_fixed_per_row, random_rectangular};
+pub use random::{random_fill_ratio, random_fixed_per_row, random_power_law, random_rectangular};
 
 use crate::sparse::CsrMatrix;
 use crate::util::rng::Pcg64;
@@ -28,6 +28,9 @@ pub enum Workload {
     RandomFixed5,
     /// Random values with a fixed 0.1% fill ratio per row (Figure 8).
     RandomFill01Pct,
+    /// Power-law row populations (a few hot rows dominate the flops) —
+    /// the skewed workload of the partitioning ablation.
+    PowerLawSkew,
 }
 
 impl Workload {
@@ -44,6 +47,9 @@ impl Workload {
             }
             Workload::RandomFixed5 => random_fixed_per_row(n, n, 5, seed),
             Workload::RandomFill01Pct => random_fill_ratio(n, n, 0.001, seed),
+            // Hottest row ~ n/4 entries, alpha 1: the top rows carry
+            // most of the multiplications.
+            Workload::PowerLawSkew => random_power_law(n, n, (n / 4).max(4), 1.0, seed),
         }
     }
 
@@ -54,6 +60,7 @@ impl Workload {
             Workload::FiveBandFd => "FD",
             Workload::RandomFixed5 => "random",
             Workload::RandomFill01Pct => "random-0.1%",
+            Workload::PowerLawSkew => "power-law",
         }
     }
 }

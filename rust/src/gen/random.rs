@@ -35,6 +35,40 @@ pub fn random_fill_ratio(rows: usize, cols: usize, fill: f64, seed: u64) -> CsrM
     random_fixed_per_row(rows, cols, per_row, seed)
 }
 
+/// `rows × cols` matrix with a power-law row-population profile: the
+/// row of rank k (ranks assigned by a seeded shuffle, so hot rows land
+/// at random positions) holds `max(1, hot / (k+1)^alpha)` nonzeros at
+/// distinct random locations. With `alpha >= 1` a handful of hot rows
+/// carries most of the flops — the skewed workload the flop-balanced
+/// partitioner of [`crate::exec`] is measured against
+/// (`benches/ablation_threads.rs`).
+pub fn random_power_law(
+    rows: usize,
+    cols: usize,
+    hot: usize,
+    alpha: f64,
+    seed: u64,
+) -> CsrMatrix {
+    let mut rng = Pcg64::new(seed);
+    let mut rank: Vec<usize> = (0..rows).collect();
+    rng.shuffle(&mut rank);
+    let per_row: Vec<usize> = (0..rows)
+        .map(|r| {
+            let k = ((hot as f64) / ((rank[r] + 1) as f64).powf(alpha)).round() as usize;
+            k.clamp(1, cols.max(1))
+        })
+        .collect();
+    let mut m = CsrMatrix::new(rows, cols);
+    m.reserve(per_row.iter().sum());
+    for &k in &per_row {
+        for c in rng.distinct_sorted(k.min(cols), cols) {
+            m.append(c, rng.nonzero_value());
+        }
+        m.finalize_row();
+    }
+    m
+}
+
 /// Rectangular random matrix with a Bernoulli(p) pattern — used by the
 /// rigid-body example for contact Jacobians, where row counts vary.
 pub fn random_rectangular(rows: usize, cols: usize, p: f64, seed: u64) -> CsrMatrix {
@@ -98,6 +132,22 @@ mod tests {
         for r in 0..5 {
             assert_eq!(m.row_nnz(r), 1);
         }
+    }
+
+    #[test]
+    fn power_law_is_skewed_and_deterministic() {
+        let m = random_power_law(200, 200, 100, 1.0, 13);
+        assert_eq!(m.rows(), 200);
+        let mut pops: Vec<usize> = (0..200).map(|r| m.row_nnz(r)).collect();
+        assert!(pops.iter().all(|&p| p >= 1));
+        pops.sort_unstable_by(|x, y| y.cmp(x));
+        assert_eq!(pops[0], 100, "hottest row holds `hot` entries");
+        // Strong skew: the top 10 rows out-weigh the bottom 100.
+        let top: usize = pops[..10].iter().sum();
+        let bottom: usize = pops[100..].iter().sum();
+        assert!(top > bottom, "top {top} vs bottom {bottom}");
+        let m2 = random_power_law(200, 200, 100, 1.0, 13);
+        assert!(m.approx_eq(&m2, 0.0), "deterministic in seed");
     }
 
     #[test]

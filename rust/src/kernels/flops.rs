@@ -51,24 +51,47 @@ pub fn row_nnz_estimate(a: &CsrMatrix, b: &CsrMatrix, r: usize) -> usize {
     a.row_indices(r).iter().map(|&k| b.row_nnz(k)).sum()
 }
 
-/// Per-row metadata of `b` — `(min column, max column, nnz)` per row,
-/// with `(usize::MAX, 0, 0)` for empty rows. One O(rows) pass (row
-/// slices are sorted). This is the §IV-B decision input shared by the
-/// pre-decided Combined kernel and the expression scheduler's
-/// strategy-choice pass; keep the rule in one place.
-pub fn row_metadata(b: &CsrMatrix) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
-    let mut bmin = vec![usize::MAX; b.rows()];
-    let mut bmax = vec![0usize; b.rows()];
-    let mut bnnz = vec![0usize; b.rows()];
+/// Reusable buffers for [`row_metadata_into`] — the per-row `(min, max,
+/// nnz)` decision metadata of §IV-B. [`crate::exec::Workspace`] keeps one
+/// of these per worker so repeated model-guided scheduling passes
+/// allocate nothing once the buffers have grown to the working size.
+#[derive(Clone, Debug, Default)]
+pub struct RowMeta {
+    /// Minimum column index per row (`usize::MAX` for empty rows).
+    pub min: Vec<usize>,
+    /// Maximum column index per row (0 for empty rows).
+    pub max: Vec<usize>,
+    /// Nonzero count per row.
+    pub nnz: Vec<usize>,
+}
+
+/// Per-row metadata of `b` written into reusable buffers — `(min column,
+/// max column, nnz)` per row, with `(usize::MAX, 0, 0)` for empty rows.
+/// One O(rows) pass (row slices are sorted). This is the §IV-B decision
+/// input shared by the pre-decided Combined kernel and the expression
+/// scheduler's strategy-choice pass; keep the rule in one place.
+pub fn row_metadata_into(b: &CsrMatrix, meta: &mut RowMeta) {
+    meta.min.clear();
+    meta.min.resize(b.rows(), usize::MAX);
+    meta.max.clear();
+    meta.max.resize(b.rows(), 0);
+    meta.nnz.clear();
+    meta.nnz.resize(b.rows(), 0);
     for k in 0..b.rows() {
         let idx = b.row_indices(k);
         if let (Some(&first), Some(&last)) = (idx.first(), idx.last()) {
-            bmin[k] = first;
-            bmax[k] = last;
-            bnnz[k] = idx.len();
+            meta.min[k] = first;
+            meta.max[k] = last;
+            meta.nnz[k] = idx.len();
         }
     }
-    (bmin, bmax, bnnz)
+}
+
+/// Allocating convenience wrapper around [`row_metadata_into`].
+pub fn row_metadata(b: &CsrMatrix) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+    let mut meta = RowMeta::default();
+    row_metadata_into(b, &mut meta);
+    (meta.min, meta.max, meta.nnz)
 }
 
 /// Column-wise mirror of [`row_metadata`]: `(min row, max row, nnz)`

@@ -54,6 +54,10 @@ macro_rules! with_strategy_accumulator {
     };
 }
 
+// Make the dispatch macro usable from sibling layers (the exec engine
+// dispatches workspace-cached accumulators through it too).
+pub(crate) use with_strategy_accumulator;
+
 pub mod classic;
 pub mod combined_pre;
 pub mod flops;

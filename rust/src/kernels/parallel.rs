@@ -1,20 +1,41 @@
 //! Shared-memory parallel spMMM — the paper's first future-work item
-//! (§VI: "the next step to improve the Blaze library is to include
-//! shared memory parallelization to exploit many- and multicore
-//! architectures").
+//! (§VI) — on the persistent execution engine.
 //!
-//! Row-major Gustavson parallelizes naturally over output rows: each
-//! worker computes a contiguous slab of C's rows with its own dense
-//! accumulator into a private CSR fragment; fragments concatenate in
-//! order (row_ptr offsets shifted). The result is bit-identical to the
-//! serial kernel. The expected "contention and saturation effects" of
-//! the paper show up as sub-linear scaling once the combined working
-//! set saturates the memory interface — the `ablation_threads` bench
-//! measures exactly that.
+//! Row-major Gustavson parallelizes naturally over output rows. The
+//! original kernel gave every worker a fresh thread, a fresh dense
+//! accumulator, and a private CSR fragment, then stitched the fragments
+//! with a full copy (peak 2× memory). This version is a **two-phase
+//! size-then-fill** kernel on a persistent [`ExecPool`]:
+//!
+//! 1. **Size**: each worker re-uses its [`crate::exec::Workspace`]
+//!    accumulator to
+//!    compute the *exact* population of every row in its slabs — by
+//!    "flushing" into a [`CountSink`], so the per-strategy cancellation
+//!    rule (`value != 0`) is applied identically to the real store.
+//!    A prefix sum turns the counts into the final `row_ptr`.
+//! 2. **Fill**: workers recompute their rows and write the entries
+//!    directly into disjoint ranges of the *single* output
+//!    `col_idx`/`values` buffers — no fragments, no concatenation, no
+//!    steady-state allocation (the output's buffers are reused across
+//!    calls via the two-phase resize).
+//!
+//! Slabs are balanced by prefix-summed per-row cost
+//! ([`Partition::Flops`] by default, [`Partition::Model`] through the
+//! roofline hook) instead of raw row count, so skewed workloads no
+//! longer serialize on the hottest slab. The result is bit-identical to
+//! the serial kernel for every strategy, partition, and thread count:
+//! each row is accumulated and flushed in exactly the serial order.
+//!
+//! Phase 1 repeats the accumulation work of phase 2 (the exact count
+//! cannot be known cheaper without storing), trading ~2× flops for the
+//! deleted fragment memory and copy — the right trade for a
+//! memory-bound kernel (§IV-A: 16 B/Flop ≫ machine balance).
 
-use crate::kernels::store::Accumulator;
+use crate::exec::{serial_spmmm_into, slab_bounds_into, ExecPool, Partition, WsAccum};
+use crate::kernels::store::{CountSink, Sink};
 use crate::kernels::tracer::NullTracer;
 use crate::kernels::Strategy;
+use crate::model::Machine;
 use crate::sparse::{CsrMatrix, SparseShape};
 
 /// Parallel `C = A · B` with the Combined storing strategy over
@@ -23,82 +44,169 @@ pub fn par_spmmm(a: &CsrMatrix, b: &CsrMatrix, threads: usize) -> CsrMatrix {
     par_spmmm_with(a, b, threads, Strategy::Combined)
 }
 
-/// Parallel `C = A · B` with an explicit storing strategy — the
-/// expression layer's [`crate::expr::EvalContext`] entry point, so
-/// model-guided strategy selection composes with multi-threading.
+/// Parallel `C = A · B` with an explicit storing strategy on the
+/// process-wide [`ExecPool::global`] pool, flop-balanced partitioning.
 pub fn par_spmmm_with(
     a: &CsrMatrix,
     b: &CsrMatrix,
     threads: usize,
     strategy: Strategy,
 ) -> CsrMatrix {
-    assert_eq!(a.cols(), b.rows(), "inner dimension");
-    let threads = threads.max(1).min(a.rows().max(1));
-    if threads == 1 {
-        return crate::kernels::spmmm(a, b, strategy);
-    }
-    with_strategy_accumulator!(strategy, A => par_run::<A>(a, b, threads))
+    let mut out = CsrMatrix::new(a.rows(), b.cols());
+    par_spmmm_into(
+        ExecPool::global(),
+        a,
+        b,
+        threads,
+        strategy,
+        Partition::default(),
+        crate::exec::default_machine(),
+        &mut out,
+    );
+    out
 }
 
-fn par_run<A: Accumulator>(a: &CsrMatrix, b: &CsrMatrix, threads: usize) -> CsrMatrix {
-    // Slab bounds: contiguous row ranges balanced by *row count* (a
-    // flop-balanced split is a perf-pass refinement measured in the
-    // ablation bench).
-    let rows = a.rows();
-    let bounds: Vec<(usize, usize)> = (0..threads)
-        .map(|t| (rows * t / threads, rows * (t + 1) / threads))
-        .collect();
+/// Parallel `C = A · B` into `out`, reusing `out`'s buffers — the
+/// engine's main entry point. `threads` is the number of row slabs
+/// (clamped to the row count); slabs are distributed round-robin over
+/// the pool's workers, so any `threads` value is served by however many
+/// workers the pool owns. `threads <= 1` runs the serial
+/// workspace-backed kernel on the pool's local workspace.
+#[allow(clippy::too_many_arguments)]
+pub fn par_spmmm_into(
+    pool: &ExecPool,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    threads: usize,
+    strategy: Strategy,
+    partition: Partition,
+    machine: &Machine,
+    out: &mut CsrMatrix,
+) {
+    assert_eq!(a.cols(), b.rows(), "inner dimension");
+    let slabs = threads.max(1).min(a.rows().max(1));
+    // A single slab — or a single worker, where the two-phase kernel
+    // would just do the accumulation twice sequentially — runs the
+    // one-pass serial kernel on the pool's local workspace instead.
+    if slabs == 1 || pool.threads() == 1 {
+        pool.with_local(|ws| serial_spmmm_into(ws, a, b, strategy, out));
+        return;
+    }
+    pool.with_local(|ws| {
+        slab_bounds_into(partition, machine, a, b, slabs, &mut ws.cost, &mut ws.bounds);
+        with_strategy_accumulator!(strategy, A => par_fill::<A>(pool, a, b, &ws.bounds, out));
+    });
+}
 
-    let fragments: Vec<CsrMatrix> = std::thread::scope(|scope| {
-        let handles: Vec<_> = bounds
-            .iter()
-            .map(|&(lo, hi)| {
-                scope.spawn(move || {
-                    let mut acc = A::new(b.cols());
-                    let mut frag = CsrMatrix::new(hi - lo, b.cols());
-                    // Reserve this slab's share of the estimate.
-                    let est: usize =
-                        (lo..hi).map(|r| crate::kernels::flops::row_nnz_estimate(a, b, r)).sum();
-                    frag.reserve(est.min((hi - lo) * b.cols()));
-                    let mut tr = NullTracer;
-                    for r in lo..hi {
-                        let (a_idx, a_val) = a.row(r);
-                        for (&k, &va) in a_idx.iter().zip(a_val) {
-                            let (b_idx, b_val) = b.row(k);
-                            for (&j, &vb) in b_idx.iter().zip(b_val) {
-                                acc.update(j, va * vb, &mut tr);
-                            }
-                        }
-                        acc.flush(&mut frag, &mut tr);
-                        frag.finalize_row();
-                    }
-                    frag
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+/// Raw pointer that may cross threads: every use writes a range derived
+/// from a slab this worker exclusively owns.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// A [`Sink`] writing straight into one slab's range of the shared
+/// output buffers.
+struct SliceSink<'a> {
+    col: &'a mut [usize],
+    val: &'a mut [f64],
+    pos: usize,
+}
+
+impl Sink for SliceSink<'_> {
+    #[inline(always)]
+    fn append_entry(&mut self, idx: usize, value: f64) {
+        self.col[self.pos] = idx;
+        self.val[self.pos] = value;
+        self.pos += 1;
+    }
+    #[inline(always)]
+    fn tail_addr(&self) -> usize {
+        self.val.as_ptr() as usize + 8 * self.pos
+    }
+}
+
+/// Accumulate row `r` of `C = A·B` into `acc` (the shared inner loop of
+/// both phases — identical update order keeps results bit-identical to
+/// the serial kernel).
+#[inline(always)]
+fn accumulate_row<A: WsAccum>(a: &CsrMatrix, b: &CsrMatrix, r: usize, acc: &mut A) {
+    let (a_idx, a_val) = a.row(r);
+    for (&k, &va) in a_idx.iter().zip(a_val) {
+        let (b_idx, b_val) = b.row(k);
+        for (&j, &vb) in b_idx.iter().zip(b_val) {
+            acc.update(j, va * vb, &mut NullTracer);
+        }
+    }
+}
+
+fn par_fill<A: WsAccum>(
+    pool: &ExecPool,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    bounds: &[(usize, usize)],
+    out: &mut CsrMatrix,
+) {
+    let rows = a.rows();
+    let cols = b.cols();
+    let workers = pool.threads().min(bounds.len()).max(1);
+
+    // Phase 1: exact per-row populations into row_ptr[1..], in place.
+    let row_ptr = out.sizing_parts_mut(rows, cols);
+    let counts = SendPtr(row_ptr[1..].as_mut_ptr());
+    pool.run(workers, &|w, ws| {
+        let acc = ws.accumulator::<A>(cols);
+        for (s, &(lo, hi)) in bounds.iter().enumerate() {
+            if s % workers != w {
+                continue;
+            }
+            for r in lo..hi {
+                accumulate_row(a, b, r, acc);
+                let mut sink = CountSink::default();
+                acc.flush_sink(&mut sink, &mut NullTracer);
+                // SAFETY: row r belongs to slab s, owned by exactly this
+                // worker (round-robin assignment over disjoint slabs).
+                unsafe { *counts.0.add(r) = sink.count };
+            }
+        }
     });
 
-    concat_row_slabs(a.rows(), b.cols(), &fragments)
-}
-
-/// Stitch row-slab fragments (in order) into one CSR matrix.
-fn concat_row_slabs(rows: usize, cols: usize, fragments: &[CsrMatrix]) -> CsrMatrix {
-    let total_nnz: usize = fragments.iter().map(|f| f.nnz()).sum();
-    let mut row_ptr = Vec::with_capacity(rows + 1);
-    let mut col_idx = Vec::with_capacity(total_nnz);
-    let mut values = Vec::with_capacity(total_nnz);
-    row_ptr.push(0usize);
-    let mut offset = 0usize;
-    for f in fragments {
-        for r in 0..f.rows() {
-            offset += f.row_nnz(r);
-            row_ptr.push(offset);
-        }
-        col_idx.extend_from_slice(f.col_idx());
-        values.extend_from_slice(f.values());
+    // Prefix sum: row_ptr is final before a single entry is stored.
+    for i in 0..rows {
+        row_ptr[i + 1] += row_ptr[i];
     }
-    CsrMatrix::from_parts(rows, cols, row_ptr, col_idx, values)
+
+    // Phase 2: fill disjoint ranges of the single output in place.
+    let (row_ptr, col_idx, values) = out.payload_parts_mut();
+    let row_ptr: &[usize] = row_ptr;
+    let col_base = SendPtr(col_idx.as_mut_ptr());
+    let val_base = SendPtr(values.as_mut_ptr());
+    pool.run(workers, &|w, ws| {
+        let acc = ws.accumulator::<A>(cols);
+        for (s, &(lo, hi)) in bounds.iter().enumerate() {
+            if s % workers != w {
+                continue;
+            }
+            let base = row_ptr[lo];
+            let len = row_ptr[hi] - base;
+            // SAFETY: [base, base + len) is slab s's range of the output
+            // arrays; slabs are disjoint and each is visited by exactly
+            // one worker, so these mutable views never alias.
+            let mut sink = unsafe {
+                SliceSink {
+                    col: std::slice::from_raw_parts_mut(col_base.0.add(base), len),
+                    val: std::slice::from_raw_parts_mut(val_base.0.add(base), len),
+                    pos: 0,
+                }
+            };
+            for r in lo..hi {
+                accumulate_row(a, b, r, acc);
+                acc.flush_sink(&mut sink, &mut NullTracer);
+                debug_assert_eq!(sink.pos, row_ptr[r + 1] - base, "fill matches sizing");
+            }
+            debug_assert_eq!(sink.pos, len);
+        }
+    });
+    debug_assert!(out.invariants_ok());
 }
 
 #[cfg(test)]
@@ -109,7 +217,7 @@ mod tests {
 
     #[test]
     fn matches_serial_for_all_thread_counts() {
-        for w in [Workload::FiveBandFd, Workload::RandomFixed5] {
+        for w in [Workload::FiveBandFd, Workload::RandomFixed5, Workload::PowerLawSkew] {
             let (a, b) = operand_pair(w, 500, 3);
             let serial = spmmm(&a, &b, Strategy::Combined);
             for threads in [1, 2, 3, 4, 7, 16] {
@@ -123,9 +231,33 @@ mod tests {
     fn strategies_match_serial_in_parallel() {
         let (a, b) = operand_pair(Workload::RandomFixed5, 200, 5);
         let serial = spmmm(&a, &b, Strategy::Combined);
-        for s in [Strategy::MinMax, Strategy::Sort, Strategy::Combined] {
+        for s in Strategy::ALL {
             let par = par_spmmm_with(&a, &b, 3, s);
             assert!(par.approx_eq(&serial, 0.0), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn all_partitions_match_serial() {
+        let pool = ExecPool::new(3);
+        let machine = Machine::sandy_bridge_i7_2600();
+        let (a, b) = operand_pair(Workload::PowerLawSkew, 300, 7);
+        let serial = spmmm(&a, &b, Strategy::Combined);
+        let mut out = CsrMatrix::new(0, 0);
+        for part in Partition::ALL {
+            for threads in [2usize, 5, 16] {
+                par_spmmm_into(
+                    &pool,
+                    &a,
+                    &b,
+                    threads,
+                    Strategy::Combined,
+                    part,
+                    &machine,
+                    &mut out,
+                );
+                assert!(out.approx_eq(&serial, 0.0), "{part:?} threads={threads}");
+            }
         }
     }
 
@@ -146,12 +278,56 @@ mod tests {
     }
 
     #[test]
-    fn concat_preserves_row_structure() {
+    fn parallel_preserves_row_structure() {
         let (a, b) = operand_pair(Workload::RandomFixed5, 101, 9); // odd split
         let serial = spmmm(&a, &b, Strategy::Combined);
         let par = par_spmmm(&a, &b, 3);
         for r in 0..101 {
             assert_eq!(par.row(r), serial.row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn exact_cancellation_sized_correctly() {
+        // A row of A that multiplies two *identical* rows of B with
+        // opposite signs cancels to exact zero everywhere; the serial
+        // kernels drop such entries, so the sizing phase must too.
+        let mut b = CsrMatrix::new(2, 6);
+        for c in [1usize, 3, 4] {
+            b.append(c, 2.5);
+        }
+        b.finalize_row();
+        for c in [1usize, 3, 4] {
+            b.append(c, 2.5);
+        }
+        b.finalize_row();
+        let mut a = CsrMatrix::new(2, 2);
+        a.append(0, 1.0);
+        a.append(1, -1.0);
+        a.finalize_row();
+        a.append(0, 1.0);
+        a.finalize_row();
+        let serial = spmmm(&a, &b, Strategy::Combined);
+        assert_eq!(serial.row_nnz(0), 0, "row 0 fully cancels");
+        for s in Strategy::ALL {
+            let par = par_spmmm_with(&a, &b, 2, s);
+            assert!(par.approx_eq(&serial, 0.0), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn repeated_calls_reuse_output_buffers() {
+        let pool = ExecPool::new(2);
+        let machine = Machine::sandy_bridge_i7_2600();
+        let (a, b) = operand_pair(Workload::RandomFixed5, 150, 11);
+        let mut out = CsrMatrix::new(0, 0);
+        par_spmmm_into(&pool, &a, &b, 2, Strategy::Sort, Partition::Flops, &machine, &mut out);
+        let cap = out.capacity();
+        let reference = out.clone();
+        for _ in 0..3 {
+            par_spmmm_into(&pool, &a, &b, 2, Strategy::Sort, Partition::Flops, &machine, &mut out);
+            assert!(out.approx_eq(&reference, 0.0));
+            assert_eq!(out.capacity(), cap, "steady state allocates nothing");
         }
     }
 }

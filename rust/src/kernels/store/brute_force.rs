@@ -37,6 +37,12 @@ impl Accumulator for BruteForceDouble {
         }
     }
 
+    fn ensure_size(&mut self, size: usize) {
+        if size > self.temp.len() {
+            self.temp.resize(size, 0.0);
+        }
+    }
+
     fn name() -> &'static str {
         "BruteForce-double"
     }
@@ -86,6 +92,13 @@ impl Accumulator for BruteForceBool {
         }
     }
 
+    fn ensure_size(&mut self, size: usize) {
+        if size > self.temp.len() {
+            self.temp.resize(size, 0.0);
+        }
+        self.touched.grow(size);
+    }
+
     fn name() -> &'static str {
         "BruteForce-bool"
     }
@@ -130,6 +143,13 @@ impl Accumulator for BruteForceChar {
                 tr.store(addr_of(&self.touched, j), 1);
                 self.touched[j] = 0;
             }
+        }
+    }
+
+    fn ensure_size(&mut self, size: usize) {
+        if size > self.temp.len() {
+            self.temp.resize(size, 0.0);
+            self.touched.resize(size, 0);
         }
     }
 

@@ -117,6 +117,13 @@ impl Accumulator for Combined {
         self.max = 0;
     }
 
+    fn ensure_size(&mut self, size: usize) {
+        if size > self.temp.len() {
+            self.temp.resize(size, 0.0);
+            self.stamps.resize(size, 0);
+        }
+    }
+
     fn name() -> &'static str {
         "Combined"
     }

@@ -49,6 +49,12 @@ impl Accumulator for MinMax {
         self.max = 0;
     }
 
+    fn ensure_size(&mut self, size: usize) {
+        if size > self.temp.len() {
+            self.temp.resize(size, 0.0);
+        }
+    }
+
     fn name() -> &'static str {
         "MinMax"
     }
@@ -103,6 +109,13 @@ impl Accumulator for MinMaxChar {
         }
         self.min = usize::MAX;
         self.max = 0;
+    }
+
+    fn ensure_size(&mut self, size: usize) {
+        if size > self.temp.len() {
+            self.temp.resize(size, 0.0);
+            self.touched.resize(size, 0);
+        }
     }
 
     fn name() -> &'static str {

@@ -75,6 +75,28 @@ impl Sink for CscMatrix {
     }
 }
 
+/// A sink that only counts appends. Phase 1 of the size-then-fill
+/// parallel kernel "flushes" each row into this to learn the exact row
+/// population — including the `value != 0` cancellation rule every
+/// strategy applies — without storing anything, so the final `row_ptr`
+/// can be fixed before any output entry is written.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CountSink {
+    /// Entries the flush would have appended.
+    pub count: usize,
+}
+
+impl Sink for CountSink {
+    #[inline(always)]
+    fn append_entry(&mut self, _idx: usize, _value: f64) {
+        self.count += 1;
+    }
+    #[inline(always)]
+    fn tail_addr(&self) -> usize {
+        0
+    }
+}
+
 /// A dense-temporary accumulator with a row-flush policy — one per paper
 /// storing strategy.
 pub trait Accumulator {
@@ -101,6 +123,14 @@ pub trait Accumulator {
     fn flush_csc<T: MemTracer>(&mut self, out: &mut CscMatrix, tr: &mut T) {
         self.flush_sink(out, tr);
     }
+
+    /// Grow the dense temporary (and any lookup metadata) to cover at
+    /// least `size` positions, preserving the all-zero invariant; never
+    /// shrinks. [`crate::exec::Workspace`] uses this to reuse one
+    /// accumulator across products of different widths with zero
+    /// steady-state allocation. A wider-than-needed temporary is
+    /// harmless: untouched positions stay zero and are never appended.
+    fn ensure_size(&mut self, size: usize);
 
     /// Human-readable strategy name (reports/benchmarks).
     fn name() -> &'static str;
@@ -136,6 +166,14 @@ impl BitVec {
     #[inline(always)]
     pub fn clear(&mut self, i: usize) {
         self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    /// Grow to cover at least `len` bits (new bits false); never shrinks.
+    pub fn grow(&mut self, len: usize) {
+        let words = len.div_ceil(64);
+        if words > self.words.len() {
+            self.words.resize(words, 0);
+        }
     }
 
     /// Read bit `i`.

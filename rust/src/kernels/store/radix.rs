@@ -123,6 +123,16 @@ impl Accumulator for SortRadix {
         self.stamp += 1;
     }
 
+    fn ensure_size(&mut self, size: usize) {
+        if size > self.temp.len() {
+            self.temp.resize(size, 0.0);
+            self.stamps.resize(size, 0);
+        }
+        // A wider bound may add a radix pass, but the sorted output (and
+        // hence the stored matrix) is identical.
+        self.max_value = self.max_value.max(size.saturating_sub(1));
+    }
+
     fn name() -> &'static str {
         "Sort-radix"
     }

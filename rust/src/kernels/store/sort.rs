@@ -90,6 +90,15 @@ impl Accumulator for Sort {
         self.stamp += 1;
     }
 
+    fn ensure_size(&mut self, size: usize) {
+        if size > self.temp.len() {
+            self.temp.resize(size, 0.0);
+            // New stamps are 0 and the row stamp starts at 1, so grown
+            // positions never look "touched".
+            self.stamps.resize(size, 0);
+        }
+    }
+
     fn name() -> &'static str {
         "Sort"
     }

@@ -25,6 +25,10 @@
 //!   paper's model-guided analysis on simulated Sandy Bridge hardware,
 //! * the Blazemark benchmarking methodology ([`blazemark`]) and workload
 //!   generators ([`gen`]),
+//! * a persistent execution engine ([`exec`]: a long-lived worker pool
+//!   with per-worker workspace arenas and model-guided flop-balanced
+//!   partitioning — repeated evaluation through a warm pool performs
+//!   zero steady-state heap allocations),
 //! * a PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas
 //!   artifacts and a block-sparse spMMM ([`bsr`]) scheduled onto them,
 //! * a job-pipeline coordinator ([`coordinator`]).
@@ -51,6 +55,7 @@ pub mod baselines;
 pub mod blazemark;
 pub mod bsr;
 pub mod coordinator;
+pub mod exec;
 pub mod expr;
 pub mod gen;
 pub mod kernels;

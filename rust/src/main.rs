@@ -44,7 +44,8 @@ fn parse_workload(s: &str) -> Result<Workload, String> {
         "fd" => Ok(Workload::FiveBandFd),
         "random" => Ok(Workload::RandomFixed5),
         "random-fill" => Ok(Workload::RandomFill01Pct),
-        other => Err(format!("unknown workload '{other}' (fd|random|random-fill)")),
+        "power-law" => Ok(Workload::PowerLawSkew),
+        other => Err(format!("unknown workload '{other}' (fd|random|random-fill|power-law)")),
     }
 }
 

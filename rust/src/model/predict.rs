@@ -93,7 +93,10 @@ impl Prediction {
 /// kernels sit far above the machine balance (≥ 16 B/Flop vs ~2.4), so
 /// in practice the estimate is the memory-interface transfer time — the
 /// quantity the expression layer minimizes when it picks a storing
-/// strategy and a product association order before evaluating.
+/// strategy and a product association order before evaluating, and
+/// that the exec engine's model-guided partitioner
+/// ([`crate::exec::row_seconds`]) prefix-sums to cut flop-balanced
+/// slabs for the parallel kernel.
 pub fn roofline_seconds(machine: &Machine, flops: f64, bytes: f64) -> f64 {
     if flops <= 0.0 {
         return if machine.mem_bandwidth > 0.0 { bytes / machine.mem_bandwidth } else { 0.0 };

@@ -12,59 +12,82 @@
 
 use super::{CscMatrix, CsrMatrix, SparseShape};
 
-/// Convert CSR → CSC in O(nnz + rows + cols) with one counting pass and
-/// one scatter pass.
-pub fn csr_to_csc(a: &CsrMatrix) -> CscMatrix {
-    let nnz = a.nnz();
-    // Pass 1: count entries per column.
-    let mut col_ptr = vec![0usize; a.cols() + 1];
+/// Convert CSR → CSC *into* an existing matrix, reusing `out`'s buffers
+/// (zero allocation once capacity is established). Same counting-sort
+/// pass as [`csr_to_csc`], with `col_ptr` doubling as the scatter cursor
+/// array so no scratch allocation is needed.
+pub fn csr_to_csc_into(a: &CsrMatrix, out: &mut CscMatrix) {
+    let rows = a.rows();
+    let cols = a.cols();
+    // Pass 1: count entries per column, prefix-sum to final offsets.
+    let col_ptr = out.sizing_parts_mut(rows, cols);
     for &c in a.col_idx() {
         col_ptr[c + 1] += 1;
     }
-    for i in 0..a.cols() {
+    for i in 0..cols {
         col_ptr[i + 1] += col_ptr[i];
     }
-    // Pass 2: scatter. Row-major traversal guarantees ascending row
-    // indices within each output column.
-    let mut row_idx = vec![0usize; nnz];
-    let mut values = vec![0f64; nnz];
-    let mut next = col_ptr.clone();
-    for r in 0..a.rows() {
+    // Pass 2: scatter, using col_ptr[c] as the running cursor of column
+    // c. Row-major traversal guarantees ascending row indices within
+    // each output column.
+    let (col_ptr, row_idx, values) = out.payload_parts_mut();
+    for r in 0..rows {
         let (idx, val) = a.row(r);
         for (&c, &v) in idx.iter().zip(val) {
-            let p = next[c];
+            let p = col_ptr[c];
             row_idx[p] = r;
             values[p] = v;
-            next[c] += 1;
+            col_ptr[c] += 1;
         }
     }
-    CscMatrix::from_parts(a.rows(), a.cols(), col_ptr, row_idx, values)
+    // col_ptr[c] now holds end(c) == start(c + 1); shift right to
+    // restore the pointer array.
+    col_ptr.copy_within(0..cols, 1);
+    col_ptr[0] = 0;
+}
+
+/// Convert CSR → CSC in O(nnz + rows + cols) with one counting pass and
+/// one scatter pass.
+pub fn csr_to_csc(a: &CsrMatrix) -> CscMatrix {
+    let mut out = CscMatrix::new(0, 0);
+    csr_to_csc_into(a, &mut out);
+    out
+}
+
+/// Convert CSC → CSR *into* an existing matrix, reusing `out`'s buffers —
+/// the mirror image of [`csr_to_csc_into`]. The expression layer's CSC
+/// leaf assignment uses this so repeated evaluations of mixed-order
+/// trees allocate nothing in steady state.
+pub fn csc_to_csr_into(a: &CscMatrix, out: &mut CsrMatrix) {
+    let rows = a.rows();
+    let cols = a.cols();
+    let row_ptr = out.sizing_parts_mut(rows, cols);
+    for &r in a.row_idx() {
+        row_ptr[r + 1] += 1;
+    }
+    for i in 0..rows {
+        row_ptr[i + 1] += row_ptr[i];
+    }
+    let (row_ptr, col_idx, values) = out.payload_parts_mut();
+    for c in 0..cols {
+        let (idx, val) = a.col(c);
+        for (&r, &v) in idx.iter().zip(val) {
+            let p = row_ptr[r];
+            col_idx[p] = c;
+            values[p] = v;
+            row_ptr[r] += 1;
+        }
+    }
+    row_ptr.copy_within(0..rows, 1);
+    row_ptr[0] = 0;
 }
 
 /// Convert CSC → CSR in O(nnz + rows + cols); mirror image of
 /// [`csr_to_csc`].
 pub fn csc_to_csr(a: &CscMatrix) -> CsrMatrix {
-    let nnz = a.nnz();
-    let mut row_ptr = vec![0usize; a.rows() + 1];
-    for &r in a.row_idx() {
-        row_ptr[r + 1] += 1;
-    }
-    for i in 0..a.rows() {
-        row_ptr[i + 1] += row_ptr[i];
-    }
-    let mut col_idx = vec![0usize; nnz];
-    let mut values = vec![0f64; nnz];
-    let mut next = row_ptr.clone();
-    for c in 0..a.cols() {
-        let (idx, val) = a.col(c);
-        for (&r, &v) in idx.iter().zip(val) {
-            let p = next[r];
-            col_idx[p] = c;
-            values[p] = v;
-            next[r] += 1;
-        }
-    }
-    CsrMatrix::from_parts(a.rows(), a.cols(), row_ptr, col_idx, values)
+    let mut out = CsrMatrix::new(0, 0);
+    csc_to_csr_into(a, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -108,6 +131,25 @@ mod tests {
         let dc = DenseMatrix::from_csc(&csc);
         assert_eq!(da.max_abs_diff(&dc), 0.0);
         assert_eq!(a.nnz(), csc.nnz());
+    }
+
+    #[test]
+    fn into_variants_match_and_reuse_buffers() {
+        let mut rng = Pcg64::new(11);
+        let a = random_csr(&mut rng, 30, 25, 4);
+        let mut csc = CscMatrix::new(0, 0);
+        csr_to_csc_into(&a, &mut csc);
+        assert!(csc.approx_eq(&csr_to_csc(&a), 0.0));
+        let cap = csc.capacity();
+        csr_to_csc_into(&a, &mut csc);
+        assert_eq!(csc.capacity(), cap, "second conversion allocates nothing");
+        let mut back = CsrMatrix::new(0, 0);
+        csc_to_csr_into(&csc, &mut back);
+        assert!(back.approx_eq(&a, 0.0));
+        let cap = back.capacity();
+        csc_to_csr_into(&csc, &mut back);
+        assert!(back.approx_eq(&a, 0.0));
+        assert_eq!(back.capacity(), cap);
     }
 
     #[test]

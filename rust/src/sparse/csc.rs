@@ -152,6 +152,54 @@ impl CscMatrix {
         &self.values
     }
 
+    /// Reset to an empty `rows × cols` matrix ready for streaming
+    /// construction, *keeping* the allocated buffers — the column-major
+    /// analog of [`super::CsrMatrix::reset`] (buffer-reuse parity the
+    /// expression layer's CSC conversion paths rely on).
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.col_ptr.clear();
+        self.col_ptr.push(0);
+        self.row_idx.clear();
+        self.values.clear();
+    }
+
+    /// Become a copy of `other`, reusing this matrix's buffers (unlike
+    /// `clone_from`, which reallocates through `clone`).
+    pub fn copy_from(&mut self, other: &CscMatrix) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.col_ptr.clear();
+        self.col_ptr.extend_from_slice(&other.col_ptr);
+        self.row_idx.clear();
+        self.row_idx.extend_from_slice(&other.row_idx);
+        self.values.clear();
+        self.values.extend_from_slice(&other.values);
+    }
+
+    /// Phase 1 of an in-place two-phase write (see
+    /// [`super::CsrMatrix::sizing_parts_mut`]): reshape via [`Self::reset`]
+    /// and return `col_ptr` resized to `cols + 1`, zeroed.
+    pub(crate) fn sizing_parts_mut(&mut self, rows: usize, cols: usize) -> &mut [usize] {
+        self.reset(rows, cols);
+        self.col_ptr.clear();
+        self.col_ptr.resize(cols + 1, 0);
+        &mut self.col_ptr
+    }
+
+    /// Phase 2: `col_ptr` must hold the final prefix-summed offsets;
+    /// resizes `row_idx`/`values` to `col_ptr[cols]` reusing capacity and
+    /// returns all three arrays for in-place writes.
+    pub(crate) fn payload_parts_mut(&mut self) -> (&mut [usize], &mut [usize], &mut [f64]) {
+        let nnz = *self.col_ptr.last().expect("sizing phase must run first");
+        self.row_idx.clear();
+        self.row_idx.resize(nnz, 0);
+        self.values.clear();
+        self.values.resize(nnz, 0.0);
+        (&mut self.col_ptr, &mut self.row_idx, &mut self.values)
+    }
+
     /// Structural + numerical equality within `tol` (for tests).
     pub fn approx_eq(&self, other: &CscMatrix, tol: f64) -> bool {
         self.rows == other.rows
@@ -226,6 +274,23 @@ mod tests {
     #[should_panic(expected = "sorted")]
     fn from_parts_rejects_unsorted_cols() {
         CscMatrix::from_parts(3, 1, vec![0, 2], vec![2, 0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn reset_and_copy_from_reuse_buffers() {
+        let mut m = small();
+        m.reserve(64);
+        let cap = m.capacity();
+        m.reset(4, 5);
+        assert_eq!(m.rows(), 4);
+        assert_eq!(m.cols(), 5);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.finalized_cols(), 0);
+        assert!(m.capacity() >= cap, "reset keeps capacity");
+        let src = small();
+        m.copy_from(&src);
+        assert!(m.approx_eq(&src, 0.0));
+        assert!(m.capacity() >= cap, "copy_from keeps capacity");
     }
 
     #[test]

@@ -183,6 +183,50 @@ impl CsrMatrix {
         self.values.extend_from_slice(&other.values);
     }
 
+    /// Phase 1 of an in-place two-phase (size-then-fill) write, reusing
+    /// allocations: reshape to `rows × cols` and resize `row_ptr` to
+    /// `rows + 1`, zeroed, returning it mutably. The caller writes
+    /// per-row populations into `row_ptr[1..]`, prefix-sums them in
+    /// place, and then calls [`CsrMatrix::payload_parts_mut`]. The
+    /// matrix is *inconsistent* (memory-safe but semantically invalid)
+    /// until both phases complete.
+    pub(crate) fn sizing_parts_mut(&mut self, rows: usize, cols: usize) -> &mut [usize] {
+        self.rows = rows;
+        self.cols = cols;
+        self.row_ptr.clear();
+        self.row_ptr.resize(rows + 1, 0);
+        &mut self.row_ptr
+    }
+
+    /// Phase 2 of the two-phase write: `row_ptr` must already hold the
+    /// final prefix-summed offsets. Resizes `col_idx`/`values` to
+    /// `row_ptr[rows]` (reusing capacity — zero allocation once warm)
+    /// and returns all three arrays for disjoint in-place writes. The
+    /// caller must fill every slot, sorted and unique within each row.
+    pub(crate) fn payload_parts_mut(&mut self) -> (&mut [usize], &mut [usize], &mut [f64]) {
+        let nnz = *self.row_ptr.last().expect("sizing phase must run first");
+        self.col_idx.clear();
+        self.col_idx.resize(nnz, 0);
+        self.values.clear();
+        self.values.resize(nnz, 0.0);
+        (&mut self.row_ptr, &mut self.col_idx, &mut self.values)
+    }
+
+    /// Check the full CSR invariants (the [`Self::from_parts`] rules) —
+    /// the in-place parallel kernel debug-asserts this after its fill
+    /// phase.
+    pub(crate) fn invariants_ok(&self) -> bool {
+        self.row_ptr.len() == self.rows + 1
+            && self.row_ptr[0] == 0
+            && *self.row_ptr.last().unwrap() == self.col_idx.len()
+            && self.col_idx.len() == self.values.len()
+            && self.row_ptr.windows(2).all(|w| w[0] <= w[1])
+            && (0..self.rows).all(|r| {
+                let s = &self.col_idx[self.row_ptr[r]..self.row_ptr[r + 1]];
+                s.windows(2).all(|w| w[0] < w[1]) && s.last().map_or(true, |&c| c < self.cols)
+            })
+    }
+
     /// Release excess capacity (after construction with an over-estimate).
     pub fn shrink_to_fit(&mut self) {
         self.col_idx.shrink_to_fit();

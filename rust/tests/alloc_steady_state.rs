@@ -1,0 +1,82 @@
+//! The engine's headline guarantee, pinned with a counting global
+//! allocator: after one warm-up call, re-evaluating an expression tree
+//! through a warm [`ExecPool`] performs **zero heap allocations** — on
+//! the serial workspace path and on the parallel size-then-fill path
+//! alike. This file holds a single test so no concurrent test can
+//! perturb the allocation counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use blazert::exec::ExecPool;
+use blazert::expr::{EvalContext, SparseOperand};
+use blazert::gen::{operand_pair, Workload};
+use blazert::kernels::{spmmm, Strategy};
+use blazert::sparse::CsrMatrix;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOC_CALLS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn warm_pool_evaluation_allocates_nothing() {
+    let pool = ExecPool::new(2);
+    let (a, b) = operand_pair(Workload::RandomFixed5, 300, 7);
+    let reference = spmmm(&a, &b, Strategy::Combined);
+    let mut out = CsrMatrix::new(0, 0);
+
+    // Serial workspace path (model-guided strategy, scratch-backed).
+    let mut ctx = EvalContext::new().with_exec(&pool);
+    (&a * &b).assign_to(&mut out, &mut ctx);
+    (&a * &b).assign_to(&mut out, &mut ctx);
+    let before = allocs();
+    for _ in 0..5 {
+        (&a * &b).assign_to(&mut out, &mut ctx);
+    }
+    assert_eq!(
+        allocs(),
+        before,
+        "serial hot loop must not allocate after warm-up"
+    );
+    assert!(out.approx_eq(&reference, 0.0));
+
+    // Parallel size-then-fill path on the same pool.
+    let mut ctx = EvalContext::new().with_exec(&pool).with_threads(2);
+    (&a * &b).assign_to(&mut out, &mut ctx);
+    (&a * &b).assign_to(&mut out, &mut ctx);
+    let before = allocs();
+    for _ in 0..5 {
+        (&a * &b).assign_to(&mut out, &mut ctx);
+    }
+    assert_eq!(
+        allocs(),
+        before,
+        "parallel hot loop must not allocate after warm-up"
+    );
+    assert!(out.approx_eq(&reference, 0.0));
+}

@@ -1,0 +1,148 @@
+//! Integration tests for the persistent execution engine: bit-identity
+//! of the size-then-fill parallel kernel against the serial kernel for
+//! every storing strategy, partition, and thread count — including
+//! empty slabs, a single hot row, and threads > rows — plus
+//! pool/workspace reuse across calls and expression-layer integration.
+
+use blazert::exec::{ExecPool, Partition};
+use blazert::expr::{EvalContext, Expression, SparseOperand};
+use blazert::gen::{operand_pair, random_power_law, Workload};
+use blazert::kernels::parallel::{par_spmmm, par_spmmm_into, par_spmmm_with};
+use blazert::kernels::{spmmm, Strategy};
+use blazert::model::Machine;
+use blazert::sparse::{CsrMatrix, SparseShape};
+
+#[test]
+fn bit_identity_all_strategies_partitions_threads() {
+    let pool = ExecPool::new(3);
+    let machine = Machine::sandy_bridge_i7_2600();
+    let mut out = CsrMatrix::new(0, 0);
+    for workload in [Workload::FiveBandFd, Workload::RandomFixed5, Workload::PowerLawSkew] {
+        let (a, b) = operand_pair(workload, 240, 17);
+        for strategy in Strategy::ALL {
+            let serial = spmmm(&a, &b, strategy);
+            for partition in Partition::ALL {
+                for threads in [1usize, 2, 5, 16] {
+                    par_spmmm_into(
+                        &pool, &a, &b, threads, strategy, partition, &machine, &mut out,
+                    );
+                    assert!(
+                        out.approx_eq(&serial, 0.0),
+                        "{workload:?} {} {partition:?} threads={threads}",
+                        strategy.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn single_hot_row_and_empty_slabs() {
+    // Row 0 holds every column; all other rows are empty — the
+    // flop-balanced cut assigns the hot row one slab and leaves later
+    // slabs empty, which must still produce a bit-identical result.
+    let n = 64usize;
+    let mut a = CsrMatrix::new(n, n);
+    for c in 0..n {
+        a.append(c, (c + 1) as f64);
+    }
+    a.finalize_row();
+    for _ in 1..n {
+        a.finalize_row();
+    }
+    let b = random_power_law(n, n, 16, 1.0, 3);
+    for strategy in [Strategy::MinMax, Strategy::Sort, Strategy::Combined] {
+        let serial = spmmm(&a, &b, strategy);
+        for threads in [2usize, 8, n, 4 * n] {
+            let par = par_spmmm_with(&a, &b, threads, strategy);
+            assert!(par.approx_eq(&serial, 0.0), "{} threads={threads}", strategy.name());
+        }
+    }
+}
+
+#[test]
+fn threads_exceed_rows_on_tiny_matrices() {
+    for rows in [1usize, 2, 3] {
+        let (a, b) = operand_pair(Workload::RandomFixed5, rows, 9);
+        let serial = spmmm(&a, &b, Strategy::Combined);
+        let par = par_spmmm(&a, &b, 64);
+        assert!(par.approx_eq(&serial, 0.0), "rows={rows}");
+    }
+}
+
+#[test]
+fn empty_operands_all_partitions() {
+    let pool = ExecPool::new(2);
+    let machine = Machine::sandy_bridge_i7_2600();
+    let z = CsrMatrix::from_parts(7, 7, vec![0; 8], vec![], vec![]);
+    let mut out = CsrMatrix::new(0, 0);
+    for partition in Partition::ALL {
+        par_spmmm_into(&pool, &z, &z, 4, Strategy::Combined, partition, &machine, &mut out);
+        assert_eq!(out.nnz(), 0, "{partition:?}");
+        assert!(out.is_finalized());
+        assert_eq!(out.rows(), 7);
+    }
+}
+
+#[test]
+fn pool_is_reused_across_many_calls_and_sizes() {
+    // One pool, many products of varying shape: workspaces grow
+    // monotonically and results stay exact throughout.
+    let pool = ExecPool::new(2);
+    let machine = Machine::sandy_bridge_i7_2600();
+    let mut out = CsrMatrix::new(0, 0);
+    for n in [30usize, 120, 60, 200, 40] {
+        let (a, b) = operand_pair(Workload::RandomFixed5, n, n as u64);
+        let serial = spmmm(&a, &b, Strategy::Combined);
+        par_spmmm_into(
+            &pool,
+            &a,
+            &b,
+            2,
+            Strategy::Combined,
+            Partition::Flops,
+            &machine,
+            &mut out,
+        );
+        assert!(out.approx_eq(&serial, 0.0), "n={n}");
+    }
+}
+
+#[test]
+fn expression_trees_evaluate_through_the_pool() {
+    let pool = ExecPool::new(2);
+    let (a, b) = operand_pair(Workload::RandomFixed5, 80, 21);
+    let c = b.clone();
+    let reference = {
+        let ab = spmmm(&a, &b, Strategy::Combined);
+        spmmm(&ab, &c, Strategy::Combined)
+    };
+    // Chained product through a pooled parallel context.
+    let mut ctx = EvalContext::new().with_exec(&pool).with_threads(2);
+    let got = (&a * &b * &c).eval_with(&mut ctx);
+    assert!(got.approx_eq(&reference, 0.0));
+    // Pooled assign_to reuses the output and stays exact on repeat.
+    let mut out = CsrMatrix::new(0, 0);
+    let prod = &a * &b;
+    prod.assign_to(&mut out, &mut ctx);
+    let cap = out.capacity();
+    prod.assign_to(&mut out, &mut ctx);
+    assert_eq!(out.capacity(), cap, "warm assignment allocates nothing");
+    assert!(out.approx_eq(&spmmm(&a, &b, Strategy::Combined), 0.0));
+}
+
+#[test]
+fn csc_leaf_assignment_reuses_buffers() {
+    use blazert::sparse::convert::csr_to_csc;
+    let (a, _) = operand_pair(Workload::RandomFixed5, 60, 33);
+    let a_csc = csr_to_csc(&a);
+    let mut out = CsrMatrix::new(0, 0);
+    let mut ctx = EvalContext::new();
+    a_csc.assign_to(&mut out, &mut ctx);
+    assert!(out.approx_eq(&a, 0.0), "CSC leaf converts to the CSR value");
+    let cap = out.capacity();
+    a_csc.assign_to(&mut out, &mut ctx);
+    assert!(out.approx_eq(&a, 0.0));
+    assert_eq!(out.capacity(), cap, "leaf conversion reuses the buffers");
+}
