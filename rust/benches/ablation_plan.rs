@@ -1,0 +1,77 @@
+//! Ablation: the symbolic/numeric plan split on repeated spMMM.
+//!
+//! The repeated-traffic workloads (FD stencils re-multiplied by
+//! iterative schemes, power-law service mixes) keep their sparsity
+//! patterns fixed, so the structure-discovery half of every multiply is
+//! redundant after the first. This bench quantifies the split three
+//! ways per workload and thread count:
+//!
+//! * **unplanned** — the engine's regular kernel (strategy choice +
+//!   structure discovery every evaluation; size-then-fill in parallel);
+//! * **plan cold** — symbolic + numeric together each execution (the
+//!   one-shot price of planning);
+//! * **plan warm** — the plan is built once, every timed execution is a
+//!   pure numeric refill (the steady-state path a plan-cache hit takes).
+//!
+//! Warm/unplanned > 1 is the payoff of caching the symbolic phase;
+//! warm/cold is the share of an evaluation the structure discovery was.
+
+use blazert::blazemark::{BenchConfig, PlanMode, SweepSession};
+use blazert::exec::Partition;
+use blazert::gen::{operand_pair, Workload};
+use blazert::kernels::flops::spmmm_flops;
+use blazert::kernels::Strategy;
+use blazert::util::table::Table;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+    let max_threads = cores.min(8).max(1);
+    eprintln!(
+        "ablation: plan split (cold vs warm) on {cores} cores; min_time={}s",
+        cfg.min_time_s
+    );
+    let mut session = SweepSession::new(max_threads);
+    let mut threads = vec![1usize];
+    if max_threads > 1 {
+        threads.push(max_threads);
+    }
+
+    let mut t = Table::new([
+        "workload/N",
+        "thr",
+        "unplanned MF/s",
+        "cold MF/s",
+        "warm MF/s",
+        "warm/unplanned",
+    ]);
+    for (w, n) in [(Workload::FiveBandFd, 65536usize), (Workload::PowerLawSkew, 32768)] {
+        let (a, b) = operand_pair(w, n, 5);
+        let flops = spmmm_flops(&a, &b);
+        for &thr in &threads {
+            let unplanned = session
+                .measure_spmmm(&cfg, &a, &b, Strategy::Combined, thr, Partition::Flops)
+                .mflops(flops);
+            let cold = session
+                .measure_spmmm_planned(&cfg, &a, &b, thr, Partition::Flops, PlanMode::Cold)
+                .mflops(flops);
+            let warm = session
+                .measure_spmmm_planned(&cfg, &a, &b, thr, Partition::Flops, PlanMode::Warm)
+                .mflops(flops);
+            t.row([
+                format!("{} N={}", w.tag(), n),
+                format!("{thr}"),
+                format!("{unplanned:.0}"),
+                format!("{cold:.0}"),
+                format!("{warm:.0}"),
+                format!("{:.2}x", warm / unplanned.max(1e-9)),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    let s = session.plan_stats();
+    eprintln!(
+        "plan cache: {} hits, {} misses, {} symbolic builds, {} evictions",
+        s.hits, s.misses, s.symbolic_builds, s.evictions
+    );
+}

@@ -29,4 +29,4 @@ pub mod runner;
 
 pub use figures::{figure_by_id, Figure, SeriesKind, FIGURES};
 pub use report::{run_figure, FigureResult};
-pub use runner::{measure, BenchConfig, Measurement, SweepSession};
+pub use runner::{measure, BenchConfig, Measurement, PlanMode, SweepSession};

@@ -5,9 +5,10 @@
 //! spawner.
 
 use crate::exec::{serial_spmmm_into, ExecPool, Partition};
-use crate::kernels::parallel::par_spmmm_into;
-use crate::kernels::Strategy;
+use crate::kernels::parallel::{par_planned_fill, par_spmmm_into};
+use crate::kernels::{planned_fill_serial, Strategy};
 use crate::model::Machine;
+use crate::plan::{PlanCache, PlanKey, PlanStats, SpmmmPlan};
 use crate::sparse::CsrMatrix;
 use crate::util::timer::Stopwatch;
 
@@ -90,15 +91,29 @@ pub fn measure<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Measurement {
     Measurement { best_seconds: best.max(1e-12), reps, trials: cfg.trials.max(1) }
 }
 
+/// What a planned measurement times — the warm/cold split of the
+/// symbolic/numeric refactor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanMode {
+    /// Time symbolic + numeric together: every execution rebuilds the
+    /// plan from scratch (the one-shot cost a cold product pays).
+    Cold,
+    /// Build (or fetch) the plan once through the session's cache, then
+    /// time pure numeric refills — the steady-state repeated-traffic
+    /// path.
+    Warm,
+}
+
 /// Persistent measurement state for a sweep: one [`ExecPool`] (workers
-/// + workspaces spawned once) and one reused output matrix. Every
-/// repetition of every point in the sweep multiplies into the same
-/// buffers, so after the first calibration execution the timed region
-/// is allocation-free.
+/// + workspaces spawned once), one reused output matrix, and one
+/// [`PlanCache`] for warm planned series. Every repetition of every
+/// point in the sweep multiplies into the same buffers, so after the
+/// first calibration execution the timed region is allocation-free.
 pub struct SweepSession {
     pool: ExecPool,
     machine: Machine,
     out: CsrMatrix,
+    plans: PlanCache,
 }
 
 impl SweepSession {
@@ -108,12 +123,18 @@ impl SweepSession {
             pool: ExecPool::new(threads),
             machine: Machine::sandy_bridge_i7_2600(),
             out: CsrMatrix::new(0, 0),
+            plans: PlanCache::default(),
         }
     }
 
     /// The session's pool (for pipeline-style use).
     pub fn pool(&self) -> &ExecPool {
         &self.pool
+    }
+
+    /// Counter snapshot of the session's plan cache.
+    pub fn plan_stats(&self) -> PlanStats {
+        self.plans.stats()
     }
 
     /// Measure `C = A · B` under `cfg`, reusing the session's pool,
@@ -128,7 +149,7 @@ impl SweepSession {
         threads: usize,
         partition: Partition,
     ) -> Measurement {
-        let SweepSession { pool, machine, out } = self;
+        let SweepSession { pool, machine, out, .. } = self;
         measure(cfg, || {
             if threads > 1 {
                 par_spmmm_into(pool, a, b, threads, strategy, partition, machine, out);
@@ -136,6 +157,51 @@ impl SweepSession {
                 pool.with_local(|ws| serial_spmmm_into(ws, a, b, strategy, out));
             }
         })
+    }
+
+    /// Measure the *planned* evaluation of `C = A · B` under `cfg`:
+    /// [`PlanMode::Cold`] times symbolic + numeric per execution,
+    /// [`PlanMode::Warm`] times pure numeric refills of a plan cached in
+    /// the session — the warm/cold pair the plan ablation reports.
+    pub fn measure_spmmm_planned(
+        &mut self,
+        cfg: &BenchConfig,
+        a: &CsrMatrix,
+        b: &CsrMatrix,
+        threads: usize,
+        partition: Partition,
+        mode: PlanMode,
+    ) -> Measurement {
+        let SweepSession { pool, machine, out, plans } = self;
+        match mode {
+            PlanMode::Cold => measure(cfg, || {
+                let key = PlanKey::of(machine, a, b, threads, partition);
+                let plan = pool.with_local(|ws| SpmmmPlan::build(machine, a, b, key, ws));
+                planned_fill(pool, &plan, a, b, threads, out);
+            }),
+            PlanMode::Warm => {
+                let plan = pool
+                    .with_local(|ws| plans.get_or_build(machine, ws, a, b, threads, partition));
+                measure(cfg, || planned_fill(pool, &plan, a, b, threads, out))
+            }
+        }
+    }
+}
+
+/// Route a planned refill to the parallel or the workspace-backed serial
+/// numeric kernel.
+fn planned_fill(
+    pool: &ExecPool,
+    plan: &SpmmmPlan,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    threads: usize,
+    out: &mut CsrMatrix,
+) {
+    if threads > 1 {
+        par_planned_fill(pool, plan, a, b, out);
+    } else {
+        pool.with_local(|ws| planned_fill_serial(plan, a, b, &mut ws.plan_temp, out));
     }
 }
 
@@ -176,6 +242,36 @@ mod tests {
         let cfg = BenchConfig::from_env();
         assert!(cfg.trials >= 1);
         assert!(cfg.min_time_s > 0.0);
+    }
+
+    #[test]
+    fn planned_sweep_modes_measure_the_same_product() {
+        use crate::gen::{operand_pair, Workload};
+        use crate::kernels::spmmm;
+        let cfg = BenchConfig { min_time_s: 0.001, trials: 1 };
+        let (a, b) = operand_pair(Workload::FiveBandFd, 150, 9);
+        let reference = spmmm(&a, &b, Strategy::Combined);
+        let mut session = SweepSession::new(2);
+        for threads in [1usize, 2] {
+            for mode in [PlanMode::Cold, PlanMode::Warm] {
+                let m = session.measure_spmmm_planned(
+                    &cfg,
+                    &a,
+                    &b,
+                    threads,
+                    Partition::Flops,
+                    mode,
+                );
+                assert!(m.best_seconds > 0.0);
+                assert!(
+                    session.out.approx_eq(&reference, 0.0),
+                    "threads={threads} mode={mode:?}"
+                );
+            }
+        }
+        // The warm series planned through the cache; cold never touched it.
+        let s = session.plan_stats();
+        assert_eq!(s.symbolic_builds, 2, "one cached plan per thread shape");
     }
 
     #[test]

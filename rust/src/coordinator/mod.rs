@@ -10,4 +10,4 @@
 
 pub mod pipeline;
 
-pub use pipeline::{run_jobs, run_jobs_on, Job, JobKind, JobResult};
+pub use pipeline::{run_jobs, run_jobs_on, run_jobs_planned_on, Job, JobKind, JobResult};

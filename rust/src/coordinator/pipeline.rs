@@ -16,10 +16,11 @@
 
 use std::sync::Mutex;
 
-use crate::exec::{serial_spmmm_into, ExecPool, Workspace};
+use crate::exec::{default_machine, serial_spmmm_into, ExecPool, Partition, Workspace};
 use crate::gen::{operand_pair, Workload};
 use crate::kernels::flops::spmmm_flops;
-use crate::kernels::{spmmm, Strategy};
+use crate::kernels::{planned_fill_serial, spmmm, Strategy};
+use crate::plan::PlanCache;
 use crate::sparse::{CsrMatrix, SparseShape};
 use crate::util::timer::Stopwatch;
 
@@ -71,7 +72,7 @@ pub struct JobResult {
     pub worker: usize,
 }
 
-fn execute(job: &Job, ws: &mut Workspace) -> JobResult {
+fn execute(job: &Job, ws: &mut Workspace, plans: Option<&PlanCache>) -> JobResult {
     let (a, b) = operand_pair(job.workload, job.n, job.seed);
     let flops = spmmm_flops(&a, &b);
     // The scalar path multiplies into the workspace's reusable result
@@ -80,7 +81,27 @@ fn execute(job: &Job, ws: &mut Workspace) -> JobResult {
     let sw = Stopwatch::start();
     let c: &CsrMatrix = match job.kind {
         JobKind::Scalar(s) => {
-            serial_spmmm_into(ws, &a, &b, s, &mut scratch);
+            match plans {
+                // Planned path: the batch repeats its patterns, so plan
+                // unconditionally — the first batch pays the symbolic
+                // phase per pattern (once per worker in the worst
+                // concurrent-first-sight race), every later batch is a
+                // pure numeric refill off the shared cache. Jobs run
+                // *on* pool workers, so the serial fill is the right
+                // shape.
+                Some(cache) => {
+                    let plan = cache.get_or_build(
+                        default_machine(),
+                        ws,
+                        &a,
+                        &b,
+                        1,
+                        Partition::Flops,
+                    );
+                    planned_fill_serial(&plan, &a, &b, &mut ws.plan_temp, &mut scratch);
+                }
+                None => serial_spmmm_into(ws, &a, &b, s, &mut scratch),
+            }
             &scratch
         }
         JobKind::BsrNative { tile } => {
@@ -123,6 +144,18 @@ fn execute(job: &Job, ws: &mut Workspace) -> JobResult {
 /// Drain `jobs` on an existing pool's workers; results are returned in
 /// completion order.
 pub fn run_jobs_on(pool: &ExecPool, jobs: Vec<Job>) -> Vec<JobResult> {
+    drain_on(pool, jobs, None)
+}
+
+/// [`run_jobs_on`] with a shared plan cache: scalar jobs evaluate
+/// through cached [`crate::plan::SpmmmPlan`]s, so draining the same job
+/// mix across batches pays each pattern's symbolic phase exactly once —
+/// the warm-traffic shape the ROADMAP targets.
+pub fn run_jobs_planned_on(pool: &ExecPool, jobs: Vec<Job>, plans: &PlanCache) -> Vec<JobResult> {
+    drain_on(pool, jobs, Some(plans))
+}
+
+fn drain_on(pool: &ExecPool, jobs: Vec<Job>, plans: Option<&PlanCache>) -> Vec<JobResult> {
     if jobs.is_empty() {
         return Vec::new();
     }
@@ -133,7 +166,7 @@ pub fn run_jobs_on(pool: &ExecPool, jobs: Vec<Job>) -> Vec<JobResult> {
         let job = queue.lock().expect("queue lock").pop();
         match job {
             Some(j) => {
-                let mut r = execute(&j, ws);
+                let mut r = execute(&j, ws, plans);
                 r.worker = w;
                 results.lock().expect("results lock").push(r);
             }
@@ -205,6 +238,39 @@ mod tests {
     #[test]
     fn empty_job_list() {
         assert!(run_jobs(Vec::new(), 4).is_empty());
+    }
+
+    #[test]
+    fn planned_pipeline_reuses_plans_across_batches() {
+        let pool = ExecPool::new(2);
+        let plans = PlanCache::default();
+        let scalar_jobs = || -> Vec<Job> {
+            (0..6)
+                .map(|i| Job {
+                    id: i,
+                    workload: if i % 2 == 0 {
+                        Workload::FiveBandFd
+                    } else {
+                        Workload::RandomFixed5
+                    },
+                    n: 90 + 10 * i,
+                    kind: JobKind::Scalar(Strategy::Combined),
+                    seed: i as u64,
+                    verify: true,
+                })
+                .collect()
+        };
+        let first = run_jobs_planned_on(&pool, scalar_jobs(), &plans);
+        assert_eq!(first.len(), 6);
+        assert!(first.iter().all(|r| r.verified == Some(true)));
+        let builds = plans.stats().symbolic_builds;
+        assert!(builds >= 6, "every distinct pattern planned once");
+        // Same job mix again: every pattern hits the cache, zero
+        // symbolic work on the whole second batch.
+        let second = run_jobs_planned_on(&pool, scalar_jobs(), &plans);
+        assert!(second.iter().all(|r| r.verified == Some(true)));
+        assert_eq!(plans.stats().symbolic_builds, builds, "batch 2 is symbolic-free");
+        assert!(plans.stats().hits >= 6);
     }
 
     #[test]

@@ -42,6 +42,18 @@ pub struct Workspace {
     /// Reusable row-major result matrix (the pipeline multiplies each
     /// job into this).
     pub csr_scratch: CsrMatrix,
+    /// Dense temporary of the planned numeric phase — a plain `+=`
+    /// accumulator with no strategy bookkeeping (the frozen pattern
+    /// replaces the storing strategy). All-zero between rows.
+    pub plan_temp: Vec<f64>,
+    /// Generation-stamped visit marks of the symbolic phase (a column is
+    /// "touched this row" iff its mark equals [`Workspace::plan_mark_gen`]).
+    pub plan_mark: Vec<u64>,
+    /// Current generation of `plan_mark` (bumped per symbolic row, so the
+    /// marks never need re-zeroing).
+    pub plan_mark_gen: u64,
+    /// Touched-column collector of the symbolic phase.
+    pub plan_touched: Vec<usize>,
 }
 
 impl Workspace {

@@ -16,13 +16,16 @@
 //!   expression trees through the identical kernel code paths.
 
 use super::schedule;
-use crate::exec::{serial_spmmm_into, ExecPool, Partition};
+use crate::exec::{serial_spmmm_into, ExecPool, Partition, Workspace};
 use crate::kernels::tracer::MemTracer;
 use crate::kernels::{
-    combined_pre, parallel, spmmm, spmmm_into, spmmm_into_traced, spmmm_traced, Strategy,
+    combined_pre, parallel, planned_fill_serial, spmmm, spmmm_into, spmmm_into_traced,
+    spmmm_traced, Strategy,
 };
 use crate::model::Machine;
+use crate::plan::{PlanCache, PlanKey, Probe, SpmmmPlan};
 use crate::sparse::CsrMatrix;
+use std::sync::Arc;
 
 /// Context for one expression evaluation. Defaults: model-guided
 /// strategy selection, one thread, flop-balanced partitioning, no pool,
@@ -42,6 +45,13 @@ pub struct EvalContext<'t> {
     /// Persistent execution pool; when set, products reuse its
     /// workspaces (serial and parallel) instead of allocating per call.
     pub exec: Option<&'t ExecPool>,
+    /// Pattern-keyed plan cache; when set, repeated products are
+    /// evaluated through cached [`SpmmmPlan`]s — the symbolic phase runs
+    /// at most once per operand pattern (and only when the
+    /// [`crate::model::plan_breakeven_evals`] hook says it amortizes;
+    /// the first sight of a pattern always runs unplanned, so one-shot
+    /// products are never penalized).
+    pub plan: Option<&'t PlanCache>,
     /// Optional memory tracer; when set, products run the traced serial
     /// kernels so a cache simulator observes the whole tree.
     pub tracer: Option<&'t mut dyn MemTracer>,
@@ -56,6 +66,7 @@ impl<'t> EvalContext<'t> {
             partition: Partition::default(),
             machine: Machine::sandy_bridge_i7_2600(),
             exec: None,
+            plan: None,
             tracer: None,
         }
     }
@@ -98,6 +109,14 @@ impl<'t> EvalContext<'t> {
         self
     }
 
+    /// Attach a plan cache: repeated products (same operand patterns,
+    /// same evaluation shape) skip the symbolic phase entirely after
+    /// their plan is built — warm assignment is a pure numeric refill.
+    pub fn with_plan_cache(mut self, cache: &'t PlanCache) -> Self {
+        self.plan = Some(cache);
+        self
+    }
+
     /// Attach a memory tracer (e.g. [`crate::simulator::Hierarchy`]);
     /// products then run serially through the traced kernels.
     pub fn with_tracer<'u>(self, tracer: &'u mut dyn MemTracer) -> EvalContext<'u>
@@ -110,6 +129,7 @@ impl<'t> EvalContext<'t> {
             partition: self.partition,
             machine: self.machine,
             exec: self.exec,
+            plan: self.plan,
             tracer: Some(tracer),
         }
     }
@@ -131,7 +151,9 @@ impl<'t> EvalContext<'t> {
 
     /// Evaluate one scheduled product `A · B` under this context.
     pub fn product(&mut self, a: &CsrMatrix, b: &CsrMatrix) -> CsrMatrix {
-        if self.tracer.is_none() && (self.exec.is_some() || self.threads > 1) {
+        if self.tracer.is_none()
+            && (self.exec.is_some() || self.plan.is_some() || self.threads > 1)
+        {
             let mut out = CsrMatrix::new(0, 0);
             self.product_into(a, b, &mut out);
             return out;
@@ -156,7 +178,19 @@ impl<'t> EvalContext<'t> {
     /// With a pool attached (or `threads > 1`), both the serial and the
     /// parallel path run out of persistent workspaces and write `out`'s
     /// buffers in place — zero heap allocation once everything is warm.
+    /// With a plan cache attached, repeated products refill a cached
+    /// [`SpmmmPlan`] instead (no symbolic work, no strategy pass). An
+    /// explicit strategy override bypasses the cache: whoever pins a
+    /// storing strategy (ablations, traces) must get that exact kernel,
+    /// not the planned refill that supersedes it.
     pub fn product_into(&mut self, a: &CsrMatrix, b: &CsrMatrix, out: &mut CsrMatrix) {
+        if self.tracer.is_none()
+            && self.strategy.is_none()
+            && self.plan.is_some()
+            && self.try_planned(a, b, out)
+        {
+            return;
+        }
         let strategy = self.strategy_for(a, b);
         if let Some(tr) = self.tracer.as_mut() {
             let mut dyn_tr: &mut dyn MemTracer = &mut **tr;
@@ -185,6 +219,73 @@ impl<'t> EvalContext<'t> {
             return;
         }
         spmmm_into(a, b, strategy, out);
+    }
+
+    /// Consult the plan cache for `A · B`. Returns `true` when the
+    /// product was evaluated through a plan (cache hit, or a repeated
+    /// key the amortization hook approved — in which case the symbolic
+    /// phase runs once here); `false` sends the caller down the
+    /// unplanned path (first sight of the pattern, or planning declined).
+    fn try_planned(&mut self, a: &CsrMatrix, b: &CsrMatrix, out: &mut CsrMatrix) -> bool {
+        let cache = self.plan.expect("caller checked self.plan");
+        let key = PlanKey::of(&self.machine, a, b, self.threads, self.partition);
+        match cache.probe(&key) {
+            Probe::Hit(plan) => {
+                self.planned_fill(&plan, a, b, out);
+                true
+            }
+            Probe::Candidate => {
+                let parallel = self.threads > 1;
+                let pays = match self.exec {
+                    Some(pool) => pool.with_local(|ws| {
+                        let s = schedule::product_stats_scratch(a, b, &mut ws.meta);
+                        schedule::planning_pays_off(&self.machine, &s, parallel)
+                    }),
+                    None => {
+                        let s = schedule::product_stats(a, b);
+                        schedule::planning_pays_off(&self.machine, &s, parallel)
+                    }
+                };
+                if !pays {
+                    cache.decline(key);
+                    return false;
+                }
+                let plan = match self.exec {
+                    Some(pool) => {
+                        pool.with_local(|ws| SpmmmPlan::build(&self.machine, a, b, key, ws))
+                    }
+                    None => SpmmmPlan::build(&self.machine, a, b, key, &mut Workspace::new()),
+                };
+                let plan = cache.insert_planned(key, Arc::new(plan));
+                self.planned_fill(&plan, a, b, out);
+                true
+            }
+            Probe::Declined | Probe::Miss => false,
+        }
+    }
+
+    /// Numeric refill of one planned product (serial or parallel,
+    /// workspace-backed when a pool is attached).
+    fn planned_fill(&self, plan: &SpmmmPlan, a: &CsrMatrix, b: &CsrMatrix, out: &mut CsrMatrix) {
+        if self.threads > 1 {
+            let pool = match self.exec {
+                Some(p) => p,
+                None => ExecPool::global(),
+            };
+            parallel::par_planned_fill(pool, plan, a, b, out);
+        } else if let Some(pool) = self.exec {
+            pool.with_local(|ws| planned_fill_serial(plan, a, b, &mut ws.plan_temp, out));
+        } else {
+            // Pool-less serial path: a thread-local dense scratch keeps
+            // warm refills allocation-free here too.
+            thread_local! {
+                static PLAN_TEMP: std::cell::RefCell<Vec<f64>> =
+                    const { std::cell::RefCell::new(Vec::new()) };
+            }
+            PLAN_TEMP.with(|temp| {
+                planned_fill_serial(plan, a, b, &mut temp.borrow_mut(), out)
+            });
+        }
     }
 }
 
@@ -225,6 +326,58 @@ mod tests {
         let traced = EvalContext::new().with_tracer(&mut tr).product(&a, &b);
         assert!(traced.approx_eq(&reference, 0.0));
         assert_eq!(tr.flops, crate::kernels::flops::spmmm_flops(&a, &b));
+    }
+
+    #[test]
+    fn plan_cache_lifecycle_through_the_context() {
+        use crate::gen::fd_poisson_2d;
+        let a = fd_poisson_2d(12);
+        let reference = spmmm(&a, &a, Strategy::Combined);
+        let cache = PlanCache::default();
+        let pool = ExecPool::new(2);
+        let mut ctx = EvalContext::new().with_exec(&pool).with_plan_cache(&cache);
+        let mut out = CsrMatrix::new(0, 0);
+        // First sight: unplanned, key recorded.
+        ctx.product_into(&a, &a, &mut out);
+        assert!(out.approx_eq(&reference, 0.0));
+        let s = cache.stats();
+        assert_eq!((s.misses, s.symbolic_builds, s.hits), (1, 0, 0));
+        // Second sight: the hook approves, the symbolic phase runs once.
+        ctx.product_into(&a, &a, &mut out);
+        assert!(out.approx_eq(&reference, 0.0));
+        assert_eq!(cache.stats().symbolic_builds, 1);
+        // Warm: pure numeric refills, no further symbolic work.
+        for _ in 0..3 {
+            ctx.product_into(&a, &a, &mut out);
+            assert!(out.approx_eq(&reference, 0.0));
+        }
+        let s = cache.stats();
+        assert_eq!((s.symbolic_builds, s.hits), (1, 3));
+        // A parallel context uses a different key (its own slabs) and
+        // still matches bit-exactly.
+        let mut par = EvalContext::new().with_exec(&pool).with_threads(2).with_plan_cache(&cache);
+        par.product_into(&a, &a, &mut out);
+        par.product_into(&a, &a, &mut out);
+        par.product_into(&a, &a, &mut out);
+        assert!(out.approx_eq(&reference, 0.0));
+        assert_eq!(cache.stats().symbolic_builds, 2, "parallel shape planned separately");
+    }
+
+    #[test]
+    fn empty_products_are_declined_not_planned() {
+        let z = CsrMatrix::from_parts(5, 5, vec![0; 6], vec![], vec![]);
+        let cache = PlanCache::default();
+        let mut ctx = EvalContext::new().with_plan_cache(&cache);
+        let mut out = CsrMatrix::new(0, 0);
+        for _ in 0..3 {
+            ctx.product_into(&z, &z, &mut out);
+            assert_eq!(out.nnz(), 0);
+            assert!(out.is_finalized());
+        }
+        let s = cache.stats();
+        assert_eq!(s.symbolic_builds, 0, "hook declines the empty product");
+        assert_eq!(s.declined, 1);
+        assert_eq!(s.hits, 0);
     }
 
     #[test]

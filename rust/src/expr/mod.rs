@@ -74,7 +74,8 @@ pub use context::EvalContext;
 pub use matmul::{MatMulCscCsrExpr, MatMulCscExpr, MatMulExpr, MatMulMixedExpr, MatVecExpr};
 pub use ops::{MatAddExpr, MatSubExpr, ScaleExpr, TransposeExpr, TransposeExt};
 pub use schedule::{
-    chain_plan, choose_strategy, choose_strategy_csc, ChainPlan, FactorMeta, ProductStats,
+    chain_plan, choose_strategy, choose_strategy_csc, planning_pays_off, ChainPlan, FactorMeta,
+    ProductStats,
 };
 
 use crate::sparse::convert::csc_to_csr;

@@ -218,6 +218,52 @@ pub fn choose_from_stats(machine: &Machine, s: &ProductStats) -> Strategy {
     best
 }
 
+/// How many warm evaluations a plan may take to pay for its symbolic
+/// phase before the cache declines to build it. The plan cache only
+/// consults this after a key has *repeated*, so the policy is "the
+/// product demonstrably repeats and the model predicts amortization
+/// within this horizon".
+pub const PLAN_BREAKEVEN_LIMIT: f64 = 16.0;
+
+/// Amortization decision for the spMMM plan cache: should this product
+/// get a symbolic plan?
+///
+/// Feeds the [`crate::model::plan_breakeven_evals`] hook with analytic
+/// traffic totals from the same [`ProductStats`] pass that picks the
+/// storing strategy: the best unplanned evaluation (inner-loop traffic,
+/// per-update strategy bookkeeping, cheapest storing strategy — with the
+/// accumulation doubled on the parallel path, where the unplanned kernel
+/// sizes then fills), the planned numeric refill (one plain accumulation
+/// plus the pattern gather), and the one-time symbolic phase (mark
+/// traffic per multiplication plus the pattern write-out).
+pub fn planning_pays_off(machine: &Machine, s: &ProductStats, parallel: bool) -> bool {
+    if s.mults == 0 {
+        return false;
+    }
+    let compute = s.compute_bytes as f64;
+    let store_best =
+        s.minmax_store_bytes.min(s.sort_store_bytes).min(s.combined_store_bytes) as f64;
+    // Per-update strategy bookkeeping (min/max tracking, touch stamps)
+    // that the plain planned accumulation loop does not pay.
+    let bookkeeping = 8.0 * s.mults as f64;
+    let accumulation = if parallel { 2.0 * compute } else { compute };
+    let unplanned = accumulation + bookkeeping + store_best;
+    // Planned refill: one accumulation plus the pattern gather (8 B
+    // index read + 16 B append per structural entry).
+    let planned = compute + 24.0 * s.nnz_estimate as f64;
+    // Symbolic phase: mark traffic per multiplication plus sorting and
+    // writing out the pattern.
+    let symbolic = 16.0 * s.mults as f64 + 40.0 * s.nnz_estimate as f64;
+    let breakeven = crate::model::plan_breakeven_evals(
+        machine,
+        s.flops() as f64,
+        unplanned,
+        planned,
+        symbolic,
+    );
+    breakeven <= PLAN_BREAKEVEN_LIMIT
+}
+
 /// Scheduling metadata of one chain factor (or estimated intermediate).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FactorMeta {
@@ -414,6 +460,29 @@ mod tests {
         let machine = Machine::sandy_bridge_i7_2600();
         let z = CsrMatrix::from_parts(4, 4, vec![0; 5], vec![], vec![]);
         assert_eq!(choose_strategy(&machine, &z, &z), Strategy::Combined);
+    }
+
+    #[test]
+    fn planning_pays_off_hook_decisions() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        // FD stencil squared: tight regions make MinMax the unplanned
+        // store, which still scans region slack the plan's gather skips
+        // — planning pays even serially.
+        let fd = fd_poisson_2d(16);
+        let s = product_stats(&fd, &fd);
+        assert!(planning_pays_off(&machine, &s, false), "FD serial should plan");
+        assert!(planning_pays_off(&machine, &s, true), "FD parallel should plan");
+        // Random wide rows (Sort territory): the refill saves the
+        // per-update bookkeeping and, in parallel, the doubled sizing
+        // accumulation — planning pays on both paths once repeated.
+        let a = random_fixed_per_row(128, 128, 5, 21);
+        let b = random_fixed_per_row(128, 128, 5, 22);
+        let s = product_stats(&a, &b);
+        assert!(planning_pays_off(&machine, &s, false));
+        assert!(planning_pays_off(&machine, &s, true));
+        // Empty products never plan.
+        let z = CsrMatrix::from_parts(4, 4, vec![0; 5], vec![], vec![]);
+        assert!(!planning_pays_off(&machine, &product_stats(&z, &z), false));
     }
 
     #[test]

@@ -69,7 +69,7 @@ pub mod store;
 pub mod tracer;
 
 pub use spmmm::{
-    spmmm, spmmm_csc, spmmm_csc_traced, spmmm_csr_csc, spmmm_into, spmmm_into_traced,
-    spmmm_traced, spmmm_with, Strategy,
+    planned_fill_serial, spmmm, spmmm_csc, spmmm_csc_traced, spmmm_csr_csc, spmmm_into,
+    spmmm_into_traced, spmmm_traced, spmmm_with, Strategy,
 };
 pub use tracer::{MemTracer, NullTracer};

@@ -36,6 +36,7 @@ use crate::kernels::store::{CountSink, Sink};
 use crate::kernels::tracer::NullTracer;
 use crate::kernels::Strategy;
 use crate::model::Machine;
+use crate::plan::{SlabStore, SpmmmPlan};
 use crate::sparse::{CsrMatrix, SparseShape};
 
 /// Parallel `C = A · B` with the Combined storing strategy over
@@ -209,6 +210,123 @@ fn par_fill<A: WsAccum>(
     debug_assert!(out.invariants_ok());
 }
 
+/// Numeric phase of a planned product on the pool: refill `C = A · B`
+/// into `out` through the frozen structure of `plan`.
+///
+/// Unlike the unplanned kernel above, there is **no sizing pass**: the
+/// plan's pattern bounds every row, so workers accumulate each row once
+/// (half the flops of size-then-fill) and stage its surviving entries at
+/// the row's pattern offset — disjoint ranges, no synchronization. A
+/// cheap serial in-place per-row compaction then slides rows left over
+/// whatever exact cancellation dropped (a no-op move for the common
+/// cancellation-free refill) and finalizes `row_ptr`, keeping the result
+/// bit-identical to the serial kernels. Zero heap allocations once
+/// `out` and the worker temporaries are warm.
+pub fn par_planned_fill(
+    pool: &ExecPool,
+    plan: &SpmmmPlan,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    out: &mut CsrMatrix,
+) {
+    assert!(plan.matches(a, b), "plan does not describe these operands");
+    let rows = a.rows();
+    let cols = b.cols();
+    if plan.slabs().len() == 1 || pool.threads() == 1 {
+        pool.with_local(|ws| {
+            crate::kernels::spmmm::planned_fill_serial(plan, a, b, &mut ws.plan_temp, out)
+        });
+        return;
+    }
+    let workers = pool.threads().min(plan.slabs().len()).max(1);
+
+    // Stage at pattern offsets; per-row populations into row_ptr[1..].
+    let row_ptr = out.sizing_parts_mut(rows, cols);
+    row_ptr[rows] = plan.pattern_nnz();
+    let (row_ptr, col_idx, values) = out.payload_parts_mut();
+    let counts = SendPtr(row_ptr[1..].as_mut_ptr());
+    let col_base = SendPtr(col_idx.as_mut_ptr());
+    let val_base = SendPtr(values.as_mut_ptr());
+    pool.run(workers, &|w, ws| {
+        let temp = &mut ws.plan_temp;
+        if temp.len() < cols {
+            temp.resize(cols, 0.0);
+        }
+        for (s, &(lo, hi)) in plan.slabs().iter().enumerate() {
+            if s % workers != w {
+                continue;
+            }
+            let store = plan.slab_store(s);
+            for r in lo..hi {
+                let (a_idx, a_val) = a.row(r);
+                for (&k, &va) in a_idx.iter().zip(a_val) {
+                    let (b_idx, b_val) = b.row(k);
+                    for (&j, &vb) in b_idx.iter().zip(b_val) {
+                        temp[j] += va * vb;
+                    }
+                }
+                let pat = plan.pattern_row(r);
+                let base = plan.pattern_start(r);
+                let mut n = 0usize;
+                match store {
+                    SlabStore::Gather => {
+                        for &j in pat {
+                            let v = temp[j];
+                            temp[j] = 0.0;
+                            if v != 0.0 {
+                                // SAFETY: [base, base + pat.len()) is row
+                                // r's staging range; rows are disjoint and
+                                // each is written by exactly one worker.
+                                unsafe {
+                                    *col_base.0.add(base + n) = j;
+                                    *val_base.0.add(base + n) = v;
+                                }
+                                n += 1;
+                            }
+                        }
+                    }
+                    SlabStore::RegionScan => {
+                        if let (Some(&first), Some(&last)) = (pat.first(), pat.last()) {
+                            for j in first..=last {
+                                let v = temp[j];
+                                if v != 0.0 {
+                                    temp[j] = 0.0;
+                                    // SAFETY: as above — every nonzero
+                                    // position lies inside row r's pattern.
+                                    unsafe {
+                                        *col_base.0.add(base + n) = j;
+                                        *val_base.0.add(base + n) = v;
+                                    }
+                                    n += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+                // SAFETY: row r's count slot, owned by this worker.
+                unsafe { *counts.0.add(r) = n };
+            }
+        }
+    });
+
+    // In-place per-row compaction: slide each staged row left to its
+    // final offset (src >= dst always, because counts never exceed the
+    // pattern sizes the staging used) and prefix-sum row_ptr as we go.
+    let mut write = 0usize;
+    for r in 0..rows {
+        let cnt = row_ptr[r + 1];
+        let src = plan.pattern_start(r);
+        if src != write && cnt > 0 {
+            col_idx.copy_within(src..src + cnt, write);
+            values.copy_within(src..src + cnt, write);
+        }
+        write += cnt;
+        row_ptr[r + 1] = write;
+    }
+    out.truncate_payload(write);
+    debug_assert!(out.invariants_ok());
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -313,6 +431,61 @@ mod tests {
             let par = par_spmmm_with(&a, &b, 2, s);
             assert!(par.approx_eq(&serial, 0.0), "{}", s.name());
         }
+    }
+
+    #[test]
+    fn planned_parallel_fill_matches_serial() {
+        use crate::exec::Workspace;
+        use crate::plan::{PlanKey, SpmmmPlan};
+        let pool = ExecPool::new(3);
+        let machine = Machine::sandy_bridge_i7_2600();
+        let mut ws = Workspace::new();
+        let mut out = CsrMatrix::new(0, 0);
+        for w in [Workload::FiveBandFd, Workload::RandomFixed5, Workload::PowerLawSkew] {
+            let (a, b) = operand_pair(w, 300, 13);
+            let serial = spmmm(&a, &b, Strategy::Combined);
+            for threads in [2usize, 5, 16] {
+                let key = PlanKey::of(&machine, &a, &b, threads, Partition::Flops);
+                let plan = SpmmmPlan::build(&machine, &a, &b, key, &mut ws);
+                par_planned_fill(&pool, &plan, &a, &b, &mut out);
+                assert!(out.approx_eq(&serial, 0.0), "{w:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn planned_fill_compacts_exact_cancellation() {
+        use crate::exec::Workspace;
+        use crate::plan::{PlanKey, SpmmmPlan};
+        // Row 0 of C cancels entirely (see exact_cancellation_sized_
+        // correctly); the plan's pattern still holds those positions, so
+        // the compaction must slide row 1 over the dropped slack.
+        let mut b = CsrMatrix::new(2, 6);
+        for c in [1usize, 3, 4] {
+            b.append(c, 2.5);
+        }
+        b.finalize_row();
+        for c in [1usize, 3, 4] {
+            b.append(c, 2.5);
+        }
+        b.finalize_row();
+        let mut a = CsrMatrix::new(2, 2);
+        a.append(0, 1.0);
+        a.append(1, -1.0);
+        a.finalize_row();
+        a.append(0, 1.0);
+        a.finalize_row();
+        let serial = spmmm(&a, &b, Strategy::Combined);
+        assert_eq!(serial.row_nnz(0), 0, "row 0 fully cancels");
+        let pool = ExecPool::new(2);
+        let machine = Machine::sandy_bridge_i7_2600();
+        let key = PlanKey::of(&machine, &a, &b, 2, Partition::Rows);
+        let plan = SpmmmPlan::build(&machine, &a, &b, key, &mut Workspace::new());
+        assert_eq!(plan.pattern_nnz(), 6, "pattern keeps the cancelled positions");
+        let mut out = CsrMatrix::new(0, 0);
+        par_planned_fill(&pool, &plan, &a, &b, &mut out);
+        assert!(out.approx_eq(&serial, 0.0));
+        assert_eq!(out.nnz(), 3, "compaction dropped the cancelled slack");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use super::gustavson;
 use super::store::{Accumulator, Combined};
 use super::tracer::{MemTracer, NullTracer};
+use crate::plan::{SlabStore, SpmmmPlan};
 use crate::sparse::convert::csc_to_csr;
 use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
 
@@ -161,6 +162,76 @@ pub fn spmmm_into(a: &CsrMatrix, b: &CsrMatrix, strategy: Strategy, out: &mut Cs
     spmmm_into_traced(a, b, strategy, out, &mut NullTracer)
 }
 
+/// Numeric phase of a planned product, serial: refill `C = A · B` into
+/// `out` through the frozen structure of `plan` ([`SpmmmPlan`]).
+///
+/// Each row is accumulated with a plain `temp[j] += v` loop — same
+/// update order as every storing strategy, so the sums are bit-identical
+/// — and then harvested straight off the plan's pattern (per the slab's
+/// store mode), appending only `value != 0.0` entries exactly like the
+/// strategies' flush rule. Exactly-cancelled entries are therefore
+/// dropped here too, and the streamed appends *are* the per-row
+/// compaction: `out` ends tight, never holding the structural slack.
+///
+/// `temp` is the caller's dense scratch (the per-worker
+/// [`crate::exec::Workspace::plan_temp`] on warm paths); it is grown to
+/// the output width on first use and must be all-zero on entry — the
+/// invariant this function re-establishes before returning. Once `temp`
+/// and `out` are warm, a refill performs zero heap allocations and zero
+/// symbolic work.
+pub fn planned_fill_serial(
+    plan: &SpmmmPlan,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    temp: &mut Vec<f64>,
+    out: &mut CsrMatrix,
+) {
+    assert!(plan.matches(a, b), "plan does not describe these operands");
+    let cols = b.cols();
+    if temp.len() < cols {
+        temp.resize(cols, 0.0);
+    }
+    out.reset(a.rows(), cols);
+    out.reserve(plan.pattern_nnz());
+    for (s, &(lo, hi)) in plan.slabs().iter().enumerate() {
+        let store = plan.slab_store(s);
+        for r in lo..hi {
+            let (a_idx, a_val) = a.row(r);
+            for (&k, &va) in a_idx.iter().zip(a_val) {
+                let (b_idx, b_val) = b.row(k);
+                for (&j, &vb) in b_idx.iter().zip(b_val) {
+                    temp[j] += va * vb;
+                }
+            }
+            let pat = plan.pattern_row(r);
+            match store {
+                SlabStore::Gather => {
+                    for &j in pat {
+                        let v = temp[j];
+                        temp[j] = 0.0;
+                        if v != 0.0 {
+                            out.append(j, v);
+                        }
+                    }
+                }
+                SlabStore::RegionScan => {
+                    if let (Some(&first), Some(&last)) = (pat.first(), pat.last()) {
+                        for j in first..=last {
+                            let v = temp[j];
+                            if v != 0.0 {
+                                temp[j] = 0.0;
+                                out.append(j, v);
+                            }
+                        }
+                    }
+                }
+            }
+            out.finalize_row();
+        }
+    }
+    debug_assert!(out.is_finalized());
+}
+
 /// Context-style entry point: explicit strategy *and* worker count.
 /// `threads > 1` dispatches to the shared-memory parallel kernel
 /// (bit-identical results); `threads <= 1` is the serial kernel.
@@ -298,6 +369,28 @@ mod tests {
         }
         assert_eq!(Strategy::parse("minmax"), Some(Strategy::MinMax));
         assert_eq!(Strategy::parse("nope"), None);
+    }
+
+    #[test]
+    fn planned_serial_refill_matches_and_reuses_buffers() {
+        use crate::exec::{Partition, Workspace};
+        use crate::model::Machine;
+        use crate::plan::{PlanKey, SpmmmPlan};
+        let a = random_fixed_per_row(50, 50, 5, 31);
+        let b = random_fixed_per_row(50, 50, 5, 32);
+        let reference = spmmm(&a, &b, Strategy::Combined);
+        let machine = Machine::sandy_bridge_i7_2600();
+        let key = PlanKey::of(&machine, &a, &b, 1, Partition::Flops);
+        let plan = SpmmmPlan::build(&machine, &a, &b, key, &mut Workspace::new());
+        let mut temp = Vec::new();
+        let mut out = CsrMatrix::new(0, 0);
+        planned_fill_serial(&plan, &a, &b, &mut temp, &mut out);
+        assert!(out.approx_eq(&reference, 0.0));
+        let cap = out.capacity();
+        planned_fill_serial(&plan, &a, &b, &mut temp, &mut out);
+        assert!(out.approx_eq(&reference, 0.0));
+        assert_eq!(out.capacity(), cap, "warm refill allocates nothing");
+        assert!(temp.iter().all(|&v| v == 0.0), "all-zero invariant restored");
     }
 
     #[test]

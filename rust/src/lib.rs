@@ -29,6 +29,11 @@
 //!   with per-worker workspace arenas and model-guided flop-balanced
 //!   partitioning — repeated evaluation through a warm pool performs
 //!   zero steady-state heap allocations),
+//! * a symbolic/numeric phase split for repeated products ([`plan`]: a
+//!   reusable `SpmmmPlan` freezing the structural output pattern and
+//!   the model-guided per-slab decisions, cached in a bounded LRU keyed
+//!   by operand-pattern fingerprints — warm re-evaluation skips the
+//!   whole structure discovery),
 //! * a PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas
 //!   artifacts and a block-sparse spMMM ([`bsr`]) scheduled onto them,
 //! * a job-pipeline coordinator ([`coordinator`]).
@@ -60,6 +65,7 @@ pub mod expr;
 pub mod gen;
 pub mod kernels;
 pub mod model;
+pub mod plan;
 pub mod runtime;
 pub mod simulator;
 pub mod sparse;

@@ -24,5 +24,5 @@ pub mod predict;
 pub mod roofline;
 
 pub use machine::{CacheLevel, Machine};
-pub use predict::{predict, roofline_seconds, Prediction};
+pub use predict::{plan_breakeven_evals, predict, roofline_seconds, Prediction};
 pub use roofline::lightspeed;

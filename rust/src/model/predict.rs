@@ -105,6 +105,36 @@ pub fn roofline_seconds(machine: &Machine, flops: f64, bytes: f64) -> f64 {
     flops / ceiling
 }
 
+/// Amortization hook for the spMMM plan cache: the predicted number of
+/// warm evaluations after which the one-time symbolic phase has paid for
+/// itself.
+///
+/// All four inputs are analytic per-evaluation quantities (the expression
+/// layer derives them from [`crate::expr::schedule::ProductStats`]):
+/// `flops` and the memory traffic of the best *unplanned* evaluation, of
+/// the *planned numeric refill*, and of the one-time *symbolic* phase.
+/// Each is converted to light-speed seconds through
+/// [`roofline_seconds`]; the break-even count is
+/// `symbolic / (unplanned - planned)` — infinite when the refill is not
+/// predicted to win at all, in which case the caller should never plan.
+pub fn plan_breakeven_evals(
+    machine: &Machine,
+    flops: f64,
+    unplanned_bytes: f64,
+    planned_bytes: f64,
+    symbolic_bytes: f64,
+) -> f64 {
+    let unplanned = roofline_seconds(machine, flops, unplanned_bytes);
+    let planned = roofline_seconds(machine, flops, planned_bytes);
+    let symbolic = roofline_seconds(machine, 0.0, symbolic_bytes);
+    let gain = unplanned - planned;
+    if gain <= 0.0 {
+        f64::INFINITY
+    } else {
+        symbolic / gain
+    }
+}
+
 /// Build the prediction for a traced run on `machine`.
 ///
 /// Path traffic: L1 sees every load/store the kernel issues
@@ -212,6 +242,22 @@ mod tests {
         // Monotone in bytes; zero-flop edge is pure transfer.
         assert!(roofline_seconds(&m, 1e6, 64e6) >= roofline_seconds(&m, 1e6, 32e6));
         assert_eq!(roofline_seconds(&m, 0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn plan_breakeven_limits() {
+        let m = Machine::sandy_bridge_i7_2600();
+        // The refill moves half the bytes of the unplanned kernel and the
+        // symbolic phase costs as much as the saving: break-even after
+        // exactly one evaluation (memory-bound regime).
+        let be = plan_breakeven_evals(&m, 2.0e6, 64.0e6, 32.0e6, 32.0e6);
+        assert!((be - 1.0).abs() < 1e-9, "be = {be}");
+        // Twice the symbolic cost, same gain: two evaluations.
+        let be2 = plan_breakeven_evals(&m, 2.0e6, 64.0e6, 32.0e6, 64.0e6);
+        assert!((be2 - 2.0).abs() < 1e-9);
+        // No predicted gain -> never plan.
+        assert!(plan_breakeven_evals(&m, 2.0e6, 32.0e6, 32.0e6, 1.0).is_infinite());
+        assert!(plan_breakeven_evals(&m, 2.0e6, 16.0e6, 32.0e6, 1.0).is_infinite());
     }
 
     #[test]

@@ -1,0 +1,393 @@
+//! The bounded, pattern-keyed plan cache.
+//!
+//! Keys are the operands' [`PatternFingerprint`]s plus the evaluation
+//! shape (thread count and partition strategy) plus the cost model's
+//! [`super::fingerprint::machine_fingerprint`] — everything a frozen
+//! [`SpmmmPlan`] depends on. Entries move through three states:
+//!
+//! 1. **Seen** — the key has been probed but never planned. The first
+//!    probe of any key lands here and the caller runs the unplanned
+//!    kernel, so a one-shot product never pays the symbolic phase.
+//! 2. **Planned** — the caller decided (through the
+//!    [`crate::model::predict::plan_breakeven_evals`] amortization hook)
+//!    that planning pays, built the plan, and inserted it. Every later
+//!    probe is a hit: an `Arc` clone out of the cache, zero symbolic
+//!    work, zero heap allocation.
+//! 3. **Declined** — the hook said planning never amortizes for this
+//!    product; the decision itself is cached so the stats pass is not
+//!    repeated either.
+//!
+//! The cache is a bounded LRU (recency-stamped vector scan — capacities
+//! are tens of entries, so a scan beats pointer-chasing) behind one
+//! mutex, shared freely across pool workers and sessions. Counters
+//! ([`PlanStats`]) expose hits, misses, declines, evictions, and —
+//! load-bearing for the steady-state tests — the number of symbolic
+//! builds, which must stay flat while a warm key is re-evaluated.
+
+use std::sync::{Arc, Mutex, PoisonError};
+
+use super::fingerprint::PatternFingerprint;
+use super::spmmm_plan::SpmmmPlan;
+use crate::exec::{Partition, Workspace};
+use crate::model::Machine;
+use crate::sparse::CsrMatrix;
+
+/// Everything a cached plan depends on: operand structures, the
+/// evaluation shape, and the cost model the plan's decisions (slab
+/// cuts, store modes) were frozen under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Left operand's structural fingerprint.
+    pub a: PatternFingerprint,
+    /// Right operand's structural fingerprint.
+    pub b: PatternFingerprint,
+    /// Worker count the slabs were cut for.
+    pub threads: usize,
+    /// Partition strategy the slabs were cut under.
+    pub partition: Partition,
+    /// [`super::fingerprint::machine_fingerprint`] of the cost model —
+    /// contexts with different machines never share plans.
+    pub machine: u64,
+}
+
+impl PlanKey {
+    /// Fingerprint both operands and bind the evaluation shape and cost
+    /// model.
+    pub fn of(
+        machine: &Machine,
+        a: &CsrMatrix,
+        b: &CsrMatrix,
+        threads: usize,
+        partition: Partition,
+    ) -> PlanKey {
+        PlanKey {
+            a: a.pattern_fingerprint(),
+            b: b.pattern_fingerprint(),
+            threads,
+            partition,
+            machine: super::fingerprint::machine_fingerprint(machine),
+        }
+    }
+}
+
+/// Cache observability counters (cheap copies out of the lock).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Probes that found a ready plan (warm path).
+    pub hits: u64,
+    /// First-sight probes (key recorded, caller ran unplanned).
+    pub misses: u64,
+    /// Symbolic phases executed (plan constructions).
+    pub symbolic_builds: u64,
+    /// Keys the amortization hook rejected (cached decision).
+    pub declined: u64,
+    /// Entries evicted by the LRU bound.
+    pub evictions: u64,
+}
+
+/// Outcome of one cache probe.
+#[derive(Debug)]
+pub enum Probe {
+    /// A ready plan: refill numerically, no symbolic work.
+    Hit(Arc<SpmmmPlan>),
+    /// The key repeated but has no plan yet: the caller should consult
+    /// the amortization hook and either build + insert or decline.
+    Candidate,
+    /// Planning was declined for this key; run unplanned.
+    Declined,
+    /// First sight of this key (now recorded); run unplanned.
+    Miss,
+}
+
+enum State {
+    Seen,
+    Declined,
+    Planned(Arc<SpmmmPlan>),
+}
+
+struct Entry {
+    key: PlanKey,
+    state: State,
+    used: u64,
+}
+
+struct Inner {
+    cap: usize,
+    tick: u64,
+    stats: PlanStats,
+    entries: Vec<Entry>,
+}
+
+/// A bounded LRU of [`SpmmmPlan`]s keyed by operand-pattern
+/// fingerprints. Interior-mutable: share one instance by reference
+/// across contexts, pool workers, and sweep sessions.
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+}
+
+impl PlanCache {
+    /// Default LRU bound: enough for a pipeline's worth of distinct
+    /// repeated products without letting dead patterns accumulate.
+    pub const DEFAULT_CAPACITY: usize = 32;
+
+    /// A cache holding at most `capacity` entries (at least one).
+    pub fn new(capacity: usize) -> Self {
+        PlanCache {
+            inner: Mutex::new(Inner {
+                cap: capacity.max(1),
+                tick: 0,
+                stats: PlanStats::default(),
+                entries: Vec::new(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // Cache state is a plain table; a panic elsewhere cannot tear it.
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Probe `key`, recording it on first sight. See [`Probe`] for the
+    /// caller's obligations per outcome.
+    pub fn probe(&self, key: &PlanKey) -> Probe {
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.entries.iter_mut().find(|e| e.key == *key) {
+            e.used = tick;
+            return match &e.state {
+                State::Planned(plan) => {
+                    let plan = Arc::clone(plan);
+                    inner.stats.hits += 1;
+                    Probe::Hit(plan)
+                }
+                State::Declined => Probe::Declined,
+                State::Seen => Probe::Candidate,
+            };
+        }
+        inner.stats.misses += 1;
+        inner.record(*key, State::Seen);
+        Probe::Miss
+    }
+
+    /// Insert a freshly built plan (counts one symbolic build) and
+    /// return the shared handle.
+    pub fn insert_planned(&self, key: PlanKey, plan: Arc<SpmmmPlan>) -> Arc<SpmmmPlan> {
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        inner.tick += 1;
+        inner.stats.symbolic_builds += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.entries.iter_mut().find(|e| e.key == key) {
+            e.state = State::Planned(Arc::clone(&plan));
+            e.used = tick;
+        } else {
+            inner.record(key, State::Planned(Arc::clone(&plan)));
+        }
+        plan
+    }
+
+    /// Record that the amortization hook rejected `key`.
+    pub fn decline(&self, key: PlanKey) {
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        inner.tick += 1;
+        inner.stats.declined += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.entries.iter_mut().find(|e| e.key == key) {
+            e.state = State::Declined;
+            e.used = tick;
+        } else {
+            inner.record(key, State::Declined);
+        }
+    }
+
+    /// Fetch the plan for `(a, b)` under the given evaluation shape,
+    /// running the symbolic phase only if no plan is cached — the
+    /// unconditional-planning entry for callers that *know* the product
+    /// repeats (pipelines, warm sweeps), bypassing the two-touch policy.
+    ///
+    /// The build runs outside the cache lock (a symbolic phase must not
+    /// serialize every other probe), so two threads racing on the same
+    /// *first sight* of a key may each build once — duplicated work,
+    /// never a correctness issue (last insert wins, plans for one key
+    /// are interchangeable), and `symbolic_builds` counts every build
+    /// that actually ran. Once a key is planned, hits are race-free.
+    pub fn get_or_build(
+        &self,
+        machine: &Machine,
+        ws: &mut Workspace,
+        a: &CsrMatrix,
+        b: &CsrMatrix,
+        threads: usize,
+        partition: Partition,
+    ) -> Arc<SpmmmPlan> {
+        let key = PlanKey::of(machine, a, b, threads, partition);
+        if let Probe::Hit(plan) = self.probe(&key) {
+            return plan;
+        }
+        let plan = Arc::new(SpmmmPlan::build(machine, a, b, key, ws));
+        self.insert_planned(key, plan)
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PlanStats {
+        self.lock().stats
+    }
+
+    /// Entries currently cached (any state).
+    pub fn len(&self) -> usize {
+        self.lock().entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (stats are kept).
+    pub fn clear(&self) {
+        self.lock().entries.clear();
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new(PlanCache::DEFAULT_CAPACITY)
+    }
+}
+
+impl Inner {
+    /// Append an entry, evicting the least-recently-used one when full.
+    fn record(&mut self, key: PlanKey, state: State) {
+        if self.entries.len() >= self.cap {
+            if let Some(lru) = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.used)
+                .map(|(i, _)| i)
+            {
+                self.entries.swap_remove(lru);
+                self.stats.evictions += 1;
+            }
+        }
+        let used = self.tick;
+        self.entries.push(Entry { key, state, used });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_fixed_per_row;
+
+    fn machine() -> Machine {
+        Machine::sandy_bridge_i7_2600()
+    }
+
+    fn pair(seed: u64) -> (CsrMatrix, CsrMatrix) {
+        (
+            random_fixed_per_row(30, 30, 4, 2 * seed),
+            random_fixed_per_row(30, 30, 4, 2 * seed + 1),
+        )
+    }
+
+    #[test]
+    fn probe_lifecycle_miss_candidate_hit() {
+        let cache = PlanCache::default();
+        let (a, b) = pair(1);
+        let key = PlanKey::of(&machine(), &a, &b, 2, Partition::Flops);
+        assert!(matches!(cache.probe(&key), Probe::Miss));
+        assert!(matches!(cache.probe(&key), Probe::Candidate));
+        let m = machine();
+        let plan = Arc::new(SpmmmPlan::build(&m, &a, &b, key, &mut Workspace::new()));
+        cache.insert_planned(key, plan);
+        assert!(matches!(cache.probe(&key), Probe::Hit(_)));
+        let s = cache.stats();
+        assert_eq!((s.misses, s.hits, s.symbolic_builds), (1, 1, 1));
+    }
+
+    #[test]
+    fn declined_keys_stay_declined() {
+        let cache = PlanCache::default();
+        let (a, b) = pair(2);
+        let key = PlanKey::of(&machine(), &a, &b, 1, Partition::Flops);
+        assert!(matches!(cache.probe(&key), Probe::Miss));
+        cache.decline(key);
+        assert!(matches!(cache.probe(&key), Probe::Declined));
+        assert!(matches!(cache.probe(&key), Probe::Declined));
+        assert_eq!(cache.stats().declined, 1);
+        assert_eq!(cache.stats().symbolic_builds, 0);
+    }
+
+    #[test]
+    fn get_or_build_builds_once() {
+        let cache = PlanCache::default();
+        let (a, b) = pair(3);
+        let m = machine();
+        let mut ws = Workspace::new();
+        let p1 = cache.get_or_build(&m, &mut ws, &a, &b, 2, Partition::Flops);
+        let p2 = cache.get_or_build(&m, &mut ws, &a, &b, 2, Partition::Flops);
+        assert!(Arc::ptr_eq(&p1, &p2), "second call is a cache hit");
+        assert_eq!(cache.stats().symbolic_builds, 1);
+        assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn evaluation_shape_is_part_of_the_key() {
+        let cache = PlanCache::default();
+        let (a, b) = pair(4);
+        let m = machine();
+        let mut ws = Workspace::new();
+        let p1 = cache.get_or_build(&m, &mut ws, &a, &b, 1, Partition::Flops);
+        let p2 = cache.get_or_build(&m, &mut ws, &a, &b, 4, Partition::Flops);
+        let p3 = cache.get_or_build(&m, &mut ws, &a, &b, 4, Partition::Model);
+        assert!(!Arc::ptr_eq(&p1, &p2), "thread count separates plans");
+        assert!(!Arc::ptr_eq(&p2, &p3), "partition separates plans");
+        assert_eq!(p1.slabs().len(), 1);
+        assert_eq!(p2.slabs().len(), 4);
+        // A different cost model froze different decisions: never shared.
+        let mut fast = machine();
+        fast.mem_bandwidth *= 2.0;
+        let p4 = cache.get_or_build(&fast, &mut ws, &a, &b, 4, Partition::Model);
+        assert!(!Arc::ptr_eq(&p3, &p4), "machine separates plans");
+        assert_eq!(cache.stats().symbolic_builds, 4);
+    }
+
+    #[test]
+    fn lru_bound_evicts_the_coldest_entry() {
+        let cache = PlanCache::new(2);
+        let m = machine();
+        let mut ws = Workspace::new();
+        let (a1, b1) = pair(10);
+        let (a2, b2) = pair(11);
+        let (a3, b3) = pair(12);
+        cache.get_or_build(&m, &mut ws, &a1, &b1, 1, Partition::Flops);
+        cache.get_or_build(&m, &mut ws, &a2, &b2, 1, Partition::Flops);
+        // Touch (a1, b1) so (a2, b2) is the LRU victim.
+        cache.get_or_build(&m, &mut ws, &a1, &b1, 1, Partition::Flops);
+        cache.get_or_build(&m, &mut ws, &a3, &b3, 1, Partition::Flops);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        // (a1, b1) survived; (a2, b2) must rebuild.
+        let builds = cache.stats().symbolic_builds;
+        cache.get_or_build(&m, &mut ws, &a1, &b1, 1, Partition::Flops);
+        assert_eq!(cache.stats().symbolic_builds, builds, "survivor still planned");
+        cache.get_or_build(&m, &mut ws, &a2, &b2, 1, Partition::Flops);
+        assert_eq!(cache.stats().symbolic_builds, builds + 1, "victim was evicted");
+    }
+
+    #[test]
+    fn clear_drops_entries_but_keeps_stats() {
+        let cache = PlanCache::default();
+        let (a, b) = pair(5);
+        let m = machine();
+        cache.get_or_build(&m, &mut Workspace::new(), &a, &b, 1, Partition::Flops);
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().symbolic_builds, 1);
+    }
+}

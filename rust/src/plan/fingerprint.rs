@@ -1,0 +1,174 @@
+//! Structural pattern fingerprints.
+//!
+//! A [`PatternFingerprint`] is a stable 64-bit hash of a sparse matrix's
+//! *structure* — shape, storage order, and the compressed index arrays —
+//! and deliberately ignores the numeric values. Two matrices with the
+//! same sparsity pattern but different entries fingerprint identically,
+//! which is exactly the invalidation rule the plan cache needs: a cached
+//! [`super::SpmmmPlan`] stays valid across value updates (the iterative
+//! FD/CG workloads) and is dropped the moment an operand's structure
+//! changes.
+//!
+//! The hash chains a splitmix64-style finalizer over the word stream
+//! `[order, rows, cols, nnz, row_ptr…, indices…]`, so every word
+//! position influences every later state — good avalanche behaviour at
+//! ~1 multiply per word, cheap next to the O(mults) product itself. The
+//! shape and population are additionally carried verbatim, so patterns
+//! of different shape or nnz can never compare equal regardless of the
+//! hash; only a same-shape, same-nnz 64-bit collision (~2⁻⁶⁴ per key
+//! pair) remains, which the cache accepts as its correctness/overhead
+//! trade — the same stance Blaze-style structure caches take.
+
+use crate::model::Machine;
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape, StorageOrder};
+
+/// A stable structural fingerprint: 64-bit hash over shape, storage
+/// order, and index arrays, invariant under value changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PatternFingerprint {
+    /// Chained structural hash.
+    pub hash: u64,
+    /// Row count, carried verbatim.
+    pub rows: usize,
+    /// Column count, carried verbatim.
+    pub cols: usize,
+    /// Stored-entry count, carried verbatim.
+    pub nnz: usize,
+}
+
+/// splitmix64 finalizer: full-avalanche mix of one 64-bit state.
+#[inline(always)]
+fn mix(state: u64) -> u64 {
+    let mut x = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Chain `words` into `seed` (order-dependent: permuted streams hash
+/// differently).
+fn chain(seed: u64, words: &[usize]) -> u64 {
+    let mut h = seed;
+    for &w in words {
+        h = mix(h ^ w as u64);
+    }
+    h
+}
+
+fn fingerprint(
+    order: StorageOrder,
+    rows: usize,
+    cols: usize,
+    ptr: &[usize],
+    idx: &[usize],
+) -> PatternFingerprint {
+    let tag = match order {
+        StorageOrder::RowMajor => 0x0C5A_u64,
+        StorageOrder::ColumnMajor => 0x0C5C_u64,
+    };
+    let mut h = mix(tag);
+    h = mix(h ^ rows as u64);
+    h = mix(h ^ cols as u64);
+    h = chain(h, ptr);
+    h = chain(h, idx);
+    PatternFingerprint { hash: h, rows, cols, nnz: idx.len() }
+}
+
+/// 64-bit identity of a machine description (name, clock, peak, cache
+/// geometry and bandwidths, memory bandwidth). Folded into
+/// [`super::PlanKey`]: a plan freezes slab cuts and store modes chosen
+/// through this machine's cost model, so plans built under one machine
+/// must never be served to a context evaluating under another.
+pub fn machine_fingerprint(m: &Machine) -> u64 {
+    let mut h = mix(0x0AC5);
+    for &byte in m.name.as_bytes() {
+        h = mix(h ^ byte as u64);
+    }
+    h = mix(h ^ m.freq_hz.to_bits());
+    h = mix(h ^ m.flops_per_cycle.to_bits());
+    for level in &m.levels {
+        h = mix(h ^ level.size_bytes as u64);
+        h = mix(h ^ level.line_bytes as u64);
+        h = mix(h ^ level.assoc as u64);
+        h = mix(h ^ level.bandwidth.to_bits());
+    }
+    mix(h ^ m.mem_bandwidth.to_bits())
+}
+
+impl CsrMatrix {
+    /// Structural fingerprint of this matrix (shape + row-major order +
+    /// `row_ptr`/`col_idx`); invariant under value changes.
+    pub fn pattern_fingerprint(&self) -> PatternFingerprint {
+        fingerprint(self.order(), self.rows(), self.cols(), self.row_ptr(), self.col_idx())
+    }
+}
+
+impl CscMatrix {
+    /// Structural fingerprint of this matrix (shape + column-major order
+    /// + `col_ptr`/`row_idx`); invariant under value changes.
+    pub fn pattern_fingerprint(&self) -> PatternFingerprint {
+        fingerprint(self.order(), self.rows(), self.cols(), self.col_ptr(), self.row_idx())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::random_fixed_per_row;
+    use crate::sparse::convert::csr_to_csc;
+
+    #[test]
+    fn invariant_under_value_changes() {
+        let ptr = vec![0usize, 2, 3];
+        let idx = vec![0usize, 2, 1];
+        let m1 = CsrMatrix::from_parts(2, 3, ptr.clone(), idx.clone(), vec![1.0, 2.0, 3.0]);
+        let m2 = CsrMatrix::from_parts(2, 3, ptr, idx, vec![-9.0, 0.5, 7.0]);
+        assert_eq!(m1.pattern_fingerprint(), m2.pattern_fingerprint());
+    }
+
+    #[test]
+    fn sensitive_to_structure_and_shape() {
+        let base = CsrMatrix::from_parts(2, 3, vec![0, 2, 3], vec![0, 2, 1], vec![1.0; 3]);
+        // Move one entry to a different column.
+        let moved = CsrMatrix::from_parts(2, 3, vec![0, 2, 3], vec![0, 1, 1], vec![1.0; 3]);
+        assert_ne!(base.pattern_fingerprint().hash, moved.pattern_fingerprint().hash);
+        // Same arrays, wider shape.
+        let wider = CsrMatrix::from_parts(2, 4, vec![0, 2, 3], vec![0, 2, 1], vec![1.0; 3]);
+        assert_ne!(base.pattern_fingerprint(), wider.pattern_fingerprint());
+        // Move an entry between rows (same column multiset).
+        let rerowed = CsrMatrix::from_parts(2, 3, vec![0, 1, 3], vec![0, 1, 2], vec![1.0; 3]);
+        assert_ne!(base.pattern_fingerprint().hash, rerowed.pattern_fingerprint().hash);
+    }
+
+    #[test]
+    fn storage_order_is_part_of_the_pattern() {
+        // A symmetric structure has identical ptr/idx arrays in CSR and
+        // CSC form; the order tag must still separate them.
+        let m = CsrMatrix::from_parts(2, 2, vec![0, 1, 2], vec![0, 1], vec![1.0, 2.0]);
+        let c = csr_to_csc(&m);
+        assert_eq!(m.row_ptr(), c.col_ptr());
+        assert_eq!(m.col_idx(), c.row_idx());
+        assert_ne!(m.pattern_fingerprint().hash, c.pattern_fingerprint().hash);
+    }
+
+    #[test]
+    fn machine_fingerprint_separates_cost_models() {
+        let paper = Machine::sandy_bridge_i7_2600();
+        assert_eq!(machine_fingerprint(&paper), machine_fingerprint(&paper.clone()));
+        let mut faster = paper.clone();
+        faster.mem_bandwidth *= 2.0;
+        assert_ne!(machine_fingerprint(&paper), machine_fingerprint(&faster));
+    }
+
+    #[test]
+    fn distinct_random_structures_do_not_collide() {
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..100u64 {
+            let m = random_fixed_per_row(40, 40, 5, seed);
+            seen.insert(m.pattern_fingerprint().hash);
+        }
+        // Random structures are distinct with overwhelming probability;
+        // every fingerprint must be too.
+        assert_eq!(seen.len(), 100, "structural hash collided");
+    }
+}

@@ -1,0 +1,40 @@
+//! Symbolic/numeric phase split for repeated spMMM.
+//!
+//! The paper's kernels rediscover the output structure on every
+//! multiplication, yet the workloads its model targets — FD stencils,
+//! iterative schemes like `examples/cg_poisson`, the ROADMAP's repeated
+//! heavy traffic — multiply matrices whose *sparsity pattern never
+//! changes*. This module factors that redundancy out, the way sparse
+//! direct solvers split factorization and Armadillo/Blaze hide cached
+//! structural decisions behind the assignment operator (Sanderson &
+//! Curtin, arXiv:1811.08768; Iglberger et al., arXiv:1104.1729):
+//!
+//! * [`PatternFingerprint`] — a stable 64-bit structural hash of a
+//!   matrix (shape + storage order + index arrays), invariant under
+//!   value changes ([`fingerprint`]);
+//! * [`SpmmmPlan`] — the frozen **symbolic** product of one `C = A·B`:
+//!   the full structural output pattern (no numeric cancellation), the
+//!   cost-balanced partition slabs, and model-guided per-slab store
+//!   modes ([`spmmm_plan`]);
+//! * [`PlanCache`] — a bounded LRU keyed by [`PlanKey`] (fingerprints +
+//!   evaluation shape + cost-model fingerprint) with observability
+//!   counters ([`cache`]).
+//!
+//! The **numeric** phase lives with the other kernels
+//! ([`crate::kernels::planned_fill_serial`],
+//! [`crate::kernels::parallel::par_planned_fill`]): it refills values
+//! into a plan's preallocated structure with a plain accumulation loop
+//! and a cheap in-place per-row compaction, bit-identical to the
+//! unplanned kernels even under exact cancellation. The expression layer
+//! ([`crate::expr::EvalContext::with_plan_cache`]) consults the cache at
+//! assign time behind the
+//! [`crate::model::predict::plan_breakeven_evals`] amortization hook, so
+//! one-shot products never pay for a plan they will not reuse.
+
+pub mod cache;
+pub mod fingerprint;
+pub mod spmmm_plan;
+
+pub use cache::{PlanCache, PlanKey, PlanStats, Probe};
+pub use fingerprint::PatternFingerprint;
+pub use spmmm_plan::{SlabStore, SpmmmPlan};

@@ -1,0 +1,325 @@
+//! The reusable symbolic product of one spMMM: frozen output pattern,
+//! partition slabs, and model-guided per-slab store modes.
+//!
+//! The **symbolic phase** runs the structure half of Gustavson's
+//! algorithm once: for every row of `C = A·B` it unions the column
+//! patterns of the touched B rows — *without* looking at a single value,
+//! so the pattern is the full structural output (no numeric
+//! cancellation) and stays valid for any values carried by the same
+//! patterns. Alongside the pattern it freezes the decisions the paper
+//! makes per evaluation: the cost-balanced partition slabs
+//! ([`crate::exec::slab_bounds_into`]) and, per slab, the cheapest way
+//! to convert the dense temporary into sparse rows once the pattern is
+//! known ([`SlabStore`], chosen through the roofline model like the
+//! §IV-B storing strategies it replaces).
+//!
+//! The **numeric phase** (in [`crate::kernels`]) then refills values
+//! into this structure: accumulate each row with a plain `temp[j] += v`
+//! loop — no strategy bookkeeping — and harvest the row straight off the
+//! pattern, dropping exact-zero entries with the same `value != 0.0`
+//! rule every storing strategy applies, so planned results stay
+//! bit-identical to the unplanned kernels even under cancellation.
+
+use super::cache::PlanKey;
+use crate::exec::{slab_bounds_into, Workspace};
+use crate::model::{roofline_seconds, Machine};
+use crate::sparse::{CsrMatrix, SparseShape};
+
+/// How a slab's numeric phase converts the dense temporary into sparse
+/// rows, given the frozen pattern — the planned analogue of the paper's
+/// MinMax-vs-Sort storing decision, chosen per slab at plan time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlabStore {
+    /// Walk the pattern's column list directly (scattered rows: pays 8 B
+    /// of index read per entry, never scans a gap).
+    Gather,
+    /// Scan the dense temporary over the pattern's `[min, max]` region
+    /// (dense-in-region rows: no index reads, gaps are cheap).
+    RegionScan,
+}
+
+/// The frozen symbolic product of one `C = A · B`: structural pattern,
+/// partition slabs, and per-slab store modes, keyed by the operands'
+/// [`super::PatternFingerprint`]s.
+#[derive(Clone, Debug)]
+pub struct SpmmmPlan {
+    key: PlanKey,
+    rows: usize,
+    cols: usize,
+    a_nnz: usize,
+    b_nnz: usize,
+    /// `pattern_row_ptr[r]..pattern_row_ptr[r+1]` spans row r's columns
+    /// in `pattern_cols` — the full structural output, no cancellation.
+    pattern_row_ptr: Vec<usize>,
+    /// Sorted, unique column indices of every structural row.
+    pattern_cols: Vec<usize>,
+    /// Contiguous row slabs for the numeric phase (frozen partition).
+    slabs: Vec<(usize, usize)>,
+    /// Store mode of each slab.
+    slab_store: Vec<SlabStore>,
+}
+
+impl SpmmmPlan {
+    /// Run the symbolic phase for `C = A · B`: union the structural
+    /// output pattern row by row (through `ws`'s generation-stamped mark
+    /// scratch), cut the partition slabs `key.threads`-wide under
+    /// `key.partition`, and pick each slab's store mode by predicted
+    /// store-phase transfer time on `machine`.
+    pub fn build(
+        machine: &Machine,
+        a: &CsrMatrix,
+        b: &CsrMatrix,
+        key: PlanKey,
+        ws: &mut Workspace,
+    ) -> SpmmmPlan {
+        assert_eq!(a.cols(), b.rows(), "inner dimension");
+        let rows = a.rows();
+        let cols = b.cols();
+
+        // Structural row union via generation marks: O(mults) touches
+        // plus a sort of each row's (small) distinct-column set.
+        if ws.plan_mark.len() < cols {
+            ws.plan_mark.resize(cols, 0);
+        }
+        let mut pattern_row_ptr = Vec::with_capacity(rows + 1);
+        pattern_row_ptr.push(0usize);
+        let mut pattern_cols = Vec::new();
+        for r in 0..rows {
+            ws.plan_mark_gen += 1;
+            let gen = ws.plan_mark_gen;
+            ws.plan_touched.clear();
+            for &k in a.row_indices(r) {
+                for &j in b.row_indices(k) {
+                    if ws.plan_mark[j] != gen {
+                        ws.plan_mark[j] = gen;
+                        ws.plan_touched.push(j);
+                    }
+                }
+            }
+            ws.plan_touched.sort_unstable();
+            pattern_cols.extend_from_slice(&ws.plan_touched);
+            pattern_row_ptr.push(pattern_cols.len());
+        }
+
+        // Freeze the partition (same clamp as the unplanned parallel
+        // kernel: at most one slab per row, at least one slab).
+        let slab_count = key.threads.max(1).min(rows.max(1));
+        slab_bounds_into(key.partition, machine, a, b, slab_count, &mut ws.cost, &mut ws.bounds);
+        let slabs = ws.bounds.clone();
+
+        // Per-slab store mode: predicted transfer time of gathering the
+        // pattern (8 B index + 8 B temp read + 16 B append per entry)
+        // vs scanning each row's [min, max] region (8 B per position +
+        // 16 B per append) — the same roofline comparison that picks the
+        // unplanned storing strategy.
+        let slab_store = slabs
+            .iter()
+            .map(|&(lo, hi)| {
+                let patlen = pattern_row_ptr[hi] - pattern_row_ptr[lo];
+                let region: usize = (lo..hi)
+                    .map(|r| {
+                        let row = &pattern_cols[pattern_row_ptr[r]..pattern_row_ptr[r + 1]];
+                        match (row.first(), row.last()) {
+                            (Some(&first), Some(&last)) => last - first + 1,
+                            _ => 0,
+                        }
+                    })
+                    .sum();
+                let gather = roofline_seconds(machine, 0.0, 32.0 * patlen as f64);
+                let scan =
+                    roofline_seconds(machine, 0.0, 8.0 * region as f64 + 16.0 * patlen as f64);
+                if scan < gather {
+                    SlabStore::RegionScan
+                } else {
+                    SlabStore::Gather
+                }
+            })
+            .collect();
+
+        SpmmmPlan {
+            key,
+            rows,
+            cols,
+            a_nnz: a.nnz(),
+            b_nnz: b.nnz(),
+            pattern_row_ptr,
+            pattern_cols,
+            slabs,
+            slab_store,
+        }
+    }
+
+    /// The key this plan was built under.
+    pub fn key(&self) -> &PlanKey {
+        &self.key
+    }
+
+    /// Output rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Output columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total structural entries (the numeric phase's staging bound; the
+    /// filled result has at most this many entries).
+    pub fn pattern_nnz(&self) -> usize {
+        self.pattern_cols.len()
+    }
+
+    /// Structural columns of output row `r` (sorted, unique).
+    #[inline]
+    pub fn pattern_row(&self, r: usize) -> &[usize] {
+        &self.pattern_cols[self.pattern_row_ptr[r]..self.pattern_row_ptr[r + 1]]
+    }
+
+    /// Offset of row `r`'s staging range in the structural arrays.
+    #[inline]
+    pub fn pattern_start(&self, r: usize) -> usize {
+        self.pattern_row_ptr[r]
+    }
+
+    /// The frozen partition slabs.
+    pub fn slabs(&self) -> &[(usize, usize)] {
+        &self.slabs
+    }
+
+    /// Store mode of slab `s`.
+    #[inline]
+    pub fn slab_store(&self, s: usize) -> SlabStore {
+        self.slab_store[s]
+    }
+
+    /// Cheap misuse guard that this plan plausibly describes these
+    /// operands (shape and population). The numeric fills assert this,
+    /// catching a plan handed the wrong matrices entirely; it is *not*
+    /// a hash-collision defense — a same-shape, same-nnz pattern that
+    /// collides on the 64-bit hash (~2⁻⁶⁴ per key pair) would pass. The
+    /// verbatim shape/nnz fields in [`super::PatternFingerprint`]
+    /// already rule out every cross-shape collision at key level.
+    pub fn matches(&self, a: &CsrMatrix, b: &CsrMatrix) -> bool {
+        self.rows == a.rows()
+            && self.cols == b.cols()
+            && self.a_nnz == a.nnz()
+            && self.b_nnz == b.nnz()
+            && a.cols() == b.rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Partition;
+    use crate::gen::{fd_poisson_2d, operand_pair, random_fixed_per_row, Workload};
+    use crate::kernels::{spmmm, Strategy};
+    use crate::plan::PlanKey;
+
+    fn build(a: &CsrMatrix, b: &CsrMatrix, threads: usize) -> SpmmmPlan {
+        let machine = Machine::sandy_bridge_i7_2600();
+        let key = PlanKey::of(&machine, a, b, threads, Partition::Flops);
+        SpmmmPlan::build(&machine, a, b, key, &mut Workspace::new())
+    }
+
+    /// Force strictly positive values so products cannot cancel: the
+    /// computed structure then equals the value-blind pattern exactly.
+    fn abs(m: &CsrMatrix) -> CsrMatrix {
+        CsrMatrix::from_parts(
+            m.rows(),
+            m.cols(),
+            m.row_ptr().to_vec(),
+            m.col_idx().to_vec(),
+            m.values().iter().map(|v| v.abs().max(0.5)).collect(),
+        )
+    }
+
+    #[test]
+    fn pattern_covers_the_exact_result_structure() {
+        let (ra, rb) = operand_pair(Workload::RandomFixed5, 120, 3);
+        let (a, b) = (abs(&ra), abs(&rb));
+        let plan = build(&a, &b, 4);
+        let c = spmmm(&a, &b, Strategy::Combined);
+        assert_eq!(plan.pattern_nnz(), c.nnz());
+        for r in 0..c.rows() {
+            assert_eq!(plan.pattern_row(r), c.row_indices(r), "row {r}");
+        }
+        // And the pattern is identical for the original signed values —
+        // structure only, values never matter.
+        let signed = build(&ra, &rb, 4);
+        assert_eq!(signed.pattern_nnz(), plan.pattern_nnz());
+    }
+
+    #[test]
+    fn pattern_rows_are_sorted_unique_and_slabs_cover() {
+        let a = fd_poisson_2d(9);
+        let plan = build(&a, &a, 3);
+        for r in 0..plan.rows() {
+            let row = plan.pattern_row(r);
+            assert!(row.windows(2).all(|w| w[0] < w[1]), "row {r} sorted/unique");
+            assert!(row.last().map_or(true, |&c| c < plan.cols()));
+        }
+        let mut next = 0usize;
+        for &(lo, hi) in plan.slabs() {
+            assert_eq!(lo, next);
+            next = hi;
+        }
+        assert_eq!(next, plan.rows());
+        assert_eq!(plan.slabs().len(), 3);
+    }
+
+    #[test]
+    fn store_mode_follows_the_pattern_shape() {
+        // Contiguous dense-block rows: region == population, so the
+        // region scan is the predicted winner.
+        let mut dense = CsrMatrix::new(16, 16);
+        for _ in 0..16 {
+            for c in 0..16 {
+                dense.append(c, 1.0);
+            }
+            dense.finalize_row();
+        }
+        let plan = build(&dense, &dense, 1);
+        assert_eq!(plan.slab_store(0), SlabStore::RegionScan);
+
+        // Two far-apart entries per row: the region dwarfs the
+        // population, so gathering the pattern wins.
+        let mut scattered = CsrMatrix::new(16, 256);
+        for _ in 0..16 {
+            scattered.append(0, 1.0);
+            scattered.append(255, 1.0);
+            scattered.finalize_row();
+        }
+        let mut link = CsrMatrix::new(16, 16);
+        for r in 0..16 {
+            link.append(r, 1.0);
+            link.finalize_row();
+        }
+        let plan = build(&link, &scattered, 1);
+        assert_eq!(plan.slab_store(0), SlabStore::Gather);
+    }
+
+    #[test]
+    fn matches_guards_shape_and_population() {
+        let a = random_fixed_per_row(20, 20, 4, 1);
+        let b = random_fixed_per_row(20, 20, 4, 2);
+        let plan = build(&a, &b, 2);
+        assert!(plan.matches(&a, &b));
+        let other = random_fixed_per_row(20, 20, 5, 3);
+        assert!(!plan.matches(&a, &other), "different nnz rejected");
+        let smaller = random_fixed_per_row(19, 19, 4, 4);
+        assert!(!plan.matches(&smaller, &smaller), "different shape rejected");
+    }
+
+    #[test]
+    fn empty_operands_build_an_empty_plan() {
+        let z = CsrMatrix::from_parts(6, 6, vec![0; 7], vec![], vec![]);
+        let plan = build(&z, &z, 4);
+        assert_eq!(plan.pattern_nnz(), 0);
+        assert_eq!(plan.slabs().len(), 4);
+        for r in 0..6 {
+            assert!(plan.pattern_row(r).is_empty());
+        }
+    }
+}

@@ -212,6 +212,16 @@ impl CsrMatrix {
         (&mut self.row_ptr, &mut self.col_idx, &mut self.values)
     }
 
+    /// Final step of a planned parallel fill: after the in-place per-row
+    /// compaction has slid every row to its final offset and rewritten
+    /// `row_ptr`, drop the staged slots past `nnz` (capacity retained,
+    /// so warm refills keep allocating nothing).
+    pub(crate) fn truncate_payload(&mut self, nnz: usize) {
+        debug_assert_eq!(*self.row_ptr.last().unwrap(), nnz, "compaction must finish first");
+        self.col_idx.truncate(nnz);
+        self.values.truncate(nnz);
+    }
+
     /// Check the full CSR invariants (the [`Self::from_parts`] rules) —
     /// the in-place parallel kernel debug-asserts this after its fill
     /// phase.

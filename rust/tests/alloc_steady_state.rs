@@ -1,8 +1,10 @@
 //! The engine's headline guarantee, pinned with a counting global
 //! allocator: after one warm-up call, re-evaluating an expression tree
 //! through a warm [`ExecPool`] performs **zero heap allocations** — on
-//! the serial workspace path and on the parallel size-then-fill path
-//! alike. This file holds a single test so no concurrent test can
+//! the serial workspace path, on the parallel size-then-fill path, and
+//! on the plan-cache hit path, which additionally performs **zero
+//! symbolic work** (proven by the [`PlanCache::stats`] counters). This
+//! file holds its tests in one `#[test]` so no concurrent test can
 //! perturb the allocation counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -12,6 +14,7 @@ use blazert::exec::ExecPool;
 use blazert::expr::{EvalContext, SparseOperand};
 use blazert::gen::{operand_pair, Workload};
 use blazert::kernels::{spmmm, Strategy};
+use blazert::plan::PlanCache;
 use blazert::sparse::CsrMatrix;
 
 struct CountingAlloc;
@@ -79,4 +82,38 @@ fn warm_pool_evaluation_allocates_nothing() {
         "parallel hot loop must not allocate after warm-up"
     );
     assert!(out.approx_eq(&reference, 0.0));
+
+    // Plan-cache hit path: zero heap allocations AND zero symbolic
+    // work. FD operands so the amortization hook approves the serial
+    // plan; warm-up covers first sight (unplanned) and the one
+    // symbolic build, then the hot loop must be pure refill.
+    let (fa, fb) = operand_pair(Workload::FiveBandFd, 300, 11);
+    let planned_reference = spmmm(&fa, &fb, Strategy::Combined);
+    let cache = PlanCache::default();
+    for threads in [1usize, 2] {
+        let mut ctx = EvalContext::new()
+            .with_exec(&pool)
+            .with_threads(threads)
+            .with_plan_cache(&cache);
+        for _ in 0..3 {
+            (&fa * &fb).assign_to(&mut out, &mut ctx);
+        }
+        let stats = cache.stats();
+        let before = allocs();
+        for _ in 0..5 {
+            (&fa * &fb).assign_to(&mut out, &mut ctx);
+        }
+        assert_eq!(
+            allocs(),
+            before,
+            "plan-hit hot loop must not allocate (threads={threads})"
+        );
+        let after = cache.stats();
+        assert_eq!(
+            after.symbolic_builds, stats.symbolic_builds,
+            "plan-hit hot loop must not run the symbolic phase (threads={threads})"
+        );
+        assert_eq!(after.hits, stats.hits + 5, "every hot evaluation is a cache hit");
+        assert!(out.approx_eq(&planned_reference, 0.0));
+    }
 }

@@ -2,14 +2,17 @@
 //! of the size-then-fill parallel kernel against the serial kernel for
 //! every storing strategy, partition, and thread count — including
 //! empty slabs, a single hot row, and threads > rows — plus
-//! pool/workspace reuse across calls and expression-layer integration.
+//! pool/workspace reuse across calls, expression-layer integration, and
+//! the symbolic/numeric plan split (planned evaluation bit-identical to
+//! unplanned everywhere; cache hits perform no symbolic work).
 
-use blazert::exec::{ExecPool, Partition};
+use blazert::exec::{ExecPool, Partition, Workspace};
 use blazert::expr::{EvalContext, Expression, SparseOperand};
 use blazert::gen::{operand_pair, random_power_law, Workload};
-use blazert::kernels::parallel::{par_spmmm, par_spmmm_into, par_spmmm_with};
-use blazert::kernels::{spmmm, Strategy};
+use blazert::kernels::parallel::{par_planned_fill, par_spmmm, par_spmmm_into, par_spmmm_with};
+use blazert::kernels::{planned_fill_serial, spmmm, Strategy};
 use blazert::model::Machine;
+use blazert::plan::{PlanCache, PlanKey, SpmmmPlan};
 use blazert::sparse::{CsrMatrix, SparseShape};
 
 #[test]
@@ -130,6 +133,148 @@ fn expression_trees_evaluate_through_the_pool() {
     prod.assign_to(&mut out, &mut ctx);
     assert_eq!(out.capacity(), cap, "warm assignment allocates nothing");
     assert!(out.approx_eq(&spmmm(&a, &b, Strategy::Combined), 0.0));
+}
+
+/// Property: planned evaluation is bit-identical to every unplanned
+/// strategy, for every partition and thread count, on every workload —
+/// the planned numeric phase must be indistinguishable from the kernels
+/// it replaces.
+#[test]
+fn planned_bit_identical_across_strategies_partitions_threads() {
+    let pool = ExecPool::new(3);
+    let machine = Machine::sandy_bridge_i7_2600();
+    let mut ws = Workspace::new();
+    let mut temp = Vec::new();
+    let mut out = CsrMatrix::new(0, 0);
+    for workload in [Workload::FiveBandFd, Workload::RandomFixed5, Workload::PowerLawSkew] {
+        let (a, b) = operand_pair(workload, 240, 17);
+        // Every unplanned strategy agrees with the reference bit-exactly…
+        let reference = spmmm(&a, &b, Strategy::Combined);
+        for strategy in Strategy::ALL {
+            let c = spmmm(&a, &b, strategy);
+            assert!(c.approx_eq(&reference, 0.0), "{workload:?} {}", strategy.name());
+        }
+        // …so one planned-vs-reference check per (partition, threads)
+        // covers planned-vs-every-strategy.
+        for partition in Partition::ALL {
+            for threads in [1usize, 2, 5, 16] {
+                let key = PlanKey::of(&machine, &a, &b, threads, partition);
+                let plan = SpmmmPlan::build(&machine, &a, &b, key, &mut ws);
+                if threads > 1 {
+                    par_planned_fill(&pool, &plan, &a, &b, &mut out);
+                } else {
+                    planned_fill_serial(&plan, &a, &b, &mut temp, &mut out);
+                }
+                assert!(
+                    out.approx_eq(&reference, 0.0),
+                    "{workload:?} {partition:?} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+/// Exact cancellation and empty rows: the structural pattern keeps the
+/// cancelled positions, the numeric compaction must drop them — on the
+/// serial and the parallel planned path alike.
+#[test]
+fn planned_cancellation_and_empty_rows() {
+    let machine = Machine::sandy_bridge_i7_2600();
+    let pool = ExecPool::new(2);
+    // B has two identical rows; row 0 of A multiplies them with opposite
+    // signs (exact cancellation), rows 1/3 are empty.
+    let mut b = CsrMatrix::new(2, 8);
+    for c in [0usize, 2, 5] {
+        b.append(c, 1.5);
+    }
+    b.finalize_row();
+    for c in [0usize, 2, 5] {
+        b.append(c, 1.5);
+    }
+    b.finalize_row();
+    let mut a = CsrMatrix::new(4, 2);
+    a.append(0, 1.0);
+    a.append(1, -1.0);
+    a.finalize_row();
+    a.finalize_row();
+    a.append(1, 2.0);
+    a.finalize_row();
+    a.finalize_row();
+    let reference = spmmm(&a, &b, Strategy::Combined);
+    assert_eq!(reference.row_nnz(0), 0, "row 0 cancels exactly");
+    assert_eq!(reference.row_nnz(2), 3);
+    let mut ws = Workspace::new();
+    let mut out = CsrMatrix::new(0, 0);
+    for partition in Partition::ALL {
+        for threads in [1usize, 2, 4] {
+            let key = PlanKey::of(&machine, &a, &b, threads, partition);
+            let plan = SpmmmPlan::build(&machine, &a, &b, key, &mut ws);
+            assert_eq!(plan.pattern_nnz(), 6, "pattern is cancellation-blind");
+            if threads > 1 {
+                par_planned_fill(&pool, &plan, &a, &b, &mut out);
+            } else {
+                planned_fill_serial(&plan, &a, &b, &mut ws.plan_temp, &mut out);
+            }
+            assert!(out.approx_eq(&reference, 0.0), "{partition:?} threads={threads}");
+            assert_eq!(out.nnz(), 3, "cancelled slack compacted away");
+        }
+    }
+}
+
+/// The headline counter proof: once a plan is cached, re-evaluating the
+/// expression performs **no symbolic phase** — `symbolic_builds` stays
+/// flat while `hits` counts every warm evaluation.
+#[test]
+fn plan_cache_hits_skip_the_symbolic_phase() {
+    let pool = ExecPool::new(2);
+    let cache = PlanCache::default();
+    let (a, b) = operand_pair(Workload::FiveBandFd, 240, 5);
+    let reference = spmmm(&a, &b, Strategy::Combined);
+    let mut out = CsrMatrix::new(0, 0);
+    for threads in [1usize, 2] {
+        let mut ctx = EvalContext::new()
+            .with_exec(&pool)
+            .with_threads(threads)
+            .with_plan_cache(&cache);
+        let prod = &a * &b;
+        // Unplanned first sight, then one symbolic build on repeat.
+        prod.assign_to(&mut out, &mut ctx);
+        prod.assign_to(&mut out, &mut ctx);
+        let builds = cache.stats().symbolic_builds;
+        let hits = cache.stats().hits;
+        for i in 0..4 {
+            prod.assign_to(&mut out, &mut ctx);
+            assert!(out.approx_eq(&reference, 0.0), "threads={threads} rep={i}");
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.symbolic_builds, builds, "cache hits must not re-run symbolic");
+        assert_eq!(stats.hits, hits + 4, "every warm evaluation is a hit");
+    }
+}
+
+/// Values may change freely under a fixed pattern: the fingerprint (and
+/// the cached plan) only track structure, and the refill picks up the
+/// new values — the iterative-scheme contract.
+#[test]
+fn plan_survives_value_changes_under_fixed_pattern() {
+    let machine = Machine::sandy_bridge_i7_2600();
+    let (a, b) = operand_pair(Workload::RandomFixed5, 120, 23);
+    let scaled = CsrMatrix::from_parts(
+        a.rows(),
+        a.cols(),
+        a.row_ptr().to_vec(),
+        a.col_idx().to_vec(),
+        a.values().iter().map(|v| 3.0 * v - 1.0).collect(),
+    );
+    assert_eq!(a.pattern_fingerprint(), scaled.pattern_fingerprint());
+    let key = PlanKey::of(&machine, &a, &b, 1, Partition::Flops);
+    assert_eq!(key, PlanKey::of(&machine, &scaled, &b, 1, Partition::Flops));
+    let mut ws = Workspace::new();
+    let plan = SpmmmPlan::build(&machine, &a, &b, key, &mut ws);
+    let mut out = CsrMatrix::new(0, 0);
+    planned_fill_serial(&plan, &scaled, &b, &mut ws.plan_temp, &mut out);
+    let reference = spmmm(&scaled, &b, Strategy::Combined);
+    assert!(out.approx_eq(&reference, 0.0), "same plan, new values");
 }
 
 #[test]
