@@ -3,7 +3,7 @@
 //! The repeated-traffic workloads (FD stencils re-multiplied by
 //! iterative schemes, power-law service mixes) keep their sparsity
 //! patterns fixed, so the structure-discovery half of every multiply is
-//! redundant after the first. This bench quantifies the split three
+//! redundant after the first. This bench quantifies the split four
 //! ways per workload and thread count:
 //!
 //! * **unplanned** — the engine's regular kernel (strategy choice +
@@ -11,16 +11,24 @@
 //! * **plan cold** — symbolic + numeric together each execution (the
 //!   one-shot price of planning);
 //! * **plan warm** — the plan is built once, every timed execution is a
-//!   pure numeric refill (the steady-state path a plan-cache hit takes).
+//!   pure numeric refill (the steady-state path a plan-cache hit takes);
+//! * **disk-warm** — a *fresh* session (simulated restart) recovers the
+//!   plan from the on-disk store and refills numerically — the
+//!   "restart without re-warming" path; its session must report zero
+//!   symbolic builds.
 //!
 //! Warm/unplanned > 1 is the payoff of caching the symbolic phase;
-//! warm/cold is the share of an evaluation the structure discovery was.
+//! warm/cold is the share of an evaluation the structure discovery was;
+//! disk-warm ≈ warm shows persistence costs nothing at steady state.
+
+use std::sync::Arc;
 
 use blazert::blazemark::{BenchConfig, PlanMode, SweepSession};
 use blazert::exec::Partition;
 use blazert::gen::{operand_pair, Workload};
 use blazert::kernels::flops::spmmm_flops;
 use blazert::kernels::Strategy;
+use blazert::plan::PlanStore;
 use blazert::util::table::Table;
 
 fn main() {
@@ -28,21 +36,27 @@ fn main() {
     let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
     let max_threads = cores.min(8).max(1);
     eprintln!(
-        "ablation: plan split (cold vs warm) on {cores} cores; min_time={}s",
+        "ablation: plan split (cold vs warm vs disk-warm) on {cores} cores; min_time={}s",
         cfg.min_time_s
     );
+    let store_dir =
+        std::env::temp_dir().join(format!("blazert_ablation_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store = Arc::new(PlanStore::open_default(&store_dir).expect("plan store opens"));
     let mut session = SweepSession::new(max_threads);
     let mut threads = vec![1usize];
     if max_threads > 1 {
         threads.push(max_threads);
     }
 
+    let mut restart_symbolic_builds = 0u64;
     let mut t = Table::new([
         "workload/N",
         "thr",
         "unplanned MF/s",
         "cold MF/s",
         "warm MF/s",
+        "disk MF/s",
         "warm/unplanned",
     ]);
     for (w, n) in [(Workload::FiveBandFd, 65536usize), (Workload::PowerLawSkew, 32768)] {
@@ -58,12 +72,23 @@ fn main() {
             let warm = session
                 .measure_spmmm_planned(&cfg, &a, &b, thr, Partition::Flops, PlanMode::Warm)
                 .mflops(flops);
+            // Persist the long-lived session's plans, then measure a
+            // fresh session (the simulated restart) that warm-starts
+            // from the store directory.
+            session.persist_plans(&store);
+            let mut restarted = SweepSession::new(max_threads);
+            restarted.attach_plan_store(&store);
+            let disk = restarted
+                .measure_spmmm_planned(&cfg, &a, &b, thr, Partition::Flops, PlanMode::Persisted)
+                .mflops(flops);
+            restart_symbolic_builds += restarted.plan_stats().symbolic_builds;
             t.row([
                 format!("{} N={}", w.tag(), n),
                 format!("{thr}"),
                 format!("{unplanned:.0}"),
                 format!("{cold:.0}"),
                 format!("{warm:.0}"),
+                format!("{disk:.0}"),
                 format!("{:.2}x", warm / unplanned.max(1e-9)),
             ]);
         }
@@ -74,4 +99,16 @@ fn main() {
         "plan cache: {} hits, {} misses, {} symbolic builds, {} evictions",
         s.hits, s.misses, s.symbolic_builds, s.evictions
     );
+    let ss = store.stats();
+    eprintln!(
+        "plan store: {} saved, {} loaded, {} rejected, {} evicted \
+         ({} bytes on disk); restarted sessions ran {} symbolic builds (want 0)",
+        ss.saved,
+        ss.loaded,
+        ss.store_rejected,
+        ss.evicted,
+        store.total_bytes(),
+        restart_symbolic_builds,
+    );
+    let _ = std::fs::remove_dir_all(&store_dir);
 }

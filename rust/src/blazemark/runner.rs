@@ -4,11 +4,13 @@
 //! protocol measures the kernel, not the allocator or the thread
 //! spawner.
 
+use std::sync::Arc;
+
 use crate::exec::{serial_spmmm_into, ExecPool, Partition};
 use crate::kernels::parallel::{par_planned_fill, par_spmmm_into};
 use crate::kernels::{planned_fill_serial, Strategy};
 use crate::model::Machine;
-use crate::plan::{PlanCache, PlanKey, PlanStats, SpmmmPlan};
+use crate::plan::{PlanCache, PlanKey, PlanStats, PlanStore, SpmmmPlan, StoreStats};
 use crate::sparse::CsrMatrix;
 use crate::util::timer::Stopwatch;
 
@@ -102,6 +104,14 @@ pub enum PlanMode {
     /// time pure numeric refills — the steady-state repeated-traffic
     /// path.
     Warm,
+    /// Like [`PlanMode::Warm`], but the plan is expected to come from a
+    /// disk-backed store attached via
+    /// [`SweepSession::attach_plan_store`] — the *restarted-service*
+    /// path: the session's cache recovers the plan (warm-start scan or
+    /// load-on-miss) and the timed region is again pure numeric
+    /// refills; whether the symbolic phase actually ran is visible in
+    /// [`SweepSession::plan_stats`] (`symbolic_builds` vs `disk_loads`).
+    Persisted,
 }
 
 /// Persistent measurement state for a sweep: one [`ExecPool`] (workers
@@ -135,6 +145,26 @@ impl SweepSession {
     /// Counter snapshot of the session's plan cache.
     pub fn plan_stats(&self) -> PlanStats {
         self.plans.stats()
+    }
+
+    /// Attach a disk-backed plan store to the session's cache: eagerly
+    /// warm-start from every valid entry (returned count), and write
+    /// through plans built later in the sweep. The disk-warm ablation
+    /// series ([`PlanMode::Persisted`]) measures through a session set
+    /// up this way.
+    pub fn attach_plan_store(&mut self, store: &Arc<PlanStore>) -> usize {
+        self.plans.warm_from_dir(store)
+    }
+
+    /// Flush every plan the session has cached into `store` (to seed a
+    /// disk-warm session without write-through). Returns plans written.
+    pub fn persist_plans(&self, store: &PlanStore) -> usize {
+        self.plans.persist_to_dir(store)
+    }
+
+    /// Counter snapshot of the attached store, if one is attached.
+    pub fn plan_store_stats(&self) -> Option<StoreStats> {
+        self.plans.store().map(|s| s.stats())
     }
 
     /// Measure `C = A · B` under `cfg`, reusing the session's pool,
@@ -179,7 +209,7 @@ impl SweepSession {
                 let plan = pool.with_local(|ws| SpmmmPlan::build(machine, a, b, key, ws));
                 planned_fill(pool, &plan, a, b, threads, out);
             }),
-            PlanMode::Warm => {
+            PlanMode::Warm | PlanMode::Persisted => {
                 let plan = pool
                     .with_local(|ws| plans.get_or_build(machine, ws, a, b, threads, partition));
                 measure(cfg, || planned_fill(pool, &plan, a, b, threads, out))
@@ -272,6 +302,52 @@ mod tests {
         // The warm series planned through the cache; cold never touched it.
         let s = session.plan_stats();
         assert_eq!(s.symbolic_builds, 2, "one cached plan per thread shape");
+    }
+
+    #[test]
+    fn persisted_mode_warms_from_disk() {
+        use crate::gen::{operand_pair, Workload};
+        use crate::kernels::spmmm;
+        let dir =
+            std::env::temp_dir().join(format!("blazert_sweep_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = BenchConfig { min_time_s: 0.001, trials: 1 };
+        let (a, b) = operand_pair(Workload::FiveBandFd, 120, 3);
+        let reference = spmmm(&a, &b, Strategy::Combined);
+        {
+            // Seeding session: write-through store, warm measurements
+            // build one plan per thread shape.
+            let store = Arc::new(PlanStore::open_default(&dir).expect("store opens"));
+            let mut seed = SweepSession::new(2);
+            assert_eq!(seed.attach_plan_store(&store), 0, "fresh dir has nothing");
+            for threads in [1usize, 2] {
+                seed.measure_spmmm_planned(&cfg, &a, &b, threads, Partition::Flops, PlanMode::Warm);
+            }
+            assert_eq!(seed.plan_stats().symbolic_builds, 2);
+            assert_eq!(store.len(), 2);
+        }
+        // Disk-warm session over the same directory: the Persisted
+        // series runs with zero symbolic work.
+        let store = Arc::new(PlanStore::open_default(&dir).expect("store reopens"));
+        let mut session = SweepSession::new(2);
+        assert_eq!(session.attach_plan_store(&store), 2);
+        for threads in [1usize, 2] {
+            let m = session.measure_spmmm_planned(
+                &cfg,
+                &a,
+                &b,
+                threads,
+                Partition::Flops,
+                PlanMode::Persisted,
+            );
+            assert!(m.best_seconds > 0.0);
+            assert!(session.out.approx_eq(&reference, 0.0), "threads={threads}");
+        }
+        let s = session.plan_stats();
+        assert_eq!(s.symbolic_builds, 0, "disk-warm session never runs the symbolic phase");
+        assert_eq!(s.disk_loads, 2);
+        assert_eq!(session.plan_store_stats().expect("store attached").store_rejected, 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -10,4 +10,7 @@
 
 pub mod pipeline;
 
-pub use pipeline::{run_jobs, run_jobs_on, run_jobs_planned_on, Job, JobKind, JobResult};
+pub use pipeline::{
+    run_jobs, run_jobs_on, run_jobs_planned_on, run_jobs_planned_persistent_on, Job, JobKind,
+    JobResult,
+};

@@ -14,13 +14,13 @@
 //! Jobs run *on* pool workers and therefore must not re-enter the pool
 //! (serial kernels only inside `execute`).
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::exec::{default_machine, serial_spmmm_into, ExecPool, Partition, Workspace};
 use crate::gen::{operand_pair, Workload};
 use crate::kernels::flops::spmmm_flops;
 use crate::kernels::{planned_fill_serial, spmmm, Strategy};
-use crate::plan::PlanCache;
+use crate::plan::{PlanCache, PlanStore};
 use crate::sparse::{CsrMatrix, SparseShape};
 use crate::util::timer::Stopwatch;
 
@@ -155,6 +155,25 @@ pub fn run_jobs_planned_on(pool: &ExecPool, jobs: Vec<Job>, plans: &PlanCache) -
     drain_on(pool, jobs, Some(plans))
 }
 
+/// [`run_jobs_planned_on`] with a disk-backed plan store: the cache
+/// warm-starts from the store *before* the first batch is drained
+/// (every plan a previous process persisted skips its symbolic phase
+/// entirely), and plans built during the drain write through so the
+/// *next* process warm-starts in turn. On a long-lived cache the full
+/// directory scan runs only once — later batches see the store already
+/// attached and rely on write-through plus load-on-miss.
+pub fn run_jobs_planned_persistent_on(
+    pool: &ExecPool,
+    jobs: Vec<Job>,
+    plans: &PlanCache,
+    store: &Arc<PlanStore>,
+) -> Vec<JobResult> {
+    if plans.store().is_none() {
+        plans.warm_from_dir(store);
+    }
+    drain_on(pool, jobs, Some(plans))
+}
+
 fn drain_on(pool: &ExecPool, jobs: Vec<Job>, plans: Option<&PlanCache>) -> Vec<JobResult> {
     if jobs.is_empty() {
         return Vec::new();
@@ -271,6 +290,52 @@ mod tests {
         assert!(second.iter().all(|r| r.verified == Some(true)));
         assert_eq!(plans.stats().symbolic_builds, builds, "batch 2 is symbolic-free");
         assert!(plans.stats().hits >= 6);
+    }
+
+    #[test]
+    fn persistent_pipeline_restarts_without_symbolic_work() {
+        let dir =
+            std::env::temp_dir().join(format!("blazert_pipe_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let scalar_jobs = || -> Vec<Job> {
+            (0..4)
+                .map(|i| Job {
+                    id: i,
+                    workload: if i % 2 == 0 {
+                        Workload::FiveBandFd
+                    } else {
+                        Workload::RandomFixed5
+                    },
+                    n: 80 + 12 * i,
+                    kind: JobKind::Scalar(Strategy::Combined),
+                    seed: i as u64,
+                    verify: true,
+                })
+                .collect()
+        };
+        let pool = ExecPool::new(2);
+        {
+            // "Process A": cold cache, fresh store — every pattern pays
+            // its symbolic phase once and writes through to disk.
+            let store = Arc::new(PlanStore::open_default(&dir).expect("store opens"));
+            let plans = PlanCache::default();
+            let first = run_jobs_planned_persistent_on(&pool, scalar_jobs(), &plans, &store);
+            assert_eq!(first.len(), 4);
+            assert!(first.iter().all(|r| r.verified == Some(true)));
+            assert!(plans.stats().symbolic_builds >= 4);
+            assert_eq!(store.len(), 4, "every plan persisted");
+        }
+        // "Process B": fresh cache, same directory — the warm start
+        // recovers every plan, the whole batch runs symbolic-free.
+        let store = Arc::new(PlanStore::open_default(&dir).expect("store reopens"));
+        let plans = PlanCache::default();
+        let second = run_jobs_planned_persistent_on(&pool, scalar_jobs(), &plans, &store);
+        assert_eq!(second.len(), 4);
+        assert!(second.iter().all(|r| r.verified == Some(true)));
+        let s = plans.stats();
+        assert_eq!(s.symbolic_builds, 0, "restart warm-starts from disk");
+        assert_eq!(s.disk_loads, 4);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::kernels::{
     spmmm_traced, Strategy,
 };
 use crate::model::Machine;
-use crate::plan::{PlanCache, PlanKey, Probe, SpmmmPlan};
+use crate::plan::{PlanCache, PlanKey, PlanStore, Probe, SpmmmPlan};
 use crate::sparse::CsrMatrix;
 use std::sync::Arc;
 
@@ -113,6 +113,21 @@ impl<'t> EvalContext<'t> {
     /// same evaluation shape) skip the symbolic phase entirely after
     /// their plan is built — warm assignment is a pure numeric refill.
     pub fn with_plan_cache(mut self, cache: &'t PlanCache) -> Self {
+        self.plan = Some(cache);
+        self
+    }
+
+    /// Attach a plan cache backed by a persistent on-disk store: the
+    /// cache gains write-through (plans are persisted as they are
+    /// built) and load-on-miss (an unknown pattern consults the store
+    /// before paying a symbolic build), so a restarted process recovers
+    /// its plans from disk instead of re-running every symbolic phase.
+    /// Corrupt or stale store entries silently fall back to the cold
+    /// path. For an eager scan at startup, call
+    /// [`PlanCache::warm_from_dir`] (or
+    /// [`crate::runtime::warm_start_plans`]) first.
+    pub fn with_plan_store(mut self, cache: &'t PlanCache, store: &Arc<PlanStore>) -> Self {
+        cache.attach_store(Arc::clone(store));
         self.plan = Some(cache);
         self
     }
@@ -361,6 +376,39 @@ mod tests {
         par.product_into(&a, &a, &mut out);
         assert!(out.approx_eq(&reference, 0.0));
         assert_eq!(cache.stats().symbolic_builds, 2, "parallel shape planned separately");
+    }
+
+    #[test]
+    fn plan_store_restart_through_the_context() {
+        use crate::gen::fd_poisson_2d;
+        let dir = std::env::temp_dir().join(format!("blazert_ctx_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = fd_poisson_2d(12);
+        let reference = spmmm(&a, &a, Strategy::Combined);
+        let mut out = CsrMatrix::new(0, 0);
+        {
+            let store = Arc::new(PlanStore::open_default(&dir).expect("store opens"));
+            let cache = PlanCache::default();
+            let mut ctx = EvalContext::new().with_plan_store(&cache, &store);
+            // First sight unplanned, second builds + writes through,
+            // third is a warm hit.
+            for _ in 0..3 {
+                ctx.product_into(&a, &a, &mut out);
+                assert!(out.approx_eq(&reference, 0.0));
+            }
+            let s = cache.stats();
+            assert_eq!((s.symbolic_builds, s.disk_writes), (1, 1));
+        }
+        // Simulated restart: fresh cache over the same directory — the
+        // first probe recovers the plan from disk, no symbolic work.
+        let store = Arc::new(PlanStore::open_default(&dir).expect("store reopens"));
+        let cache = PlanCache::default();
+        let mut ctx = EvalContext::new().with_plan_store(&cache, &store);
+        ctx.product_into(&a, &a, &mut out);
+        assert!(out.approx_eq(&reference, 0.0), "disk-warm refill is bit-identical");
+        let s = cache.stats();
+        assert_eq!((s.symbolic_builds, s.disk_loads, s.hits), (0, 1, 1));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -33,7 +33,9 @@
 //!   reusable `SpmmmPlan` freezing the structural output pattern and
 //!   the model-guided per-slab decisions, cached in a bounded LRU keyed
 //!   by operand-pattern fingerprints — warm re-evaluation skips the
-//!   whole structure discovery),
+//!   whole structure discovery — and persisted across processes by a
+//!   versioned, checksummed on-disk `PlanStore`, so a restarted service
+//!   warms from disk instead of re-running every symbolic phase),
 //! * a PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas
 //!   artifacts and a block-sparse spMMM ([`bsr`]) scheduled onto them,
 //! * a job-pipeline coordinator ([`coordinator`]).

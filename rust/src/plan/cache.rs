@@ -23,11 +23,31 @@
 //! ([`PlanStats`]) expose hits, misses, declines, evictions, and —
 //! load-bearing for the steady-state tests — the number of symbolic
 //! builds, which must stay flat while a warm key is re-evaluated.
+//!
+//! A [`PlanStore`] can be attached ([`PlanCache::attach_store`], or the
+//! eager [`PlanCache::warm_from_dir`]), which layers the persistence
+//! policies on top of the LRU:
+//!
+//! * **write-through** — every plan inserted is persisted immediately;
+//! * **load-on-miss** — an unknown key consults the disk before being
+//!   declared a miss, so a restarted process recovers plans lazily;
+//! * **eviction coherence** — when the LRU evicts a planned entry, the
+//!   on-disk copy is removed too, so the memory and disk budgets track
+//!   the same working set and cannot silently diverge.
+//!
+//! Store I/O never runs under the cache mutex: load-on-miss drops the
+//! lock around the disk read (re-checking the table afterwards, since
+//! another thread may have raced the same key — duplicated disk reads,
+//! like duplicated symbolic builds, are benign), and write-through
+//! persists after the insert is published. Only the cheap unlink of
+//! eviction coherence stays inside the lock. Warm hits never touch the
+//! disk at all.
 
 use std::sync::{Arc, Mutex, PoisonError};
 
 use super::fingerprint::PatternFingerprint;
 use super::spmmm_plan::SpmmmPlan;
+use super::store::PlanStore;
 use crate::exec::{Partition, Workspace};
 use crate::model::Machine;
 use crate::sparse::CsrMatrix;
@@ -83,6 +103,11 @@ pub struct PlanStats {
     pub declined: u64,
     /// Entries evicted by the LRU bound.
     pub evictions: u64,
+    /// Plans recovered from an attached [`PlanStore`] (warm-start scans
+    /// and load-on-miss probes) — disk recoveries, not symbolic builds.
+    pub disk_loads: u64,
+    /// Plans written through to an attached [`PlanStore`].
+    pub disk_writes: u64,
 }
 
 /// Outcome of one cache probe.
@@ -116,6 +141,9 @@ struct Inner {
     tick: u64,
     stats: PlanStats,
     entries: Vec<Entry>,
+    /// Attached persistence layer (write-through + load-on-miss +
+    /// eviction coherence); `None` keeps the cache memory-only.
+    store: Option<Arc<PlanStore>>,
 }
 
 /// A bounded LRU of [`SpmmmPlan`]s keyed by operand-pattern
@@ -138,6 +166,7 @@ impl PlanCache {
                 tick: 0,
                 stats: PlanStats::default(),
                 entries: Vec::new(),
+                store: None,
             }),
         }
     }
@@ -150,40 +179,106 @@ impl PlanCache {
     /// Probe `key`, recording it on first sight. See [`Probe`] for the
     /// caller's obligations per outcome.
     pub fn probe(&self, key: &PlanKey) -> Probe {
+        // Fast path entirely under the lock: known keys never touch
+        // the disk.
+        let store = {
+            let mut guard = self.lock();
+            let inner = &mut *guard;
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.entries.iter_mut().find(|e| e.key == *key) {
+                e.used = tick;
+                return match &e.state {
+                    State::Planned(plan) => {
+                        let plan = Arc::clone(plan);
+                        inner.stats.hits += 1;
+                        Probe::Hit(plan)
+                    }
+                    State::Declined => Probe::Declined,
+                    State::Seen => Probe::Candidate,
+                };
+            }
+            match inner.store.clone() {
+                Some(store) => store,
+                None => {
+                    inner.stats.misses += 1;
+                    inner.record(*key, State::Seen);
+                    return Probe::Miss;
+                }
+            }
+        };
+        // Unknown key with a store attached: consult the disk before
+        // declaring a miss (load-on-miss) — *outside* the lock, so a
+        // cold disk read never stalls concurrent warm hits. Two
+        // threads racing the same first sight may both read the file;
+        // the re-check below keeps the table consistent and the
+        // duplicated I/O is as benign as a duplicated symbolic build.
+        let loaded = store.load(key);
         let mut guard = self.lock();
         let inner = &mut *guard;
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(e) = inner.entries.iter_mut().find(|e| e.key == *key) {
+            // Raced: someone recorded this key while we were on disk.
             e.used = tick;
-            return match &e.state {
-                State::Planned(plan) => {
+            match (&mut e.state, loaded) {
+                (State::Planned(plan), _) => {
                     let plan = Arc::clone(plan);
                     inner.stats.hits += 1;
-                    Probe::Hit(plan)
+                    return Probe::Hit(plan);
                 }
-                State::Declined => Probe::Declined,
-                State::Seen => Probe::Candidate,
-            };
+                (State::Declined, _) => return Probe::Declined,
+                (seen, Some(plan)) => {
+                    // The racer only recorded a first sight; our disk
+                    // read upgrades it to a ready plan.
+                    let plan = Arc::new(plan);
+                    *seen = State::Planned(Arc::clone(&plan));
+                    inner.stats.disk_loads += 1;
+                    inner.stats.hits += 1;
+                    return Probe::Hit(plan);
+                }
+                (State::Seen, None) => return Probe::Candidate,
+            }
         }
-        inner.stats.misses += 1;
-        inner.record(*key, State::Seen);
-        Probe::Miss
+        match loaded {
+            Some(plan) => {
+                let plan = Arc::new(plan);
+                inner.stats.disk_loads += 1;
+                inner.stats.hits += 1;
+                inner.record(*key, State::Planned(Arc::clone(&plan)));
+                Probe::Hit(plan)
+            }
+            None => {
+                inner.stats.misses += 1;
+                inner.record(*key, State::Seen);
+                Probe::Miss
+            }
+        }
     }
 
     /// Insert a freshly built plan (counts one symbolic build) and
-    /// return the shared handle.
+    /// return the shared handle. With a store attached, the plan is
+    /// written through to disk — after the insert is published and
+    /// outside the lock, so the fsync never stalls concurrent probes.
     pub fn insert_planned(&self, key: PlanKey, plan: Arc<SpmmmPlan>) -> Arc<SpmmmPlan> {
-        let mut guard = self.lock();
-        let inner = &mut *guard;
-        inner.tick += 1;
-        inner.stats.symbolic_builds += 1;
-        let tick = inner.tick;
-        if let Some(e) = inner.entries.iter_mut().find(|e| e.key == key) {
-            e.state = State::Planned(Arc::clone(&plan));
-            e.used = tick;
-        } else {
-            inner.record(key, State::Planned(Arc::clone(&plan)));
+        let store = {
+            let mut guard = self.lock();
+            let inner = &mut *guard;
+            inner.tick += 1;
+            inner.stats.symbolic_builds += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.entries.iter_mut().find(|e| e.key == key) {
+                e.state = State::Planned(Arc::clone(&plan));
+                e.used = tick;
+            } else {
+                inner.record(key, State::Planned(Arc::clone(&plan)));
+            }
+            inner.store.clone()
+        };
+        if let Some(store) = store {
+            if store.save_as(key, &plan) {
+                self.lock().stats.disk_writes += 1;
+            }
         }
         plan
     }
@@ -231,6 +326,80 @@ impl PlanCache {
         self.insert_planned(key, plan)
     }
 
+    /// Attach a persistent store: from now on inserts write through,
+    /// unknown keys are looked up on disk before counting as misses,
+    /// and LRU evictions of planned entries remove the disk copy too.
+    pub fn attach_store(&self, store: Arc<PlanStore>) {
+        self.lock().store = Some(store);
+    }
+
+    /// The attached store, if any (for stats reporting).
+    pub fn store(&self) -> Option<Arc<PlanStore>> {
+        self.lock().store.clone()
+    }
+
+    /// Warm-start: attach `store` and eagerly load every valid entry it
+    /// holds into the cache as ready plans (no symbolic builds are
+    /// counted — these are disk recoveries). Returns the number of
+    /// plans loaded; corrupt or stale entries are skipped (counted in
+    /// the store's `store_rejected`). If the store holds more plans
+    /// than the cache capacity, the LRU keeps the scan's tail — and,
+    /// by eviction coherence, trims the disk to match.
+    pub fn warm_from_dir(&self, store: &Arc<PlanStore>) -> usize {
+        // Decode outside the cache lock; only the inserts lock.
+        let plans = store.load_all();
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        inner.store = Some(Arc::clone(store));
+        let mut loaded = 0usize;
+        for plan in plans {
+            let key = *plan.key();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.entries.iter_mut().find(|e| e.key == key) {
+                // Keys already planned in memory are not re-counted —
+                // repeated warm calls stay idempotent on the counters.
+                if matches!(e.state, State::Planned(_)) {
+                    continue;
+                }
+                e.state = State::Planned(Arc::new(plan));
+                e.used = tick;
+            } else {
+                inner.record(key, State::Planned(Arc::new(plan)));
+            }
+            inner.stats.disk_loads += 1;
+            loaded += 1;
+        }
+        loaded
+    }
+
+    /// Persist every ready plan currently cached into `store` (an
+    /// explicit flush for caches that ran without write-through, e.g.
+    /// a warm bench session dumping its state for a later process).
+    /// Returns the number of plans written.
+    pub fn persist_to_dir(&self, store: &PlanStore) -> usize {
+        // Snapshot under the lock, write outside it (saves fsync).
+        let planned: Vec<(PlanKey, Arc<SpmmmPlan>)> = {
+            let guard = self.lock();
+            guard
+                .entries
+                .iter()
+                .filter_map(|e| match &e.state {
+                    State::Planned(p) => Some((e.key, Arc::clone(p))),
+                    _ => None,
+                })
+                .collect()
+        };
+        let mut saved = 0usize;
+        for (key, plan) in planned {
+            if store.save_as(key, &plan) {
+                saved += 1;
+            }
+        }
+        self.lock().stats.disk_writes += saved as u64;
+        saved
+    }
+
     /// Counter snapshot.
     pub fn stats(&self) -> PlanStats {
         self.lock().stats
@@ -246,7 +415,10 @@ impl PlanCache {
         self.len() == 0
     }
 
-    /// Drop every entry (stats are kept).
+    /// Drop every entry (stats are kept). Only the memory side: an
+    /// attached store keeps its files — surviving the cache's lifecycle
+    /// is what the store is *for* (eviction coherence applies to budget
+    /// pressure, not to explicit clears).
     pub fn clear(&self) {
         self.lock().entries.clear();
     }
@@ -260,6 +432,11 @@ impl Default for PlanCache {
 
 impl Inner {
     /// Append an entry, evicting the least-recently-used one when full.
+    /// An evicted *planned* entry also loses its on-disk copy when a
+    /// store is attached: under write-through, disk content mirrors the
+    /// cache's planned set, and letting evictions leave files behind
+    /// would let the two budgets drift apart until the store filled
+    /// with plans no process would admit to memory.
     fn record(&mut self, key: PlanKey, state: State) {
         if self.entries.len() >= self.cap {
             if let Some(lru) = self
@@ -269,8 +446,11 @@ impl Inner {
                 .min_by_key(|(_, e)| e.used)
                 .map(|(i, _)| i)
             {
-                self.entries.swap_remove(lru);
+                let victim = self.entries.swap_remove(lru);
                 self.stats.evictions += 1;
+                if let (State::Planned(_), Some(store)) = (&victim.state, &self.store) {
+                    store.remove(&victim.key);
+                }
             }
         }
         let used = self.tick;
@@ -377,6 +557,120 @@ mod tests {
         assert_eq!(cache.stats().symbolic_builds, builds, "survivor still planned");
         cache.get_or_build(&m, &mut ws, &a2, &b2, 1, Partition::Flops);
         assert_eq!(cache.stats().symbolic_builds, builds + 1, "victim was evicted");
+    }
+
+    fn store_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("blazert_cache_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn write_through_and_load_on_miss_round_trip() {
+        use crate::plan::PlanStore;
+        let dir = store_dir("roundtrip");
+        let (a, b) = pair(20);
+        let m = machine();
+        {
+            let store = Arc::new(PlanStore::open_default(&dir).unwrap());
+            let cache = PlanCache::default();
+            cache.attach_store(Arc::clone(&store));
+            cache.get_or_build(&m, &mut Workspace::new(), &a, &b, 2, Partition::Flops);
+            let s = cache.stats();
+            assert_eq!((s.symbolic_builds, s.disk_writes), (1, 1));
+            assert_eq!(store.len(), 1, "insert wrote through");
+        }
+        // Simulated restart: fresh cache + store over the same dir.
+        let store = Arc::new(PlanStore::open_default(&dir).unwrap());
+        let cache = PlanCache::default();
+        cache.attach_store(Arc::clone(&store));
+        let key = PlanKey::of(&m, &a, &b, 2, Partition::Flops);
+        assert!(matches!(cache.probe(&key), Probe::Hit(_)), "load-on-miss recovers the plan");
+        let s = cache.stats();
+        assert_eq!((s.symbolic_builds, s.disk_loads, s.hits, s.misses), (0, 1, 1, 0));
+        // Once recovered, later probes are pure memory hits.
+        assert!(matches!(cache.probe(&key), Probe::Hit(_)));
+        assert_eq!(cache.stats().disk_loads, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_from_dir_loads_everything_without_symbolic_builds() {
+        use crate::plan::PlanStore;
+        let dir = store_dir("warm");
+        let m = machine();
+        let pairs: Vec<_> = (30..33u64).map(pair).collect();
+        {
+            let store = Arc::new(PlanStore::open_default(&dir).unwrap());
+            let cache = PlanCache::default();
+            cache.attach_store(Arc::clone(&store));
+            let mut ws = Workspace::new();
+            for (a, b) in &pairs {
+                cache.get_or_build(&m, &mut ws, a, b, 1, Partition::Flops);
+            }
+            assert_eq!(store.len(), 3);
+        }
+        let store = Arc::new(PlanStore::open_default(&dir).unwrap());
+        let cache = PlanCache::default();
+        assert_eq!(cache.warm_from_dir(&store), 3);
+        assert_eq!(cache.len(), 3);
+        let mut ws = Workspace::new();
+        for (a, b) in &pairs {
+            cache.get_or_build(&m, &mut ws, a, b, 1, Partition::Flops);
+        }
+        let s = cache.stats();
+        assert_eq!(s.symbolic_builds, 0, "warm start leaves nothing to build");
+        assert_eq!((s.disk_loads, s.hits), (3, 3));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn persist_to_dir_flushes_a_memory_only_cache() {
+        use crate::plan::PlanStore;
+        let dir = store_dir("flush");
+        let m = machine();
+        let cache = PlanCache::default();
+        let mut ws = Workspace::new();
+        let (a, b) = pair(40);
+        cache.get_or_build(&m, &mut ws, &a, &b, 1, Partition::Flops);
+        // Seen/Declined entries must not be persisted.
+        let (a2, b2) = pair(41);
+        cache.probe(&PlanKey::of(&m, &a2, &b2, 1, Partition::Flops));
+        cache.decline(PlanKey::of(&m, &a2, &b2, 2, Partition::Flops));
+        let store = PlanStore::open_default(&dir).unwrap();
+        assert_eq!(cache.persist_to_dir(&store), 1);
+        assert_eq!(store.len(), 1, "only ready plans are persisted");
+        assert_eq!(cache.stats().disk_writes, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lru_eviction_also_evicts_the_on_disk_entry() {
+        use crate::plan::PlanStore;
+        let dir = store_dir("evict");
+        let store = Arc::new(PlanStore::open_default(&dir).unwrap());
+        let cache = PlanCache::new(2);
+        cache.attach_store(Arc::clone(&store));
+        let m = machine();
+        let mut ws = Workspace::new();
+        let (a1, b1) = pair(50);
+        let (a2, b2) = pair(51);
+        let (a3, b3) = pair(52);
+        cache.get_or_build(&m, &mut ws, &a1, &b1, 1, Partition::Flops);
+        cache.get_or_build(&m, &mut ws, &a2, &b2, 1, Partition::Flops);
+        assert_eq!(store.len(), 2);
+        // Third plan evicts (a1, b1) from the cache — and, pinning the
+        // coherence invariant, from the disk as well.
+        cache.get_or_build(&m, &mut ws, &a3, &b3, 1, Partition::Flops);
+        assert_eq!(cache.stats().evictions, 1);
+        assert_eq!(store.len(), 2, "disk tracks the cache working set");
+        let evicted = PlanKey::of(&m, &a1, &b1, 1, Partition::Flops);
+        let rejected_before = store.stats().store_rejected;
+        assert!(store.load(&evicted).is_none(), "evicted entry is gone from disk");
+        assert_eq!(store.stats().store_rejected, rejected_before, "gone, not corrupt");
+        assert_eq!(store.stats().evicted, 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //!   evaluation shape + cost-model fingerprint) with observability
 //!   counters ([`cache`]).
 //!
+//! * [`PlanStore`] — a versioned, checksummed on-disk store persisting
+//!   plans *across processes* ([`store`]): the cache warms from it at
+//!   startup (`warm_from_dir`), writes through as plans are built, and
+//!   falls back to a cold symbolic build whenever an entry is missing,
+//!   corrupt, or stale — a restarted service re-warms from disk instead
+//!   of re-running every symbolic phase.
+//!
 //! The **numeric** phase lives with the other kernels
 //! ([`crate::kernels::planned_fill_serial`],
 //! [`crate::kernels::parallel::par_planned_fill`]): it refills values
@@ -34,7 +41,9 @@
 pub mod cache;
 pub mod fingerprint;
 pub mod spmmm_plan;
+pub mod store;
 
 pub use cache::{PlanCache, PlanKey, PlanStats, Probe};
 pub use fingerprint::PatternFingerprint;
 pub use spmmm_plan::{SlabStore, SpmmmPlan};
+pub use store::{PlanStore, StoreStats};

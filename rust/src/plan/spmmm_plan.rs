@@ -207,6 +207,108 @@ impl SpmmmPlan {
             && self.b_nnz == b.nnz()
             && a.cols() == b.rows()
     }
+
+    /// Left-operand population this plan was built for (store payload).
+    pub(crate) fn a_nnz(&self) -> usize {
+        self.a_nnz
+    }
+
+    /// Right-operand population this plan was built for (store payload).
+    pub(crate) fn b_nnz(&self) -> usize {
+        self.b_nnz
+    }
+
+    /// Raw structural row-pointer array (store payload).
+    pub(crate) fn pattern_row_ptr(&self) -> &[usize] {
+        &self.pattern_row_ptr
+    }
+
+    /// Raw structural column array (store payload).
+    pub(crate) fn pattern_cols(&self) -> &[usize] {
+        &self.pattern_cols
+    }
+
+    /// Store modes of all slabs (store payload).
+    pub(crate) fn slab_stores(&self) -> &[SlabStore] {
+        &self.slab_store
+    }
+
+    /// Reassemble a plan from persisted parts, revalidating **every**
+    /// structural invariant the numeric fills rely on — the decode side
+    /// of [`super::store`]. A disk entry is attacker-less but not
+    /// trust-worthy (truncation, bit rot, a fingerprint collision, a
+    /// foreign file under the right name), so nothing is assumed:
+    ///
+    /// * the payload dimensions must match the key's verbatim
+    ///   fingerprint fields (shape, population, inner dimension);
+    /// * `pattern_row_ptr` must be a monotone prefix array of the right
+    ///   length ending at `pattern_cols.len()`;
+    /// * every pattern row must be sorted, duplicate-free, and within
+    ///   the column bound;
+    /// * the slabs must contiguously cover `0..rows` with one store
+    ///   mode each.
+    ///
+    /// Returns `None` on any violation; the caller treats that exactly
+    /// like a missing entry (cold fallback).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_stored(
+        key: PlanKey,
+        rows: usize,
+        cols: usize,
+        a_nnz: usize,
+        b_nnz: usize,
+        pattern_row_ptr: Vec<usize>,
+        pattern_cols: Vec<usize>,
+        slabs: Vec<(usize, usize)>,
+        slab_store: Vec<SlabStore>,
+    ) -> Option<SpmmmPlan> {
+        let key_consistent = key.a.rows == rows
+            && key.b.cols == cols
+            && key.a.nnz == a_nnz
+            && key.b.nnz == b_nnz
+            && key.a.cols == key.b.rows;
+        if !key_consistent {
+            return None;
+        }
+        if pattern_row_ptr.len() != rows + 1
+            || pattern_row_ptr.first() != Some(&0)
+            || pattern_row_ptr.last() != Some(&pattern_cols.len())
+            || !pattern_row_ptr.windows(2).all(|w| w[0] <= w[1])
+        {
+            return None;
+        }
+        let rows_ok = (0..rows).all(|r| {
+            let row = &pattern_cols[pattern_row_ptr[r]..pattern_row_ptr[r + 1]];
+            row.windows(2).all(|w| w[0] < w[1]) && row.last().map_or(true, |&c| c < cols)
+        });
+        if !rows_ok {
+            return None;
+        }
+        if slabs.is_empty() || slabs.len() != slab_store.len() {
+            return None;
+        }
+        let mut next = 0usize;
+        for &(lo, hi) in &slabs {
+            if lo != next || hi < lo {
+                return None;
+            }
+            next = hi;
+        }
+        if next != rows {
+            return None;
+        }
+        Some(SpmmmPlan {
+            key,
+            rows,
+            cols,
+            a_nnz,
+            b_nnz,
+            pattern_row_ptr,
+            pattern_cols,
+            slabs,
+            slab_store,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -310,6 +412,57 @@ mod tests {
         assert!(!plan.matches(&a, &other), "different nnz rejected");
         let smaller = random_fixed_per_row(19, 19, 4, 4);
         assert!(!plan.matches(&smaller, &smaller), "different shape rejected");
+    }
+
+    #[test]
+    fn from_stored_round_trips_and_rejects_torn_parts() {
+        let a = random_fixed_per_row(24, 24, 4, 7);
+        let b = random_fixed_per_row(24, 24, 4, 8);
+        let plan = build(&a, &b, 3);
+        let parts = |f: &dyn Fn(&mut Vec<usize>, &mut Vec<(usize, usize)>)| {
+            let mut cols = plan.pattern_cols().to_vec();
+            let mut slabs = plan.slabs().to_vec();
+            f(&mut cols, &mut slabs);
+            SpmmmPlan::from_stored(
+                *plan.key(),
+                plan.rows(),
+                plan.cols(),
+                plan.a_nnz(),
+                plan.b_nnz(),
+                plan.pattern_row_ptr().to_vec(),
+                cols,
+                slabs,
+                plan.slab_stores().to_vec(),
+            )
+        };
+        let rebuilt = parts(&|_, _| {}).expect("faithful parts reassemble");
+        assert_eq!(rebuilt.pattern_nnz(), plan.pattern_nnz());
+        assert_eq!(rebuilt.slabs(), plan.slabs());
+        for r in 0..plan.rows() {
+            assert_eq!(rebuilt.pattern_row(r), plan.pattern_row(r));
+        }
+        // An unsorted pattern row is rejected.
+        assert!(parts(&|cols, _| cols.swap(0, 1)).is_none());
+        // An out-of-bounds column is rejected.
+        assert!(parts(&|cols, _| cols[0] = 1_000).is_none());
+        // Slabs that do not cover the rows are rejected.
+        assert!(parts(&|_, slabs| slabs.last_mut().unwrap().1 = 7).is_none());
+        // A key whose fingerprints disagree with the payload dims is
+        // rejected (the fingerprint-collision backstop).
+        let mut forged = *plan.key();
+        forged.a.rows += 1;
+        assert!(SpmmmPlan::from_stored(
+            forged,
+            plan.rows(),
+            plan.cols(),
+            plan.a_nnz(),
+            plan.b_nnz(),
+            plan.pattern_row_ptr().to_vec(),
+            plan.pattern_cols().to_vec(),
+            plan.slabs().to_vec(),
+            plan.slab_stores().to_vec(),
+        )
+        .is_none());
     }
 
     #[test]

@@ -1,0 +1,646 @@
+//! Disk-backed persistence for [`SpmmmPlan`]s.
+//!
+//! The in-memory [`super::PlanCache`] dies with the process, so a
+//! restarted service re-pays every symbolic phase — exactly the
+//! structure-discovery cost the paper's model attributes most of the
+//! kernel's non-streaming time to. The [`PlanStore`] keeps plans in a
+//! directory of small self-describing files so the next process warms
+//! its cache from disk instead:
+//!
+//! * **versioned, checksummed format** — every file carries a magic
+//!   word, a format version, and an FNV-1a checksum over the whole
+//!   payload; anything that fails any check *declines to load* (the
+//!   [`StoreStats::store_rejected`] counter) and the caller falls back
+//!   to a cold symbolic build — corruption can cost time, never
+//!   correctness;
+//! * **full revalidation** — the payload is reassembled through
+//!   [`SpmmmPlan::from_stored`], which re-checks every structural
+//!   invariant and cross-checks the payload against the key's verbatim
+//!   shape/nnz fields, so even a fingerprint-colliding entry of the
+//!   wrong structure is rejected;
+//! * **atomic persistence** — writes go to a temp file (fsync'd) and
+//!   are renamed into place, so readers never observe a torn file and a
+//!   crash leaves either the old entry, the new entry, or an ignored
+//!   stray temp;
+//! * **bounded budget** — the directory is capped in bytes;
+//!   least-recently-used entries (loads touch the file mtime) are
+//!   evicted first.
+//!
+//! The store is policy-free by itself; [`super::PlanCache`] layers
+//! write-through, load-on-miss, warm-start, and eviction coherence on
+//! top (`attach_store` / `warm_from_dir` / `persist_to_dir`).
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::SystemTime;
+
+use super::cache::PlanKey;
+use super::fingerprint::PatternFingerprint;
+use super::spmmm_plan::{SlabStore, SpmmmPlan};
+use crate::exec::Partition;
+
+/// File magic: "BZPLAN01" as a little-endian word.
+const MAGIC: u64 = 0x3130_4E41_4C50_5A42;
+
+/// On-disk format version; bump on any layout change. A mismatch is
+/// *ignored* (cold fallback), never migrated in place.
+const FORMAT_VERSION: u64 = 1;
+
+/// Words before the checksummed body: magic, version, checksum. The
+/// checksum deliberately excludes the version word so a future format
+/// can be rejected by its version tag alone, whatever its layout.
+const HEADER_WORDS: usize = 3;
+
+/// Body words ahead of the variable-length arrays: 11 key words
+/// (2 × fingerprint quad, threads, partition, machine) + 7 dimension
+/// words (rows, cols, a_nnz, b_nnz, row_ptr len, cols len, slab count).
+const FIXED_BODY_WORDS: usize = 18;
+
+/// Entry filename extension (everything else in the dir is ignored).
+const EXT: &str = "bzp";
+
+/// FNV-1a over the little-endian bytes of a word stream — the store's
+/// integrity checksum and filename hash.
+fn fnv1a(words: &[u64]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &w in words {
+        for b in w.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+fn partition_tag(p: Partition) -> u64 {
+    match p {
+        Partition::Rows => 0,
+        Partition::Flops => 1,
+        Partition::Model => 2,
+    }
+}
+
+fn partition_from(tag: u64) -> Option<Partition> {
+    match tag {
+        0 => Some(Partition::Rows),
+        1 => Some(Partition::Flops),
+        2 => Some(Partition::Model),
+        _ => None,
+    }
+}
+
+fn slab_store_tag(s: SlabStore) -> u64 {
+    match s {
+        SlabStore::Gather => 0,
+        SlabStore::RegionScan => 1,
+    }
+}
+
+fn slab_store_from(tag: u64) -> Option<SlabStore> {
+    match tag {
+        0 => Some(SlabStore::Gather),
+        1 => Some(SlabStore::RegionScan),
+        _ => None,
+    }
+}
+
+/// The 11-word key block (order is part of the format).
+fn key_words(key: &PlanKey) -> [u64; 11] {
+    [
+        key.a.hash,
+        key.a.rows as u64,
+        key.a.cols as u64,
+        key.a.nnz as u64,
+        key.b.hash,
+        key.b.rows as u64,
+        key.b.cols as u64,
+        key.b.nnz as u64,
+        key.threads as u64,
+        partition_tag(key.partition),
+        key.machine,
+    ]
+}
+
+/// Serialize `(key, plan)` to the on-disk byte layout. The key is
+/// passed separately from `plan.key()` on purpose: the cache persists
+/// under *its* key, and the failure-injection suite forges mismatched
+/// pairs to prove the loader rejects them.
+fn encode(key: &PlanKey, plan: &SpmmmPlan) -> Vec<u8> {
+    let row_ptr = plan.pattern_row_ptr();
+    let cols = plan.pattern_cols();
+    let slabs = plan.slabs();
+    let stores = plan.slab_stores();
+    let mut body: Vec<u64> =
+        Vec::with_capacity(FIXED_BODY_WORDS + row_ptr.len() + cols.len() + 3 * slabs.len());
+    body.extend_from_slice(&key_words(key));
+    body.extend_from_slice(&[
+        plan.rows() as u64,
+        plan.cols() as u64,
+        plan.a_nnz() as u64,
+        plan.b_nnz() as u64,
+        row_ptr.len() as u64,
+        cols.len() as u64,
+        slabs.len() as u64,
+    ]);
+    body.extend(row_ptr.iter().map(|&w| w as u64));
+    body.extend(cols.iter().map(|&w| w as u64));
+    for &(lo, hi) in slabs {
+        body.push(lo as u64);
+        body.push(hi as u64);
+    }
+    body.extend(stores.iter().map(|&s| slab_store_tag(s)));
+
+    let mut bytes = Vec::with_capacity(8 * (HEADER_WORDS + body.len()));
+    for w in [MAGIC, FORMAT_VERSION, fnv1a(&body)].iter().chain(body.iter()) {
+        bytes.extend_from_slice(&w.to_le_bytes());
+    }
+    bytes
+}
+
+/// Strict word-stream reader for `decode` (every read is bounds-checked
+/// so a corrupt length can never panic or over-allocate).
+struct Cursor<'a> {
+    words: &'a [u64],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn word(&mut self) -> Option<u64> {
+        let w = *self.words.get(self.pos)?;
+        self.pos += 1;
+        Some(w)
+    }
+
+    fn size(&mut self) -> Option<usize> {
+        usize::try_from(self.word()?).ok()
+    }
+
+    fn sizes(&mut self, n: usize) -> Option<Vec<usize>> {
+        (0..n).map(|_| self.size()).collect()
+    }
+}
+
+/// Deserialize one store file. Any deviation — magic, version,
+/// checksum, inconsistent lengths, unknown tags, or a payload failing
+/// [`SpmmmPlan::from_stored`]'s revalidation — yields `None`.
+fn decode(bytes: &[u8]) -> Option<SpmmmPlan> {
+    if bytes.len() % 8 != 0 || bytes.len() < 8 * (HEADER_WORDS + FIXED_BODY_WORDS) {
+        return None;
+    }
+    let words: Vec<u64> = bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().expect("chunks_exact(8)")))
+        .collect();
+    if words[0] != MAGIC || words[1] != FORMAT_VERSION {
+        return None;
+    }
+    let body = &words[HEADER_WORDS..];
+    if words[2] != fnv1a(body) {
+        return None;
+    }
+    let mut c = Cursor { words: body, pos: 0 };
+    let key = PlanKey {
+        a: PatternFingerprint {
+            hash: c.word()?,
+            rows: c.size()?,
+            cols: c.size()?,
+            nnz: c.size()?,
+        },
+        b: PatternFingerprint {
+            hash: c.word()?,
+            rows: c.size()?,
+            cols: c.size()?,
+            nnz: c.size()?,
+        },
+        threads: c.size()?,
+        partition: partition_from(c.word()?)?,
+        machine: c.word()?,
+    };
+    let rows = c.size()?;
+    let cols = c.size()?;
+    let a_nnz = c.size()?;
+    let b_nnz = c.size()?;
+    let row_ptr_len = c.size()?;
+    let cols_len = c.size()?;
+    let slab_count = c.size()?;
+    // The arrays must account for the remaining words *exactly* —
+    // checked before any allocation, so corrupt lengths cannot trigger
+    // huge reservations or silent tails.
+    let want = FIXED_BODY_WORDS
+        .checked_add(row_ptr_len)?
+        .checked_add(cols_len)?
+        .checked_add(slab_count.checked_mul(3)?)?;
+    if body.len() != want {
+        return None;
+    }
+    let pattern_row_ptr = c.sizes(row_ptr_len)?;
+    let pattern_cols = c.sizes(cols_len)?;
+    let mut slabs = Vec::with_capacity(slab_count);
+    for _ in 0..slab_count {
+        let lo = c.size()?;
+        let hi = c.size()?;
+        slabs.push((lo, hi));
+    }
+    let mut slab_store = Vec::with_capacity(slab_count);
+    for _ in 0..slab_count {
+        slab_store.push(slab_store_from(c.word()?)?);
+    }
+    SpmmmPlan::from_stored(
+        key,
+        rows,
+        cols,
+        a_nnz,
+        b_nnz,
+        pattern_row_ptr,
+        pattern_cols,
+        slabs,
+        slab_store,
+    )
+}
+
+/// Store observability counters (cheap copies out of the lock).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Entries successfully persisted (writes that reached the rename).
+    pub saved: u64,
+    /// Entries successfully decoded and revalidated.
+    pub loaded: u64,
+    /// Entries that declined to load: truncation, checksum or version
+    /// mismatch, key/payload disagreement, failed revalidation. Every
+    /// rejection falls back to the cold (unplanned or symbolic) path.
+    pub store_rejected: u64,
+    /// Entries evicted by the on-disk budget or removed for cache
+    /// coherence.
+    pub evicted: u64,
+    /// Filesystem errors (persistence is best-effort; I/O failures are
+    /// counted, never raised into the evaluation path).
+    pub io_errors: u64,
+}
+
+struct StoreInner {
+    stats: StoreStats,
+    /// Temp-file uniquifier within this process.
+    seq: u64,
+    /// Running estimate of the directory's entry bytes, so the common
+    /// save is O(1): seeded by a scan at open, bumped per save,
+    /// decremented per remove. Overwrites double-count (the estimate
+    /// only ever errs high), which at worst triggers the corrective
+    /// full scan in `enforce_budget` a little early.
+    approx_bytes: u64,
+}
+
+/// A bounded directory of persisted [`SpmmmPlan`]s, one file per
+/// [`PlanKey`]. Interior-mutable and `Sync`: share one instance (via
+/// `Arc`) between caches, sessions, and services.
+pub struct PlanStore {
+    dir: PathBuf,
+    budget_bytes: u64,
+    inner: Mutex<StoreInner>,
+}
+
+impl PlanStore {
+    /// Default on-disk budget: generous for plan files (tens of KB
+    /// each) while bounded enough for a service state volume.
+    pub const DEFAULT_BUDGET_BYTES: u64 = 64 << 20;
+
+    /// Open (creating if needed) a store over `dir` holding at most
+    /// `budget_bytes` of entries.
+    pub fn open(dir: &Path, budget_bytes: u64) -> std::io::Result<PlanStore> {
+        fs::create_dir_all(dir)?;
+        let store = PlanStore {
+            dir: dir.to_path_buf(),
+            budget_bytes: budget_bytes.max(1),
+            inner: Mutex::new(StoreInner {
+                stats: StoreStats::default(),
+                seq: 0,
+                approx_bytes: 0,
+            }),
+        };
+        let existing = store.total_bytes();
+        store.lock().approx_bytes = existing;
+        Ok(store)
+    }
+
+    /// [`PlanStore::open`] with the default budget.
+    pub fn open_default(dir: &Path) -> std::io::Result<PlanStore> {
+        Self::open(dir, Self::DEFAULT_BUDGET_BYTES)
+    }
+
+    /// The directory entries live in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, StoreInner> {
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// The entry path for `key`: `plan-<fnv64 of the key words>.bzp`.
+    /// Distinct keys colliding on the filename hash (~2⁻⁶⁴) is handled
+    /// at load time — the stored key must equal the requested one.
+    pub fn path_for(&self, key: &PlanKey) -> PathBuf {
+        self.dir.join(format!("plan-{:016x}.{EXT}", fnv1a(&key_words(key))))
+    }
+
+    /// Persist `plan` under its own key. Best-effort: returns `false`
+    /// (and counts an I/O error) instead of panicking on filesystem
+    /// trouble — a failed save costs a future symbolic rebuild, nothing
+    /// else.
+    pub fn save(&self, plan: &SpmmmPlan) -> bool {
+        self.save_as(*plan.key(), plan)
+    }
+
+    /// Persist `plan` under an explicit `key` (the general write entry;
+    /// the failure-injection suite uses it to forge entries whose key
+    /// and payload disagree, which the loader must reject).
+    ///
+    /// Write-temp-then-rename: the entry file is replaced atomically,
+    /// so concurrent readers see the old or the new version, never a
+    /// torn one.
+    pub fn save_as(&self, key: PlanKey, plan: &SpmmmPlan) -> bool {
+        let bytes = encode(&key, plan);
+        let path = self.path_for(&key);
+        let tmp = {
+            let mut inner = self.lock();
+            inner.seq += 1;
+            self.dir.join(format!(".tmp-{}-{}", std::process::id(), inner.seq))
+        };
+        let written = (|| -> std::io::Result<()> {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            // Durability point: the payload is on disk before the
+            // rename publishes it.
+            f.sync_all()?;
+            fs::rename(&tmp, &path)?;
+            Ok(())
+        })();
+        match written {
+            Ok(()) => {
+                let over_budget = {
+                    let mut inner = self.lock();
+                    inner.stats.saved += 1;
+                    inner.approx_bytes += bytes.len() as u64;
+                    inner.approx_bytes > self.budget_bytes
+                };
+                if over_budget {
+                    self.enforce_budget();
+                }
+                true
+            }
+            Err(_) => {
+                let _ = fs::remove_file(&tmp);
+                self.lock().stats.io_errors += 1;
+                false
+            }
+        }
+    }
+
+    /// Load the entry for `key`, if present and valid. A missing file
+    /// is a plain miss; a present-but-invalid file (corrupt, stale
+    /// version, wrong key, failed revalidation) counts one
+    /// [`StoreStats::store_rejected`] and also returns `None` — the
+    /// caller cannot tell the difference and falls back cold either
+    /// way. A successful load touches the file's mtime (LRU recency).
+    pub fn load(&self, key: &PlanKey) -> Option<SpmmmPlan> {
+        let path = self.path_for(key);
+        let bytes = fs::read(&path).ok()?;
+        match decode(&bytes) {
+            Some(plan) if plan.key() == key => {
+                if let Ok(f) = fs::OpenOptions::new().write(true).open(&path) {
+                    let _ = f.set_modified(SystemTime::now());
+                }
+                self.lock().stats.loaded += 1;
+                Some(plan)
+            }
+            _ => {
+                self.lock().stats.store_rejected += 1;
+                None
+            }
+        }
+    }
+
+    /// Decode every valid entry in the directory (rejections counted,
+    /// order deterministic by filename). The warm-start scan.
+    pub fn load_all(&self) -> Vec<SpmmmPlan> {
+        let mut out = Vec::new();
+        let mut paths = self.entry_paths();
+        paths.sort();
+        for path in paths {
+            let bytes = match fs::read(&path) {
+                Ok(b) => b,
+                Err(_) => {
+                    self.lock().stats.io_errors += 1;
+                    continue;
+                }
+            };
+            match decode(&bytes) {
+                Some(plan) => {
+                    self.lock().stats.loaded += 1;
+                    out.push(plan);
+                }
+                None => {
+                    self.lock().stats.store_rejected += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Remove the entry for `key` (cache-eviction coherence). True if a
+    /// file was deleted.
+    pub fn remove(&self, key: &PlanKey) -> bool {
+        let path = self.path_for(key);
+        let len = fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let removed = fs::remove_file(&path).is_ok();
+        if removed {
+            let mut inner = self.lock();
+            inner.stats.evicted += 1;
+            inner.approx_bytes = inner.approx_bytes.saturating_sub(len);
+        }
+        removed
+    }
+
+    /// Number of entry files currently on disk.
+    pub fn len(&self) -> usize {
+        self.entry_paths().len()
+    }
+
+    /// True when no entries are on disk.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total bytes of all entry files.
+    pub fn total_bytes(&self) -> u64 {
+        self.entry_paths()
+            .iter()
+            .filter_map(|p| fs::metadata(p).ok())
+            .map(|m| m.len())
+            .sum()
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> StoreStats {
+        self.lock().stats
+    }
+
+    fn entry_paths(&self) -> Vec<PathBuf> {
+        let Ok(rd) = fs::read_dir(&self.dir) else { return Vec::new() };
+        rd.flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().map_or(false, |e| e == EXT))
+            .collect()
+    }
+
+    /// Evict least-recently-used entries (oldest mtime first, filename
+    /// as tiebreak) until the directory fits the byte budget. Runs only
+    /// when the running estimate crosses the budget; the full scan also
+    /// re-synchronizes the estimate with the actual directory size.
+    fn enforce_budget(&self) {
+        let mut files: Vec<(SystemTime, PathBuf, u64)> = self
+            .entry_paths()
+            .into_iter()
+            .filter_map(|p| {
+                let m = fs::metadata(&p).ok()?;
+                let t = m.modified().ok()?;
+                Some((t, p, m.len()))
+            })
+            .collect();
+        let mut total: u64 = files.iter().map(|f| f.2).sum();
+        if total > self.budget_bytes {
+            files.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+            for (_, path, len) in files {
+                if total <= self.budget_bytes {
+                    break;
+                }
+                if fs::remove_file(&path).is_ok() {
+                    total -= len;
+                    self.lock().stats.evicted += 1;
+                }
+            }
+        }
+        self.lock().approx_bytes = total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Workspace;
+    use crate::gen::random_fixed_per_row;
+    use crate::model::Machine;
+    use crate::sparse::CsrMatrix;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("blazert_store_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn plan_sized(n: usize, seed: u64, threads: usize) -> (CsrMatrix, CsrMatrix, PlanKey, SpmmmPlan) {
+        let a = random_fixed_per_row(n, n, 4, 2 * seed);
+        let b = random_fixed_per_row(n, n, 4, 2 * seed + 1);
+        let machine = Machine::sandy_bridge_i7_2600();
+        let key = PlanKey::of(&machine, &a, &b, threads, Partition::Flops);
+        let plan = SpmmmPlan::build(&machine, &a, &b, key, &mut Workspace::new());
+        (a, b, key, plan)
+    }
+
+    fn plan_for(seed: u64, threads: usize) -> (CsrMatrix, CsrMatrix, PlanKey, SpmmmPlan) {
+        plan_sized(30, seed, threads)
+    }
+
+    #[test]
+    fn encode_decode_round_trip_is_exact() {
+        let (_, _, key, plan) = plan_for(1, 3);
+        let bytes = encode(&key, &plan);
+        let back = decode(&bytes).expect("round trip decodes");
+        assert_eq!(back.key(), plan.key());
+        assert_eq!(back.pattern_nnz(), plan.pattern_nnz());
+        assert_eq!(back.slabs(), plan.slabs());
+        assert_eq!(back.slab_stores(), plan.slab_stores());
+        for r in 0..plan.rows() {
+            assert_eq!(back.pattern_row(r), plan.pattern_row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn save_load_remove_lifecycle() {
+        let d = tmpdir("lifecycle");
+        let store = PlanStore::open_default(&d).unwrap();
+        let (_, _, key, plan) = plan_for(2, 2);
+        assert!(store.load(&key).is_none(), "empty store is a plain miss");
+        assert_eq!(store.stats().store_rejected, 0, "a miss is not a rejection");
+        assert!(store.save(&plan));
+        assert_eq!(store.len(), 1);
+        assert!(store.total_bytes() > 0);
+        let loaded = store.load(&key).expect("persisted plan loads");
+        assert_eq!(loaded.pattern_nnz(), plan.pattern_nnz());
+        assert!(store.remove(&key));
+        assert!(store.is_empty());
+        assert_eq!(
+            store.stats(),
+            StoreStats { saved: 1, loaded: 1, store_rejected: 0, evicted: 1, io_errors: 0 }
+        );
+        fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn load_all_decodes_entries_and_skips_garbage() {
+        let d = tmpdir("load_all");
+        let store = PlanStore::open_default(&d).unwrap();
+        for seed in 3..6u64 {
+            let (_, _, _, plan) = plan_for(seed, 1);
+            assert!(store.save(&plan));
+        }
+        // A foreign .bzp file must be rejected, not crash the scan.
+        fs::write(d.join("plan-ffffffffffffffff.bzp"), b"not a plan at all").unwrap();
+        // Non-.bzp files are ignored outright.
+        fs::write(d.join("README.txt"), b"state dir").unwrap();
+        let plans = store.load_all();
+        assert_eq!(plans.len(), 3);
+        assert_eq!(store.stats().store_rejected, 1);
+        fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn budget_evicts_least_recently_used() {
+        let d = tmpdir("budget");
+        let (_, _, _, probe_plan) = plan_for(10, 1);
+        let entry_bytes = encode(probe_plan.key(), &probe_plan).len() as u64;
+        // Room for roughly two entries of this size.
+        let store = PlanStore::open(&d, 2 * entry_bytes + entry_bytes / 2).unwrap();
+        let keys: Vec<PlanKey> = (10..13u64)
+            .map(|seed| {
+                let (_, _, key, plan) = plan_for(seed, 1);
+                // Distinct mtimes so LRU order is unambiguous even on
+                // coarse filesystem timestamps.
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                assert!(store.save(&plan));
+                key
+            })
+            .collect();
+        assert!(store.total_bytes() <= 2 * entry_bytes + entry_bytes / 2);
+        assert!(store.stats().evicted >= 1);
+        assert!(store.load(&keys[0]).is_none(), "oldest entry was evicted");
+        assert!(store.load(&keys[2]).is_some(), "newest entry survives");
+        assert_eq!(store.stats().store_rejected, 0, "eviction is not corruption");
+        fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn key_mismatch_under_the_right_filename_is_rejected() {
+        let d = tmpdir("key_mismatch");
+        let store = PlanStore::open_default(&d).unwrap();
+        let (_, _, key_a, _) = plan_for(20, 1);
+        let (_, _, _, plan_b) = plan_sized(42, 21, 1);
+        // Forge: key A's filename and header, a wrong-shape plan's
+        // payload. The checksum is valid; the key↔payload cross-check
+        // in the revalidation is what must catch it.
+        assert!(store.save_as(key_a, &plan_b));
+        assert!(store.load(&key_a).is_none());
+        assert_eq!(store.stats().store_rejected, 1);
+        fs::remove_dir_all(&d).ok();
+    }
+}

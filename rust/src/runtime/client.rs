@@ -1,9 +1,25 @@
-//! PJRT client wrapper + artifact manifest.
+//! PJRT client wrapper + artifact manifest + service startup hooks.
+//!
+//! The manifest layer is std-only and always available. The PJRT
+//! execution path needs the vendored `xla` crate and is gated behind
+//! the `pjrt` feature; without it, [`Runtime`] still parses manifests
+//! and reports geometry, but `execute_f32` declines with a clear error
+//! (every artifact-dependent test and example already skips when no
+//! artifacts are present, so the default offline build stays green).
+//!
+//! [`warm_start_plans`] is the service-boot hook of the plan-store
+//! subsystem: a long-running service calls it once at startup to open
+//! the disk-backed [`PlanStore`] under its state directory and warm its
+//! [`PlanCache`] from whatever the previous process persisted — the
+//! "restart without re-warming" path the ROADMAP targets.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
+
+use crate::plan::{PlanCache, PlanStore};
 
 /// One line of `artifacts/manifest.txt` (written by `python -m
 /// compile.aot`): the entry point name, its HLO file and the call
@@ -51,7 +67,10 @@ impl Manifest {
                 fields.insert(k.to_string(), v.to_string());
             }
             let get = |k: &str| -> Result<String> {
-                fields.get(k).cloned().ok_or_else(|| anyhow!("manifest line {}: missing {k}", lineno + 1))
+                fields
+                    .get(k)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("manifest line {}: missing {k}", lineno + 1))
             };
             let args = get("args")?
                 .split(',')
@@ -84,13 +103,40 @@ impl Manifest {
     pub fn param(&self, key: &str) -> Option<usize> {
         self.entries.values().find_map(|e| e.params.get(key).copied())
     }
+
+    /// Validate a call against an entry's declared geometry; shared by
+    /// the real and the stub execution paths so shape errors surface
+    /// identically in both builds.
+    fn validate_call(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<()> {
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown entry point '{name}'"))?;
+        if entry.args.len() != inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", entry.args.len(), inputs.len());
+        }
+        for (i, ((data, shape), expect)) in inputs.iter().zip(&entry.args).enumerate() {
+            if *shape != expect.as_slice() {
+                bail!("{name}: input {i} shape {shape:?} != manifest {expect:?}");
+            }
+            let elems: usize = shape.iter().product();
+            if data.len() != elems {
+                bail!("{name}: input {i} has {} elems, shape wants {elems}", data.len());
+            }
+        }
+        Ok(())
+    }
 }
 
 /// A PJRT CPU runtime holding compiled executables for the artifacts.
+/// Without the `pjrt` feature this is a manifest-only stub: loading and
+/// geometry queries work, execution reports the backend as unavailable.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
-    manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
 }
 
 impl Runtime {
@@ -107,12 +153,20 @@ impl Runtime {
         Self::artifact_dir().join("manifest.txt").exists()
     }
 
-    /// Create a CPU PJRT client and load the manifest (executables are
-    /// compiled lazily per entry point).
+    /// Create a client and load the manifest from the default artifact
+    /// location (executables are compiled lazily per entry point).
     pub fn load_default() -> Result<Runtime> {
         Self::load(&Self::artifact_dir())
     }
 
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Runtime {
     /// Create from an explicit artifact directory.
     pub fn load(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
@@ -123,11 +177,6 @@ impl Runtime {
     /// Platform string of the PJRT backend.
     pub fn platform(&self) -> String {
         self.client.platform_name()
-    }
-
-    /// The manifest.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
     }
 
     /// Compile (or fetch the cached) executable for an entry point.
@@ -158,23 +207,7 @@ impl Runtime {
     /// output of the (single-output) tuple.
     pub fn execute_f32(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
         // Validate against the manifest before handing buffers to XLA.
-        let entry = self
-            .manifest
-            .entries
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown entry point '{name}'"))?;
-        if entry.args.len() != inputs.len() {
-            bail!("{name}: expected {} inputs, got {}", entry.args.len(), inputs.len());
-        }
-        for (i, ((data, shape), expect)) in inputs.iter().zip(&entry.args).enumerate() {
-            if *shape != expect.as_slice() {
-                bail!("{name}: input {i} shape {shape:?} != manifest {expect:?}");
-            }
-            let elems: usize = shape.iter().product();
-            if data.len() != elems {
-                bail!("{name}: input {i} has {} elems, shape wants {elems}", data.len());
-            }
-        }
+        self.manifest.validate_call(name, inputs)?;
         let mut literals = Vec::with_capacity(inputs.len());
         for (data, shape) in inputs {
             let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
@@ -193,6 +226,66 @@ impl Runtime {
         let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
         out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Create from an explicit artifact directory. Manifest errors
+    /// surface exactly as in the PJRT build; only execution is stubbed.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        Ok(Runtime { manifest: Manifest::load(dir)? })
+    }
+
+    /// Platform string — the stub has no backend.
+    pub fn platform(&self) -> String {
+        "pjrt-unavailable".to_string()
+    }
+
+    /// Validate the call against the manifest (same errors as the real
+    /// path), then decline: the PJRT backend is not compiled in.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        self.manifest.validate_call(name, inputs)?;
+        bail!(
+            "{name}: PJRT backend not compiled in \
+             (build with `--features pjrt` and the vendored xla crate)"
+        )
+    }
+}
+
+/// What [`warm_start_plans`] recovered from the state directory.
+#[derive(Debug)]
+pub struct WarmStart {
+    /// The opened store, already attached to the cache (write-through +
+    /// load-on-miss). Keep it (or let the cache's clone keep it) alive
+    /// for the service's lifetime.
+    pub store: Arc<PlanStore>,
+    /// Plans loaded into the cache from disk.
+    pub plans_loaded: usize,
+    /// On-disk entries rejected during the warm scan (corrupt,
+    /// version-mismatched, or failing structural revalidation) — each
+    /// falls back to a cold symbolic build on first use.
+    pub plans_rejected: u64,
+}
+
+/// Service startup hook: open (or create) the disk-backed plan store
+/// under `state_dir`, warm `cache` from every valid entry it holds, and
+/// attach the store to the cache so new plans write through and unknown
+/// patterns are looked up on disk before paying a symbolic build.
+///
+/// Corrupt or stale entries are skipped (counted in
+/// [`WarmStart::plans_rejected`]), never fatal: the worst case of a
+/// damaged state directory is a cold start, exactly as if the directory
+/// were empty.
+pub fn warm_start_plans(
+    cache: &PlanCache,
+    state_dir: &Path,
+    budget_bytes: u64,
+) -> std::io::Result<WarmStart> {
+    let store = Arc::new(PlanStore::open(state_dir, budget_bytes)?);
+    let rejected_before = store.stats().store_rejected;
+    let plans_loaded = cache.warm_from_dir(&store);
+    let plans_rejected = store.stats().store_rejected - rejected_before;
+    Ok(WarmStart { store, plans_loaded, plans_rejected })
 }
 
 #[cfg(test)]
@@ -234,6 +327,35 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    #[test]
+    fn warm_start_recovers_persisted_plans() {
+        use crate::exec::{default_machine, Partition, Workspace};
+        use crate::gen::fd_poisson_2d;
+
+        let dir = std::env::temp_dir().join(format!("blazert_warmstart_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // First boot: empty state dir, nothing to load.
+        let cache = PlanCache::default();
+        let boot = warm_start_plans(&cache, &dir, PlanStore::DEFAULT_BUDGET_BYTES).unwrap();
+        assert_eq!(boot.plans_loaded, 0);
+        assert_eq!(boot.plans_rejected, 0);
+
+        // The attached store writes through as the service builds plans.
+        let a = fd_poisson_2d(10);
+        cache.get_or_build(default_machine(), &mut Workspace::new(), &a, &a, 1, Partition::Flops);
+        assert_eq!(boot.store.len(), 1, "write-through persisted the plan");
+
+        // Simulated restart: a fresh cache warms from the same dir.
+        let cache2 = PlanCache::default();
+        let reboot = warm_start_plans(&cache2, &dir, PlanStore::DEFAULT_BUDGET_BYTES).unwrap();
+        assert_eq!(reboot.plans_loaded, 1);
+        assert_eq!(reboot.plans_rejected, 0);
+        assert_eq!(cache2.stats().symbolic_builds, 0, "no symbolic work on reboot");
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     // Execution paths are covered by rust/tests/integration_runtime.rs
-    // (they need built artifacts).
+    // (they need built artifacts and the `pjrt` feature).
 }

@@ -15,5 +15,5 @@
 pub mod client;
 pub mod tile_engine;
 
-pub use client::{Manifest, ManifestEntry, Runtime};
+pub use client::{warm_start_plans, Manifest, ManifestEntry, Runtime, WarmStart};
 pub use tile_engine::TileEngine;

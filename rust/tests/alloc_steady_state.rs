@@ -10,12 +10,13 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use blazert::exec::ExecPool;
+use blazert::exec::{default_machine, ExecPool, Partition};
 use blazert::expr::{EvalContext, SparseOperand};
 use blazert::gen::{operand_pair, Workload};
 use blazert::kernels::{spmmm, Strategy};
-use blazert::plan::PlanCache;
+use blazert::plan::{PlanCache, PlanStore};
 use blazert::sparse::CsrMatrix;
+use std::sync::Arc;
 
 struct CountingAlloc;
 
@@ -116,4 +117,50 @@ fn warm_pool_evaluation_allocates_nothing() {
         assert_eq!(after.hits, stats.hits + 5, "every hot evaluation is a cache hit");
         assert!(out.approx_eq(&planned_reference, 0.0));
     }
+
+    // Disk-warm path: a fresh cache warmed from an on-disk plan store
+    // (the simulated restart). All allocation is confined to the load
+    // phase — once `warm_from_dir` has run and the first refill has
+    // warmed the scratch, repeated planned evaluations allocate
+    // nothing and never run the symbolic phase.
+    let dir = std::env::temp_dir().join(format!("blazert_alloc_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    {
+        let seed_store = Arc::new(PlanStore::open_default(&dir).expect("store opens"));
+        let seed_cache = PlanCache::default();
+        seed_cache.attach_store(Arc::clone(&seed_store));
+        pool.with_local(|ws| {
+            for threads in [1usize, 2] {
+                seed_cache.get_or_build(default_machine(), ws, &fa, &fb, threads, Partition::Flops);
+            }
+        });
+        assert_eq!(seed_store.len(), 2, "seed plans persisted");
+    }
+    let store = Arc::new(PlanStore::open_default(&dir).expect("store reopens"));
+    let warm_cache = PlanCache::default();
+    assert_eq!(warm_cache.warm_from_dir(&store), 2, "restart recovers both plans");
+    for threads in [1usize, 2] {
+        let mut ctx = EvalContext::new()
+            .with_exec(&pool)
+            .with_threads(threads)
+            .with_plan_cache(&warm_cache);
+        for _ in 0..2 {
+            (&fa * &fb).assign_to(&mut out, &mut ctx);
+        }
+        let before = allocs();
+        for _ in 0..5 {
+            (&fa * &fb).assign_to(&mut out, &mut ctx);
+        }
+        assert_eq!(
+            allocs(),
+            before,
+            "disk-warm hot loop must not allocate (threads={threads})"
+        );
+        assert!(out.approx_eq(&planned_reference, 0.0));
+    }
+    let s = warm_cache.stats();
+    assert_eq!(s.symbolic_builds, 0, "disk-warm path never runs the symbolic phase");
+    assert_eq!(s.disk_loads, 2, "both plans came from the load phase");
+    assert_eq!(s.misses, 0, "every planned evaluation hit the warmed cache");
+    std::fs::remove_dir_all(&dir).ok();
 }

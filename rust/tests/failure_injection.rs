@@ -145,3 +145,140 @@ fn cli_parser_failure_modes() {
     .unwrap();
     assert!(a.get_parsed_or("n", 0usize).unwrap_err().contains("zz"));
 }
+
+// ---------------------------------------------------------------------
+// Plan-store corruption: every damaged on-disk entry must *decline to
+// load* (bumping the store's `store_rejected` counter) and fall back
+// bit-identically to the unplanned kernel — corruption may cost a
+// symbolic rebuild, never correctness, and never a panic.
+// ---------------------------------------------------------------------
+
+use blazert::exec::{Partition, Workspace};
+use blazert::expr::EvalContext;
+use blazert::gen::fd_poisson_2d;
+use blazert::model::Machine;
+use blazert::plan::{PlanCache, PlanKey, PlanStore, SpmmmPlan};
+use std::sync::Arc;
+
+/// A store in a fresh directory holding one valid persisted plan for
+/// `a · a` under the default evaluation shape, plus that entry's key.
+fn seeded_store(tag: &str, a: &CsrMatrix) -> (std::path::PathBuf, Arc<PlanStore>, PlanKey) {
+    let d = tmpdir(tag);
+    let machine = Machine::sandy_bridge_i7_2600();
+    let key = PlanKey::of(&machine, a, a, 1, Partition::default());
+    let plan = SpmmmPlan::build(&machine, a, a, key, &mut Workspace::new());
+    let store = Arc::new(PlanStore::open_default(&d).expect("store opens"));
+    assert!(store.save(&plan), "seeding save succeeds");
+    (d, store, key)
+}
+
+/// The corrupted entry must decline (`store_rejected` reaches
+/// `expect_rejections` counting the explicit load probe plus the
+/// evaluation's load-on-miss), and the evaluation must fall back to the
+/// unplanned kernel with a bit-identical result.
+fn assert_rejects_and_falls_back(
+    store: &Arc<PlanStore>,
+    key: &PlanKey,
+    a: &CsrMatrix,
+    expect_rejections: u64,
+) {
+    assert!(store.load(key).is_none(), "corrupt entry must decline to load");
+    let cache = PlanCache::default();
+    let mut ctx = EvalContext::new().with_plan_store(&cache, store);
+    let mut out = CsrMatrix::new(0, 0);
+    ctx.product_into(a, a, &mut out);
+    let reference = spmmm(a, a, Strategy::Combined);
+    assert!(out.approx_eq(&reference, 0.0), "fallback must be bit-identical to unplanned");
+    let s = cache.stats();
+    assert_eq!(s.disk_loads, 0, "nothing valid was recovered");
+    assert_eq!(s.misses, 1, "the probe fell through to a cold miss");
+    assert_eq!(store.stats().store_rejected, expect_rejections);
+}
+
+#[test]
+fn plan_store_rejects_truncated_file() {
+    let a = fd_poisson_2d(10);
+    let (d, store, key) = seeded_store("plan_trunc", &a);
+    let path = store.path_for(&key);
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert_rejects_and_falls_back(&store, &key, &a, 2);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn plan_store_rejects_flipped_checksum_byte() {
+    let a = fd_poisson_2d(10);
+    let (d, store, key) = seeded_store("plan_cksum", &a);
+    let path = store.path_for(&key);
+    let mut bytes = std::fs::read(&path).unwrap();
+    // Word 2 (bytes 16..24) is the checksum; flipping any of its bits
+    // must fail verification against the (intact) body.
+    bytes[16] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    assert_rejects_and_falls_back(&store, &key, &a, 2);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn plan_store_rejects_flipped_payload_byte() {
+    let a = fd_poisson_2d(10);
+    let (d, store, key) = seeded_store("plan_payload", &a);
+    let path = store.path_for(&key);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    assert_rejects_and_falls_back(&store, &key, &a, 2);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn plan_store_rejects_wrong_format_version() {
+    let a = fd_poisson_2d(10);
+    let (d, store, key) = seeded_store("plan_version", &a);
+    let path = store.path_for(&key);
+    let mut bytes = std::fs::read(&path).unwrap();
+    // Word 1 (bytes 8..16) is the format version. The checksum covers
+    // only the body, so this file is "valid" except for its version —
+    // exercising the version gate specifically.
+    bytes[8..16].copy_from_slice(&99u64.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    assert_rejects_and_falls_back(&store, &key, &a, 2);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn plan_store_rejects_colliding_key_with_mismatched_shape() {
+    let a = fd_poisson_2d(10);
+    let d = tmpdir("plan_collide");
+    let machine = Machine::sandy_bridge_i7_2600();
+    let key = PlanKey::of(&machine, &a, &a, 1, Partition::default());
+    let store = Arc::new(PlanStore::open_default(&d).expect("store opens"));
+    // Forge a store entry that sits under `key`'s filename, carries
+    // `key` in its header, passes version and checksum — but whose
+    // payload describes a different-shaped product (what a 64-bit
+    // fingerprint collision between different structures would look
+    // like on disk). The structural revalidation must refuse it.
+    let big = fd_poisson_2d(14);
+    let key_big = PlanKey::of(&machine, &big, &big, 1, Partition::default());
+    let plan_big = SpmmmPlan::build(&machine, &big, &big, key_big, &mut Workspace::new());
+    assert!(store.save_as(key, &plan_big));
+    assert_rejects_and_falls_back(&store, &key, &a, 2);
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn plan_store_warm_scan_skips_corrupt_entries() {
+    // A directory mixing one valid and one garbage entry: the warm
+    // scan recovers the valid plan, rejects the garbage, and never
+    // panics — the worst case of a damaged state dir is a partial warm
+    // start.
+    let a = fd_poisson_2d(10);
+    let (d, store, _key) = seeded_store("plan_mixed", &a);
+    std::fs::write(d.join("plan-0000000000000000.bzp"), b"garbage").unwrap();
+    let cache = PlanCache::default();
+    assert_eq!(cache.warm_from_dir(&store), 1, "the valid entry still loads");
+    assert_eq!(store.stats().store_rejected, 1, "the garbage entry was rejected");
+    std::fs::remove_dir_all(&d).ok();
+}

@@ -371,3 +371,96 @@ fn prop_flops_formula_vs_naive_count() {
         }
     });
 }
+
+/// Rebuild `m` with fresh random values on the identical structure.
+fn with_random_values(m: &CsrMatrix, rng: &mut Pcg64) -> CsrMatrix {
+    CsrMatrix::from_parts(
+        m.rows(),
+        m.cols(),
+        m.row_ptr().to_vec(),
+        m.col_idx().to_vec(),
+        (0..m.nnz()).map(|_| rng.nonzero_value()).collect(),
+    )
+}
+
+#[test]
+fn prop_fingerprint_invariant_under_values() {
+    check_default("fingerprint ignores values", |rng, _| {
+        let a = arb_matrix(rng, 50);
+        let b = with_random_values(&a, rng);
+        if a.pattern_fingerprint() != b.pattern_fingerprint() {
+            return Err(format!(
+                "same {}x{} structure, different values => different fingerprint",
+                a.rows(),
+                a.cols()
+            ));
+        }
+        // The invariance carries through the CSC form too.
+        if csr_to_csc(&a).pattern_fingerprint() != csr_to_csc(&b).pattern_fingerprint() {
+            return Err("CSC fingerprint saw the values".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fingerprint_sensitive_to_one_moved_nnz() {
+    check_default("single moved nnz changes the hash", |rng, _| {
+        let a = arb_matrix(rng, 50);
+        if a.nnz() == 0 {
+            return Ok(());
+        }
+        // Pick a random stored entry and move it to a column its row
+        // does not populate (skip rows that are already full).
+        let entry = rng.below(a.nnz());
+        let row = match a.row_ptr().iter().position(|&p| p > entry) {
+            Some(p) => p - 1,
+            None => return Ok(()),
+        };
+        let (idx, _) = a.row(row);
+        if idx.len() == a.cols() {
+            return Ok(());
+        }
+        let free = (0..a.cols())
+            .filter(|c| !idx.contains(c))
+            .nth(rng.below(a.cols() - idx.len()))
+            .expect("a free column exists");
+        let mut cols: Vec<usize> = idx.to_vec();
+        cols[entry - a.row_ptr()[row]] = free;
+        cols.sort_unstable();
+        let mut all = a.col_idx().to_vec();
+        all[a.row_ptr()[row]..a.row_ptr()[row + 1]].copy_from_slice(&cols);
+        let moved = CsrMatrix::from_parts(
+            a.rows(),
+            a.cols(),
+            a.row_ptr().to_vec(),
+            all,
+            a.values().to_vec(),
+        );
+        if a.pattern_fingerprint().hash == moved.pattern_fingerprint().hash {
+            return Err(format!(
+                "moving one nnz of a {}x{} matrix kept the hash",
+                a.rows(),
+                a.cols()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fingerprint_stable_across_csr_csc_round_trip() {
+    check_default("fingerprint survives csr->csc->csr", |rng, _| {
+        let a = arb_matrix(rng, 50);
+        let back = csc_to_csr(&csr_to_csc(&a));
+        if a.pattern_fingerprint() != back.pattern_fingerprint() {
+            return Err("round trip changed the CSR fingerprint".into());
+        }
+        // And the CSC fingerprint is itself deterministic across
+        // independent conversions of the same structure.
+        if csr_to_csc(&a).pattern_fingerprint() != csr_to_csc(&back).pattern_fingerprint() {
+            return Err("round trip changed the CSC fingerprint".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,128 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment is fully offline, so the real `anyhow` cannot
+//! be fetched; this shim provides exactly the subset the workspace uses
+//! — a string-carrying [`Error`], the [`Result`] alias, the [`anyhow!`]
+//! and [`bail!`] macros, and the [`Context`] extension trait — with the
+//! same names and call shapes, so swapping the real crate back in is a
+//! one-line `Cargo.toml` change.
+
+use std::fmt;
+
+/// A message-carrying error value.
+///
+/// Unlike the real `anyhow::Error` it stores only the rendered message
+/// (no source chain, no backtrace); `Display` and `Debug` both print
+/// that message, which is what the workspace's error paths rely on.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors the real crate: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent (and `?` work on any std error type).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with this crate's [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait attaching context to an error (`context` /
+/// `with_context`), rendered as `"{context}: {error}"`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_debug_render_the_message() {
+        let e = anyhow!("broke at {}", 7);
+        assert_eq!(e.to_string(), "broke at 7");
+        assert_eq!(format!("{e:?}"), "broke at 7");
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "inner"));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<u32> {
+            Ok("42".parse::<u32>()?)
+        }
+        assert_eq!(parse().unwrap(), 42);
+        fn fails() -> Result<u32> {
+            Ok("x".parse::<u32>()?)
+        }
+        assert!(fails().is_err());
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("refused: {}", 9);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "refused: 9");
+    }
+}
