@@ -4,6 +4,11 @@
 //! scheduling.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! Add `--features simd` to run the lane-unrolled numeric phase
+//! (4-wide unrolled accumulate/harvest loops + software prefetch on
+//! the planned refills) — results are bit-identical either way; only
+//! the throughput figures should move.
 
 use blazert::expr::{choose_strategy, EvalContext, Expression, SparseOperand};
 use blazert::gen::{fd_poisson_2d, random_fixed_per_row};

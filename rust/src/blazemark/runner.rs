@@ -8,10 +8,10 @@ use std::sync::Arc;
 
 use crate::exec::{serial_spmmm_into, ExecPool, Partition};
 use crate::kernels::parallel::{par_planned_fill, par_spmmm_into};
-use crate::kernels::{planned_fill_serial, Strategy};
-use crate::model::Machine;
+use crate::kernels::{planned_fill_serial, planned_fill_serial_csc, Strategy};
+use crate::model::{percent_of_roofline, Machine};
 use crate::plan::{PlanCache, PlanKey, PlanStats, PlanStore, SpmmmPlan, StoreStats};
-use crate::sparse::CsrMatrix;
+use crate::sparse::{CscMatrix, CsrMatrix};
 use crate::util::timer::Stopwatch;
 
 /// Measurement protocol parameters.
@@ -123,6 +123,7 @@ pub struct SweepSession {
     pool: ExecPool,
     machine: Machine,
     out: CsrMatrix,
+    out_csc: CscMatrix,
     plans: PlanCache,
 }
 
@@ -133,6 +134,7 @@ impl SweepSession {
             pool: ExecPool::new(threads),
             machine: Machine::sandy_bridge_i7_2600(),
             out: CsrMatrix::new(0, 0),
+            out_csc: CscMatrix::new(0, 0),
             plans: PlanCache::default(),
         }
     }
@@ -140,6 +142,30 @@ impl SweepSession {
     /// The session's pool (for pipeline-style use).
     pub fn pool(&self) -> &ExecPool {
         &self.pool
+    }
+
+    /// The cost model the session measures against.
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    /// The session's reused row-major output (the last product measured).
+    pub fn out(&self) -> &CsrMatrix {
+        &self.out
+    }
+
+    /// The session's reused column-major output.
+    pub fn out_csc(&self) -> &CscMatrix {
+        &self.out_csc
+    }
+
+    /// Percent of the model's roofline a measurement achieved for a
+    /// kernel doing `flops` over at least `bytes` of memory traffic —
+    /// the validation figure the ablation benches print per kernel
+    /// ([`crate::model::percent_of_roofline`] against the session's
+    /// machine).
+    pub fn roofline_percent(&self, flops: f64, bytes: f64, m: &Measurement) -> f64 {
+        percent_of_roofline(&self.machine, flops, bytes, m.best_seconds)
     }
 
     /// Counter snapshot of the session's plan cache.
@@ -213,6 +239,43 @@ impl SweepSession {
                 let plan = pool
                     .with_local(|ws| plans.get_or_build(machine, ws, a, b, threads, partition));
                 measure(cfg, || planned_fill(pool, &plan, a, b, threads, out))
+            }
+        }
+    }
+
+    /// Column-major analog of [`SweepSession::measure_spmmm_planned`]:
+    /// measure the planned evaluation of a CSC · CSC product into the
+    /// session's reused CSC output. The numeric phase is the serial
+    /// streaming fill ([`crate::kernels::planned_fill_serial_csc`]) —
+    /// CSC appends are inherently sequential per column — so `threads`
+    /// only shapes the plan's column slabs (and the cache key).
+    pub fn measure_spmmm_csc_planned(
+        &mut self,
+        cfg: &BenchConfig,
+        a: &CscMatrix,
+        b: &CscMatrix,
+        threads: usize,
+        partition: Partition,
+        mode: PlanMode,
+    ) -> Measurement {
+        let SweepSession { pool, machine, out_csc, plans, .. } = self;
+        match mode {
+            PlanMode::Cold => measure(cfg, || {
+                let key = PlanKey::of_csc(machine, a, b, threads, partition);
+                let plan = pool.with_local(|ws| SpmmmPlan::build_csc(machine, a, b, key, ws));
+                pool.with_local(|ws| {
+                    planned_fill_serial_csc(&plan, a, b, &mut ws.plan_temp, out_csc)
+                });
+            }),
+            PlanMode::Warm | PlanMode::Persisted => {
+                let plan = pool.with_local(|ws| {
+                    plans.get_or_build_csc(machine, ws, a, b, threads, partition)
+                });
+                measure(cfg, || {
+                    pool.with_local(|ws| {
+                        planned_fill_serial_csc(&plan, a, b, &mut ws.plan_temp, out_csc)
+                    })
+                })
             }
         }
     }
@@ -302,6 +365,31 @@ mod tests {
         // The warm series planned through the cache; cold never touched it.
         let s = session.plan_stats();
         assert_eq!(s.symbolic_builds, 2, "one cached plan per thread shape");
+    }
+
+    #[test]
+    fn csc_planned_sweep_hits_the_plan_cache() {
+        use crate::gen::{operand_pair, Workload};
+        use crate::kernels::spmmm_csc;
+        use crate::sparse::convert::csr_to_csc;
+        let cfg = BenchConfig { min_time_s: 0.001, trials: 1 };
+        let (ra, rb) = operand_pair(Workload::FiveBandFd, 140, 7);
+        let (a, b) = (csr_to_csc(&ra), csr_to_csc(&rb));
+        let reference = spmmm_csc(&a, &b, Strategy::Combined);
+        let mut session = SweepSession::new(2);
+        for mode in [PlanMode::Cold, PlanMode::Warm, PlanMode::Warm] {
+            let m = session.measure_spmmm_csc_planned(&cfg, &a, &b, 2, Partition::Flops, mode);
+            assert!(m.best_seconds > 0.0);
+            assert!(session.out_csc.approx_eq(&reference, 0.0), "mode={mode:?}");
+        }
+        let s = session.plan_stats();
+        assert_eq!(s.symbolic_builds, 1, "one plan for the repeated CSC product");
+        assert!(s.hits >= 1, "warm repeats hit the cache");
+        // The validation figure is well-defined for a real measurement.
+        let m =
+            session.measure_spmmm_csc_planned(&cfg, &a, &b, 2, Partition::Flops, PlanMode::Warm);
+        let pct = session.roofline_percent(1.0e6, 3.2e7, &m);
+        assert!(pct > 0.0 && pct.is_finite());
     }
 
     #[test]

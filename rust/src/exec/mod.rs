@@ -27,7 +27,7 @@ mod partition;
 mod pool;
 mod workspace;
 
-pub use partition::{row_seconds, slab_bounds_into, Partition};
+pub use partition::{col_seconds, col_slab_bounds_into, row_seconds, slab_bounds_into, Partition};
 pub use pool::{default_machine, ExecPool};
 pub use workspace::{Workspace, WsAccum};
 

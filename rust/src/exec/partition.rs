@@ -14,7 +14,7 @@
 
 use crate::kernels::flops;
 use crate::model::{roofline_seconds, Machine};
-use crate::sparse::{CsrMatrix, SparseShape};
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
 
 /// How the parallel kernel splits C's rows into contiguous slabs.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
@@ -91,15 +91,28 @@ pub fn slab_bounds_into(
         bounds.extend((0..slabs).map(|t| (rows * t / slabs, rows * (t + 1) / slabs)));
         return;
     }
+    cut_quantiles(total, cost, rows, slabs, bounds);
+}
+
+/// Cut `units` cost-weighted work items into `slabs` contiguous
+/// quantile slabs — the shared core of [`slab_bounds_into`] (units are
+/// output rows) and [`col_slab_bounds_into`] (units are output columns).
+fn cut_quantiles(
+    total: f64,
+    cost: &[f64],
+    units: usize,
+    slabs: usize,
+    bounds: &mut Vec<(usize, usize)>,
+) {
     let mut running = 0.0;
     let mut lo = 0usize;
     for s in 0..slabs {
         let target =
             if s + 1 == slabs { f64::INFINITY } else { total * (s + 1) as f64 / slabs as f64 };
         let mut hi = lo;
-        while hi < rows && running < target {
+        while hi < units && running < target {
             let with = running + cost[hi];
-            // Closer-boundary rule: defer this row to the next slab when
+            // Closer-boundary rule: defer this unit to the next slab when
             // stopping here lands nearer the quantile than overshooting
             // past it — this is what hands a hot row a slab of its own.
             if with - target > target - running {
@@ -111,6 +124,56 @@ pub fn slab_bounds_into(
         bounds.push((lo, hi));
         lo = hi;
     }
+}
+
+/// Per-column predicted cost (seconds) of computing column `c` of the
+/// column-major product `C = A·B` on `machine` — the column mirror of
+/// [`row_seconds`]: the multiplication count of column c is Σ ā_k over
+/// the entries k of B's column c (ā_k = population of A's column k).
+pub fn col_seconds(machine: &Machine, a: &CscMatrix, b: &CscMatrix, c: usize) -> f64 {
+    let est: usize = b.col_indices(c).iter().map(|&k| a.col_nnz(k)).sum();
+    let est = est as f64;
+    let pop = est.min(a.rows() as f64);
+    let bytes = 16.0 * b.col_nnz(c) as f64 + 32.0 * est + 24.0 * pop;
+    roofline_seconds(machine, 2.0 * est, bytes)
+}
+
+/// Compute `slabs` contiguous *column* ranges of the column-major
+/// product `C = A·B` into `bounds` — the CSC analogue of
+/// [`slab_bounds_into`], feeding [`crate::plan::SpmmmPlan::build_csc`].
+/// Bounds are contiguous and cover `0..b.cols()` exactly.
+pub fn col_slab_bounds_into(
+    partition: Partition,
+    machine: &Machine,
+    a: &CscMatrix,
+    b: &CscMatrix,
+    slabs: usize,
+    cost: &mut Vec<f64>,
+    bounds: &mut Vec<(usize, usize)>,
+) {
+    let cols = b.cols();
+    let slabs = slabs.max(1);
+    bounds.clear();
+    let total = match partition {
+        Partition::Rows => 0.0,
+        Partition::Flops => {
+            cost.clear();
+            cost.extend((0..cols).map(|c| {
+                b.col_indices(c).iter().map(|&k| a.col_nnz(k)).sum::<usize>() as f64
+            }));
+            cost.iter().sum()
+        }
+        Partition::Model => {
+            cost.clear();
+            cost.extend((0..cols).map(|c| col_seconds(machine, a, b, c)));
+            cost.iter().sum()
+        }
+    };
+    if partition == Partition::Rows || total <= 0.0 {
+        bounds.extend((0..slabs).map(|t| (cols * t / slabs, cols * (t + 1) / slabs)));
+        return;
+    }
+    cut_quantiles(total, cost, cols, slabs, bounds);
 }
 
 #[cfg(test)]
@@ -209,6 +272,25 @@ mod tests {
         slab_bounds_into(Partition::Flops, &machine, &z, &z, 3, &mut cost, &mut bounds);
         check_cover(&bounds, 10);
         assert!(bounds.iter().all(|&(lo, hi)| hi - lo <= 4));
+    }
+
+    #[test]
+    fn col_partitions_cover_all_columns() {
+        use crate::sparse::convert::csr_to_csc;
+        let machine = Machine::sandy_bridge_i7_2600();
+        let a = csr_to_csc(&random_power_law(61, 53, 30, 1.0, 7));
+        let b = csr_to_csc(&random_fixed_per_row(53, 47, 5, 8));
+        let (mut cost, mut bounds) = (Vec::new(), Vec::new());
+        for part in Partition::ALL {
+            for slabs in [1usize, 2, 5, 47, 90] {
+                col_slab_bounds_into(part, &machine, &a, &b, slabs, &mut cost, &mut bounds);
+                assert_eq!(bounds.len(), slabs, "{part:?} slabs={slabs}");
+                check_cover(&bounds, 47);
+            }
+        }
+        // Column costs are nonnegative and the flop-balanced cut agrees
+        // with the CSR partitioner's invariants (contiguous quantiles).
+        assert!((0..47).all(|c| col_seconds(&machine, &a, &b, c) >= 0.0));
     }
 
     #[test]

@@ -62,6 +62,20 @@ impl Workspace {
         Workspace::default()
     }
 
+    /// The planned numeric phase's dense temporary, grown to cover at
+    /// least `len` slots rounded up to whole 64-byte cache lines
+    /// ([`crate::kernels::simd::padded_len`]) — the aligned scratch the
+    /// lane-unrolled fill kernels run over. Monotone like every other
+    /// workspace buffer: zero allocations once warm, all-zero between
+    /// products.
+    pub fn plan_temp_mut(&mut self, len: usize) -> &mut Vec<f64> {
+        let want = crate::kernels::simd::padded_len(len);
+        if self.plan_temp.len() < want {
+            self.plan_temp.resize(want, 0.0);
+        }
+        &mut self.plan_temp
+    }
+
     /// The cached accumulator of strategy type `A`, grown to cover a
     /// dense temporary of length `size`. First use allocates; every
     /// later use at the same (or smaller) size reuses the buffers
@@ -126,6 +140,15 @@ mod tests {
         assert_eq!(acc.minmax_rows + acc.sort_rows, 1, "same cached instance");
         // A *different* strategy gets its own slot.
         let _: &mut Sort = ws.accumulator(64);
+    }
+
+    #[test]
+    fn plan_temp_is_line_padded_and_monotone() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.plan_temp_mut(5).len(), 8, "padded to one cache line");
+        assert_eq!(ws.plan_temp_mut(13).len(), 16);
+        assert_eq!(ws.plan_temp_mut(3).len(), 16, "never shrinks");
+        assert!(ws.plan_temp.iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -63,13 +63,15 @@ pub mod combined_pre;
 pub mod flops;
 pub mod gustavson;
 pub mod parallel;
+pub mod simd;
 pub mod spmmm;
 pub mod spmv;
 pub mod store;
 pub mod tracer;
 
 pub use spmmm::{
-    planned_fill_serial, spmmm, spmmm_csc, spmmm_csc_traced, spmmm_csr_csc, spmmm_into,
-    spmmm_into_traced, spmmm_traced, spmmm_with, Strategy,
+    planned_fill_csr_csc, planned_fill_serial, planned_fill_serial_csc, spmmm, spmmm_csc,
+    spmmm_csc_traced, spmmm_csr_csc, spmmm_into, spmmm_into_traced, spmmm_traced, spmmm_with,
+    Strategy,
 };
 pub use tracer::{MemTracer, NullTracer};

@@ -32,6 +32,7 @@
 //! memory-bound kernel (§IV-A: 16 B/Flop ≫ machine balance).
 
 use crate::exec::{serial_spmmm_into, slab_bounds_into, ExecPool, Partition, WsAccum};
+use crate::kernels::simd;
 use crate::kernels::store::{CountSink, Sink};
 use crate::kernels::tracer::NullTracer;
 use crate::kernels::Strategy;
@@ -248,10 +249,8 @@ pub fn par_planned_fill(
     let col_base = SendPtr(col_idx.as_mut_ptr());
     let val_base = SendPtr(values.as_mut_ptr());
     pool.run(workers, &|w, ws| {
-        let temp = &mut ws.plan_temp;
-        if temp.len() < cols {
-            temp.resize(cols, 0.0);
-        }
+        let temp = ws.plan_temp_mut(cols);
+        let b_ptr = b.row_ptr();
         for (s, &(lo, hi)) in plan.slabs().iter().enumerate() {
             if s % workers != w {
                 continue;
@@ -259,47 +258,34 @@ pub fn par_planned_fill(
             let store = plan.slab_store(s);
             for r in lo..hi {
                 let (a_idx, a_val) = a.row(r);
-                for (&k, &va) in a_idx.iter().zip(a_val) {
-                    let (b_idx, b_val) = b.row(k);
-                    for (&j, &vb) in b_idx.iter().zip(b_val) {
-                        temp[j] += va * vb;
+                for (i, (&k, &va)) in a_idx.iter().zip(a_val).enumerate() {
+                    // Hint the next B row of this walk into cache.
+                    if let Some(&nk) = a_idx.get(i + 1) {
+                        simd::prefetch_read(b.col_idx(), b_ptr[nk]);
+                        simd::prefetch_read(b.values(), b_ptr[nk]);
                     }
+                    let (b_idx, b_val) = b.row(k);
+                    simd::accumulate_scaled(temp, b_idx, b_val, va);
                 }
                 let pat = plan.pattern_row(r);
                 let base = plan.pattern_start(r);
                 let mut n = 0usize;
-                match store {
-                    SlabStore::Gather => {
-                        for &j in pat {
-                            let v = temp[j];
-                            temp[j] = 0.0;
-                            if v != 0.0 {
-                                // SAFETY: [base, base + pat.len()) is row
-                                // r's staging range; rows are disjoint and
-                                // each is written by exactly one worker.
-                                unsafe {
-                                    *col_base.0.add(base + n) = j;
-                                    *val_base.0.add(base + n) = v;
-                                }
-                                n += 1;
-                            }
-                        }
+                // SAFETY (both uses below): [base, base + pat.len()) is
+                // row r's staging range; rows are disjoint and each is
+                // written by exactly one worker, and every surviving
+                // position lies inside row r's pattern.
+                let mut stage = |j: usize, v: f64| {
+                    unsafe {
+                        *col_base.0.add(base + n) = j;
+                        *val_base.0.add(base + n) = v;
                     }
+                    n += 1;
+                };
+                match store {
+                    SlabStore::Gather => simd::harvest_gather(temp, pat, &mut stage),
                     SlabStore::RegionScan => {
                         if let (Some(&first), Some(&last)) = (pat.first(), pat.last()) {
-                            for j in first..=last {
-                                let v = temp[j];
-                                if v != 0.0 {
-                                    temp[j] = 0.0;
-                                    // SAFETY: as above — every nonzero
-                                    // position lies inside row r's pattern.
-                                    unsafe {
-                                        *col_base.0.add(base + n) = j;
-                                        *val_base.0.add(base + n) = v;
-                                    }
-                                    n += 1;
-                                }
-                            }
+                            simd::harvest_region(temp, first, last, &mut stage);
                         }
                     }
                 }

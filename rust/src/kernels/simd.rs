@@ -1,0 +1,259 @@
+//! Lane-unrolled inner loops of the planned numeric phase.
+//!
+//! The planned refill kernels ([`super::planned_fill_serial`],
+//! [`super::parallel::par_planned_fill`]) and the dense-accumulator
+//! `flush_sink` loops in [`super::store`] spend their time in three tiny
+//! loop shapes: scatter-accumulate into the dense temporary, harvest a
+//! frozen pattern out of it, and scan a dense index region. This module
+//! provides one helper per shape, each with two implementations selected
+//! by the `simd` cargo feature:
+//!
+//! * **scalar** (default) — the plain reference loop;
+//! * **`--features simd`** — the same loop explicitly unrolled
+//!   [`LANES`]-wide (4 independent scalar lanes the autovectorizer
+//!   cannot miss), plus [`prefetch_read`] software prefetch hints for
+//!   the `row_ptr`-guided slab walks.
+//!
+//! `std::simd` is nightly-only, so the vector path is expressed as
+//! explicit unrolled lanes on stable Rust; on x86-64 the prefetch hint
+//! lowers to `prefetcht0`, elsewhere it is a no-op.
+//!
+//! **Bit-identity contract.** Every helper performs exactly the same
+//! floating-point operations on exactly the same elements *in exactly
+//! the same order* as its scalar twin. Within one accumulation call the
+//! target indices are sorted and unique (a CSR row / CSC column), so
+//! each unrolled lane updates a distinct `temp` slot and no addition is
+//! reordered within a slot; harvest loops only copy values. The
+//! cancellation-drop rule (`value != 0.0`, which keeps NaN and drops
+//! `-0.0`) is applied per element, unchanged. `tests/integration_exec.rs`
+//! pins SIMD-vs-scalar bit-identity across strategies × partitions ×
+//! threads.
+
+/// Unroll width of the `simd` feature's lane-split loops.
+pub const LANES: usize = 4;
+
+/// Round a dense-scratch length up to a whole number of 64-byte cache
+/// lines (8 `f64` slots), so lane-split loops never straddle a ragged
+/// tail allocation and the temporary starts line-aligned relative to
+/// its own base. Correctness never depends on the padding (indices stay
+/// `< len`); it only keeps the vector lanes off partially-owned lines.
+#[inline(always)]
+pub fn padded_len(len: usize) -> usize {
+    (len + 7) / 8 * 8
+}
+
+/// Prefetch the cache line holding `data[index]` into all cache levels
+/// (read intent). No-op when the index is out of bounds, when the
+/// `simd` feature is off, or on non-x86-64 targets.
+#[inline(always)]
+#[allow(unused_variables)]
+pub fn prefetch_read<T>(data: &[T], index: usize) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if index < data.len() {
+            // SAFETY: the bound check above keeps the address inside
+            // `data`; prefetch has no architectural side effects.
+            unsafe {
+                use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+                _mm_prefetch::<_MM_HINT_T0>(data.as_ptr().add(index) as *const i8);
+            }
+        }
+    }
+}
+
+/// `temp[idx[k]] += scale * vals[k]` for every `k` — the Gustavson
+/// inner accumulation over one operand row/column. `idx` must be sorted
+/// and unique (the compressed-format invariant), so the unrolled lanes
+/// touch distinct slots.
+#[inline(always)]
+pub fn accumulate_scaled(temp: &mut [f64], idx: &[usize], vals: &[f64], scale: f64) {
+    debug_assert_eq!(idx.len(), vals.len());
+    #[cfg(feature = "simd")]
+    {
+        let n = idx.len().min(vals.len());
+        let mut k = 0;
+        while k + LANES <= n {
+            // Four independent multiply-adds to distinct (sorted,
+            // unique) targets: same per-slot operation order as the
+            // scalar loop, no horizontal reduction.
+            let p0 = scale * vals[k];
+            let p1 = scale * vals[k + 1];
+            let p2 = scale * vals[k + 2];
+            let p3 = scale * vals[k + 3];
+            temp[idx[k]] += p0;
+            temp[idx[k + 1]] += p1;
+            temp[idx[k + 2]] += p2;
+            temp[idx[k + 3]] += p3;
+            k += LANES;
+        }
+        while k < n {
+            temp[idx[k]] += scale * vals[k];
+            k += 1;
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        for (&j, &v) in idx.iter().zip(vals) {
+            temp[j] += scale * v;
+        }
+    }
+}
+
+/// Drive `body(0), body(1), …, body(n - 1)` in index order. Under the
+/// `simd` feature the driver is unrolled [`LANES`]-wide; the per-index
+/// call order is identical either way, so callers whose bodies trace
+/// memory traffic (the `flush_sink` accumulator loops) emit the exact
+/// same event sequence under both builds.
+#[inline(always)]
+pub fn for_each_index<F: FnMut(usize)>(n: usize, mut body: F) {
+    #[cfg(feature = "simd")]
+    {
+        let mut i = 0;
+        while i + LANES <= n {
+            body(i);
+            body(i + 1);
+            body(i + 2);
+            body(i + 3);
+            i += LANES;
+        }
+        while i < n {
+            body(i);
+            i += 1;
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        for i in 0..n {
+            body(i);
+        }
+    }
+}
+
+/// Harvest a frozen pattern out of the dense temporary, `Gather` style:
+/// for each `j` in `pat` (in order), read `temp[j]`, reset it to zero,
+/// and emit `(j, value)` when the value survives cancellation
+/// (`value != 0.0`: keeps NaN, drops `-0.0`).
+#[inline(always)]
+pub fn harvest_gather<F: FnMut(usize, f64)>(temp: &mut [f64], pat: &[usize], mut emit: F) {
+    for_each_index(pat.len(), |k| {
+        let j = pat[k];
+        let v = temp[j];
+        temp[j] = 0.0;
+        if v != 0.0 {
+            emit(j, v);
+        }
+    });
+}
+
+/// Harvest the dense index region `first..=last` out of the temporary,
+/// `RegionScan` style: read every slot in order, and for survivors
+/// (`value != 0.0`) reset the slot and emit `(j, value)`. Slots that
+/// compare equal to zero (never written, exact `+0.0`, or a cancelled
+/// `-0.0`) are left untouched — exactly what the scalar RegionScan loop
+/// in [`super::planned_fill_serial`] does, so the temporary's contents
+/// after the call are bit-identical between builds.
+#[inline(always)]
+pub fn harvest_region<F: FnMut(usize, f64)>(temp: &mut [f64], first: usize, last: usize, mut emit: F) {
+    debug_assert!(first <= last && last < temp.len());
+    for_each_index(last - first + 1, |k| {
+        let j = first + k;
+        let v = temp[j];
+        if v != 0.0 {
+            temp[j] = 0.0;
+            emit(j, v);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Each test compares the active implementation (scalar or unrolled,
+    // depending on the build's feature set) against a plain inline
+    // loop, so the suite is meaningful under both `cargo test` and
+    // `cargo test --features simd`.
+
+    #[test]
+    fn accumulate_matches_plain_loop_bitwise() {
+        let idx = [0usize, 2, 3, 5, 6, 9, 10];
+        let vals = [1.5, -2.25, 3.0e-300, 7.5, -0.0, f64::NAN, 0.125];
+        let scale = -1.75;
+        let mut temp = vec![0.5f64; 12];
+        let mut want = temp.clone();
+        for (&j, &v) in idx.iter().zip(&vals) {
+            want[j] += scale * v;
+        }
+        accumulate_scaled(&mut temp, &idx, &vals, scale);
+        for (a, b) in temp.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn accumulate_handles_short_tails() {
+        for n in 0..=9usize {
+            let idx: Vec<usize> = (0..n).map(|k| 2 * k).collect();
+            let vals: Vec<f64> = (0..n).map(|k| k as f64 - 2.5).collect();
+            let mut temp = vec![0.0f64; 2 * n + 1];
+            let mut want = temp.clone();
+            for (&j, &v) in idx.iter().zip(&vals) {
+                want[j] += 2.0 * v;
+            }
+            accumulate_scaled(&mut temp, &idx, &vals, 2.0);
+            assert_eq!(temp, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn for_each_index_visits_in_order() {
+        for n in 0..=10usize {
+            let mut seen = Vec::new();
+            for_each_index(n, |i| seen.push(i));
+            assert_eq!(seen, (0..n).collect::<Vec<_>>(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn gather_drops_negative_zero_and_keeps_nan() {
+        let pat = [1usize, 3, 4, 6, 8];
+        let mut temp = vec![0.0f64; 10];
+        temp[1] = 2.0;
+        temp[3] = -0.0; // exact cancellation leaving a negative zero
+        temp[4] = f64::NAN;
+        temp[6] = 0.0;
+        temp[8] = -4.5;
+        let mut out = Vec::new();
+        harvest_gather(&mut temp, &pat, |j, v| out.push((j, v.to_bits())));
+        assert_eq!(
+            out,
+            vec![(1, 2.0f64.to_bits()), (4, f64::NAN.to_bits()), (8, (-4.5f64).to_bits())]
+        );
+        assert!(temp.iter().all(|v| v.to_bits() == 0), "temp reset to +0.0 everywhere");
+    }
+
+    #[test]
+    fn region_scan_matches_gather_on_survivors() {
+        let pat = [2usize, 4, 5, 7];
+        let mut temp = vec![0.0f64; 9];
+        for (&j, v) in pat.iter().zip([1.0, -0.0, 3.5, -2.0]) {
+            temp[j] = v;
+        }
+        let mut region = Vec::new();
+        harvest_region(&mut temp, 2, 7, |j, v| region.push((j, v)));
+        assert_eq!(region, vec![(2, 1.0), (5, 3.5), (7, -2.0)]);
+        // Survivor slots were reset; the -0.0 slot keeps its sign bit
+        // exactly as the scalar RegionScan leaves it.
+        assert_eq!(temp[4].to_bits(), (-0.0f64).to_bits());
+        assert!(temp.iter().enumerate().all(|(j, v)| j == 4 || v.to_bits() == 0));
+    }
+
+    #[test]
+    fn prefetch_is_safe_at_any_index() {
+        let data = [1.0f64; 4];
+        prefetch_read(&data, 0);
+        prefetch_read(&data, 3);
+        prefetch_read(&data, 4); // out of bounds: silently ignored
+        prefetch_read::<f64>(&[], 0);
+    }
+}

@@ -3,6 +3,7 @@
 //! mixed-storage-order operands.
 
 use super::gustavson;
+use super::simd;
 use super::store::{Accumulator, Combined};
 use super::tracer::{MemTracer, NullTracer};
 use crate::plan::{SlabStore, SpmmmPlan};
@@ -175,10 +176,15 @@ pub fn spmmm_into(a: &CsrMatrix, b: &CsrMatrix, strategy: Strategy, out: &mut Cs
 ///
 /// `temp` is the caller's dense scratch (the per-worker
 /// [`crate::exec::Workspace::plan_temp`] on warm paths); it is grown to
-/// the output width on first use and must be all-zero on entry — the
-/// invariant this function re-establishes before returning. Once `temp`
-/// and `out` are warm, a refill performs zero heap allocations and zero
-/// symbolic work.
+/// the (cache-line-padded) output width on first use and must be
+/// all-zero on entry — the invariant this function re-establishes before
+/// returning. Once `temp` and `out` are warm, a refill performs zero
+/// heap allocations and zero symbolic work.
+///
+/// The inner loops run through [`super::simd`]: lane-unrolled
+/// accumulation and pattern harvests under `--features simd` (with
+/// software prefetch of the next B row on the `row_ptr`-guided walk),
+/// plain scalar loops otherwise — bit-identical either way.
 pub fn planned_fill_serial(
     plan: &SpmmmPlan,
     a: &CsrMatrix,
@@ -189,40 +195,34 @@ pub fn planned_fill_serial(
     assert!(plan.matches(a, b), "plan does not describe these operands");
     let cols = b.cols();
     if temp.len() < cols {
-        temp.resize(cols, 0.0);
+        temp.resize(simd::padded_len(cols), 0.0);
     }
     out.reset(a.rows(), cols);
     out.reserve(plan.pattern_nnz());
+    let b_ptr = b.row_ptr();
     for (s, &(lo, hi)) in plan.slabs().iter().enumerate() {
         let store = plan.slab_store(s);
         for r in lo..hi {
             let (a_idx, a_val) = a.row(r);
-            for (&k, &va) in a_idx.iter().zip(a_val) {
-                let (b_idx, b_val) = b.row(k);
-                for (&j, &vb) in b_idx.iter().zip(b_val) {
-                    temp[j] += va * vb;
+            for (i, (&k, &va)) in a_idx.iter().zip(a_val).enumerate() {
+                // Hint the next B row of this walk into cache while the
+                // current one accumulates.
+                if let Some(&nk) = a_idx.get(i + 1) {
+                    simd::prefetch_read(b.col_idx(), b_ptr[nk]);
+                    simd::prefetch_read(b.values(), b_ptr[nk]);
                 }
+                let (b_idx, b_val) = b.row(k);
+                simd::accumulate_scaled(temp, b_idx, b_val, va);
             }
             let pat = plan.pattern_row(r);
+            simd::prefetch_read(pat, 0);
             match store {
                 SlabStore::Gather => {
-                    for &j in pat {
-                        let v = temp[j];
-                        temp[j] = 0.0;
-                        if v != 0.0 {
-                            out.append(j, v);
-                        }
-                    }
+                    simd::harvest_gather(temp, pat, |j, v| out.append(j, v));
                 }
                 SlabStore::RegionScan => {
                     if let (Some(&first), Some(&last)) = (pat.first(), pat.last()) {
-                        for j in first..=last {
-                            let v = temp[j];
-                            if v != 0.0 {
-                                temp[j] = 0.0;
-                                out.append(j, v);
-                            }
-                        }
+                        simd::harvest_region(temp, first, last, |j, v| out.append(j, v));
                     }
                 }
             }
@@ -230,6 +230,77 @@ pub fn planned_fill_serial(
         }
     }
     debug_assert!(out.is_finalized());
+}
+
+/// Numeric phase of a planned product, serial, for CSC operands: refill
+/// `C = A · B` into `out` through the frozen column structure of `plan`
+/// (a plan built by [`SpmmmPlan::build_csc`], axis
+/// [`crate::sparse::StorageOrder::ColumnMajor`]).
+///
+/// The column-major mirror of [`planned_fill_serial`]: the plan's
+/// pattern units are output *columns*, its entries are row indices, and
+/// the dense temporary spans `a.rows()` slots. Accumulation order per
+/// output column is identical to [`gustavson::cols_into`], so the
+/// result is bit-identical to the unplanned [`spmmm_csc`] kernels.
+pub fn planned_fill_serial_csc(
+    plan: &SpmmmPlan,
+    a: &CscMatrix,
+    b: &CscMatrix,
+    temp: &mut Vec<f64>,
+    out: &mut CscMatrix,
+) {
+    assert!(plan.matches_csc(a, b), "plan does not describe these operands");
+    let rows = a.rows();
+    if temp.len() < rows {
+        temp.resize(simd::padded_len(rows), 0.0);
+    }
+    out.reset(rows, b.cols());
+    out.reserve(plan.pattern_nnz());
+    let a_ptr = a.col_ptr();
+    for (s, &(lo, hi)) in plan.slabs().iter().enumerate() {
+        let store = plan.slab_store(s);
+        for c in lo..hi {
+            let (b_idx, b_val) = b.col(c);
+            for (i, (&k, &vb)) in b_idx.iter().zip(b_val).enumerate() {
+                if let Some(&nk) = b_idx.get(i + 1) {
+                    simd::prefetch_read(a.row_idx(), a_ptr[nk]);
+                    simd::prefetch_read(a.values(), a_ptr[nk]);
+                }
+                let (a_idx, a_val) = a.col(k);
+                simd::accumulate_scaled(temp, a_idx, a_val, vb);
+            }
+            let pat = plan.pattern_row(c);
+            simd::prefetch_read(pat, 0);
+            match store {
+                SlabStore::Gather => {
+                    simd::harvest_gather(temp, pat, |i, v| out.append(i, v));
+                }
+                SlabStore::RegionScan => {
+                    if let (Some(&first), Some(&last)) = (pat.first(), pat.last()) {
+                        simd::harvest_region(temp, first, last, |i, v| out.append(i, v));
+                    }
+                }
+            }
+            out.finalize_col();
+        }
+    }
+    debug_assert!(out.is_finalized());
+}
+
+/// Numeric phase of a planned mixed-order product CSR × CSC → CSR: the
+/// planned analogue of [`spmmm_csr_csc`]. Converts the right-hand side
+/// to CSR (linear in nnz, exactly like the unplanned path charges per
+/// §IV-A) and refills through a row-major plan keyed on the operands'
+/// *original* fingerprints ([`crate::plan::PlanKey::of_csr_csc`]).
+pub fn planned_fill_csr_csc(
+    plan: &SpmmmPlan,
+    a: &CsrMatrix,
+    b: &CscMatrix,
+    temp: &mut Vec<f64>,
+    out: &mut CsrMatrix,
+) {
+    let b_csr = csc_to_csr(b);
+    planned_fill_serial(plan, a, &b_csr, temp, out);
 }
 
 /// Context-style entry point: explicit strategy *and* worker count.
@@ -391,6 +462,53 @@ mod tests {
         assert!(out.approx_eq(&reference, 0.0));
         assert_eq!(out.capacity(), cap, "warm refill allocates nothing");
         assert!(temp.iter().all(|&v| v == 0.0), "all-zero invariant restored");
+    }
+
+    #[test]
+    fn planned_csc_refill_matches_unplanned_bitwise() {
+        use crate::exec::{Partition, Workspace};
+        use crate::model::Machine;
+        use crate::plan::{PlanKey, SpmmmPlan};
+        use crate::sparse::convert::csr_to_csc;
+        let a = csr_to_csc(&random_fixed_per_row(40, 35, 4, 41));
+        let b = csr_to_csc(&random_fixed_per_row(35, 30, 3, 42));
+        let reference = spmmm_csc(&a, &b, Strategy::Combined);
+        let machine = Machine::sandy_bridge_i7_2600();
+        let key = PlanKey::of_csc(&machine, &a, &b, 2, Partition::Flops);
+        let plan = SpmmmPlan::build_csc(&machine, &a, &b, key, &mut Workspace::new());
+        let mut temp = Vec::new();
+        let mut out = CscMatrix::new(0, 0);
+        planned_fill_serial_csc(&plan, &a, &b, &mut temp, &mut out);
+        assert_eq!(out.col_ptr(), reference.col_ptr());
+        assert_eq!(out.row_idx(), reference.row_idx());
+        assert!(
+            out.values().iter().zip(reference.values()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "planned CSC values are bit-identical to the unplanned kernel"
+        );
+        let cap = out.capacity();
+        planned_fill_serial_csc(&plan, &a, &b, &mut temp, &mut out);
+        assert!(out.approx_eq(&reference, 0.0));
+        assert_eq!(out.capacity(), cap, "warm CSC refill allocates nothing");
+        assert!(temp.iter().all(|&v| v == 0.0), "all-zero invariant restored");
+    }
+
+    #[test]
+    fn planned_csr_csc_matches_conversion_kernel() {
+        use crate::exec::{Partition, Workspace};
+        use crate::model::Machine;
+        use crate::plan::{PlanKey, SpmmmPlan};
+        use crate::sparse::convert::csr_to_csc;
+        let a = random_fixed_per_row(30, 28, 4, 43);
+        let b_csc = csr_to_csc(&random_fixed_per_row(28, 26, 3, 44));
+        let reference = spmmm_csr_csc(&a, &b_csc, Strategy::Combined);
+        let machine = Machine::sandy_bridge_i7_2600();
+        let key = PlanKey::of_csr_csc(&machine, &a, &b_csc, 1, Partition::Flops);
+        let b_csr = csc_to_csr(&b_csc);
+        let plan = SpmmmPlan::build(&machine, &a, &b_csr, key, &mut Workspace::new());
+        let mut temp = Vec::new();
+        let mut out = CsrMatrix::new(0, 0);
+        planned_fill_csr_csc(&plan, &a, &b_csc, &mut temp, &mut out);
+        assert!(out.approx_eq(&reference, 0.0));
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! variants add a lookup vector so the scan traverses less memory.
 
 use super::{Accumulator, BitVec, Sink};
+use crate::kernels::simd::for_each_index;
 use crate::kernels::tracer::{addr_of, MemTracer};
 
 /// "Brute Force"-double: iterate over the double values of the temporary
@@ -25,16 +26,19 @@ impl Accumulator for BruteForceDouble {
     }
 
     fn flush_sink<S: Sink, T: MemTracer>(&mut self, out: &mut S, tr: &mut T) {
-        for j in 0..self.temp.len() {
-            tr.load(addr_of(&self.temp, j), 8);
-            let v = self.temp[j];
+        // Lane-unrolled under `--features simd`; per-element order (and
+        // thus the traced traffic sequence) is identical either way.
+        let temp = &mut self.temp;
+        for_each_index(temp.len(), |j| {
+            tr.load(addr_of(temp, j), 8);
+            let v = temp[j];
             if v != 0.0 {
                 tr.store(out.tail_addr(), 16);
                 out.append_entry(j, v);
-                tr.store(addr_of(&self.temp, j), 8);
-                self.temp[j] = 0.0;
+                tr.store(addr_of(temp, j), 8);
+                temp[j] = 0.0;
             }
-        }
+        });
     }
 
     fn ensure_size(&mut self, size: usize) {
@@ -75,21 +79,22 @@ impl Accumulator for BruteForceBool {
     }
 
     fn flush_sink<S: Sink, T: MemTracer>(&mut self, out: &mut S, tr: &mut T) {
-        for j in 0..self.temp.len() {
-            tr.load(self.touched.word_addr(j), 8);
-            if self.touched.get(j) {
-                tr.load(addr_of(&self.temp, j), 8);
-                let v = self.temp[j];
+        let (temp, touched) = (&mut self.temp, &mut self.touched);
+        for_each_index(temp.len(), |j| {
+            tr.load(touched.word_addr(j), 8);
+            if touched.get(j) {
+                tr.load(addr_of(temp, j), 8);
+                let v = temp[j];
                 if v != 0.0 {
                     tr.store(out.tail_addr(), 16);
                     out.append_entry(j, v);
                 }
-                tr.store(addr_of(&self.temp, j), 8);
-                self.temp[j] = 0.0;
-                tr.store(self.touched.word_addr(j), 8);
-                self.touched.clear(j);
+                tr.store(addr_of(temp, j), 8);
+                temp[j] = 0.0;
+                tr.store(touched.word_addr(j), 8);
+                touched.clear(j);
             }
-        }
+        });
     }
 
     fn ensure_size(&mut self, size: usize) {
@@ -129,21 +134,22 @@ impl Accumulator for BruteForceChar {
     }
 
     fn flush_sink<S: Sink, T: MemTracer>(&mut self, out: &mut S, tr: &mut T) {
-        for j in 0..self.temp.len() {
-            tr.load(addr_of(&self.touched, j), 1);
-            if self.touched[j] != 0 {
-                tr.load(addr_of(&self.temp, j), 8);
-                let v = self.temp[j];
+        let (temp, touched) = (&mut self.temp, &mut self.touched);
+        for_each_index(temp.len(), |j| {
+            tr.load(addr_of(touched, j), 1);
+            if touched[j] != 0 {
+                tr.load(addr_of(temp, j), 8);
+                let v = temp[j];
                 if v != 0.0 {
                     tr.store(out.tail_addr(), 16);
                     out.append_entry(j, v);
                 }
-                tr.store(addr_of(&self.temp, j), 8);
-                self.temp[j] = 0.0;
-                tr.store(addr_of(&self.touched, j), 1);
-                self.touched[j] = 0;
+                tr.store(addr_of(temp, j), 8);
+                temp[j] = 0.0;
+                tr.store(addr_of(touched, j), 1);
+                touched[j] = 0;
             }
-        }
+        });
     }
 
     fn ensure_size(&mut self, size: usize) {

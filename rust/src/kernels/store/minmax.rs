@@ -4,6 +4,7 @@
 //! that region.
 
 use super::{Accumulator, Sink};
+use crate::kernels::simd::for_each_index;
 use crate::kernels::tracer::{addr_of, MemTracer};
 
 /// MinMax: scan only `[min, max]` of the touched region. "Especially in
@@ -35,16 +36,18 @@ impl Accumulator for MinMax {
         if self.min == usize::MAX {
             return; // empty row
         }
-        for j in self.min..=self.max {
-            tr.load(addr_of(&self.temp, j), 8);
-            let v = self.temp[j];
+        let (temp, min) = (&mut self.temp, self.min);
+        for_each_index(self.max - min + 1, |o| {
+            let j = min + o;
+            tr.load(addr_of(temp, j), 8);
+            let v = temp[j];
             if v != 0.0 {
                 tr.store(out.tail_addr(), 16);
                 out.append_entry(j, v);
-                tr.store(addr_of(&self.temp, j), 8);
-                self.temp[j] = 0.0;
+                tr.store(addr_of(temp, j), 8);
+                temp[j] = 0.0;
             }
-        }
+        });
         self.min = usize::MAX;
         self.max = 0;
     }
@@ -92,21 +95,23 @@ impl Accumulator for MinMaxChar {
         if self.min == usize::MAX {
             return;
         }
-        for j in self.min..=self.max {
-            tr.load(addr_of(&self.touched, j), 1);
-            if self.touched[j] != 0 {
-                tr.load(addr_of(&self.temp, j), 8);
-                let v = self.temp[j];
+        let (temp, touched, min) = (&mut self.temp, &mut self.touched, self.min);
+        for_each_index(self.max - min + 1, |o| {
+            let j = min + o;
+            tr.load(addr_of(touched, j), 1);
+            if touched[j] != 0 {
+                tr.load(addr_of(temp, j), 8);
+                let v = temp[j];
                 if v != 0.0 {
                     tr.store(out.tail_addr(), 16);
                     out.append_entry(j, v);
                 }
-                tr.store(addr_of(&self.temp, j), 8);
-                self.temp[j] = 0.0;
-                tr.store(addr_of(&self.touched, j), 1);
-                self.touched[j] = 0;
+                tr.store(addr_of(temp, j), 8);
+                temp[j] = 0.0;
+                tr.store(addr_of(touched, j), 1);
+                touched[j] = 0;
             }
-        }
+        });
         self.min = usize::MAX;
         self.max = 0;
     }

@@ -62,6 +62,19 @@ pub fn streaming_lower_bound_bytes(a: &CsrMatrix, b: &CsrMatrix) -> u64 {
     (16 * (a.nnz() + b.nnz()) + 8 * b.cols()) as u64
 }
 
+/// Memory-level traffic lower bound of the *planned numeric refill*:
+/// stream both operands once (16 B per nnz) and write the frozen output
+/// pattern once (16 B per entry appended + 8 B per entry of pattern
+/// index read during harvest). The symbolic phase already paid for
+/// structure discovery, so — unlike [`streaming_lower_bound_bytes`] —
+/// no dense-temp sweep term appears: the harvest walks exactly
+/// `pattern_nnz` slots. This is the byte count the percent-of-roofline
+/// validation ([`super::predict::percent_of_roofline`]) divides warm
+/// planned-fill measurements by.
+pub fn planned_fill_lower_bound_bytes(a_nnz: usize, b_nnz: usize, pattern_nnz: usize) -> u64 {
+    (16 * (a_nnz + b_nnz) + 24 * pattern_nnz) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,5 +103,18 @@ mod tests {
         let a = fd_poisson_2d(10);
         let t = PureComputeTraffic::of(&a, &a);
         assert!(streaming_lower_bound_bytes(&a, &a) < t.total_bytes());
+    }
+
+    #[test]
+    fn planned_bound_undercuts_the_unplanned_kernel() {
+        // The refill skips structure discovery and the dense sweep, so
+        // its floor must sit below the pure-compute best case whenever
+        // the pattern is no denser than the multiplication count.
+        let a = fd_poisson_2d(10);
+        let t = PureComputeTraffic::of(&a, &a);
+        let pattern_nnz = crate::kernels::spmmm(&a, &a, crate::kernels::Strategy::MinMax).nnz();
+        let planned = planned_fill_lower_bound_bytes(a.nnz(), a.nnz(), pattern_nnz);
+        assert!(planned < t.total_bytes());
+        assert!(planned >= (16 * 2 * a.nnz()) as u64, "streams both operands at least");
     }
 }

@@ -23,6 +23,7 @@ pub mod machine;
 pub mod predict;
 pub mod roofline;
 
+pub use balance::planned_fill_lower_bound_bytes;
 pub use machine::{CacheLevel, Machine};
-pub use predict::{plan_breakeven_evals, predict, roofline_seconds, Prediction};
+pub use predict::{percent_of_roofline, plan_breakeven_evals, predict, roofline_seconds, Prediction};
 pub use roofline::lightspeed;

@@ -105,6 +105,23 @@ pub fn roofline_seconds(machine: &Machine, flops: f64, bytes: f64) -> f64 {
     flops / ceiling
 }
 
+/// Percent of the roofline a measured run achieved: the light-speed
+/// time [`roofline_seconds`] predicts for `(flops, bytes)` over the
+/// measured seconds, as a percentage. 100 means the run hit the model's
+/// ceiling exactly; the gap below 100 is the model's estimate of what
+/// the implementation leaves on the table (latency stalls, imbalance,
+/// non-streamed traffic). Values above 100 mean the byte count was an
+/// over-estimate — for the planned-fill lower bound
+/// ([`super::balance::planned_fill_lower_bound_bytes`]) that cannot
+/// happen, which is what makes the percentage a validation metric.
+/// A non-positive measurement yields 0.
+pub fn percent_of_roofline(machine: &Machine, flops: f64, bytes: f64, measured_seconds: f64) -> f64 {
+    if measured_seconds <= 0.0 {
+        return 0.0;
+    }
+    100.0 * roofline_seconds(machine, flops, bytes) / measured_seconds
+}
+
 /// Amortization hook for the spMMM plan cache: the predicted number of
 /// warm evaluations after which the one-time symbolic phase has paid for
 /// itself.
@@ -242,6 +259,21 @@ mod tests {
         // Monotone in bytes; zero-flop edge is pure transfer.
         assert!(roofline_seconds(&m, 1e6, 64e6) >= roofline_seconds(&m, 1e6, 32e6));
         assert_eq!(roofline_seconds(&m, 0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn percent_of_roofline_brackets() {
+        let m = Machine::sandy_bridge_i7_2600();
+        let flops = 2.0e6;
+        let bytes = 64.0e6;
+        let light = roofline_seconds(&m, flops, bytes);
+        // Measured exactly at light speed: 100%.
+        assert!((percent_of_roofline(&m, flops, bytes, light) - 100.0).abs() < 1e-9);
+        // Twice as slow as the model: 50%.
+        assert!((percent_of_roofline(&m, flops, bytes, 2.0 * light) - 50.0).abs() < 1e-9);
+        // Degenerate measurements can't divide by zero.
+        assert_eq!(percent_of_roofline(&m, flops, bytes, 0.0), 0.0);
+        assert_eq!(percent_of_roofline(&m, flops, bytes, -1.0), 0.0);
     }
 
     #[test]

@@ -50,7 +50,8 @@ use super::spmmm_plan::SpmmmPlan;
 use super::store::PlanStore;
 use crate::exec::{Partition, Workspace};
 use crate::model::Machine;
-use crate::sparse::CsrMatrix;
+use crate::sparse::convert::csc_to_csr;
+use crate::sparse::{CscMatrix, CsrMatrix};
 
 /// Everything a cached plan depends on: operand structures, the
 /// evaluation shape, and the cost model the plan's decisions (slab
@@ -77,6 +78,44 @@ impl PlanKey {
         machine: &Machine,
         a: &CsrMatrix,
         b: &CsrMatrix,
+        threads: usize,
+        partition: Partition,
+    ) -> PlanKey {
+        PlanKey {
+            a: a.pattern_fingerprint(),
+            b: b.pattern_fingerprint(),
+            threads,
+            partition,
+            machine: super::fingerprint::machine_fingerprint(machine),
+        }
+    }
+
+    /// Key for a column-major (CSC · CSC) product. The fingerprints are
+    /// order-tagged, so a CSC key can never collide with the CSR key of
+    /// structurally identical operands.
+    pub fn of_csc(
+        machine: &Machine,
+        a: &CscMatrix,
+        b: &CscMatrix,
+        threads: usize,
+        partition: Partition,
+    ) -> PlanKey {
+        PlanKey {
+            a: a.pattern_fingerprint(),
+            b: b.pattern_fingerprint(),
+            threads,
+            partition,
+            machine: super::fingerprint::machine_fingerprint(machine),
+        }
+    }
+
+    /// Key for the mixed CSR · CSC product: the left operand keeps its
+    /// row-major fingerprint, the right its column-major one, so the key
+    /// is distinct from both the pure-CSR and pure-CSC keys.
+    pub fn of_csr_csc(
+        machine: &Machine,
+        a: &CsrMatrix,
+        b: &CscMatrix,
         threads: usize,
         partition: Partition,
     ) -> PlanKey {
@@ -326,6 +365,50 @@ impl PlanCache {
         self.insert_planned(key, plan)
     }
 
+    /// Column-major analog of [`PlanCache::get_or_build`]: the plan for
+    /// a CSC · CSC product, built over column slabs and keyed by the
+    /// operands' column-major fingerprints. Same racing/caching
+    /// semantics as the row-major entry.
+    pub fn get_or_build_csc(
+        &self,
+        machine: &Machine,
+        ws: &mut Workspace,
+        a: &CscMatrix,
+        b: &CscMatrix,
+        threads: usize,
+        partition: Partition,
+    ) -> Arc<SpmmmPlan> {
+        let key = PlanKey::of_csc(machine, a, b, threads, partition);
+        if let Probe::Hit(plan) = self.probe(&key) {
+            return plan;
+        }
+        let plan = Arc::new(SpmmmPlan::build_csc(machine, a, b, key, ws));
+        self.insert_planned(key, plan)
+    }
+
+    /// Plan for the mixed CSR · CSC product. The numeric phase of this
+    /// path converts `b` to row-major per evaluation (matching
+    /// [`crate::kernels::spmmm_csr_csc`]), so the plan itself is a
+    /// row-major plan — only the *key* records `b`'s column-major
+    /// structure.
+    pub fn get_or_build_csr_csc(
+        &self,
+        machine: &Machine,
+        ws: &mut Workspace,
+        a: &CsrMatrix,
+        b: &CscMatrix,
+        threads: usize,
+        partition: Partition,
+    ) -> Arc<SpmmmPlan> {
+        let key = PlanKey::of_csr_csc(machine, a, b, threads, partition);
+        if let Probe::Hit(plan) = self.probe(&key) {
+            return plan;
+        }
+        let b_csr = csc_to_csr(b);
+        let plan = Arc::new(SpmmmPlan::build(machine, a, &b_csr, key, ws));
+        self.insert_planned(key, plan)
+    }
+
     /// Attach a persistent store: from now on inserts write through,
     /// unknown keys are looked up on disk before counting as misses,
     /// and LRU evictions of planned entries remove the disk copy too.
@@ -397,6 +480,10 @@ impl PlanCache {
             }
         }
         self.lock().stats.disk_writes += saved as u64;
+        // A flush marks a session boundary: fold the loose per-plan
+        // files into one segment so the next process warms from a
+        // single sequential read instead of a directory of tiny files.
+        store.compact();
         saved
     }
 
@@ -534,6 +621,31 @@ mod tests {
         let p4 = cache.get_or_build(&fast, &mut ws, &a, &b, 4, Partition::Model);
         assert!(!Arc::ptr_eq(&p3, &p4), "machine separates plans");
         assert_eq!(cache.stats().symbolic_builds, 4);
+    }
+
+    #[test]
+    fn csc_keys_never_collide_with_csr_keys() {
+        use crate::sparse::convert::csr_to_csc;
+        let cache = PlanCache::default();
+        let (a, b) = pair(6);
+        let (ac, bc) = (csr_to_csc(&a), csr_to_csc(&b));
+        let m = machine();
+        // Structurally identical operands, different storage order: the
+        // order-tagged fingerprints must keep the keys apart.
+        let kr = PlanKey::of(&m, &a, &b, 2, Partition::Flops);
+        let kc = PlanKey::of_csc(&m, &ac, &bc, 2, Partition::Flops);
+        let km = PlanKey::of_csr_csc(&m, &a, &bc, 2, Partition::Flops);
+        assert_ne!(kr, kc);
+        assert_ne!(kr, km);
+        assert_ne!(kc, km);
+        let mut ws = Workspace::new();
+        let p1 = cache.get_or_build_csc(&m, &mut ws, &ac, &bc, 2, Partition::Flops);
+        let p2 = cache.get_or_build_csc(&m, &mut ws, &ac, &bc, 2, Partition::Flops);
+        assert!(Arc::ptr_eq(&p1, &p2), "second CSC probe is a hit");
+        let p3 = cache.get_or_build_csr_csc(&m, &mut ws, &a, &bc, 2, Partition::Flops);
+        assert!(!Arc::ptr_eq(&p1, &p3), "mixed product gets its own plan");
+        let s = cache.stats();
+        assert_eq!((s.symbolic_builds, s.hits), (2, 1));
     }
 
     #[test]

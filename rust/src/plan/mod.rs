@@ -15,7 +15,11 @@
 //! * [`SpmmmPlan`] — the frozen **symbolic** product of one `C = A·B`:
 //!   the full structural output pattern (no numeric cancellation), the
 //!   cost-balanced partition slabs, and model-guided per-slab store
-//!   modes ([`spmmm_plan`]);
+//!   modes ([`spmmm_plan`]). Plans carry an axis: row slabs for CSR
+//!   products ([`SpmmmPlan::build`]), column slabs for CSC products
+//!   ([`SpmmmPlan::build_csc`]) — same fingerprint keying, same store,
+//!   never interchangeable (the order-tagged fingerprints and the
+//!   `matches`/`matches_csc` guards keep the axes apart);
 //! * [`PlanCache`] — a bounded LRU keyed by [`PlanKey`] (fingerprints +
 //!   evaluation shape + cost-model fingerprint) with observability
 //!   counters ([`cache`]).
@@ -25,7 +29,9 @@
 //!   startup (`warm_from_dir`), writes through as plans are built, and
 //!   falls back to a cold symbolic build whenever an entry is missing,
 //!   corrupt, or stale — a restarted service re-warms from disk instead
-//!   of re-running every symbolic phase.
+//!   of re-running every symbolic phase. A session flush
+//!   (`persist_to_dir`) compacts the loose per-plan files into a single
+//!   segment file, so the next warm start is one sequential read.
 //!
 //! The **numeric** phase lives with the other kernels
 //! ([`crate::kernels::planned_fill_serial`],

@@ -21,9 +21,9 @@
 //! bit-identical to the unplanned kernels even under cancellation.
 
 use super::cache::PlanKey;
-use crate::exec::{slab_bounds_into, Workspace};
+use crate::exec::{col_slab_bounds_into, slab_bounds_into, Workspace};
 use crate::model::{roofline_seconds, Machine};
-use crate::sparse::{CsrMatrix, SparseShape};
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape, StorageOrder};
 
 /// How a slab's numeric phase converts the dense temporary into sparse
 /// rows, given the frozen pattern — the planned analogue of the paper's
@@ -48,15 +48,58 @@ pub struct SpmmmPlan {
     cols: usize,
     a_nnz: usize,
     b_nnz: usize,
-    /// `pattern_row_ptr[r]..pattern_row_ptr[r+1]` spans row r's columns
+    /// Which storage order the plan's pattern units describe:
+    /// `RowMajor` plans ([`SpmmmPlan::build`]) freeze output *rows* of a
+    /// CSR product, `ColumnMajor` plans ([`SpmmmPlan::build_csc`])
+    /// freeze output *columns* of a CSC product. A plan only ever feeds
+    /// the numeric kernel of its own axis.
+    axis: StorageOrder,
+    /// `pattern_row_ptr[u]..pattern_row_ptr[u+1]` spans unit u's indices
     /// in `pattern_cols` — the full structural output, no cancellation.
+    /// A unit is an output row (`RowMajor`) or column (`ColumnMajor`).
     pattern_row_ptr: Vec<usize>,
-    /// Sorted, unique column indices of every structural row.
+    /// Sorted, unique cross indices of every structural unit (column
+    /// indices for `RowMajor`, row indices for `ColumnMajor`).
     pattern_cols: Vec<usize>,
-    /// Contiguous row slabs for the numeric phase (frozen partition).
+    /// Contiguous unit slabs for the numeric phase (frozen partition).
     slabs: Vec<(usize, usize)>,
     /// Store mode of each slab.
     slab_store: Vec<SlabStore>,
+}
+
+/// Per-slab store decision shared by both plan axes: predicted transfer
+/// time of gathering the pattern (8 B index + 8 B temp read + 16 B
+/// append per entry) vs scanning each unit's `[min, max]` region (8 B
+/// per position + 16 B per append) — the same roofline comparison that
+/// picks the unplanned storing strategy.
+fn store_modes(
+    machine: &Machine,
+    pattern_row_ptr: &[usize],
+    pattern_cols: &[usize],
+    slabs: &[(usize, usize)],
+) -> Vec<SlabStore> {
+    slabs
+        .iter()
+        .map(|&(lo, hi)| {
+            let patlen = pattern_row_ptr[hi] - pattern_row_ptr[lo];
+            let region: usize = (lo..hi)
+                .map(|u| {
+                    let unit = &pattern_cols[pattern_row_ptr[u]..pattern_row_ptr[u + 1]];
+                    match (unit.first(), unit.last()) {
+                        (Some(&first), Some(&last)) => last - first + 1,
+                        _ => 0,
+                    }
+                })
+                .sum();
+            let gather = roofline_seconds(machine, 0.0, 32.0 * patlen as f64);
+            let scan = roofline_seconds(machine, 0.0, 8.0 * region as f64 + 16.0 * patlen as f64);
+            if scan < gather {
+                SlabStore::RegionScan
+            } else {
+                SlabStore::Gather
+            }
+        })
+        .collect()
 }
 
 impl SpmmmPlan {
@@ -107,34 +150,7 @@ impl SpmmmPlan {
         slab_bounds_into(key.partition, machine, a, b, slab_count, &mut ws.cost, &mut ws.bounds);
         let slabs = ws.bounds.clone();
 
-        // Per-slab store mode: predicted transfer time of gathering the
-        // pattern (8 B index + 8 B temp read + 16 B append per entry)
-        // vs scanning each row's [min, max] region (8 B per position +
-        // 16 B per append) — the same roofline comparison that picks the
-        // unplanned storing strategy.
-        let slab_store = slabs
-            .iter()
-            .map(|&(lo, hi)| {
-                let patlen = pattern_row_ptr[hi] - pattern_row_ptr[lo];
-                let region: usize = (lo..hi)
-                    .map(|r| {
-                        let row = &pattern_cols[pattern_row_ptr[r]..pattern_row_ptr[r + 1]];
-                        match (row.first(), row.last()) {
-                            (Some(&first), Some(&last)) => last - first + 1,
-                            _ => 0,
-                        }
-                    })
-                    .sum();
-                let gather = roofline_seconds(machine, 0.0, 32.0 * patlen as f64);
-                let scan =
-                    roofline_seconds(machine, 0.0, 8.0 * region as f64 + 16.0 * patlen as f64);
-                if scan < gather {
-                    SlabStore::RegionScan
-                } else {
-                    SlabStore::Gather
-                }
-            })
-            .collect();
+        let slab_store = store_modes(machine, &pattern_row_ptr, &pattern_cols, &slabs);
 
         SpmmmPlan {
             key,
@@ -142,6 +158,71 @@ impl SpmmmPlan {
             cols,
             a_nnz: a.nnz(),
             b_nnz: b.nnz(),
+            axis: StorageOrder::RowMajor,
+            pattern_row_ptr,
+            pattern_cols,
+            slabs,
+            slab_store,
+        }
+    }
+
+    /// Run the symbolic phase for a column-major product `C = A · B`
+    /// with CSC operands: the column mirror of [`SpmmmPlan::build`].
+    /// For every output *column* it unions the row patterns of the
+    /// touched A columns, cuts column slabs under `key.partition`
+    /// ([`col_slab_bounds_into`]), and picks each slab's store mode with
+    /// the same roofline comparison. The resulting plan feeds
+    /// [`crate::kernels::planned_fill_serial_csc`].
+    pub fn build_csc(
+        machine: &Machine,
+        a: &CscMatrix,
+        b: &CscMatrix,
+        key: PlanKey,
+        ws: &mut Workspace,
+    ) -> SpmmmPlan {
+        assert_eq!(a.cols(), b.rows(), "inner dimension");
+        let rows = a.rows();
+        let cols = b.cols();
+
+        // Structural column union via generation marks over the output
+        // row space.
+        if ws.plan_mark.len() < rows {
+            ws.plan_mark.resize(rows, 0);
+        }
+        let mut pattern_row_ptr = Vec::with_capacity(cols + 1);
+        pattern_row_ptr.push(0usize);
+        let mut pattern_cols = Vec::new();
+        for c in 0..cols {
+            ws.plan_mark_gen += 1;
+            let gen = ws.plan_mark_gen;
+            ws.plan_touched.clear();
+            for &k in b.col_indices(c) {
+                for &i in a.col_indices(k) {
+                    if ws.plan_mark[i] != gen {
+                        ws.plan_mark[i] = gen;
+                        ws.plan_touched.push(i);
+                    }
+                }
+            }
+            ws.plan_touched.sort_unstable();
+            pattern_cols.extend_from_slice(&ws.plan_touched);
+            pattern_row_ptr.push(pattern_cols.len());
+        }
+
+        // Freeze the column partition (at most one slab per column).
+        let slab_count = key.threads.max(1).min(cols.max(1));
+        col_slab_bounds_into(key.partition, machine, a, b, slab_count, &mut ws.cost, &mut ws.bounds);
+        let slabs = ws.bounds.clone();
+
+        let slab_store = store_modes(machine, &pattern_row_ptr, &pattern_cols, &slabs);
+
+        SpmmmPlan {
+            key,
+            rows,
+            cols,
+            a_nnz: a.nnz(),
+            b_nnz: b.nnz(),
+            axis: StorageOrder::ColumnMajor,
             pattern_row_ptr,
             pattern_cols,
             slabs,
@@ -162,6 +243,11 @@ impl SpmmmPlan {
     /// Output columns.
     pub fn cols(&self) -> usize {
         self.cols
+    }
+
+    /// Storage order of the plan's pattern units (see [`SpmmmPlan`]).
+    pub fn axis(&self) -> StorageOrder {
+        self.axis
     }
 
     /// Total structural entries (the numeric phase's staging bound; the
@@ -201,7 +287,21 @@ impl SpmmmPlan {
     /// verbatim shape/nnz fields in [`super::PatternFingerprint`]
     /// already rule out every cross-shape collision at key level.
     pub fn matches(&self, a: &CsrMatrix, b: &CsrMatrix) -> bool {
-        self.rows == a.rows()
+        self.axis == StorageOrder::RowMajor
+            && self.rows == a.rows()
+            && self.cols == b.cols()
+            && self.a_nnz == a.nnz()
+            && self.b_nnz == b.nnz()
+            && a.cols() == b.rows()
+    }
+
+    /// [`SpmmmPlan::matches`] for the column-major axis: the same cheap
+    /// shape/population misuse guard, additionally requiring a
+    /// `ColumnMajor` plan so a row plan can never feed the CSC fill
+    /// (their pattern units mean different things).
+    pub fn matches_csc(&self, a: &CscMatrix, b: &CscMatrix) -> bool {
+        self.axis == StorageOrder::ColumnMajor
+            && self.rows == a.rows()
             && self.cols == b.cols()
             && self.a_nnz == a.nnz()
             && self.b_nnz == b.nnz()
@@ -241,11 +341,12 @@ impl SpmmmPlan {
     ///
     /// * the payload dimensions must match the key's verbatim
     ///   fingerprint fields (shape, population, inner dimension);
-    /// * `pattern_row_ptr` must be a monotone prefix array of the right
-    ///   length ending at `pattern_cols.len()`;
-    /// * every pattern row must be sorted, duplicate-free, and within
-    ///   the column bound;
-    /// * the slabs must contiguously cover `0..rows` with one store
+    /// * `pattern_row_ptr` must be a monotone prefix array over the
+    ///   axis's unit count (rows for `RowMajor`, columns for
+    ///   `ColumnMajor`) ending at `pattern_cols.len()`;
+    /// * every pattern unit must be sorted, duplicate-free, and within
+    ///   the axis's cross-index bound;
+    /// * the slabs must contiguously cover every unit with one store
     ///   mode each.
     ///
     /// Returns `None` on any violation; the caller treats that exactly
@@ -257,6 +358,7 @@ impl SpmmmPlan {
         cols: usize,
         a_nnz: usize,
         b_nnz: usize,
+        axis: StorageOrder,
         pattern_row_ptr: Vec<usize>,
         pattern_cols: Vec<usize>,
         slabs: Vec<(usize, usize)>,
@@ -270,18 +372,23 @@ impl SpmmmPlan {
         if !key_consistent {
             return None;
         }
-        if pattern_row_ptr.len() != rows + 1
+        // Pattern units and their cross-index bound depend on the axis.
+        let (units, bound) = match axis {
+            StorageOrder::RowMajor => (rows, cols),
+            StorageOrder::ColumnMajor => (cols, rows),
+        };
+        if pattern_row_ptr.len() != units + 1
             || pattern_row_ptr.first() != Some(&0)
             || pattern_row_ptr.last() != Some(&pattern_cols.len())
             || !pattern_row_ptr.windows(2).all(|w| w[0] <= w[1])
         {
             return None;
         }
-        let rows_ok = (0..rows).all(|r| {
-            let row = &pattern_cols[pattern_row_ptr[r]..pattern_row_ptr[r + 1]];
-            row.windows(2).all(|w| w[0] < w[1]) && row.last().map_or(true, |&c| c < cols)
+        let units_ok = (0..units).all(|u| {
+            let unit = &pattern_cols[pattern_row_ptr[u]..pattern_row_ptr[u + 1]];
+            unit.windows(2).all(|w| w[0] < w[1]) && unit.last().map_or(true, |&c| c < bound)
         });
-        if !rows_ok {
+        if !units_ok {
             return None;
         }
         if slabs.is_empty() || slabs.len() != slab_store.len() {
@@ -294,7 +401,7 @@ impl SpmmmPlan {
             }
             next = hi;
         }
-        if next != rows {
+        if next != units {
             return None;
         }
         Some(SpmmmPlan {
@@ -303,6 +410,7 @@ impl SpmmmPlan {
             cols,
             a_nnz,
             b_nnz,
+            axis,
             pattern_row_ptr,
             pattern_cols,
             slabs,
@@ -429,6 +537,7 @@ mod tests {
                 plan.cols(),
                 plan.a_nnz(),
                 plan.b_nnz(),
+                StorageOrder::RowMajor,
                 plan.pattern_row_ptr().to_vec(),
                 cols,
                 slabs,
@@ -457,12 +566,61 @@ mod tests {
             plan.cols(),
             plan.a_nnz(),
             plan.b_nnz(),
+            StorageOrder::RowMajor,
             plan.pattern_row_ptr().to_vec(),
             plan.pattern_cols().to_vec(),
             plan.slabs().to_vec(),
             plan.slab_stores().to_vec(),
         )
         .is_none());
+        // The wrong axis mislabels the pattern units and is rejected
+        // whenever the unit count differs from the row count.
+        let ra = random_fixed_per_row(24, 30, 4, 9);
+        let rb = random_fixed_per_row(30, 18, 4, 10);
+        let rect = build(&ra, &rb, 3);
+        assert!(SpmmmPlan::from_stored(
+            *rect.key(),
+            rect.rows(),
+            rect.cols(),
+            rect.a_nnz(),
+            rect.b_nnz(),
+            StorageOrder::ColumnMajor,
+            rect.pattern_row_ptr().to_vec(),
+            rect.pattern_cols().to_vec(),
+            rect.slabs().to_vec(),
+            rect.slab_stores().to_vec(),
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn csc_plan_covers_the_column_structure() {
+        use crate::kernels::spmmm_csc;
+        use crate::sparse::convert::csr_to_csc;
+        let (ra, rb) = operand_pair(Workload::RandomFixed5, 90, 6);
+        let (a, b) = (csr_to_csc(&abs(&ra)), csr_to_csc(&abs(&rb)));
+        let machine = Machine::sandy_bridge_i7_2600();
+        let key = PlanKey::of_csc(&machine, &a, &b, 3, Partition::Flops);
+        let plan = SpmmmPlan::build_csc(&machine, &a, &b, key, &mut Workspace::new());
+        assert_eq!(plan.axis(), StorageOrder::ColumnMajor);
+        let c = spmmm_csc(&a, &b, Strategy::Combined);
+        assert_eq!(plan.pattern_nnz(), c.nnz());
+        for col in 0..c.cols() {
+            assert_eq!(plan.pattern_row(col), c.col_indices(col), "col {col}");
+        }
+        // Column slabs contiguously cover the output columns.
+        let mut next = 0usize;
+        for &(lo, hi) in plan.slabs() {
+            assert_eq!(lo, next);
+            next = hi;
+        }
+        assert_eq!(next, c.cols());
+        // Axis separation: a CSC plan never matches the CSR fill's guard
+        // and vice versa.
+        assert!(plan.matches_csc(&a, &b));
+        assert!(!plan.matches(&ra, &rb));
+        let row_plan = build(&ra, &rb, 3);
+        assert!(!row_plan.matches_csc(&a, &b));
     }
 
     #[test]

@@ -24,12 +24,21 @@
 //!   stray temp;
 //! * **bounded budget** — the directory is capped in bytes;
 //!   least-recently-used entries (loads touch the file mtime) are
-//!   evicted first.
+//!   evicted first;
+//! * **segment compaction** — [`PlanStore::compact`] folds the loose
+//!   per-plan files into a single `.bzps` segment file (same entry
+//!   encoding, framed by key hash), so a session flush leaves one
+//!   sequentially readable file instead of a directory of tiny ones.
+//!   Loose files always supersede segment frames, a later save simply
+//!   shadows the stale frame, and evicting a segment under budget
+//!   pressure counts every entry it held.
 //!
 //! The store is policy-free by itself; [`super::PlanCache`] layers
-//! write-through, load-on-miss, warm-start, and eviction coherence on
-//! top (`attach_store` / `warm_from_dir` / `persist_to_dir`).
+//! write-through, load-on-miss, warm-start, eviction coherence, and
+//! flush-time compaction on top (`attach_store` / `warm_from_dir` /
+//! `persist_to_dir`).
 
+use std::collections::HashMap;
 use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -40,13 +49,15 @@ use super::cache::PlanKey;
 use super::fingerprint::PatternFingerprint;
 use super::spmmm_plan::{SlabStore, SpmmmPlan};
 use crate::exec::Partition;
+use crate::sparse::StorageOrder;
 
 /// File magic: "BZPLAN01" as a little-endian word.
 const MAGIC: u64 = 0x3130_4E41_4C50_5A42;
 
 /// On-disk format version; bump on any layout change. A mismatch is
-/// *ignored* (cold fallback), never migrated in place.
-const FORMAT_VERSION: u64 = 1;
+/// *ignored* (cold fallback), never migrated in place. Version 2 added
+/// the plan-axis word (CSC plans); v1 files decline to load.
+const FORMAT_VERSION: u64 = 2;
 
 /// Words before the checksummed body: magic, version, checksum. The
 /// checksum deliberately excludes the version word so a future format
@@ -54,12 +65,19 @@ const FORMAT_VERSION: u64 = 1;
 const HEADER_WORDS: usize = 3;
 
 /// Body words ahead of the variable-length arrays: 11 key words
-/// (2 × fingerprint quad, threads, partition, machine) + 7 dimension
-/// words (rows, cols, a_nnz, b_nnz, row_ptr len, cols len, slab count).
-const FIXED_BODY_WORDS: usize = 18;
+/// (2 × fingerprint quad, threads, partition, machine) + 8 dimension
+/// words (rows, cols, a_nnz, b_nnz, axis, row_ptr len, cols len, slab
+/// count).
+const FIXED_BODY_WORDS: usize = 19;
 
 /// Entry filename extension (everything else in the dir is ignored).
 const EXT: &str = "bzp";
+
+/// Segment filename extension ([`PlanStore::compact`] output).
+const SEG_EXT: &str = "bzps";
+
+/// Segment magic: "BZPSEG01" as a little-endian word.
+const SEG_MAGIC: u64 = 0x3130_4745_5350_5A42;
 
 /// FNV-1a over the little-endian bytes of a word stream — the store's
 /// integrity checksum and filename hash.
@@ -105,6 +123,21 @@ fn slab_store_from(tag: u64) -> Option<SlabStore> {
     }
 }
 
+fn axis_tag(axis: StorageOrder) -> u64 {
+    match axis {
+        StorageOrder::RowMajor => 0,
+        StorageOrder::ColumnMajor => 1,
+    }
+}
+
+fn axis_from(tag: u64) -> Option<StorageOrder> {
+    match tag {
+        0 => Some(StorageOrder::RowMajor),
+        1 => Some(StorageOrder::ColumnMajor),
+        _ => None,
+    }
+}
+
 /// The 11-word key block (order is part of the format).
 fn key_words(key: &PlanKey) -> [u64; 11] {
     [
@@ -139,6 +172,7 @@ fn encode(key: &PlanKey, plan: &SpmmmPlan) -> Vec<u8> {
         plan.cols() as u64,
         plan.a_nnz() as u64,
         plan.b_nnz() as u64,
+        axis_tag(plan.axis()),
         row_ptr.len() as u64,
         cols.len() as u64,
         slabs.len() as u64,
@@ -221,6 +255,7 @@ fn decode(bytes: &[u8]) -> Option<SpmmmPlan> {
     let cols = c.size()?;
     let a_nnz = c.size()?;
     let b_nnz = c.size()?;
+    let axis = axis_from(c.word()?)?;
     let row_ptr_len = c.size()?;
     let cols_len = c.size()?;
     let slab_count = c.size()?;
@@ -252,6 +287,7 @@ fn decode(bytes: &[u8]) -> Option<SpmmmPlan> {
         cols,
         a_nnz,
         b_nnz,
+        axis,
         pattern_row_ptr,
         pattern_cols,
         slabs,
@@ -278,6 +314,15 @@ pub struct StoreStats {
     pub io_errors: u64,
 }
 
+/// Where one entry lives inside a segment file (byte offset of its
+/// encoded bytes, which are a self-contained [`encode`] payload).
+#[derive(Clone, Debug)]
+struct SegmentEntry {
+    path: PathBuf,
+    offset: u64,
+    len: usize,
+}
+
 struct StoreInner {
     stats: StoreStats,
     /// Temp-file uniquifier within this process.
@@ -288,6 +333,11 @@ struct StoreInner {
     /// only ever errs high), which at worst triggers the corrective
     /// full scan in `enforce_budget` a little early.
     approx_bytes: u64,
+    /// Key-hash → segment frame index over every `.bzps` file, built at
+    /// open and after each [`PlanStore::compact`]. A loose `.bzp` file
+    /// always supersedes a frame: `save_as` drops the shadowed index
+    /// entry, so a refreshed plan never resolves to its stale frame.
+    segments: HashMap<u64, SegmentEntry>,
 }
 
 /// A bounded directory of persisted [`SpmmmPlan`]s, one file per
@@ -315,10 +365,16 @@ impl PlanStore {
                 stats: StoreStats::default(),
                 seq: 0,
                 approx_bytes: 0,
+                segments: HashMap::new(),
             }),
         };
+        let segments = store.index_segments();
         let existing = store.total_bytes();
-        store.lock().approx_bytes = existing;
+        {
+            let mut inner = store.lock();
+            inner.approx_bytes = existing;
+            inner.segments = segments;
+        }
         Ok(store)
     }
 
@@ -381,6 +437,10 @@ impl PlanStore {
                     let mut inner = self.lock();
                     inner.stats.saved += 1;
                     inner.approx_bytes += bytes.len() as u64;
+                    // The fresh loose file supersedes any segment frame
+                    // for this key; drop the index entry so the stale
+                    // frame is never consulted again.
+                    inner.segments.remove(&fnv1a(&key_words(&key)));
                     inner.approx_bytes > self.budget_bytes
                 };
                 if over_budget {
@@ -401,10 +461,20 @@ impl PlanStore {
     /// version, wrong key, failed revalidation) counts one
     /// [`StoreStats::store_rejected`] and also returns `None` — the
     /// caller cannot tell the difference and falls back cold either
-    /// way. A successful load touches the file's mtime (LRU recency).
+    /// way; a corrupt loose file notably does *not* fall back to a
+    /// segment frame (the loose file is strictly newer, so the frame is
+    /// stale). With no loose file, the key resolves through the segment
+    /// index. A successful load touches the holding file's mtime (LRU
+    /// recency — for a segment, the whole segment stays hot).
     pub fn load(&self, key: &PlanKey) -> Option<SpmmmPlan> {
         let path = self.path_for(key);
-        let bytes = fs::read(&path).ok()?;
+        let bytes = match fs::read(&path) {
+            Ok(bytes) => bytes,
+            Err(_) => {
+                let entry = self.lock().segments.get(&fnv1a(&key_words(key))).cloned()?;
+                return self.load_frame(key, &entry);
+            }
+        };
         match decode(&bytes) {
             Some(plan) if plan.key() == key => {
                 if let Ok(f) = fs::OpenOptions::new().write(true).open(&path) {
@@ -420,12 +490,41 @@ impl PlanStore {
         }
     }
 
-    /// Decode every valid entry in the directory (rejections counted,
-    /// order deterministic by filename). The warm-start scan.
+    /// Decode one segment frame (the segment-resident half of `load`).
+    fn load_frame(&self, key: &PlanKey, entry: &SegmentEntry) -> Option<SpmmmPlan> {
+        use std::io::{Read, Seek, SeekFrom};
+        let bytes = (|| -> std::io::Result<Vec<u8>> {
+            let mut f = fs::File::open(&entry.path)?;
+            f.seek(SeekFrom::Start(entry.offset))?;
+            let mut buf = vec![0u8; entry.len];
+            f.read_exact(&mut buf)?;
+            Ok(buf)
+        })()
+        .ok()?;
+        match decode(&bytes) {
+            Some(plan) if plan.key() == key => {
+                if let Ok(f) = fs::OpenOptions::new().write(true).open(&entry.path) {
+                    let _ = f.set_modified(SystemTime::now());
+                }
+                self.lock().stats.loaded += 1;
+                Some(plan)
+            }
+            _ => {
+                self.lock().stats.store_rejected += 1;
+                None
+            }
+        }
+    }
+
+    /// Decode every valid entry — loose files first (sorted by
+    /// filename), then every segment frame a loose file does not
+    /// supersede (rejections counted). The warm-start scan.
     pub fn load_all(&self) -> Vec<SpmmmPlan> {
         let mut out = Vec::new();
         let mut paths = self.entry_paths();
         paths.sort();
+        let loose_hashes: std::collections::HashSet<u64> =
+            paths.iter().filter_map(|p| loose_hash(p)).collect();
         for path in paths {
             let bytes = match fs::read(&path) {
                 Ok(b) => b,
@@ -444,26 +543,65 @@ impl PlanStore {
                 }
             }
         }
+        let mut frames: Vec<(u64, SegmentEntry)> = {
+            let inner = self.lock();
+            inner
+                .segments
+                .iter()
+                .filter(|(hash, _)| !loose_hashes.contains(hash))
+                .map(|(&hash, e)| (hash, e.clone()))
+                .collect()
+        };
+        frames.sort_by_key(|(hash, _)| *hash);
+        for (_, entry) in frames {
+            match self.read_frame_bytes(&entry).as_deref().map(decode) {
+                Some(Some(plan)) => {
+                    self.lock().stats.loaded += 1;
+                    out.push(plan);
+                }
+                Some(None) => {
+                    self.lock().stats.store_rejected += 1;
+                }
+                None => {
+                    self.lock().stats.io_errors += 1;
+                }
+            }
+        }
         out
     }
 
-    /// Remove the entry for `key` (cache-eviction coherence). True if a
-    /// file was deleted.
+    /// Remove the entry for `key` (cache-eviction coherence): the loose
+    /// file if present, and the segment index entry if any (the frame's
+    /// bytes are reclaimed at the next [`PlanStore::compact`]). True if
+    /// either existed; counts at most one eviction.
     pub fn remove(&self, key: &PlanKey) -> bool {
         let path = self.path_for(key);
         let len = fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
-        let removed = fs::remove_file(&path).is_ok();
-        if removed {
-            let mut inner = self.lock();
-            inner.stats.evicted += 1;
+        let file_removed = fs::remove_file(&path).is_ok();
+        let mut inner = self.lock();
+        let frame_removed = inner.segments.remove(&fnv1a(&key_words(key))).is_some();
+        if file_removed {
             inner.approx_bytes = inner.approx_bytes.saturating_sub(len);
         }
-        removed
+        if file_removed || frame_removed {
+            inner.stats.evicted += 1;
+        }
+        file_removed || frame_removed
     }
 
-    /// Number of entry files currently on disk.
+    /// Number of entries currently on disk: loose files plus segment
+    /// frames no loose file supersedes.
     pub fn len(&self) -> usize {
-        self.entry_paths().len()
+        let paths = self.entry_paths();
+        let loose_hashes: std::collections::HashSet<u64> =
+            paths.iter().filter_map(|p| loose_hash(p)).collect();
+        let inner = self.lock();
+        let live_frames = inner
+            .segments
+            .keys()
+            .filter(|hash| !loose_hashes.contains(hash))
+            .count();
+        paths.len() + live_frames
     }
 
     /// True when no entries are on disk.
@@ -471,13 +609,125 @@ impl PlanStore {
         self.len() == 0
     }
 
-    /// Total bytes of all entry files.
+    /// Total bytes of all entry and segment files.
     pub fn total_bytes(&self) -> u64 {
         self.entry_paths()
             .iter()
+            .chain(self.segment_paths().iter())
             .filter_map(|p| fs::metadata(p).ok())
             .map(|m| m.len())
             .sum()
+    }
+
+    /// Fold every live entry — loose files and still-referenced segment
+    /// frames — into one fresh `.bzps` segment file, then delete the
+    /// consumed loose files and old segments. Returns the number of
+    /// entries the new segment holds. Invalid loose files are left in
+    /// place (they keep rejecting on load exactly as before); a session
+    /// flush is the intended call site, so concurrent writers are not
+    /// defended against beyond the atomic rename.
+    pub fn compact(&self) -> usize {
+        let loose = {
+            let mut paths = self.entry_paths();
+            paths.sort();
+            paths
+        };
+        let old_segments = self.segment_paths();
+        // No loose files and at most one segment: already compact.
+        if loose.is_empty() && old_segments.len() <= 1 {
+            return self.lock().segments.len();
+        }
+        // Gather (hash, bytes) of every live entry; loose supersedes.
+        let mut entries: Vec<(u64, Vec<u8>)> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        let mut consumed_loose = Vec::new();
+        for path in &loose {
+            let Some(hash) = loose_hash(path) else { continue };
+            let Ok(bytes) = fs::read(path) else { continue };
+            // Validate before folding: corrupt files stay behind as
+            // loose rejections rather than poisoning the segment.
+            if decode(&bytes).is_none() {
+                continue;
+            }
+            if seen.insert(hash) {
+                entries.push((hash, bytes));
+            }
+            consumed_loose.push(path.clone());
+        }
+        let frames: Vec<(u64, SegmentEntry)> = {
+            let inner = self.lock();
+            inner.segments.iter().map(|(&h, e)| (h, e.clone())).collect()
+        };
+        for (hash, entry) in frames {
+            if seen.contains(&hash) {
+                continue;
+            }
+            let Some(bytes) = self.read_frame_bytes(&entry) else { continue };
+            if decode(&bytes).is_none() {
+                continue;
+            }
+            seen.insert(hash);
+            entries.push((hash, bytes));
+        }
+        if entries.is_empty() {
+            return 0;
+        }
+        entries.sort_by_key(|(hash, _)| *hash);
+        // Segment layout: [SEG_MAGIC, FORMAT_VERSION, count] then per
+        // frame [key_hash, byte_len] + the entry's verbatim bytes.
+        let mut bytes = Vec::new();
+        for w in [SEG_MAGIC, FORMAT_VERSION, entries.len() as u64] {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        for (hash, entry_bytes) in &entries {
+            bytes.extend_from_slice(&hash.to_le_bytes());
+            bytes.extend_from_slice(&(entry_bytes.len() as u64).to_le_bytes());
+            bytes.extend_from_slice(entry_bytes);
+        }
+        let name_hash = fnv1a(&entries.iter().map(|(h, _)| *h).collect::<Vec<u64>>());
+        let seg_path = self.dir.join(format!("segment-{name_hash:016x}.{SEG_EXT}"));
+        let tmp = {
+            let mut inner = self.lock();
+            inner.seq += 1;
+            self.dir.join(format!(".tmp-{}-{}", std::process::id(), inner.seq))
+        };
+        let written = (|| -> std::io::Result<()> {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+            fs::rename(&tmp, &seg_path)?;
+            Ok(())
+        })();
+        if written.is_err() {
+            let _ = fs::remove_file(&tmp);
+            self.lock().stats.io_errors += 1;
+            return 0;
+        }
+        for path in consumed_loose
+            .iter()
+            .chain(old_segments.iter().filter(|p| **p != seg_path))
+        {
+            let _ = fs::remove_file(path);
+        }
+        // Re-index over the new segment and re-sync the byte estimate.
+        let mut index = HashMap::new();
+        let mut offset = 8u64 * 3;
+        for (hash, entry_bytes) in &entries {
+            offset += 16; // frame header: hash + byte length
+            index.insert(
+                *hash,
+                SegmentEntry { path: seg_path.clone(), offset, len: entry_bytes.len() },
+            );
+            offset += entry_bytes.len() as u64;
+        }
+        let count = entries.len();
+        let total = self.total_bytes();
+        {
+            let mut inner = self.lock();
+            inner.segments = index;
+            inner.approx_bytes = total;
+        }
+        count
     }
 
     /// Counter snapshot.
@@ -493,14 +743,88 @@ impl PlanStore {
             .collect()
     }
 
-    /// Evict least-recently-used entries (oldest mtime first, filename
-    /// as tiebreak) until the directory fits the byte budget. Runs only
-    /// when the running estimate crosses the budget; the full scan also
+    fn segment_paths(&self) -> Vec<PathBuf> {
+        let Ok(rd) = fs::read_dir(&self.dir) else { return Vec::new() };
+        let mut paths: Vec<PathBuf> = rd
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().map_or(false, |e| e == SEG_EXT))
+            .collect();
+        paths.sort();
+        paths
+    }
+
+    /// Read the raw bytes of one segment frame.
+    fn read_frame_bytes(&self, entry: &SegmentEntry) -> Option<Vec<u8>> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = fs::File::open(&entry.path).ok()?;
+        f.seek(SeekFrom::Start(entry.offset)).ok()?;
+        let mut buf = vec![0u8; entry.len];
+        f.read_exact(&mut buf).ok()?;
+        Some(buf)
+    }
+
+    /// Build the key-hash → frame index over every `.bzps` file in the
+    /// directory (the open-time scan). A malformed segment is skipped
+    /// wholesale — its entries simply read as missing, the cold
+    /// fallback, consistent with every other corruption policy here.
+    fn index_segments(&self) -> HashMap<u64, SegmentEntry> {
+        let mut index = HashMap::new();
+        for path in self.segment_paths() {
+            let Ok(bytes) = fs::read(&path) else { continue };
+            if bytes.len() < 24 || bytes.len() % 8 != 0 {
+                continue;
+            }
+            let word = |i: usize| {
+                u64::from_le_bytes(bytes[8 * i..8 * i + 8].try_into().expect("bounds checked"))
+            };
+            if word(0) != SEG_MAGIC || word(1) != FORMAT_VERSION {
+                continue;
+            }
+            let count = word(2);
+            let mut offset = 24u64;
+            let mut frames = Vec::new();
+            let mut well_formed = true;
+            for _ in 0..count {
+                if offset + 16 > bytes.len() as u64 {
+                    well_formed = false;
+                    break;
+                }
+                let hash = u64::from_le_bytes(
+                    bytes[offset as usize..offset as usize + 8].try_into().expect("checked"),
+                );
+                let len = u64::from_le_bytes(
+                    bytes[offset as usize + 8..offset as usize + 16].try_into().expect("checked"),
+                );
+                offset += 16;
+                if len % 8 != 0 || offset + len > bytes.len() as u64 {
+                    well_formed = false;
+                    break;
+                }
+                frames.push((hash, offset, len as usize));
+                offset += len;
+            }
+            if !well_formed || offset != bytes.len() as u64 {
+                continue;
+            }
+            for (hash, offset, len) in frames {
+                index.insert(hash, SegmentEntry { path: path.clone(), offset, len });
+            }
+        }
+        index
+    }
+
+    /// Evict least-recently-used files (oldest mtime first, filename as
+    /// tiebreak) until the directory fits the byte budget. Segment
+    /// files participate like any other: evicting one drops every index
+    /// entry it held and counts each as an eviction. Runs only when the
+    /// running estimate crosses the budget; the full scan also
     /// re-synchronizes the estimate with the actual directory size.
     fn enforce_budget(&self) {
         let mut files: Vec<(SystemTime, PathBuf, u64)> = self
             .entry_paths()
             .into_iter()
+            .chain(self.segment_paths())
             .filter_map(|p| {
                 let m = fs::metadata(&p).ok()?;
                 let t = m.modified().ok()?;
@@ -516,12 +840,27 @@ impl PlanStore {
                 }
                 if fs::remove_file(&path).is_ok() {
                     total -= len;
-                    self.lock().stats.evicted += 1;
+                    let mut inner = self.lock();
+                    if path.extension().map_or(false, |e| e == SEG_EXT) {
+                        let before = inner.segments.len();
+                        inner.segments.retain(|_, e| e.path != path);
+                        inner.stats.evicted += (before - inner.segments.len()) as u64;
+                    } else {
+                        inner.stats.evicted += 1;
+                    }
                 }
             }
         }
         self.lock().approx_bytes = total;
     }
+}
+
+/// Parse the key hash out of a loose entry filename
+/// (`plan-<16 hex digits>.bzp`); `None` for foreign names.
+fn loose_hash(path: &Path) -> Option<u64> {
+    let stem = path.file_stem()?.to_str()?;
+    let hex = stem.strip_prefix("plan-")?;
+    u64::from_str_radix(hex, 16).ok()
 }
 
 #[cfg(test)]
@@ -627,6 +966,110 @@ mod tests {
         assert!(store.load(&keys[2]).is_some(), "newest entry survives");
         assert_eq!(store.stats().store_rejected, 0, "eviction is not corruption");
         fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn compact_merges_entries_into_one_segment() {
+        let d = tmpdir("compact");
+        let store = PlanStore::open_default(&d).unwrap();
+        let keys: Vec<PlanKey> = (30..33u64)
+            .map(|seed| {
+                let (_, _, key, plan) = plan_for(seed, 2);
+                assert!(store.save(&plan));
+                key
+            })
+            .collect();
+        assert_eq!(store.compact(), 3);
+        assert_eq!(store.entry_paths().len(), 0, "loose files were consumed");
+        assert_eq!(store.segment_paths().len(), 1, "one segment replaces them");
+        assert_eq!(store.len(), 3);
+        for key in &keys {
+            assert!(store.load(key).is_some(), "entry survives compaction");
+        }
+        assert_eq!(store.stats().store_rejected, 0);
+        // A later save shadows its frame; recompacting folds it back in.
+        let (_, _, key0, plan0) = plan_for(30, 2);
+        assert_eq!(key0, keys[0]);
+        assert!(store.save(&plan0));
+        assert_eq!(store.entry_paths().len(), 1);
+        assert_eq!(store.len(), 3, "the loose file supersedes its frame");
+        assert_eq!(store.compact(), 3);
+        assert_eq!(store.segment_paths().len(), 1);
+        // A restarted store re-indexes the segment from disk alone.
+        drop(store);
+        let store = PlanStore::open_default(&d).unwrap();
+        assert_eq!(store.len(), 3);
+        assert!(store.load(&keys[1]).is_some());
+        assert_eq!(store.load_all().len(), 3);
+        fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn budget_eviction_includes_segments() {
+        let d = tmpdir("seg_budget");
+        // Stage two entries folded into one segment, unbounded.
+        let (k40, k41) = {
+            let store = PlanStore::open_default(&d).unwrap();
+            let mut keys = (40..42u64).map(|seed| {
+                let (_, _, key, plan) = plan_for(seed, 1);
+                assert!(store.save(&plan));
+                key
+            });
+            let pair = (keys.next().unwrap(), keys.next().unwrap());
+            assert_eq!(store.compact(), 2);
+            pair
+        };
+        let (_, _, k42, p42) = plan_for(42, 1);
+        let e42 = encode(&k42, &p42).len() as u64;
+        // Budget fits the segment alone but not segment + one entry.
+        let seg_bytes = {
+            let probe = PlanStore::open_default(&d).unwrap();
+            probe.total_bytes()
+        };
+        let store = PlanStore::open(&d, seg_bytes + e42 / 2).unwrap();
+        assert_eq!(store.len(), 2, "reopen sees both segment frames");
+        // Distinct mtimes so the segment is unambiguously the LRU file.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(store.save(&p42));
+        assert!(store.total_bytes() <= seg_bytes + e42 / 2, "budget holds");
+        assert_eq!(store.stats().evicted, 2, "evicted segment counts each frame");
+        assert!(store.load(&k40).is_none(), "folded entries went with the segment");
+        assert!(store.load(&k41).is_none());
+        assert!(store.load(&k42).is_some(), "newest loose entry survives");
+        fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn stale_format_version_declines_to_load() {
+        let d = tmpdir("version");
+        let store = PlanStore::open_default(&d).unwrap();
+        let (_, _, key, plan) = plan_for(50, 1);
+        let mut bytes = encode(&key, &plan);
+        // Rewind the version word to 1. The checksum deliberately
+        // excludes the version, so only the version gate can reject
+        // this file — which it must: v1 bodies lack the axis word.
+        bytes[8..16].copy_from_slice(&1u64.to_le_bytes());
+        fs::write(store.path_for(&key), &bytes).unwrap();
+        assert!(store.load(&key).is_none());
+        assert_eq!(store.stats().store_rejected, 1);
+        fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn csc_plans_round_trip_with_their_axis() {
+        use crate::sparse::convert::csr_to_csc;
+        let a = csr_to_csc(&random_fixed_per_row(30, 30, 4, 60));
+        let b = csr_to_csc(&random_fixed_per_row(30, 30, 4, 61));
+        let machine = Machine::sandy_bridge_i7_2600();
+        let key = PlanKey::of_csc(&machine, &a, &b, 3, Partition::Flops);
+        let plan = SpmmmPlan::build_csc(&machine, &a, &b, key, &mut Workspace::new());
+        let back = decode(&encode(&key, &plan)).expect("CSC plan round trips");
+        assert_eq!(back.axis(), plan.axis());
+        assert!(back.matches_csc(&a, &b), "revalidated plan still feeds the CSC fill");
+        assert_eq!(back.slabs(), plan.slabs());
+        for c in 0..b.cols() {
+            assert_eq!(back.pattern_row(c), plan.pattern_row(c), "column {c}");
+        }
     }
 
     #[test]

@@ -6,14 +6,20 @@
 //! the symbolic/numeric plan split (planned evaluation bit-identical to
 //! unplanned everywhere; cache hits perform no symbolic work).
 
+use std::sync::Arc;
+
 use blazert::exec::{ExecPool, Partition, Workspace};
 use blazert::expr::{EvalContext, Expression, SparseOperand};
 use blazert::gen::{operand_pair, random_power_law, Workload};
 use blazert::kernels::parallel::{par_planned_fill, par_spmmm, par_spmmm_into, par_spmmm_with};
-use blazert::kernels::{planned_fill_serial, spmmm, Strategy};
+use blazert::kernels::{
+    planned_fill_csr_csc, planned_fill_serial, planned_fill_serial_csc, spmmm, spmmm_csc,
+    spmmm_csr_csc, Strategy,
+};
 use blazert::model::Machine;
-use blazert::plan::{PlanCache, PlanKey, SpmmmPlan};
-use blazert::sparse::{CsrMatrix, SparseShape};
+use blazert::plan::{PlanCache, PlanKey, PlanStore, SpmmmPlan};
+use blazert::sparse::convert::csr_to_csc;
+use blazert::sparse::{CscMatrix, CsrMatrix, SparseShape};
 
 #[test]
 fn bit_identity_all_strategies_partitions_threads() {
@@ -275,6 +281,198 @@ fn plan_survives_value_changes_under_fixed_pattern() {
     planned_fill_serial(&plan, &scaled, &b, &mut ws.plan_temp, &mut out);
     let reference = spmmm(&scaled, &b, Strategy::Combined);
     assert!(out.approx_eq(&reference, 0.0), "same plan, new values");
+}
+
+/// Bitwise (not just numeric) equality of two CSR results — the only
+/// comparison that distinguishes `0.0` from `-0.0` and sees NaN as
+/// equal to itself, which is what the special-values identity below
+/// needs.
+fn assert_csr_bits_eq(got: &CsrMatrix, want: &CsrMatrix, ctx: &str) {
+    assert_eq!(got.row_ptr(), want.row_ptr(), "{ctx}: row_ptr");
+    assert_eq!(got.col_idx(), want.col_idx(), "{ctx}: col_idx");
+    let gb: Vec<u64> = got.values().iter().map(|v| v.to_bits()).collect();
+    let wb: Vec<u64> = want.values().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(gb, wb, "{ctx}: value bits");
+}
+
+fn assert_csc_bits_eq(got: &CscMatrix, want: &CscMatrix, ctx: &str) {
+    assert_eq!(got.col_ptr(), want.col_ptr(), "{ctx}: col_ptr");
+    assert_eq!(got.row_idx(), want.row_idx(), "{ctx}: row_idx");
+    let gb: Vec<u64> = got.values().iter().map(|v| v.to_bits()).collect();
+    let wb: Vec<u64> = want.values().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(gb, wb, "{ctx}: value bits");
+}
+
+/// The `simd` build's unrolled lanes must be *bitwise* indistinguishable
+/// from the scalar build — both are pinned against the same scalar
+/// reference here (run the suite with and without `--features simd`;
+/// each build matching the reference bit-for-bit makes the two builds
+/// bit-identical to each other). The operands are built to exercise
+/// every special value the drop rule (`v != 0.0`) has an opinion on:
+///
+/// * exact cancellation (`+1.5 + -1.5` → `+0.0`, dropped) — and each
+///   cancelled position receives exactly two contributions whose sum is
+///   `+0.0` in either order, so the check is accumulation-order-proof;
+/// * negative zero produced by `-1.0 × 0.0` (dropped: `-0.0 != 0.0` is
+///   false);
+/// * NaN produced by `c × NaN` (kept: NaN `!= 0.0` is true) — one
+///   contribution per output slot, so the bit pattern is whatever the
+///   one multiply produced on this hardware, identically in every
+///   kernel;
+/// * empty rows in both operands (empty-row slabs on every partition).
+#[test]
+fn special_values_bit_identical_across_strategies_partitions_threads() {
+    let machine = Machine::sandy_bridge_i7_2600();
+    let pool = ExecPool::new(3);
+    let mut b = CsrMatrix::new(4, 8);
+    for c in [0usize, 2, 5] {
+        b.append(c, 1.5);
+    }
+    b.finalize_row();
+    for c in [0usize, 2, 5] {
+        b.append(c, 1.5);
+    }
+    b.finalize_row();
+    b.append(1, 0.0);
+    b.append(3, f64::NAN);
+    b.finalize_row();
+    b.finalize_row(); // row 3 empty
+    let mut a = CsrMatrix::new(6, 4);
+    a.append(0, 1.0);
+    a.append(1, -1.0); // row 0: exact cancellation against b's twin rows
+    a.finalize_row();
+    a.finalize_row(); // row 1 empty
+    a.append(2, -1.0); // row 2: -1·0.0 = -0.0 (drop), -1·NaN = NaN (keep)
+    a.finalize_row();
+    a.append(3, 2.0); // row 3: hits only b's empty row
+    a.finalize_row();
+    a.append(0, 1.0);
+    a.append(2, 3.0); // row 4: disjoint contributions, incl. 3·NaN
+    a.finalize_row();
+    a.finalize_row(); // row 5 empty
+
+    let reference = spmmm(&a, &b, Strategy::Combined);
+    assert_eq!(reference.row_nnz(0), 0, "cancelled row compacts away");
+    assert_eq!(reference.row_nnz(2), 1, "-0.0 dropped, NaN kept");
+    assert!(reference.values()[reference.row_ptr()[2]].is_nan());
+    assert_eq!(reference.row_nnz(3), 0, "empty B row yields an empty row");
+
+    for strategy in Strategy::ALL {
+        let c = spmmm(&a, &b, strategy);
+        assert_csr_bits_eq(&c, &reference, strategy.name());
+    }
+    let mut ws = Workspace::new();
+    let mut out = CsrMatrix::new(0, 0);
+    for partition in Partition::ALL {
+        for threads in [1usize, 2, 4, 8] {
+            let ctx = format!("planned {partition:?} threads={threads}");
+            let key = PlanKey::of(&machine, &a, &b, threads, partition);
+            let plan = SpmmmPlan::build(&machine, &a, &b, key, &mut ws);
+            if threads > 1 {
+                par_planned_fill(&pool, &plan, &a, &b, &mut out);
+            } else {
+                planned_fill_serial(&plan, &a, &b, &mut ws.plan_temp, &mut out);
+            }
+            assert_csr_bits_eq(&out, &reference, &ctx);
+            for strategy in Strategy::ALL {
+                par_spmmm_into(
+                    &pool, &a, &b, threads, strategy, partition, &machine, &mut out,
+                );
+                assert_csr_bits_eq(
+                    &out,
+                    &reference,
+                    &format!("{} {partition:?} threads={threads}", strategy.name()),
+                );
+            }
+        }
+    }
+    // The same special values through the column-major planned path.
+    let (ac, bc) = (csr_to_csc(&a), csr_to_csc(&b));
+    let csc_reference = spmmm_csc(&ac, &bc, Strategy::Combined);
+    let mut out_csc = CscMatrix::new(0, 0);
+    for threads in [1usize, 4] {
+        let key = PlanKey::of_csc(&machine, &ac, &bc, threads, Partition::Flops);
+        let plan = SpmmmPlan::build_csc(&machine, &ac, &bc, key, &mut ws);
+        planned_fill_serial_csc(&plan, &ac, &bc, &mut ws.plan_temp, &mut out_csc);
+        assert_csc_bits_eq(&out_csc, &csc_reference, &format!("csc threads={threads}"));
+    }
+}
+
+/// Warm CSC products ride the plan cache exactly like CSR products:
+/// one symbolic build on first sight, every repeat a hit, and the
+/// planned refill bit-identical to the unplanned column kernel. The
+/// mixed CSR·CSC product keys separately (its fingerprints are
+/// order-tagged) and adds its own single build.
+#[test]
+fn warm_csc_products_hit_the_plan_cache() {
+    let machine = Machine::sandy_bridge_i7_2600();
+    let cache = PlanCache::default();
+    let mut ws = Workspace::new();
+    let (a_csr, b_csr) = operand_pair(Workload::FiveBandFd, 180, 11);
+    let (a, b) = (csr_to_csc(&a_csr), csr_to_csc(&b_csr));
+    let reference = spmmm_csc(&a, &b, Strategy::Combined);
+    let mut out = CscMatrix::new(0, 0);
+    for rep in 0..3 {
+        let plan = cache.get_or_build_csc(&machine, &mut ws, &a, &b, 1, Partition::Flops);
+        planned_fill_serial_csc(&plan, &a, &b, &mut ws.plan_temp, &mut out);
+        assert_csc_bits_eq(&out, &reference, &format!("rep={rep}"));
+    }
+    let s = cache.stats();
+    assert_eq!(s.symbolic_builds, 1, "one symbolic phase for three evaluations");
+    assert!(s.hits >= 2, "every repeat is a hit (got {})", s.hits);
+
+    let mixed_reference = spmmm_csr_csc(&a_csr, &b, Strategy::Combined);
+    let mut out_csr = CsrMatrix::new(0, 0);
+    for _ in 0..2 {
+        let plan = cache.get_or_build_csr_csc(&machine, &mut ws, &a_csr, &b, 1, Partition::Flops);
+        planned_fill_csr_csc(&plan, &a_csr, &b, &mut ws.plan_temp, &mut out_csr);
+        assert_csr_bits_eq(&out_csr, &mixed_reference, "mixed csr·csc");
+    }
+    let s = cache.stats();
+    assert_eq!(s.symbolic_builds, 2, "the mixed product keys and builds separately");
+    assert!(s.hits >= 3);
+}
+
+/// Release-smoke contract: a *restarted* session (fresh cache, same
+/// store directory — by now compacted into a single segment) warm-starts
+/// the CSC plan from disk and reports **zero** symbolic builds.
+#[test]
+fn warm_csc_restart_runs_zero_symbolic_builds() {
+    let machine = Machine::sandy_bridge_i7_2600();
+    let dir = std::env::temp_dir().join(format!(
+        "blazert_itest_csc_restart_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (a_csr, b_csr) = operand_pair(Workload::FiveBandFd, 160, 3);
+    let (a, b) = (csr_to_csc(&a_csr), csr_to_csc(&b_csr));
+    let reference = spmmm_csc(&a, &b, Strategy::Combined);
+    let mut ws = Workspace::new();
+    {
+        let cache = PlanCache::default();
+        let plan = cache.get_or_build_csc(&machine, &mut ws, &a, &b, 1, Partition::Flops);
+        let mut out = CscMatrix::new(0, 0);
+        planned_fill_serial_csc(&plan, &a, &b, &mut ws.plan_temp, &mut out);
+        assert_csc_bits_eq(&out, &reference, "first session");
+        let store = PlanStore::open_default(&dir).expect("store opens");
+        assert_eq!(cache.persist_to_dir(&store), 1);
+    }
+    // Simulated restart: everything in-memory is gone, only the (now
+    // segment-compacted) directory survives.
+    let store = Arc::new(PlanStore::open_default(&dir).expect("store reopens"));
+    let cache = PlanCache::default();
+    cache.attach_store(store);
+    let mut out = CscMatrix::new(0, 0);
+    for _ in 0..3 {
+        let plan = cache.get_or_build_csc(&machine, &mut ws, &a, &b, 1, Partition::Flops);
+        planned_fill_serial_csc(&plan, &a, &b, &mut ws.plan_temp, &mut out);
+        assert_csc_bits_eq(&out, &reference, "restarted session");
+    }
+    let s = cache.stats();
+    assert_eq!(s.symbolic_builds, 0, "warm restart must not re-run the symbolic phase");
+    assert_eq!(s.disk_loads, 1, "the plan came off disk exactly once");
+    assert_eq!(s.hits, 3, "every warm evaluation counts as a hit");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
