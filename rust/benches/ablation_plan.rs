@@ -1,198 +1,14 @@
-//! Ablation: the symbolic/numeric plan split on repeated spMMM.
+//! Ablation: symbolic/numeric plan split — thin wrapper over the
+//! committed definition `experiments/plan_ablation.toml`.
 //!
-//! The repeated-traffic workloads (FD stencils re-multiplied by
-//! iterative schemes, power-law service mixes) keep their sparsity
-//! patterns fixed, so the structure-discovery half of every multiply is
-//! redundant after the first. This bench quantifies the split four
-//! ways per workload and thread count:
-//!
-//! * **unplanned** — the engine's regular kernel (strategy choice +
-//!   structure discovery every evaluation; size-then-fill in parallel);
-//! * **plan cold** — symbolic + numeric together each execution (the
-//!   one-shot price of planning);
-//! * **plan warm** — the plan is built once, every timed execution is a
-//!   pure numeric refill (the steady-state path a plan-cache hit takes);
-//! * **disk-warm** — a *fresh* session (simulated restart) recovers the
-//!   plan from the on-disk store and refills numerically — the
-//!   "restart without re-warming" path; its session must report zero
-//!   symbolic builds.
-//!
-//! Warm/unplanned > 1 is the payoff of caching the symbolic phase;
-//! warm/cold is the share of an evaluation the structure discovery was;
-//! disk-warm ≈ warm shows persistence costs nothing at steady state.
-//! The `warm %roof` column validates the warm refill against the
-//! model: measured time vs the roofline transfer time of the refill's
-//! byte lower bound (`planned_fill_lower_bound_bytes`).
-//!
-//! Results are also emitted as structured JSON (default
-//! `BENCH_plan.json` in the working directory; override the path with
-//! `BLAZERT_BENCH_JSON`).
-
-use std::sync::Arc;
-
-use blazert::blazemark::{BenchConfig, Measurement, PlanMode, SweepSession};
-use blazert::exec::Partition;
-use blazert::gen::{operand_pair, Workload};
-use blazert::kernels::flops::spmmm_flops;
-use blazert::kernels::Strategy;
-use blazert::model::planned_fill_lower_bound_bytes;
-use blazert::plan::PlanStore;
-use blazert::sparse::SparseShape;
-use blazert::util::table::Table;
-
-struct Row {
-    workload: &'static str,
-    n: usize,
-    threads: usize,
-    unplanned: Measurement,
-    cold: Measurement,
-    warm: Measurement,
-    disk: Measurement,
-    flops: u64,
-    warm_bytes: u64,
-    warm_roofline_pct: f64,
-}
+//! The matrix (unplanned / cold / warm / disk-warm × threads, on the FD
+//! and power-law workloads), the measurement protocol, and the noise
+//! bands all live in the definition; this target only selects the tier
+//! (`BLAZEMARK_FULL=1` for the paper protocol) and the default output
+//! path. `BLAZERT_BENCH_JSON` overrides where the record lands. The
+//! same definition drives `cargo run --bin experiment -- run|compare`,
+//! which is what CI gates on.
 
 fn main() {
-    let cfg = BenchConfig::from_env();
-    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
-    let max_threads = cores.min(8).max(1);
-    eprintln!(
-        "ablation: plan split (cold vs warm vs disk-warm) on {cores} cores; min_time={}s",
-        cfg.min_time_s
-    );
-    let store_dir =
-        std::env::temp_dir().join(format!("blazert_ablation_store_{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&store_dir);
-    let store = Arc::new(PlanStore::open_default(&store_dir).expect("plan store opens"));
-    let mut session = SweepSession::new(max_threads);
-    let mut threads = vec![1usize];
-    if max_threads > 1 {
-        threads.push(max_threads);
-    }
-
-    let mut rows: Vec<Row> = Vec::new();
-    let mut restart_symbolic_builds = 0u64;
-    for (w, n) in [(Workload::FiveBandFd, 65536usize), (Workload::PowerLawSkew, 32768)] {
-        let (a, b) = operand_pair(w, n, 5);
-        let flops = spmmm_flops(&a, &b);
-        for &thr in &threads {
-            let unplanned =
-                session.measure_spmmm(&cfg, &a, &b, Strategy::Combined, thr, Partition::Flops);
-            let cold =
-                session.measure_spmmm_planned(&cfg, &a, &b, thr, Partition::Flops, PlanMode::Cold);
-            let warm =
-                session.measure_spmmm_planned(&cfg, &a, &b, thr, Partition::Flops, PlanMode::Warm);
-            // The filled output's population is a (slight) lower bound
-            // on the plan's pattern, so the derived traffic floor stays
-            // a true floor and the percentage stays honest.
-            let warm_bytes =
-                planned_fill_lower_bound_bytes(a.nnz(), b.nnz(), session.out().nnz());
-            let warm_roofline_pct =
-                session.roofline_percent(flops as f64, warm_bytes as f64, &warm);
-            // Persist the long-lived session's plans, then measure a
-            // fresh session (the simulated restart) that warm-starts
-            // from the store directory.
-            session.persist_plans(&store);
-            let mut restarted = SweepSession::new(max_threads);
-            restarted.attach_plan_store(&store);
-            let disk = restarted
-                .measure_spmmm_planned(&cfg, &a, &b, thr, Partition::Flops, PlanMode::Persisted);
-            restart_symbolic_builds += restarted.plan_stats().symbolic_builds;
-            rows.push(Row {
-                workload: w.tag(),
-                n,
-                threads: thr,
-                unplanned,
-                cold,
-                warm,
-                disk,
-                flops,
-                warm_bytes,
-                warm_roofline_pct,
-            });
-        }
-    }
-
-    let mut t = Table::new([
-        "workload/N",
-        "thr",
-        "unplanned MF/s",
-        "cold MF/s",
-        "warm MF/s",
-        "disk MF/s",
-        "warm/unplanned",
-        "warm %roof",
-    ]);
-    for r in &rows {
-        let unplanned = r.unplanned.mflops(r.flops);
-        let warm = r.warm.mflops(r.flops);
-        t.row([
-            format!("{} N={}", r.workload, r.n),
-            format!("{}", r.threads),
-            format!("{unplanned:.0}"),
-            format!("{:.0}", r.cold.mflops(r.flops)),
-            format!("{warm:.0}"),
-            format!("{:.0}", r.disk.mflops(r.flops)),
-            format!("{:.2}x", warm / unplanned.max(1e-9)),
-            format!("{:.0}%", r.warm_roofline_pct),
-        ]);
-    }
-    println!("{}", t.render());
-    let s = session.plan_stats();
-    eprintln!(
-        "plan cache: {} hits, {} misses, {} symbolic builds, {} evictions",
-        s.hits, s.misses, s.symbolic_builds, s.evictions
-    );
-    let ss = store.stats();
-    eprintln!(
-        "plan store: {} saved, {} loaded, {} rejected, {} evicted \
-         ({} bytes on disk); restarted sessions ran {} symbolic builds (want 0)",
-        ss.saved,
-        ss.loaded,
-        ss.store_rejected,
-        ss.evicted,
-        store.total_bytes(),
-        restart_symbolic_builds,
-    );
-
-    let json_path =
-        std::env::var("BLAZERT_BENCH_JSON").unwrap_or_else(|_| "BENCH_plan.json".to_string());
-    let mut json = String::from("{\n");
-    json.push_str("  \"bench\": \"ablation_plan\",\n");
-    json.push_str("  \"machine\": \"sandy_bridge_i7_2600\",\n");
-    json.push_str(&format!("  \"simd\": {},\n", cfg!(feature = "simd")));
-    json.push_str(&format!(
-        "  \"config\": {{ \"min_time_s\": {}, \"trials\": {} }},\n",
-        cfg.min_time_s, cfg.trials
-    ));
-    json.push_str(&format!(
-        "  \"restart_symbolic_builds\": {restart_symbolic_builds},\n"
-    ));
-    json.push_str("  \"rows\": [\n");
-    for (i, r) in rows.iter().enumerate() {
-        json.push_str(&format!(
-            "    {{ \"workload\": \"{}\", \"n\": {}, \"threads\": {}, \
-             \"flops\": {}, \"unplanned_mflops\": {:.1}, \"cold_mflops\": {:.1}, \
-             \"warm_mflops\": {:.1}, \"disk_mflops\": {:.1}, \
-             \"warm_bytes_floor\": {}, \"warm_roofline_pct\": {:.1} }}{}\n",
-            r.workload,
-            r.n,
-            r.threads,
-            r.flops,
-            r.unplanned.mflops(r.flops),
-            r.cold.mflops(r.flops),
-            r.warm.mflops(r.flops),
-            r.disk.mflops(r.flops),
-            r.warm_bytes,
-            r.warm_roofline_pct,
-            if i + 1 == rows.len() { "" } else { "," },
-        ));
-    }
-    json.push_str("  ]\n}\n");
-    match std::fs::write(&json_path, &json) {
-        Ok(()) => eprintln!("wrote {json_path}"),
-        Err(e) => eprintln!("could not write {json_path}: {e}"),
-    }
-    let _ = std::fs::remove_dir_all(&store_dir);
+    blazert::harness::bench_main("experiments/plan_ablation.toml", "BENCH_plan.json");
 }

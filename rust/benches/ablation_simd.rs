@@ -1,7 +1,7 @@
-//! Ablation: the lane-unrolled planned numeric phase (`--features simd`).
+//! Ablation: lane-unrolled planned numeric phase — thin wrapper over
+//! the committed definition `experiments/simd_ablation.toml`.
 //!
-//! One binary is compiled either with or without the `simd` feature, so
-//! this bench measures whichever numeric phase it was built with and
+//! One binary is compiled either with or without the `simd` feature and
 //! records `"simd": true/false` in its output — run it twice,
 //!
 //! ```text
@@ -10,137 +10,11 @@
 //! ```
 //!
 //! and compare the two `BENCH_simd.json` files (override the output
-//! path with `BLAZERT_BENCH_JSON`, e.g. to keep both). The kernels are
-//! the tentpole's vectorization targets, all measured warm (plan built
-//! once, timed region pure numeric refill):
-//!
-//! * **serial** — `planned_fill_serial`, one thread;
-//! * **parallel** — `par_planned_fill` over the pool's column slabs;
-//! * **csc** — `planned_fill_serial_csc`, the column-major streaming
-//!   fill.
-//!
-//! Per kernel the table reports MFlop/s and percent-of-roofline: the
-//! model's transfer time for the refill's byte floor
-//! (`planned_fill_lower_bound_bytes`) over the measured time. Both
-//! builds produce bit-identical results (`tests/integration_exec.rs`
-//! pins that); the percentage is where the unrolled lanes and the
-//! software prefetch should show up.
-
-use blazert::blazemark::{BenchConfig, Measurement, PlanMode, SweepSession};
-use blazert::exec::Partition;
-use blazert::gen::{operand_pair, Workload};
-use blazert::kernels::flops::spmmm_flops;
-use blazert::model::planned_fill_lower_bound_bytes;
-use blazert::sparse::convert::csr_to_csc;
-use blazert::sparse::SparseShape;
-use blazert::util::table::Table;
-
-struct Row {
-    workload: &'static str,
-    n: usize,
-    kernel: &'static str,
-    threads: usize,
-    flops: u64,
-    bytes_floor: u64,
-    m: Measurement,
-    roofline_pct: f64,
-}
+//! path with `BLAZERT_BENCH_JSON` to keep both). The warm CSR rows
+//! cover the serial and parallel planned refills, the CSC rows the
+//! column-major streaming fill; both builds produce bit-identical
+//! results (`tests/integration_exec.rs` pins that).
 
 fn main() {
-    let cfg = BenchConfig::from_env();
-    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
-    let max_threads = cores.min(8).max(1);
-    let simd = cfg!(feature = "simd");
-    eprintln!(
-        "ablation: planned numeric phase, simd={simd} on {cores} cores; min_time={}s",
-        cfg.min_time_s
-    );
-
-    let mut session = SweepSession::new(max_threads);
-    let mut rows: Vec<Row> = Vec::new();
-    for (w, n) in [(Workload::FiveBandFd, 65536usize), (Workload::PowerLawSkew, 32768)] {
-        let (a, b) = operand_pair(w, n, 5);
-        let flops = spmmm_flops(&a, &b);
-        let mut push = |kernel, threads, m: Measurement, out_nnz: usize, session: &SweepSession| {
-            let bytes_floor = planned_fill_lower_bound_bytes(a.nnz(), b.nnz(), out_nnz);
-            let roofline_pct = session.roofline_percent(flops as f64, bytes_floor as f64, &m);
-            rows.push(Row {
-                workload: w.tag(),
-                n,
-                kernel,
-                threads,
-                flops,
-                bytes_floor,
-                m,
-                roofline_pct,
-            });
-        };
-        let m = session.measure_spmmm_planned(&cfg, &a, &b, 1, Partition::Flops, PlanMode::Warm);
-        push("serial", 1, m, session.out().nnz(), &session);
-        if max_threads > 1 {
-            let m = session.measure_spmmm_planned(
-                &cfg,
-                &a,
-                &b,
-                max_threads,
-                Partition::Flops,
-                PlanMode::Warm,
-            );
-            push("parallel", max_threads, m, session.out().nnz(), &session);
-        }
-        let (ac, bc) = (csr_to_csc(&a), csr_to_csc(&b));
-        let m =
-            session.measure_spmmm_csc_planned(&cfg, &ac, &bc, 1, Partition::Flops, PlanMode::Warm);
-        push("csc", 1, m, session.out_csc().nnz(), &session);
-    }
-
-    let mut t = Table::new(["workload/N", "kernel", "thr", "MF/s", "%roofline"]);
-    for r in &rows {
-        t.row([
-            format!("{} N={}", r.workload, r.n),
-            r.kernel.to_string(),
-            format!("{}", r.threads),
-            format!("{:.0}", r.m.mflops(r.flops)),
-            format!("{:.0}%", r.roofline_pct),
-        ]);
-    }
-    println!("{}", t.render());
-    let s = session.plan_stats();
-    eprintln!(
-        "plan cache: {} hits, {} symbolic builds (one per kernel shape)",
-        s.hits, s.symbolic_builds
-    );
-
-    let json_path =
-        std::env::var("BLAZERT_BENCH_JSON").unwrap_or_else(|_| "BENCH_simd.json".to_string());
-    let mut json = String::from("{\n");
-    json.push_str("  \"bench\": \"ablation_simd\",\n");
-    json.push_str("  \"machine\": \"sandy_bridge_i7_2600\",\n");
-    json.push_str(&format!("  \"simd\": {simd},\n"));
-    json.push_str(&format!(
-        "  \"config\": {{ \"min_time_s\": {}, \"trials\": {} }},\n",
-        cfg.min_time_s, cfg.trials
-    ));
-    json.push_str("  \"rows\": [\n");
-    for (i, r) in rows.iter().enumerate() {
-        json.push_str(&format!(
-            "    {{ \"workload\": \"{}\", \"n\": {}, \"kernel\": \"{}\", \"threads\": {}, \
-             \"flops\": {}, \"mflops\": {:.1}, \"bytes_floor\": {}, \
-             \"roofline_pct\": {:.1} }}{}\n",
-            r.workload,
-            r.n,
-            r.kernel,
-            r.threads,
-            r.flops,
-            r.m.mflops(r.flops),
-            r.bytes_floor,
-            r.roofline_pct,
-            if i + 1 == rows.len() { "" } else { "," },
-        ));
-    }
-    json.push_str("  ]\n}\n");
-    match std::fs::write(&json_path, &json) {
-        Ok(()) => eprintln!("wrote {json_path}"),
-        Err(e) => eprintln!("could not write {json_path}: {e}"),
-    }
+    blazert::harness::bench_main("experiments/simd_ablation.toml", "BENCH_simd.json");
 }

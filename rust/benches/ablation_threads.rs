@@ -1,76 +1,12 @@
 //! Ablation (paper §VI future work): shared-memory parallel spMMM
-//! scaling — "we expect that the typical contention and saturation
-//! effects seen with these architectures will add many new effects" —
-//! now measured through the persistent execution engine (one pool +
-//! workspaces reused across the whole sweep), plus a partitioning
-//! ablation: row-balanced vs flop-balanced vs model-guided slabs on a
-//! skewed power-law workload, where equal row counts serialize on the
-//! hottest slab.
-
-use blazert::blazemark::{BenchConfig, SweepSession};
-use blazert::exec::Partition;
-use blazert::gen::{operand_pair, Workload};
-use blazert::kernels::flops::spmmm_flops;
-use blazert::kernels::Strategy;
-use blazert::util::table::Table;
+//! scaling × slab partitioning — thin wrapper over the committed
+//! definition `experiments/threads_ablation.toml`.
+//!
+//! Row-balanced vs flop-balanced vs model-guided slabs at 1..8 threads
+//! on an even (FD) and a skewed (power-law) workload, where equal row
+//! counts serialize on the hottest slab. `BLAZEMARK_FULL=1` selects the
+//! paper protocol; `BLAZERT_BENCH_JSON` overrides the output path.
 
 fn main() {
-    let cfg = BenchConfig::from_env();
-    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
-    eprintln!("ablation: parallel spMMM scaling on {cores} cores; min_time={}s", cfg.min_time_s);
-    let threads: Vec<usize> =
-        [1usize, 2, 4, 8, 16].into_iter().filter(|&t| t <= 2 * cores).collect();
-    let mut session = SweepSession::new(*threads.last().unwrap_or(&1));
-
-    // Part 1: thread scaling (flop-balanced, the engine default).
-    let mut header = vec!["workload/N".to_string()];
-    header.extend(threads.iter().map(|t| format!("{t} thr")));
-    header.push("speedup@max".into());
-    let mut t = Table::new(header);
-    for (w, n) in [(Workload::FiveBandFd, 262144usize), (Workload::RandomFixed5, 65536)] {
-        let (a, b) = operand_pair(w, n, 5);
-        let flops = spmmm_flops(&a, &b);
-        let mut row = vec![format!("{} N={}", w.tag(), n)];
-        let mut first = 0.0f64;
-        let mut last = 0.0f64;
-        for &thr in &threads {
-            let m = session.measure_spmmm(
-                &cfg,
-                &a,
-                &b,
-                Strategy::Combined,
-                thr,
-                Partition::Flops,
-            );
-            let mf = m.mflops(flops);
-            if thr == 1 {
-                first = mf;
-            }
-            last = mf;
-            row.push(format!("{mf:.0}"));
-        }
-        row.push(format!("{:.2}x", last / first.max(1e-9)));
-        t.row(row);
-    }
-    println!("{}", t.render());
-
-    // Part 2: partitioning ablation on the skewed power-law workload.
-    // Row-balanced slabs serialize on the hot rows; flop-balanced and
-    // model-guided slabs split by predicted work.
-    let n = 65536usize;
-    let (a, b) = operand_pair(Workload::PowerLawSkew, n, 5);
-    let flops = spmmm_flops(&a, &b);
-    eprintln!("partition ablation: {} N={n}, {} flops", Workload::PowerLawSkew.tag(), flops);
-    let mut header = vec!["partition".to_string()];
-    header.extend(threads.iter().map(|t| format!("{t} thr")));
-    let mut t = Table::new(header);
-    for part in Partition::ALL {
-        let mut row = vec![part.name().to_string()];
-        for &thr in &threads {
-            let m = session.measure_spmmm(&cfg, &a, &b, Strategy::Combined, thr, part);
-            row.push(format!("{:.0}", m.mflops(flops)));
-        }
-        t.row(row);
-    }
-    println!("{}", t.render());
+    blazert::harness::bench_main("experiments/threads_ablation.toml", "BENCH_threads.json");
 }

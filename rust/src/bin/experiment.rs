@@ -1,0 +1,165 @@
+//! Driver for the declarative experiment harness.
+//!
+//! ```text
+//! experiment run     <def.toml> [--full] [--out <path>] [--quiet]
+//! experiment compare <def.toml> <run.json> [--baseline <path>]
+//! experiment inject  <run.json> --metric <name> --value <v> [--out <path>]
+//! experiment print   <run.json>
+//! ```
+//!
+//! `run` executes a definition's variant matrix (quick tier by
+//! default; `--full` or `BLAZEMARK_FULL=1` for the paper protocol) and
+//! writes a versioned record (default `runs/experiments/<name>.json`,
+//! `BLAZERT_BENCH_JSON` overrides). `compare` diffs a run against the
+//! committed baseline (default `baselines/experiments/<name>.json`)
+//! under the definition's noise-band policy and **exits 2 on any gated
+//! regression** — the CI contract. `inject` overwrites one metric in a
+//! run file (CI uses it to prove the gate actually fails on a
+//! regression). `print` renders a record as a table.
+//!
+//! The binary installs a counting global allocator, so runs emit the
+//! `steady_allocs` metric — the zero-allocation steady-state guarantee
+//! as a gated number instead of a test-only assertion.
+
+use std::path::PathBuf;
+
+use blazert::blazemark::BenchRecord;
+use blazert::harness::{
+    compare, find_repo_file, render_record_table, run_experiment, ExperimentDef, RunOptions,
+    RunTier,
+};
+use blazert::util::cli::{Args, OptSpec};
+use blazert::util::json::Json;
+use blazert::util::CountingAlloc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+fn alloc_probe() -> usize {
+    ALLOC.calls()
+}
+
+const SPECS: &[OptSpec] = &[
+    OptSpec { name: "full", help: "run the paper-scale protocol tier", takes_value: false },
+    OptSpec { name: "out", help: "output path for run/inject", takes_value: true },
+    OptSpec { name: "quiet", help: "suppress per-row progress", takes_value: false },
+    OptSpec { name: "baseline", help: "baseline record to compare against", takes_value: true },
+    OptSpec { name: "metric", help: "metric name to inject", takes_value: true },
+    OptSpec { name: "value", help: "metric value to inject", takes_value: true },
+];
+
+const COMMANDS: &[(&str, &str)] = &[
+    ("run", "execute a definition and write the run record"),
+    ("compare", "gate a run record against the committed baseline"),
+    ("inject", "overwrite one metric in a run record (gate self-test)"),
+    ("print", "render a record as a table"),
+];
+
+fn main() {
+    let args = match Args::parse(true, SPECS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("inject") => cmd_inject(&args),
+        Some("print") => cmd_print(&args),
+        _ => {
+            eprint!("{}", args.usage(COMMANDS));
+            std::process::exit(1);
+        }
+    };
+    match result {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn positional(args: &Args, i: usize, what: &str) -> Result<PathBuf, String> {
+    args.positionals
+        .get(i)
+        .map(PathBuf::from)
+        .ok_or_else(|| format!("missing positional argument: {what}"))
+}
+
+fn cmd_run(args: &Args) -> Result<i32, String> {
+    let def = ExperimentDef::load(&positional(args, 0, "definition (.toml)")?)?;
+    let tier = if args.flag("full") { RunTier::Full } else { RunTier::from_env() };
+    let opts = RunOptions { tier, alloc_probe: Some(alloc_probe), verbose: !args.flag("quiet") };
+    eprintln!(
+        "experiment {} [{} tier] — {} workload(s) × {} variant point(s)",
+        def.name,
+        tier.name(),
+        def.workloads.len(),
+        def.variants.points().len()
+    );
+    if let Some(h) = &def.hypothesis {
+        eprintln!("hypothesis: {h}");
+    }
+    let rec = run_experiment(&def, &opts)?;
+    println!("{}", render_record_table(&rec));
+    let default_out = args.get_or("out", &format!("runs/experiments/{}.json", def.name));
+    let path = rec.write(&default_out).map_err(|e| format!("write {default_out}: {e}"))?;
+    eprintln!("wrote {}", path.display());
+    Ok(0)
+}
+
+fn cmd_compare(args: &Args) -> Result<i32, String> {
+    let def = ExperimentDef::load(&positional(args, 0, "definition (.toml)")?)?;
+    let run = BenchRecord::load(&positional(args, 1, "run record (.json)")?)?;
+    let base_path = match args.get("baseline") {
+        Some(p) => PathBuf::from(p),
+        None => find_repo_file(&format!("baselines/experiments/{}.json", def.name)),
+    };
+    let base = BenchRecord::load(&base_path)?;
+    if run.bench != def.name {
+        return Err(format!("run record is for {:?}, definition is {:?}", run.bench, def.name));
+    }
+    let report = compare(&base, &run, &def.metrics);
+    print!("{}", report.render());
+    Ok(if report.passed() { 0 } else { 2 })
+}
+
+fn cmd_inject(args: &Args) -> Result<i32, String> {
+    let path = positional(args, 0, "run record (.json)")?;
+    let metric = args.get("metric").ok_or("inject requires --metric")?;
+    let value: f64 = args
+        .get("value")
+        .ok_or("inject requires --value")?
+        .parse()
+        .map_err(|e| format!("--value: {e}"))?;
+    let mut rec = BenchRecord::load(&path)?;
+    let mut touched = 0usize;
+    for row in &mut rec.rows {
+        for (name, v) in row.iter_mut() {
+            if name == metric {
+                *v = Json::Num(value);
+                touched += 1;
+            }
+        }
+    }
+    if touched == 0 {
+        return Err(format!("no row carries metric {metric:?}"));
+    }
+    let out = args.get("out").map(PathBuf::from).unwrap_or(path);
+    std::fs::write(&out, rec.to_json().render())
+        .map_err(|e| format!("write {}: {e}", out.display()))?;
+    eprintln!("injected {metric} = {value} into {touched} row(s) of {}", out.display());
+    Ok(0)
+}
+
+fn cmd_print(args: &Args) -> Result<i32, String> {
+    let rec = BenchRecord::load(&positional(args, 0, "record (.json)")?)?;
+    if let Some(h) = &rec.hypothesis {
+        println!("hypothesis: {h}");
+    }
+    println!("{}", render_record_table(&rec));
+    Ok(0)
+}

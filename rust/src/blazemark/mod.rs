@@ -28,5 +28,5 @@ pub mod report;
 pub mod runner;
 
 pub use figures::{figure_by_id, Figure, SeriesKind, FIGURES};
-pub use report::{run_figure, FigureResult};
+pub use report::{row_field, run_figure, BenchRecord, BenchRow, FigureResult, BENCH_SCHEMA};
 pub use runner::{measure, BenchConfig, Measurement, PlanMode, SweepSession};

@@ -1,5 +1,8 @@
 //! Figure execution + reporting: runs every series of a figure over the
-//! size sweep and prints the same rows/series the paper's figures plot.
+//! size sweep and prints the same rows/series the paper's figures plot —
+//! plus the one versioned structured-record schema ([`BenchRecord`],
+//! `blazert-bench-v1`) every bench and experiment emits, replacing the
+//! per-bench hand-rolled `BENCH_*.json` shapes.
 
 use super::figures::Figure;
 use super::runner::{measure, BenchConfig};
@@ -7,6 +10,7 @@ use crate::gen::operand_pair;
 use crate::kernels::flops::spmmm_flops;
 use crate::sparse::convert::csr_to_csc;
 use crate::sparse::SparseShape;
+use crate::util::json::Json;
 use crate::util::table::{ascii_chart, Table};
 
 /// The measured curves of one figure.
@@ -150,6 +154,140 @@ pub fn bench_main(figure_id: u32) {
     }
 }
 
+/// Schema tag of the unified structured-record format. Readers decline
+/// documents carrying any other tag (same policy as the plan store:
+/// version skew falls back to "no data", never to a misparse).
+pub const BENCH_SCHEMA: &str = "blazert-bench-v1";
+
+/// One row of a [`BenchRecord`]: ordered scalar fields. Fields whose
+/// names the harness metric registry knows
+/// ([`crate::harness::metric_orient`]) are metrics; everything else is
+/// part of the row's identity key (workload, n, seed, variant axes).
+pub type BenchRow = Vec<(String, Json)>;
+
+/// The versioned structured record every bench and experiment emits —
+/// one schema for `BENCH_*.json` trajectory snapshots, experiment run
+/// outputs, and committed baselines, so the `compare` gate can read any
+/// of them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// Emitting bench / experiment name.
+    pub bench: String,
+    /// The experiment's hypothesis, when one was declared.
+    pub hypothesis: Option<String>,
+    /// Machine-model identifier the run measured against.
+    pub machine: String,
+    /// Whether the emitting binary was built with `--features simd`.
+    pub simd: bool,
+    /// Measurement-protocol scalars (min_time_s, trials, replicates, …).
+    pub config: Vec<(String, Json)>,
+    /// Run-scoped extras outside the row matrix (e.g. restart counters).
+    pub context: Vec<(String, Json)>,
+    /// The measured matrix, one row per variant point.
+    pub rows: Vec<BenchRow>,
+}
+
+/// Row field lookup by name.
+pub fn row_field<'a>(row: &'a [(String, Json)], name: &str) -> Option<&'a Json> {
+    row.iter().find(|(k, _)| k == name).map(|(_, v)| v)
+}
+
+impl BenchRecord {
+    /// An empty record for `bench` on the default measurement machine,
+    /// stamped with this build's `simd` feature state.
+    pub fn new(bench: &str) -> Self {
+        BenchRecord {
+            bench: bench.to_string(),
+            hypothesis: None,
+            machine: "sandy_bridge_i7_2600".to_string(),
+            simd: cfg!(feature = "simd"),
+            config: Vec::new(),
+            context: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// The record as a JSON value (schema-tagged).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(String, Json)> =
+            vec![("schema".into(), Json::Str(BENCH_SCHEMA.into()))];
+        fields.push(("bench".into(), Json::Str(self.bench.clone())));
+        if let Some(h) = &self.hypothesis {
+            fields.push(("hypothesis".into(), Json::Str(h.clone())));
+        }
+        fields.push(("machine".into(), Json::Str(self.machine.clone())));
+        fields.push(("simd".into(), Json::Bool(self.simd)));
+        fields.push(("config".into(), Json::Obj(self.config.clone())));
+        if !self.context.is_empty() {
+            fields.push(("context".into(), Json::Obj(self.context.clone())));
+        }
+        fields.push((
+            "rows".into(),
+            Json::Arr(self.rows.iter().map(|r| Json::Obj(r.clone())).collect()),
+        ));
+        Json::Obj(fields)
+    }
+
+    /// Render the committed-snapshot JSON text.
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Reassemble from a parsed JSON value; declines on a missing or
+    /// foreign schema tag and on malformed required fields.
+    pub fn from_json(v: &Json) -> Result<BenchRecord, String> {
+        let schema = v.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != BENCH_SCHEMA {
+            return Err(format!("unsupported record schema '{schema}' (want {BENCH_SCHEMA})"));
+        }
+        let bench = v
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or("record missing 'bench'")?
+            .to_string();
+        let machine =
+            v.get("machine").and_then(Json::as_str).unwrap_or("unknown").to_string();
+        let simd = v.get("simd").and_then(Json::as_bool).unwrap_or(false);
+        let hypothesis = v.get("hypothesis").and_then(Json::as_str).map(str::to_string);
+        let config = v.get("config").and_then(Json::as_obj).unwrap_or(&[]).to_vec();
+        let context = v.get("context").and_then(Json::as_obj).unwrap_or(&[]).to_vec();
+        let rows_json = v.get("rows").and_then(Json::as_arr).ok_or("record missing 'rows'")?;
+        let mut rows = Vec::with_capacity(rows_json.len());
+        for (i, r) in rows_json.iter().enumerate() {
+            rows.push(r.as_obj().ok_or_else(|| format!("row {i} is not an object"))?.to_vec());
+        }
+        Ok(BenchRecord { bench, hypothesis, machine, simd, config, context, rows })
+    }
+
+    /// Parse from JSON text.
+    pub fn parse(src: &str) -> Result<BenchRecord, String> {
+        Self::from_json(&Json::parse(src)?)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<BenchRecord, String> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(&src).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Write to `default_path`, honoring the `BLAZERT_BENCH_JSON`
+    /// override — the one emitter every bench shares. Returns the path
+    /// actually written.
+    pub fn write(&self, default_path: &str) -> std::io::Result<std::path::PathBuf> {
+        let path = std::env::var("BLAZERT_BENCH_JSON")
+            .unwrap_or_else(|_| default_path.to_string());
+        let path = std::path::PathBuf::from(path);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,5 +333,45 @@ mod tests {
         let res = run_figure(&fig, &tiny_cfg(), 1, false);
         let chart = res.render_chart();
         assert!(chart.contains("MFlop/s"));
+    }
+
+    fn sample_record() -> BenchRecord {
+        let mut rec = BenchRecord::new("plan_ablation");
+        rec.hypothesis = Some("warm refills beat unplanned".into());
+        rec.config = vec![
+            ("min_time_s".into(), Json::Num(0.05)),
+            ("trials".into(), Json::Num(3.0)),
+        ];
+        rec.context = vec![("restart_symbolic_builds".into(), Json::Num(0.0))];
+        rec.rows = vec![vec![
+            ("workload".into(), Json::Str("FD".into())),
+            ("n".into(), Json::Num(65536.0)),
+            ("plan_mode".into(), Json::Str("warm".into())),
+            ("mflops".into(), Json::Num(1693.8)),
+        ]];
+        rec
+    }
+
+    #[test]
+    fn bench_record_round_trips() {
+        let rec = sample_record();
+        let again = BenchRecord::parse(&rec.render()).unwrap();
+        assert_eq!(rec, again);
+        assert_eq!(
+            row_field(&again.rows[0], "mflops").unwrap().as_f64(),
+            Some(1693.8)
+        );
+        assert!(row_field(&again.rows[0], "missing").is_none());
+    }
+
+    #[test]
+    fn bench_record_declines_foreign_schema() {
+        let mut v = sample_record().to_json();
+        if let Json::Obj(fields) = &mut v {
+            fields[0].1 = Json::Str("blazert-bench-v999".into());
+        }
+        let err = BenchRecord::from_json(&v).unwrap_err();
+        assert!(err.contains("unsupported record schema"), "{err}");
+        assert!(BenchRecord::parse("{}").is_err(), "schema tag is mandatory");
     }
 }

@@ -43,6 +43,18 @@ impl Partition {
             Partition::Model => "model-guided",
         }
     }
+
+    /// Parse from the CLI/report/definition name (case-insensitive);
+    /// short aliases match the enum variants.
+    pub fn parse(s: &str) -> Option<Partition> {
+        let l = s.to_ascii_lowercase();
+        Partition::ALL.into_iter().find(|p| p.name() == l).or(match l.as_str() {
+            "rows" => Some(Partition::Rows),
+            "flops" => Some(Partition::Flops),
+            "model" => Some(Partition::Model),
+            _ => None,
+        })
+    }
 }
 
 /// Per-row predicted cost (seconds) of computing row `r` of `C = A·B`

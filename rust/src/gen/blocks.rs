@@ -1,0 +1,77 @@
+//! Block-structured random matrices — dense blocks on a sparse block
+//! grid, the structure FEM-style discretizations and the paper's BSR
+//! extension exhibit. Together with [`super::banded`] this closes the
+//! "exploiting the given structure of the sparse matrix operands"
+//! future-work item on the workload side: the scenario corpus can now
+//! sweep structured operands, not only banded/random ones.
+
+use crate::util::rng::Pcg64;
+use crate::CsrMatrix;
+
+/// `n × n` matrix of dense `block × block` tiles: each block-row holds
+/// `blocks_per_row` tiles at seed-deterministic distinct block columns,
+/// always including the diagonal tile (so products stay well
+/// connected). `n` is rounded down to a multiple of `block`; values are
+/// random nonzeros. Panics if `block == 0` or no full tile fits.
+pub fn block_random(n: usize, block: usize, blocks_per_row: usize, seed: u64) -> CsrMatrix {
+    assert!(block > 0, "block size must be positive");
+    let nb = n / block;
+    assert!(nb > 0, "matrix holds no full {block}×{block} tile");
+    let per_row = blocks_per_row.clamp(1, nb);
+    let mut rng = Pcg64::new(seed);
+    let mut m = CsrMatrix::new(nb * block, nb * block);
+    m.reserve(nb * per_row * block * block);
+    let mut tiles: Vec<usize> = Vec::with_capacity(per_row);
+    for br in 0..nb {
+        // Distinct block columns for this block-row, diagonal included.
+        tiles.clear();
+        tiles.extend(rng.distinct_sorted(per_row, nb));
+        if !tiles.contains(&br) {
+            tiles.pop();
+            tiles.push(br);
+            tiles.sort_unstable();
+        }
+        for _ in 0..block {
+            for &bc in &tiles {
+                for c in bc * block..(bc + 1) * block {
+                    m.append(c, rng.nonzero_value());
+                }
+            }
+            m.finalize_row();
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseShape;
+
+    #[test]
+    fn block_structure_holds() {
+        let m = block_random(32, 4, 3, 7);
+        assert_eq!(m.rows(), 32);
+        assert_eq!(m.nnz(), 8 * 3 * 16, "8 block-rows × 3 tiles × 16 entries");
+        // Every row has exactly blocks_per_row × block entries.
+        assert!((0..32).all(|r| m.row_nnz(r) == 12));
+        // The diagonal tile is always present.
+        assert!((0..32).all(|r| m.get(r, r) != 0.0));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = block_random(24, 4, 2, 9);
+        let b = block_random(24, 4, 2, 9);
+        let c = block_random(24, 4, 2, 10);
+        assert!(a.approx_eq(&b, 0.0));
+        assert!(!a.approx_eq(&c, 0.0), "different seed, different matrix");
+    }
+
+    #[test]
+    fn rounds_down_and_clamps() {
+        let m = block_random(30, 8, 100, 1);
+        assert_eq!(m.rows(), 24, "30 rounds down to 3 full tiles of 8");
+        assert_eq!(m.row_nnz(0), 24, "blocks_per_row clamps to the grid width");
+    }
+}

@@ -7,10 +7,12 @@
 //! comparison receives the *same* matrix objects, generated once.
 
 mod bands;
+mod blocks;
 mod fd;
 mod random;
 
 pub use bands::banded;
+pub use blocks::block_random;
 pub use fd::{fd_poisson_2d, fd_rhs_ones};
 pub use random::{random_fill_ratio, random_fixed_per_row, random_power_law, random_rectangular};
 
@@ -31,6 +33,12 @@ pub enum Workload {
     /// Power-law row populations (a few hot rows dominate the flops) —
     /// the skewed workload of the partitioning ablation.
     PowerLawSkew,
+    /// Seven-band matrix with near and far diagonals ([`banded`]) —
+    /// wider structure than the FD stencil, still perfectly regular.
+    Banded,
+    /// Dense 8×8 tiles on a sparse block grid ([`block_random`]) — the
+    /// block-structured operand family of the scenario corpus.
+    BlockRandom,
 }
 
 impl Workload {
@@ -50,6 +58,8 @@ impl Workload {
             // Hottest row ~ n/4 entries, alpha 1: the top rows carry
             // most of the multiplications.
             Workload::PowerLawSkew => random_power_law(n, n, (n / 4).max(4), 1.0, seed),
+            Workload::Banded => banded(n, &[-16, -4, -1, 0, 1, 4, 16], seed),
+            Workload::BlockRandom => block_random(n.max(8), 8, 4, seed),
         }
     }
 
@@ -61,7 +71,25 @@ impl Workload {
             Workload::RandomFixed5 => "random",
             Workload::RandomFill01Pct => "random-0.1%",
             Workload::PowerLawSkew => "power-law",
+            Workload::Banded => "banded",
+            Workload::BlockRandom => "block",
         }
+    }
+
+    /// Every workload family, in [`Workload::tag`] order.
+    pub const ALL: [Workload; 6] = [
+        Workload::FiveBandFd,
+        Workload::RandomFixed5,
+        Workload::RandomFill01Pct,
+        Workload::PowerLawSkew,
+        Workload::Banded,
+        Workload::BlockRandom,
+    ];
+
+    /// Parse a report tag back into a workload (the experiment harness
+    /// reads generator names from TOML definitions).
+    pub fn from_tag(tag: &str) -> Option<Workload> {
+        Workload::ALL.into_iter().find(|w| w.tag() == tag)
     }
 }
 
@@ -83,6 +111,18 @@ mod tests {
     fn workload_tags() {
         assert_eq!(Workload::FiveBandFd.tag(), "FD");
         assert_eq!(Workload::RandomFixed5.tag(), "random");
+    }
+
+    #[test]
+    fn tags_round_trip_and_all_workloads_generate() {
+        for w in Workload::ALL {
+            assert_eq!(Workload::from_tag(w.tag()), Some(w));
+            let m = w.generate(64, 11);
+            assert!(m.nnz() > 0, "{:?} generates a nonempty operand", w);
+        }
+        assert_eq!(Workload::from_tag("banded"), Some(Workload::Banded));
+        assert_eq!(Workload::from_tag("block"), Some(Workload::BlockRandom));
+        assert_eq!(Workload::from_tag("nope"), None);
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! The regression gate: diff a run record against a committed baseline.
+//!
+//! The gate is designed to be *machine-independent*. Absolute MFlop/s
+//! differ across hosts, so committed baselines gate only invariant
+//! metrics — counters the engine guarantees by construction (zero
+//! symbolic builds on disk-warm rows, zero steady-state allocations on
+//! warm paths) — while perf metrics ride along informationally. Two
+//! knobs control what gates:
+//!
+//! * the definition's `[[metrics]]` policy says which metric *names*
+//!   gate and with what noise band;
+//! * the baseline controls which *(row, metric)* pairs gate — a metric
+//!   absent from a baseline row is simply not checked there, so a
+//!   baseline can pin `steady_allocs = 0` on CSR rows without claiming
+//!   anything about rows whose invariant is not yet proven.
+//!
+//! Band semantics (checked by `tests/experiment_harness.rs`): a drift
+//! landing exactly at the band edge passes; a higher-is-better metric
+//! regresses strictly below `base·(1−band)`; a lower-is-better metric
+//! regresses strictly above `base·(1+band)` — so a zero baseline with a
+//! zero band fails on *any* positive value; exact metrics regress when
+//! `|run − base|` exceeds the band as an absolute tolerance.
+
+use std::fmt::Write as _;
+
+use crate::blazemark::report::{row_field, BenchRecord, BenchRow};
+use crate::harness::def::MetricPolicy;
+use crate::util::json::Json;
+
+/// Which direction of drift is a regression for a metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Orientation {
+    /// Bigger is better (throughput-like).
+    HigherIsBetter,
+    /// Smaller is better (times, counters).
+    LowerIsBetter,
+    /// Any drift beyond an absolute tolerance is suspect (structural
+    /// quantities: flop counts, output populations, byte floors).
+    Exact,
+}
+
+/// The metric registry: every field name a [`BenchRow`] may carry as a
+/// *metric*. Row fields with any other name are identity keys
+/// (workload, n, seed, and the variant axes) — this split is what lets
+/// one record schema serve run outputs and baselines alike.
+pub fn metric_orient(name: &str) -> Option<Orientation> {
+    match name {
+        "mflops" | "roofline_pct" => Some(Orientation::HigherIsBetter),
+        "best_seconds" | "symbolic_builds" | "disk_loads" | "steady_allocs" => {
+            Some(Orientation::LowerIsBetter)
+        }
+        "flops" | "out_nnz" | "bytes_floor" => Some(Orientation::Exact),
+        _ => None,
+    }
+}
+
+/// Invariant counters must hold in *every* replicate, so they aggregate
+/// by worst case rather than by best case.
+fn is_counter(name: &str) -> bool {
+    matches!(name, "symbolic_builds" | "disk_loads" | "steady_allocs")
+}
+
+/// Aggregate one metric across replicates: best-of for perf metrics
+/// (max of higher-is-better, min of times — the Blazemark best-of
+/// philosophy), worst-of (max) for invariant counters so a violation in
+/// any replicate survives into the record, last value for exact
+/// structural metrics (identical across replicates by construction).
+pub fn aggregate_metric(name: &str, values: &[f64]) -> f64 {
+    let fold_max = || values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    match metric_orient(name) {
+        Some(Orientation::HigherIsBetter) => fold_max(),
+        Some(Orientation::LowerIsBetter) if is_counter(name) => fold_max(),
+        Some(Orientation::LowerIsBetter) => values.iter().cloned().fold(f64::INFINITY, f64::min),
+        _ => *values.last().expect("aggregate of no replicates"),
+    }
+}
+
+/// Collapse per-replicate rows (identical identity fields) into one row
+/// via [`aggregate_metric`]; identity fields are taken from the first
+/// replicate.
+pub fn aggregate_rows(replicates: &[BenchRow]) -> BenchRow {
+    let first = &replicates[0];
+    let mut out = BenchRow::new();
+    for (name, value) in first {
+        if metric_orient(name).is_none() {
+            out.push((name.clone(), value.clone()));
+            continue;
+        }
+        let values: Vec<f64> =
+            replicates.iter().filter_map(|r| row_field(r, name)).filter_map(Json::as_f64).collect();
+        let agg = if values.is_empty() {
+            value.clone()
+        } else {
+            Json::Num(aggregate_metric(name, &values))
+        };
+        out.push((name.clone(), agg));
+    }
+    out
+}
+
+/// Does `run` stay within the noise band around `base`? Exactly at the
+/// band edge passes.
+pub fn within_band(orient: Orientation, band: f64, base: f64, run: f64) -> bool {
+    match orient {
+        Orientation::HigherIsBetter => run >= base * (1.0 - band),
+        Orientation::LowerIsBetter => run <= base * (1.0 + band),
+        Orientation::Exact => (run - base).abs() <= band,
+    }
+}
+
+/// A scalar cell rendered the way the JSON renderer would (integers
+/// without a fraction part) — used for row keys and report tables.
+pub(crate) fn scalar_cell(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        Json::Bool(b) => b.to_string(),
+        Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e15 => format!("{}", *n as i64),
+        Json::Num(n) if n.abs() >= 1e-3 => format!("{n:.3}"),
+        Json::Num(n) => format!("{n:e}"),
+        _ => String::from("?"),
+    }
+}
+
+/// The identity of a row: its non-metric fields as a sorted `k=v`
+/// signature. Sorting makes the key independent of field order, so
+/// hand-maintained baselines need not mirror the runner's emit order.
+pub fn row_key(row: &[(String, Json)]) -> String {
+    let mut parts: Vec<String> = row
+        .iter()
+        .filter(|(k, _)| metric_orient(k).is_none())
+        .map(|(k, v)| format!("{k}={}", scalar_cell(v)))
+        .collect();
+    parts.sort();
+    parts.join(" ")
+}
+
+/// One gate violation.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    /// Row key signature ([`row_key`]).
+    pub key: String,
+    /// Offending metric (or `(row)` for a missing row).
+    pub metric: String,
+    /// Human-readable explanation.
+    pub detail: String,
+}
+
+/// Outcome of diffing a run against a baseline.
+#[derive(Clone, Debug, Default)]
+pub struct CompareReport {
+    /// Gated (row, metric) pairs that were checked and passed.
+    pub checked: usize,
+    /// Gate violations — any entry fails the run.
+    pub regressions: Vec<Regression>,
+    /// Run rows with no baseline counterpart (pass; candidates for the
+    /// next baseline update).
+    pub new_rows: Vec<String>,
+    /// Informational drift notes (ungated metrics, config mismatches).
+    pub notes: Vec<String>,
+}
+
+impl CompareReport {
+    /// True when no gated metric regressed.
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    /// Human-readable summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.regressions {
+            let _ = writeln!(out, "REGRESSION [{}] {}: {}", r.key, r.metric, r.detail);
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        for k in &self.new_rows {
+            let _ = writeln!(out, "new row (not in baseline): [{k}]");
+        }
+        let _ = writeln!(
+            out,
+            "{}: {} gated metric(s) checked, {} regression(s), {} new row(s)",
+            if self.passed() { "PASS" } else { "FAIL" },
+            self.checked,
+            self.regressions.len(),
+            self.new_rows.len()
+        );
+        out
+    }
+}
+
+/// Diff `run` against `base` under the definition's metric policies.
+///
+/// Every metric field present in a baseline row is examined; it gates
+/// iff its name has a `gate = true` policy. A gated metric missing from
+/// the matching run row is a regression (a silently vanished invariant
+/// must not pass), as is a baseline row with no matching run row.
+pub fn compare(base: &BenchRecord, run: &BenchRecord, policies: &[MetricPolicy]) -> CompareReport {
+    let mut rep = CompareReport::default();
+    if base.simd != run.simd {
+        rep.notes.push(format!(
+            "simd mismatch: baseline simd={}, run simd={} (perf notes are not comparable)",
+            base.simd, run.simd
+        ));
+    }
+    let policy = |name: &str| policies.iter().find(|p| p.name == name);
+    let mut base_keys: Vec<String> = Vec::new();
+    for brow in &base.rows {
+        let key = row_key(brow);
+        base_keys.push(key.clone());
+        let Some(rrow) = run.rows.iter().find(|r| row_key(r) == key) else {
+            rep.regressions.push(Regression {
+                key,
+                metric: "(row)".into(),
+                detail: "baseline row has no matching run row".into(),
+            });
+            continue;
+        };
+        for (name, bval) in brow {
+            let Some(orient) = metric_orient(name) else { continue };
+            let Some(bv) = bval.as_f64() else { continue };
+            let rv = row_field(rrow, name).and_then(Json::as_f64);
+            let gated = policy(name).map(|p| p.gate).unwrap_or(false);
+            let band = policy(name).map(|p| p.band).unwrap_or(0.0);
+            match rv {
+                None if gated => rep.regressions.push(Regression {
+                    key: key.clone(),
+                    metric: name.clone(),
+                    detail: format!("gated metric missing from run row (baseline {bv})"),
+                }),
+                None => {}
+                Some(rv) if gated => {
+                    if within_band(orient, band, bv, rv) {
+                        rep.checked += 1;
+                    } else {
+                        rep.regressions.push(Regression {
+                            key: key.clone(),
+                            metric: name.clone(),
+                            detail: format!("run {rv} vs baseline {bv} (band {band})"),
+                        });
+                    }
+                }
+                Some(rv) => {
+                    if !within_band(orient, band, bv, rv) {
+                        rep.notes.push(format!(
+                            "[{key}] {name}: run {rv} vs baseline {bv} drifts beyond band \
+                             {band} (informational)"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    for rrow in &run.rows {
+        let key = row_key(rrow);
+        if !base_keys.contains(&key) {
+            rep.new_rows.push(key);
+        }
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(fields: &[(&str, Json)]) -> BenchRow {
+        fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+    }
+
+    fn record(rows: Vec<BenchRow>) -> BenchRecord {
+        let mut rec = BenchRecord::new("t");
+        rec.rows = rows;
+        rec
+    }
+
+    fn gate(name: &str, band: f64) -> MetricPolicy {
+        MetricPolicy { name: name.into(), band, gate: true }
+    }
+
+    #[test]
+    fn row_key_ignores_metrics_and_field_order() {
+        let a = row(&[
+            ("workload", Json::Str("FD".into())),
+            ("threads", Json::Num(8.0)),
+            ("mflops", Json::Num(100.0)),
+        ]);
+        let b = row(&[
+            ("threads", Json::Num(8.0)),
+            ("workload", Json::Str("FD".into())),
+            ("mflops", Json::Num(999.0)),
+        ]);
+        assert_eq!(row_key(&a), row_key(&b));
+        assert_eq!(row_key(&a), "threads=8 workload=FD");
+    }
+
+    #[test]
+    fn band_edges_pass_exactly() {
+        use Orientation::*;
+        // Higher-is-better: exactly at base*(1-band) passes, below fails.
+        assert!(within_band(HigherIsBetter, 0.1, 1000.0, 900.0));
+        assert!(!within_band(HigherIsBetter, 0.1, 1000.0, 899.999));
+        assert!(within_band(HigherIsBetter, 0.1, 1000.0, 5000.0), "improvement passes");
+        // Lower-is-better: exactly at base*(1+band) passes.
+        assert!(within_band(LowerIsBetter, 0.1, 10.0, 11.0));
+        assert!(!within_band(LowerIsBetter, 0.1, 10.0, 11.001));
+        // Zero baseline, zero band: any positive count regresses.
+        assert!(within_band(LowerIsBetter, 0.0, 0.0, 0.0));
+        assert!(!within_band(LowerIsBetter, 0.0, 0.0, 1.0));
+        // Exact: absolute tolerance.
+        assert!(within_band(Exact, 2.0, 100.0, 102.0));
+        assert!(!within_band(Exact, 2.0, 100.0, 102.5));
+    }
+
+    #[test]
+    fn replicate_aggregation_by_orientation() {
+        assert_eq!(aggregate_metric("mflops", &[100.0, 140.0, 120.0]), 140.0);
+        assert_eq!(aggregate_metric("best_seconds", &[0.5, 0.3, 0.4]), 0.3);
+        // Counters keep the worst replicate.
+        assert_eq!(aggregate_metric("symbolic_builds", &[1.0, 0.0]), 1.0);
+        assert_eq!(aggregate_metric("steady_allocs", &[0.0, 3.0]), 3.0);
+        assert_eq!(aggregate_metric("flops", &[8.0, 8.0]), 8.0);
+        let reps = vec![
+            row(&[("workload", Json::Str("FD".into())), ("mflops", Json::Num(100.0))]),
+            row(&[("workload", Json::Str("FD".into())), ("mflops", Json::Num(130.0))]),
+        ];
+        let agg = aggregate_rows(&reps);
+        assert_eq!(row_field(&agg, "mflops").unwrap().as_f64(), Some(130.0));
+        assert_eq!(row_field(&agg, "workload").unwrap().as_str(), Some("FD"));
+    }
+
+    #[test]
+    fn compare_flags_regressions_and_missing_rows() {
+        let base = record(vec![
+            row(&[("threads", Json::Num(1.0)), ("symbolic_builds", Json::Num(0.0))]),
+            row(&[("threads", Json::Num(8.0)), ("symbolic_builds", Json::Num(0.0))]),
+            row(&[("threads", Json::Num(16.0)), ("symbolic_builds", Json::Num(0.0))]),
+        ]);
+        let run = record(vec![
+            row(&[("threads", Json::Num(1.0)), ("symbolic_builds", Json::Num(0.0))]),
+            row(&[("threads", Json::Num(8.0)), ("symbolic_builds", Json::Num(2.0))]),
+            // threads=16 missing; threads=32 is new.
+            row(&[("threads", Json::Num(32.0)), ("symbolic_builds", Json::Num(0.0))]),
+        ]);
+        let rep = compare(&base, &run, &[gate("symbolic_builds", 0.0)]);
+        assert!(!rep.passed());
+        assert_eq!(rep.checked, 1);
+        assert_eq!(rep.regressions.len(), 2, "{:?}", rep.regressions);
+        assert!(rep.regressions.iter().any(|r| r.metric == "(row)"));
+        assert!(rep.regressions.iter().any(|r| r.key.contains("threads=8")));
+        assert_eq!(rep.new_rows, vec!["threads=32".to_string()]);
+        let text = rep.render();
+        assert!(text.contains("FAIL") && text.contains("REGRESSION"), "{text}");
+    }
+
+    #[test]
+    fn gated_metric_missing_from_run_fails() {
+        let base =
+            record(vec![row(&[("threads", Json::Num(1.0)), ("steady_allocs", Json::Num(0.0))])]);
+        let run = record(vec![row(&[("threads", Json::Num(1.0))])]);
+        let rep = compare(&base, &run, &[gate("steady_allocs", 0.0)]);
+        assert!(!rep.passed());
+        assert!(rep.regressions[0].detail.contains("missing"));
+        // Ungated: the same absence is silently fine.
+        let rep = compare(&base, &run, &[]);
+        assert!(rep.passed());
+        assert_eq!(rep.checked, 0);
+    }
+
+    #[test]
+    fn ungated_drift_is_a_note_not_a_failure() {
+        let base = record(vec![row(&[
+            ("threads", Json::Num(1.0)),
+            ("mflops", Json::Num(1000.0)),
+        ])]);
+        let run =
+            record(vec![row(&[("threads", Json::Num(1.0)), ("mflops", Json::Num(10.0))])]);
+        let policies = [MetricPolicy { name: "mflops".into(), band: 0.1, gate: false }];
+        let rep = compare(&base, &run, &policies);
+        assert!(rep.passed());
+        assert_eq!(rep.notes.len(), 1);
+        assert!(rep.notes[0].contains("informational"));
+    }
+}

@@ -1,0 +1,524 @@
+//! Typed experiment definitions — the declarative layer of the harness.
+//!
+//! A definition is a TOML document (see `experiments/*.toml`) declaring
+//! *what question an experiment answers and what it measures*, fully
+//! decoupled from how the measurement loop executes:
+//!
+//! * a `hypothesis` string (what the experiment is supposed to show),
+//! * a workload template: generator tag + size + seed per workload,
+//! * a variant matrix: storage format × storing strategy × plan mode ×
+//!   partition × thread counts,
+//! * the measurement protocol per tier (quick for CI, full for the
+//!   paper-scale protocol), including a replicate count,
+//! * per-metric noise-band policy: which metrics *gate* (CI fails on a
+//!   drift beyond the band) and which ride along informationally.
+//!
+//! Parsing is strict: unknown generator/strategy/partition/metric names
+//! and empty matrices are errors at load time, so a typo cannot
+//! silently drop a variant axis from a committed baseline.
+
+use std::path::Path;
+
+use crate::exec::Partition;
+use crate::gen::Workload;
+use crate::harness::compare::metric_orient;
+use crate::harness::toml::parse_toml;
+use crate::kernels::Strategy;
+use crate::util::json::Json;
+
+/// Schema tag all definition documents must carry.
+pub const EXPERIMENT_SCHEMA: &str = "blazert-experiment-v1";
+
+/// Storage format axis of the variant matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MatrixFormat {
+    /// Row-major operands and output (the paper's default).
+    Csr,
+    /// Column-major operands and output (planned path only — the CSC
+    /// numeric phase has no unplanned sweep entry point).
+    Csc,
+}
+
+impl MatrixFormat {
+    /// Report/definition name.
+    pub fn name(self) -> &'static str {
+        match self {
+            MatrixFormat::Csr => "csr",
+            MatrixFormat::Csc => "csc",
+        }
+    }
+
+    /// Parse a definition name (case-insensitive).
+    pub fn parse(s: &str) -> Option<MatrixFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "csr" => Some(MatrixFormat::Csr),
+            "csc" => Some(MatrixFormat::Csc),
+            _ => None,
+        }
+    }
+}
+
+/// Plan-mode axis: [`crate::blazemark::PlanMode`] plus the unplanned
+/// baseline the ablations compare against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExpPlanMode {
+    /// No plan: every execution re-discovers the output structure.
+    Unplanned,
+    /// Symbolic + numeric timed together, every execution.
+    Cold,
+    /// Plan built once through the session cache; numeric refills timed.
+    Warm,
+    /// Plan recovered from a disk store by a fresh session; numeric
+    /// refills timed. Rows in this mode carry the harness's headline
+    /// invariant: `symbolic_builds == 0`.
+    Persisted,
+}
+
+impl ExpPlanMode {
+    /// All modes, in baseline → steady-state order.
+    pub const ALL: [ExpPlanMode; 4] = [
+        ExpPlanMode::Unplanned,
+        ExpPlanMode::Cold,
+        ExpPlanMode::Warm,
+        ExpPlanMode::Persisted,
+    ];
+
+    /// Report/definition name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ExpPlanMode::Unplanned => "unplanned",
+            ExpPlanMode::Cold => "cold",
+            ExpPlanMode::Warm => "warm",
+            ExpPlanMode::Persisted => "persisted",
+        }
+    }
+
+    /// Parse a definition name (case-insensitive).
+    pub fn parse(s: &str) -> Option<ExpPlanMode> {
+        let l = s.to_ascii_lowercase();
+        Self::ALL.into_iter().find(|m| m.name() == l)
+    }
+}
+
+/// Measurement protocol of one tier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MeasureParams {
+    /// Minimum accumulated runtime per trial (seconds).
+    pub min_time_s: f64,
+    /// Trials per measurement (best is reported).
+    pub trials: u32,
+    /// Independent repetitions of every variant point; metrics are
+    /// aggregated across replicates
+    /// ([`crate::harness::compare::aggregate_metric`]).
+    pub replicates: u32,
+}
+
+/// The two protocol tiers. Only timing knobs differ between tiers —
+/// workload sizes and the variant matrix are tier-independent, so a
+/// quick CI run produces the *same row keys* as a committed
+/// full-protocol snapshot and the two remain comparable.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Protocol {
+    /// CI tier: small minimum times, few trials.
+    pub quick: MeasureParams,
+    /// Paper tier (`BLAZEMARK_FULL=1`).
+    pub full: MeasureParams,
+}
+
+impl Default for Protocol {
+    fn default() -> Self {
+        Protocol {
+            quick: MeasureParams { min_time_s: 0.02, trials: 2, replicates: 2 },
+            full: MeasureParams { min_time_s: 2.0, trials: 5, replicates: 3 },
+        }
+    }
+}
+
+/// One workload template entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WorkloadDef {
+    /// Generator family ([`Workload::from_tag`]).
+    pub generator: Workload,
+    /// Requested dimension (the generator may round, e.g. FD to a grid).
+    pub n: usize,
+    /// Seed for [`crate::gen::operand_pair`].
+    pub seed: u64,
+}
+
+/// The variant matrix (cross product of all axes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Variants {
+    /// Storage formats.
+    pub formats: Vec<MatrixFormat>,
+    /// Storing strategies — only applied to unplanned points (planned
+    /// execution stores through the plan's frozen pattern instead).
+    pub strategies: Vec<Strategy>,
+    /// Plan modes.
+    pub plan_modes: Vec<ExpPlanMode>,
+    /// Slab partition strategies.
+    pub partitions: Vec<Partition>,
+    /// Thread counts (pinned lists, e.g. `[1, 8]`, so row keys do not
+    /// depend on the machine the run happens to execute on).
+    pub threads: Vec<usize>,
+}
+
+/// One fully-resolved point of the variant matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VariantPoint {
+    /// Storage format.
+    pub format: MatrixFormat,
+    /// Storing strategy; `None` for planned points.
+    pub strategy: Option<Strategy>,
+    /// Plan mode.
+    pub plan_mode: ExpPlanMode,
+    /// Slab partition.
+    pub partition: Partition,
+    /// Thread count.
+    pub threads: usize,
+}
+
+impl Variants {
+    /// Expand the matrix into concrete points. The strategy axis only
+    /// multiplies unplanned points, and the unsupported (csc,
+    /// unplanned) combination is skipped — parse-time validation
+    /// guarantees at least one point survives.
+    pub fn points(&self) -> Vec<VariantPoint> {
+        let mut out = Vec::new();
+        for &format in &self.formats {
+            for &plan_mode in &self.plan_modes {
+                if format == MatrixFormat::Csc && plan_mode == ExpPlanMode::Unplanned {
+                    continue;
+                }
+                let strategies: Vec<Option<Strategy>> = if plan_mode == ExpPlanMode::Unplanned {
+                    self.strategies.iter().map(|&s| Some(s)).collect()
+                } else {
+                    vec![None]
+                };
+                for strategy in strategies {
+                    for &partition in &self.partitions {
+                        for &threads in &self.threads {
+                            out.push(VariantPoint {
+                                format,
+                                strategy,
+                                plan_mode,
+                                partition,
+                                threads,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Per-metric noise-band policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricPolicy {
+    /// Metric name (must be known to
+    /// [`crate::harness::compare::metric_orient`]).
+    pub name: String,
+    /// Noise band. For relative metrics (higher/lower-is-better) it is
+    /// a fraction of the baseline value; for exact metrics an absolute
+    /// tolerance. A drift landing exactly *at* the band edge passes.
+    pub band: f64,
+    /// Whether a drift beyond the band fails `compare` (gated) or is
+    /// merely reported (informational).
+    pub gate: bool,
+}
+
+/// A parsed experiment definition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentDef {
+    /// Experiment name (keys the default run/baseline file names).
+    pub name: String,
+    /// What the experiment is supposed to show.
+    pub hypothesis: Option<String>,
+    /// Measurement protocol per tier.
+    pub protocol: Protocol,
+    /// Workload templates.
+    pub workloads: Vec<WorkloadDef>,
+    /// Variant matrix.
+    pub variants: Variants,
+    /// Noise-band policies.
+    pub metrics: Vec<MetricPolicy>,
+}
+
+impl ExperimentDef {
+    /// Parse a definition document.
+    pub fn parse(src: &str) -> Result<ExperimentDef, String> {
+        Self::from_json(&parse_toml(src)?)
+    }
+
+    /// Load a definition from a file.
+    pub fn load(path: &Path) -> Result<ExperimentDef, String> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(&src).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// The gating policy for `metric`, if one was declared.
+    pub fn policy(&self, metric: &str) -> Option<&MetricPolicy> {
+        self.metrics.iter().find(|p| p.name == metric)
+    }
+
+    fn from_json(v: &Json) -> Result<ExperimentDef, String> {
+        match v.get("schema").and_then(Json::as_str) {
+            Some(EXPERIMENT_SCHEMA) => {}
+            Some(other) => return Err(format!("unsupported definition schema {other:?}")),
+            None => return Err("definition missing 'schema'".into()),
+        }
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("definition missing 'name'")?
+            .to_string();
+        let hypothesis = v.get("hypothesis").and_then(Json::as_str).map(str::to_string);
+
+        let dflt = Protocol::default();
+        let proto = v.get("protocol");
+        let field = |key: &str| proto.and_then(|p| p.get(key)).and_then(Json::as_f64);
+        let protocol = Protocol {
+            quick: MeasureParams {
+                min_time_s: field("quick_min_time_s").unwrap_or(dflt.quick.min_time_s),
+                trials: int_param(field("quick_trials"), dflt.quick.trials, "quick_trials")?,
+                replicates: int_param(
+                    field("quick_replicates"),
+                    dflt.quick.replicates,
+                    "quick_replicates",
+                )?,
+            },
+            full: MeasureParams {
+                min_time_s: field("full_min_time_s").unwrap_or(dflt.full.min_time_s),
+                trials: int_param(field("full_trials"), dflt.full.trials, "full_trials")?,
+                replicates: int_param(
+                    field("full_replicates"),
+                    dflt.full.replicates,
+                    "full_replicates",
+                )?,
+            },
+        };
+
+        let mut workloads = Vec::new();
+        for (i, w) in v.get("workloads").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate()
+        {
+            let tag = w
+                .get("generator")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("workloads[{i}]: missing 'generator'"))?;
+            let generator = Workload::from_tag(tag)
+                .ok_or_else(|| format!("workloads[{i}]: unknown generator {tag:?}"))?;
+            let n = w
+                .get("n")
+                .and_then(Json::as_f64)
+                .filter(|&n| n >= 1.0)
+                .ok_or_else(|| format!("workloads[{i}]: missing or invalid 'n'"))?
+                as usize;
+            let seed = w.get("seed").and_then(Json::as_f64).unwrap_or(5.0) as u64;
+            workloads.push(WorkloadDef { generator, n, seed });
+        }
+        if workloads.is_empty() {
+            return Err("definition declares no [[workloads]]".into());
+        }
+
+        let vs = v.get("variants");
+        let names = |key: &str| -> Vec<String> {
+            vs.and_then(|t| t.get(key))
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter().filter_map(Json::as_str).map(str::to_string).collect::<Vec<_>>()
+                })
+                .unwrap_or_default()
+        };
+        let variants = Variants {
+            formats: parse_axis(&names("formats"), &["csr"], "formats", MatrixFormat::parse)?,
+            strategies: parse_axis(
+                &names("strategies"),
+                &["combined"],
+                "strategies",
+                Strategy::parse,
+            )?,
+            plan_modes: parse_axis(
+                &names("plan_modes"),
+                &["unplanned"],
+                "plan_modes",
+                ExpPlanMode::parse,
+            )?,
+            partitions: parse_axis(
+                &names("partitions"),
+                &["flop-balanced"],
+                "partitions",
+                Partition::parse,
+            )?,
+            threads: parse_threads(vs)?,
+        };
+        if variants.points().is_empty() {
+            return Err(
+                "variant matrix is empty (csc needs at least one planned plan_mode)".into()
+            );
+        }
+
+        let mut metrics = Vec::new();
+        for (i, m) in v.get("metrics").and_then(Json::as_arr).unwrap_or(&[]).iter().enumerate() {
+            let mname = m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("metrics[{i}]: missing 'name'"))?;
+            if metric_orient(mname).is_none() {
+                return Err(format!("metrics[{i}]: unknown metric {mname:?}"));
+            }
+            let band = m.get("band").and_then(Json::as_f64).unwrap_or(0.0);
+            if band.is_nan() || band < 0.0 {
+                return Err(format!("metrics[{i}]: invalid band"));
+            }
+            let gate = m.get("gate").and_then(Json::as_bool).unwrap_or(false);
+            metrics.push(MetricPolicy { name: mname.to_string(), band, gate });
+        }
+        Ok(ExperimentDef { name, hypothesis, protocol, workloads, variants, metrics })
+    }
+}
+
+fn int_param(v: Option<f64>, default: u32, what: &str) -> Result<u32, String> {
+    match v {
+        None => Ok(default),
+        Some(n) if n >= 1.0 && n.fract() == 0.0 => Ok(n as u32),
+        Some(n) => Err(format!("protocol.{what}: invalid count {n}")),
+    }
+}
+
+fn parse_axis<T>(
+    given: &[String],
+    default: &[&str],
+    what: &str,
+    parse: impl Fn(&str) -> Option<T>,
+) -> Result<Vec<T>, String> {
+    let names: Vec<&str> = if given.is_empty() {
+        default.to_vec()
+    } else {
+        given.iter().map(String::as_str).collect()
+    };
+    names
+        .iter()
+        .map(|s| parse(s).ok_or_else(|| format!("variants.{what}: unknown entry {s:?}")))
+        .collect()
+}
+
+fn parse_threads(vs: Option<&Json>) -> Result<Vec<usize>, String> {
+    let arr = match vs.and_then(|t| t.get("threads")).and_then(Json::as_arr) {
+        None => return Ok(vec![1]),
+        Some(a) => a,
+    };
+    let mut out = Vec::new();
+    for e in arr {
+        match e.as_f64() {
+            Some(n) if n >= 1.0 && n.fract() == 0.0 => out.push(n as usize),
+            _ => return Err("variants.threads: entries must be positive integers".into()),
+        }
+    }
+    if out.is_empty() {
+        return Err("variants.threads is empty".into());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+schema = "blazert-experiment-v1"
+name = "demo"
+hypothesis = "warm planned refills beat unplanned evaluation"
+
+[protocol]
+quick_min_time_s = 0.01
+quick_trials = 2
+quick_replicates = 3
+
+[[workloads]]
+generator = "FD"
+n = 4096
+seed = 5
+
+[[workloads]]
+generator = "power-law"
+n = 2048
+
+[variants]
+formats = ["csr", "csc"]
+plan_modes = ["unplanned", "warm"]
+partitions = ["flop-balanced", "model-guided"]
+threads = [1, 8]
+
+[[metrics]]
+name = "mflops"
+band = 0.10
+
+[[metrics]]
+name = "symbolic_builds"
+gate = true
+"#;
+
+    #[test]
+    fn parses_full_definition() {
+        let def = ExperimentDef::parse(DOC).unwrap();
+        assert_eq!(def.name, "demo");
+        assert!(def.hypothesis.as_deref().unwrap().contains("warm"));
+        assert_eq!(def.protocol.quick.replicates, 3);
+        // Untouched tier keeps its defaults.
+        assert_eq!(def.protocol.full, Protocol::default().full);
+        assert_eq!(def.workloads.len(), 2);
+        assert_eq!(def.workloads[0].generator.tag(), "FD");
+        assert_eq!(def.workloads[1].seed, 5, "seed defaults to 5");
+        assert_eq!(def.variants.threads, vec![1, 8]);
+        assert!(!def.policy("mflops").unwrap().gate);
+        assert_eq!(def.policy("symbolic_builds").unwrap().band, 0.0);
+        assert!(def.policy("steady_allocs").is_none());
+    }
+
+    #[test]
+    fn variant_expansion_skips_unsupported_combos() {
+        let def = ExperimentDef::parse(DOC).unwrap();
+        let points = def.variants.points();
+        // csr: (unplanned × 1 strategy + warm) × 2 partitions × 2 threads = 8
+        // csc: warm only × 2 × 2 = 4
+        assert_eq!(points.len(), 12);
+        assert!(points
+            .iter()
+            .all(|p| !(p.format == MatrixFormat::Csc && p.plan_mode == ExpPlanMode::Unplanned)));
+        // Strategy is attached to unplanned points only.
+        for p in &points {
+            assert_eq!(p.strategy.is_some(), p.plan_mode == ExpPlanMode::Unplanned, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_definitions() {
+        let sub = |from: &str, to: &str| DOC.replace(from, to);
+        assert!(ExperimentDef::parse(&sub("blazert-experiment-v1", "v999"))
+            .unwrap_err()
+            .contains("schema"));
+        assert!(ExperimentDef::parse(&sub("\"FD\"", "\"nope\""))
+            .unwrap_err()
+            .contains("unknown generator"));
+        assert!(ExperimentDef::parse(&sub("\"mflops\"", "\"vibes\""))
+            .unwrap_err()
+            .contains("unknown metric"));
+        assert!(ExperimentDef::parse(&sub("[1, 8]", "[]")).unwrap_err().contains("threads"));
+        // csc with only unplanned leaves an empty matrix.
+        let empty = sub("[\"unplanned\", \"warm\"]", "[\"unplanned\"]")
+            .replace("[\"csr\", \"csc\"]", "[\"csc\"]");
+        assert!(ExperimentDef::parse(&empty).unwrap_err().contains("empty"));
+    }
+
+    #[test]
+    fn axis_names_round_trip() {
+        for m in ExpPlanMode::ALL {
+            assert_eq!(ExpPlanMode::parse(m.name()), Some(m));
+        }
+        for f in [MatrixFormat::Csr, MatrixFormat::Csc] {
+            assert_eq!(MatrixFormat::parse(f.name()), Some(f));
+        }
+    }
+}

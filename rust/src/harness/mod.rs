@@ -1,0 +1,44 @@
+//! Declarative experiment harness with baselines and CI regression
+//! gates.
+//!
+//! The ablation benches accumulated the same loop three times over —
+//! hand-rolled variant matrices, ad-hoc JSON shapes, no notion of what
+//! *should* stay true between commits. This subsystem replaces that
+//! with a data-driven pipeline:
+//!
+//! 1. **Define** ([`def`], [`toml`]): an experiment is a TOML document
+//!    under `experiments/` — hypothesis, workload template, variant
+//!    matrix (format × strategy × plan mode × partition × threads),
+//!    per-tier measurement protocol, and per-metric noise-band policy.
+//! 2. **Run** ([`runner`]): one runner executes any definition through
+//!    the existing [`crate::blazemark::SweepSession`] machinery and
+//!    emits a versioned [`crate::blazemark::BenchRecord`].
+//! 3. **Compare** ([`compare`]): `experiment compare` diffs a run
+//!    against the committed baseline under `baselines/experiments/`
+//!    and exits nonzero on any gated metric drifting beyond its noise
+//!    band. Committed baselines pin *machine-independent* invariants
+//!    (zero symbolic builds on disk-warm rows, zero steady-state
+//!    allocations); perf metrics travel informationally.
+//!
+//! The `experiment` binary drives the pipeline; the `ablation_*`
+//! benches are thin wrappers over committed definitions
+//! ([`runner::bench_main`]). `DESIGN.md` §7 documents the definition
+//! schema and the baseline update workflow.
+
+pub mod compare;
+pub mod def;
+pub mod runner;
+pub mod toml;
+
+pub use compare::{
+    aggregate_metric, aggregate_rows, compare, metric_orient, row_key, within_band,
+    CompareReport, Orientation, Regression,
+};
+pub use def::{
+    ExpPlanMode, ExperimentDef, MatrixFormat, MeasureParams, MetricPolicy, Protocol,
+    VariantPoint, Variants, WorkloadDef, EXPERIMENT_SCHEMA,
+};
+pub use runner::{
+    bench_main, find_repo_file, render_record_table, run_experiment, RunOptions, RunTier,
+};
+pub use toml::parse_toml;

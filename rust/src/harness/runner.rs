@@ -1,0 +1,478 @@
+//! The experiment runner: execute a definition's variant matrix through
+//! the existing measurement engine and emit one structured record.
+//!
+//! Execution reuses the repo's measurement machinery unchanged — one
+//! [`SweepSession`] (persistent [`crate::exec::ExecPool`], reused
+//! output, plan cache) measures every non-persisted point, so the timed
+//! regions see warm workers and warm buffers exactly as the ablation
+//! benches did. Persisted points get the engine's restarted-service
+//! treatment: a *seeding* session builds the plans and flushes them to
+//! a throwaway disk store, then a *fresh* session warm-starts from that
+//! store and measures — which is what makes `symbolic_builds == 0` on
+//! persisted rows an invariant the CI gate can pin, not a lucky
+//! outcome.
+//!
+//! Per point the runner emits identity fields (workload, n, seed, and
+//! the variant axes) plus metrics: `best_seconds`, `mflops` (worst-case
+//! flop count over best time, the Blazemark convention), `flops`,
+//! `out_nnz`, `bytes_floor` (the §IV-A traffic lower bound),
+//! `roofline_pct`, `symbolic_builds` (warm/persisted points), and —
+//! when the hosting binary installs a [`crate::util::CountingAlloc`]
+//! probe — `steady_allocs`, the allocation count of one extra
+//! already-warm measurement (omitted for cold points, which rebuild
+//! their plan per execution by design).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::blazemark::report::{row_field, BenchRecord, BenchRow};
+use crate::blazemark::runner::{BenchConfig, Measurement, PlanMode, SweepSession};
+use crate::gen::operand_pair;
+use crate::harness::compare::{aggregate_rows, metric_orient, row_key, scalar_cell};
+use crate::harness::def::{ExpPlanMode, ExperimentDef, MatrixFormat, VariantPoint, WorkloadDef};
+use crate::kernels::flops::spmmm_flops;
+use crate::kernels::Strategy;
+use crate::model::planned_fill_lower_bound_bytes;
+use crate::plan::PlanStore;
+use crate::sparse::convert::csr_to_csc;
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Which protocol tier of the definition to execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunTier {
+    /// CI tier (`protocol.quick_*`).
+    Quick,
+    /// Paper tier (`protocol.full_*`).
+    Full,
+}
+
+impl RunTier {
+    /// `BLAZEMARK_FULL=1` selects the full tier, anything else quick —
+    /// the same switch the figure benches honor.
+    pub fn from_env() -> Self {
+        if std::env::var("BLAZEMARK_FULL").map_or(false, |v| v == "1") {
+            RunTier::Full
+        } else {
+            RunTier::Quick
+        }
+    }
+
+    /// Tier name for records and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            RunTier::Quick => "quick",
+            RunTier::Full => "full",
+        }
+    }
+}
+
+/// Options of one experiment run.
+#[derive(Clone, Copy, Debug)]
+pub struct RunOptions {
+    /// Protocol tier.
+    pub tier: RunTier,
+    /// Allocation-call sampler from the hosting binary's
+    /// `#[global_allocator]` [`crate::util::CountingAlloc`]; enables
+    /// the `steady_allocs` metric.
+    pub alloc_probe: Option<fn() -> usize>,
+    /// Log one line per measured row to stderr.
+    pub verbose: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { tier: RunTier::Quick, alloc_probe: None, verbose: false }
+    }
+}
+
+struct WorkloadData {
+    def: WorkloadDef,
+    a: CsrMatrix,
+    b: CsrMatrix,
+    csc: Option<(CscMatrix, CscMatrix)>,
+    flops: u64,
+}
+
+/// Execute `def`'s full variant matrix and return the structured
+/// record (not yet written to disk — callers decide the path).
+pub fn run_experiment(def: &ExperimentDef, opts: &RunOptions) -> Result<BenchRecord, String> {
+    let params = match opts.tier {
+        RunTier::Quick => def.protocol.quick,
+        RunTier::Full => def.protocol.full,
+    };
+    let cfg = BenchConfig { min_time_s: params.min_time_s, trials: params.trials };
+    let points = def.variants.points();
+    let max_threads = def.variants.threads.iter().copied().max().unwrap_or(1);
+    let needs_csc = points.iter().any(|p| p.format == MatrixFormat::Csc);
+
+    let workloads: Vec<WorkloadData> = def
+        .workloads
+        .iter()
+        .map(|w| {
+            let (a, b) = operand_pair(w.generator, w.n, w.seed);
+            let flops = spmmm_flops(&a, &b);
+            let csc = needs_csc.then(|| (csr_to_csc(&a), csr_to_csc(&b)));
+            WorkloadData { def: *w, a, b, csc, flops }
+        })
+        .collect();
+
+    let mut rec = BenchRecord::new(&def.name);
+    rec.hypothesis = def.hypothesis.clone();
+    rec.config = vec![
+        ("tier".into(), Json::Str(opts.tier.name().into())),
+        ("min_time_s".into(), Json::Num(params.min_time_s)),
+        ("trials".into(), Json::Num(params.trials as f64)),
+        ("replicates".into(), Json::Num(params.replicates as f64)),
+    ];
+
+    // Pass 1: everything except persisted points, through one session.
+    let mut session = SweepSession::new(max_threads);
+    for wl in &workloads {
+        for point in points.iter().filter(|p| p.plan_mode != ExpPlanMode::Persisted) {
+            let row = measure_point(&mut session, &cfg, params.replicates, wl, point, opts);
+            log_row(opts, &row);
+            rec.rows.push(row);
+        }
+    }
+
+    // Pass 2: persisted points — seed a throwaway store, then measure
+    // through a fresh disk-warmed session.
+    let persisted: Vec<&VariantPoint> =
+        points.iter().filter(|p| p.plan_mode == ExpPlanMode::Persisted).collect();
+    if !persisted.is_empty() {
+        let dir = std::env::temp_dir()
+            .join(format!("blazert_exp_{}_{}", def.name, std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let open = |d: &Path| {
+            PlanStore::open_default(d).map_err(|e| format!("plan store {}: {e}", d.display()))
+        };
+        {
+            let store = open(&dir)?;
+            let mut seeder = SweepSession::new(max_threads);
+            let tiny = BenchConfig { min_time_s: 0.0, trials: 1 };
+            for wl in &workloads {
+                for point in &persisted {
+                    measure_kernel(&mut seeder, &tiny, wl, point);
+                }
+            }
+            let written = seeder.persist_plans(&store);
+            if written == 0 {
+                return Err("persisted seeding wrote no plans".into());
+            }
+        }
+        let store = Arc::new(open(&dir)?);
+        let mut fresh = SweepSession::new(max_threads);
+        let loaded = fresh.attach_plan_store(&store);
+        for wl in &workloads {
+            for point in &persisted {
+                let row = measure_point(&mut fresh, &cfg, params.replicates, wl, point, opts);
+                log_row(opts, &row);
+                rec.rows.push(row);
+            }
+        }
+        let stats = fresh.plan_stats();
+        rec.context = vec![
+            ("persisted_plans_loaded".into(), Json::Num(loaded as f64)),
+            ("persisted_symbolic_builds".into(), Json::Num(stats.symbolic_builds as f64)),
+            ("persisted_disk_loads".into(), Json::Num(stats.disk_loads as f64)),
+        ];
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    Ok(rec)
+}
+
+fn log_row(opts: &RunOptions, row: &BenchRow) {
+    if opts.verbose {
+        let mflops = row_field(row, "mflops").and_then(Json::as_f64).unwrap_or(0.0);
+        eprintln!("  [{}] {mflops:.1} MFlop/s", row_key(row));
+    }
+}
+
+/// Run the point's kernel once under `cfg` (shared by the measured
+/// pass, the seeding pass, and the steady-state allocation probe).
+fn measure_kernel(
+    session: &mut SweepSession,
+    cfg: &BenchConfig,
+    wl: &WorkloadData,
+    point: &VariantPoint,
+) -> Measurement {
+    match (point.format, point.plan_mode) {
+        (MatrixFormat::Csr, ExpPlanMode::Unplanned) => session.measure_spmmm(
+            cfg,
+            &wl.a,
+            &wl.b,
+            point.strategy.unwrap_or(Strategy::Combined),
+            point.threads,
+            point.partition,
+        ),
+        (MatrixFormat::Csr, mode) => session.measure_spmmm_planned(
+            cfg,
+            &wl.a,
+            &wl.b,
+            point.threads,
+            point.partition,
+            plan_mode(mode),
+        ),
+        (MatrixFormat::Csc, ExpPlanMode::Unplanned) => {
+            unreachable!("(csc, unplanned) is filtered by Variants::points")
+        }
+        (MatrixFormat::Csc, mode) => {
+            let (ca, cb) = wl.csc.as_ref().expect("csc operands prepared");
+            session.measure_spmmm_csc_planned(
+                cfg,
+                ca,
+                cb,
+                point.threads,
+                point.partition,
+                plan_mode(mode),
+            )
+        }
+    }
+}
+
+fn plan_mode(mode: ExpPlanMode) -> PlanMode {
+    match mode {
+        ExpPlanMode::Cold => PlanMode::Cold,
+        ExpPlanMode::Warm => PlanMode::Warm,
+        ExpPlanMode::Persisted => PlanMode::Persisted,
+        ExpPlanMode::Unplanned => unreachable!("unplanned points bypass the planned path"),
+    }
+}
+
+/// Measure one point `replicates` times and aggregate
+/// ([`crate::harness::compare::aggregate_rows`]).
+fn measure_point(
+    session: &mut SweepSession,
+    cfg: &BenchConfig,
+    replicates: u32,
+    wl: &WorkloadData,
+    point: &VariantPoint,
+    opts: &RunOptions,
+) -> BenchRow {
+    let reps: Vec<BenchRow> = (0..replicates.max(1))
+        .map(|_| measure_once(session, cfg, wl, point, opts))
+        .collect();
+    aggregate_rows(&reps)
+}
+
+fn measure_once(
+    session: &mut SweepSession,
+    cfg: &BenchConfig,
+    wl: &WorkloadData,
+    point: &VariantPoint,
+    opts: &RunOptions,
+) -> BenchRow {
+    let before = session.plan_stats();
+    let m = measure_kernel(session, cfg, wl, point);
+    let symbolic = session.plan_stats().symbolic_builds - before.symbolic_builds;
+    let out_nnz = match point.format {
+        MatrixFormat::Csr => session.out().nnz(),
+        MatrixFormat::Csc => session.out_csc().nnz(),
+    };
+    let bytes = planned_fill_lower_bound_bytes(wl.a.nnz(), wl.b.nnz(), out_nnz);
+    let mut row: BenchRow = vec![
+        ("workload".into(), Json::Str(wl.def.generator.tag().into())),
+        ("n".into(), Json::Num(wl.def.n as f64)),
+        ("seed".into(), Json::Num(wl.def.seed as f64)),
+        ("format".into(), Json::Str(point.format.name().into())),
+    ];
+    if let Some(s) = point.strategy {
+        row.push(("strategy".into(), Json::Str(s.name().into())));
+    }
+    row.extend([
+        ("plan_mode".into(), Json::Str(point.plan_mode.name().into())),
+        ("partition".into(), Json::Str(point.partition.name().into())),
+        ("threads".into(), Json::Num(point.threads as f64)),
+        ("best_seconds".into(), Json::Num(m.best_seconds)),
+        ("mflops".into(), Json::Num(m.mflops(wl.flops))),
+        ("flops".into(), Json::Num(wl.flops as f64)),
+        ("out_nnz".into(), Json::Num(out_nnz as f64)),
+        ("bytes_floor".into(), Json::Num(bytes as f64)),
+        (
+            "roofline_pct".into(),
+            Json::Num(session.roofline_percent(wl.flops as f64, bytes as f64, &m)),
+        ),
+    ]);
+    if matches!(point.plan_mode, ExpPlanMode::Warm | ExpPlanMode::Persisted) {
+        row.push(("symbolic_builds".into(), Json::Num(symbolic as f64)));
+    }
+    if let Some(probe) = opts.alloc_probe {
+        // Cold points rebuild their plan per execution — allocating is
+        // their design, so the steady-state metric does not apply.
+        if point.plan_mode != ExpPlanMode::Cold {
+            let tiny = BenchConfig { min_time_s: 0.0, trials: 1 };
+            let calls = probe();
+            measure_kernel(session, &tiny, wl, point);
+            row.push(("steady_allocs".into(), Json::Num((probe() - calls) as f64)));
+        }
+    }
+    row
+}
+
+/// Render a record's row matrix as an aligned text table (column set =
+/// union of row fields, first-seen order).
+pub fn render_record_table(rec: &BenchRecord) -> String {
+    let mut cols: Vec<String> = Vec::new();
+    for row in &rec.rows {
+        for (name, _) in row {
+            if !cols.contains(name) {
+                cols.push(name.clone());
+            }
+        }
+    }
+    let mut table = Table::new(cols.iter().map(String::as_str));
+    for row in &rec.rows {
+        table.row(
+            cols.iter()
+                .map(|c| row_field(row, c).map(scalar_cell).unwrap_or_default()),
+        );
+    }
+    table.render()
+}
+
+/// Resolve a repo-relative path from either the workspace root (CI,
+/// `cargo run` from the checkout) or the `rust/` crate directory
+/// (`cargo bench` targets).
+pub fn find_repo_file(rel: &str) -> PathBuf {
+    let p = PathBuf::from(rel);
+    if p.exists() {
+        return p;
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(rel)
+}
+
+/// Shared main for the thin-wrapper ablation benches: load a committed
+/// definition, run the tier selected by `BLAZEMARK_FULL`, print the
+/// row table, and write the record to `default_out` (honoring the
+/// `BLAZERT_BENCH_JSON` override via [`BenchRecord::write`]).
+pub fn bench_main(def_rel: &str, default_out: &str) {
+    let path = find_repo_file(def_rel);
+    let fail = |e: String| -> ! {
+        eprintln!("error: {e}");
+        std::process::exit(1)
+    };
+    let def = ExperimentDef::load(&path).unwrap_or_else(|e| fail(e));
+    let opts = RunOptions { tier: RunTier::from_env(), verbose: true, ..Default::default() };
+    eprintln!(
+        "experiment {} [{} tier] — {} workload(s) × {} variant point(s)",
+        def.name,
+        opts.tier.name(),
+        def.workloads.len(),
+        def.variants.points().len()
+    );
+    if let Some(h) = &def.hypothesis {
+        eprintln!("hypothesis: {h}");
+    }
+    let rec = run_experiment(&def, &opts).unwrap_or_else(|e| fail(e));
+    println!("{}", render_record_table(&rec));
+    match rec.write(default_out) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::def::Protocol;
+
+    fn tiny_def(plan_modes: &str, formats: &str) -> ExperimentDef {
+        let doc = format!(
+            r#"
+schema = "blazert-experiment-v1"
+name = "tiny"
+[protocol]
+quick_min_time_s = 0.001
+quick_trials = 1
+quick_replicates = 2
+[[workloads]]
+generator = "FD"
+n = 144
+seed = 3
+[variants]
+formats = {formats}
+plan_modes = {plan_modes}
+threads = [1, 2]
+"#
+        );
+        ExperimentDef::parse(&doc).unwrap()
+    }
+
+    #[test]
+    fn runs_the_matrix_and_emits_all_metrics() {
+        let def = tiny_def(r#"["unplanned", "warm"]"#, r#"["csr"]"#);
+        let rec = run_experiment(&def, &RunOptions::default()).unwrap();
+        assert_eq!(rec.bench, "tiny");
+        assert_eq!(rec.rows.len(), 4, "2 plan modes × 2 thread counts");
+        for row in &rec.rows {
+            for metric in ["best_seconds", "mflops", "flops", "out_nnz", "roofline_pct"] {
+                let v = row_field(row, metric).and_then(Json::as_f64);
+                assert!(v.map_or(false, |v| v > 0.0), "{metric} in [{}]", row_key(row));
+            }
+        }
+        // Identity: unplanned rows carry a strategy, warm rows do not,
+        // and warm rows report their symbolic work.
+        for row in &rec.rows {
+            let mode = row_field(row, "plan_mode").unwrap().as_str().unwrap();
+            assert_eq!(row_field(row, "strategy").is_some(), mode == "unplanned");
+            assert_eq!(row_field(row, "symbolic_builds").is_some(), mode == "warm");
+        }
+        // All four rows describe the same product.
+        let nnz: Vec<f64> = rec
+            .rows
+            .iter()
+            .filter_map(|r| row_field(r, "out_nnz"))
+            .filter_map(Json::as_f64)
+            .collect();
+        assert!(nnz.windows(2).all(|w| w[0] == w[1]), "{nnz:?}");
+        // The table renders every column.
+        let table = render_record_table(&rec);
+        assert!(table.contains("plan_mode") && table.contains("mflops"), "{table}");
+    }
+
+    #[test]
+    fn persisted_rows_run_zero_symbolic_builds() {
+        let def = tiny_def(r#"["persisted"]"#, r#"["csr"]"#);
+        let rec = run_experiment(&def, &RunOptions::default()).unwrap();
+        assert_eq!(rec.rows.len(), 2);
+        for row in &rec.rows {
+            assert_eq!(
+                row_field(row, "symbolic_builds").and_then(Json::as_f64),
+                Some(0.0),
+                "disk-warm row rebuilt a plan: [{}]",
+                row_key(row)
+            );
+        }
+        let loaded = rec.context.iter().find(|(k, _)| k == "persisted_plans_loaded").unwrap();
+        assert!(loaded.1.as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn csc_points_measure_the_planned_column_path() {
+        let def = tiny_def(r#"["warm"]"#, r#"["csr", "csc"]"#);
+        let rec = run_experiment(&def, &RunOptions::default()).unwrap();
+        assert_eq!(rec.rows.len(), 4);
+        let csc_rows: Vec<_> = rec
+            .rows
+            .iter()
+            .filter(|r| row_field(r, "format").and_then(Json::as_str) == Some("csc"))
+            .collect();
+        assert_eq!(csc_rows.len(), 2);
+        // Same product, same structural output either way.
+        let nnz = |r: &BenchRow| row_field(r, "out_nnz").and_then(Json::as_f64).unwrap();
+        assert_eq!(nnz(csc_rows[0]), nnz(&rec.rows[0]));
+    }
+
+    #[test]
+    fn tier_selects_protocol_params() {
+        let def = tiny_def(r#"["unplanned"]"#, r#"["csr"]"#);
+        assert_eq!(def.protocol.full, Protocol::default().full);
+        let rec = run_experiment(&def, &RunOptions::default()).unwrap();
+        let tier = rec.config.iter().find(|(k, _)| k == "tier").unwrap();
+        assert_eq!(tier.1.as_str(), Some("quick"));
+        let trials = rec.config.iter().find(|(k, _)| k == "trials").unwrap();
+        assert_eq!(trials.1.as_f64(), Some(1.0));
+    }
+}

@@ -1,0 +1,220 @@
+//! A minimal TOML-subset reader for experiment definitions.
+//!
+//! The build is offline (no `toml` crate), and the definitions under
+//! `experiments/` only need a small, predictable surface:
+//!
+//! * `key = value` pairs at the top level,
+//! * `[section]` tables (one level deep),
+//! * `[[section]]` arrays of tables (one level deep),
+//! * values: basic strings, integers, floats, booleans, and (possibly
+//!   multiline) arrays thereof,
+//! * `#` comments, anywhere outside a string.
+//!
+//! Values are deliberately the *JSON-compatible* slice of TOML — no
+//! underscored numerals, no inline tables, no dates — so a scanned
+//! value parses through [`Json::parse`] unchanged and the whole
+//! document lands in the same [`Json`] tree the run records and
+//! baselines use. Anything outside the subset is a hard parse error
+//! with a line number, never a silent skip: a typo in a definition
+//! must not quietly drop a variant axis from a committed baseline.
+
+use crate::util::json::Json;
+
+/// Parse a TOML-subset document into an order-preserving [`Json::Obj`].
+///
+/// `[section]` becomes an object field holding an object; `[[section]]`
+/// becomes an object field holding an array of objects, one per
+/// occurrence.
+pub fn parse_toml(src: &str) -> Result<Json, String> {
+    let mut root: Vec<(String, Json)> = Vec::new();
+    // (section name, section is an array-of-tables element)
+    let mut cursor: Option<(String, bool)> = None;
+    let raw: Vec<&str> = src.lines().collect();
+    let mut i = 0usize;
+    while i < raw.len() {
+        let line = strip_comment(raw[i]);
+        let lineno = i + 1;
+        i += 1;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if let Some(name) = t.strip_prefix("[[").and_then(|r| r.strip_suffix("]]")) {
+            let name = check_key(name.trim(), lineno)?;
+            match root.iter_mut().find(|(k, _)| k == name).map(|(_, v)| v) {
+                None => root.push((name.to_string(), Json::Arr(vec![Json::Obj(Vec::new())]))),
+                Some(Json::Arr(items)) => items.push(Json::Obj(Vec::new())),
+                Some(_) => {
+                    return Err(format!("line {lineno}: [[{name}]] conflicts with earlier key"))
+                }
+            }
+            cursor = Some((name.to_string(), true));
+            continue;
+        }
+        if let Some(name) = t.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+            let name = check_key(name.trim(), lineno)?;
+            if root.iter().any(|(k, _)| k == name) {
+                return Err(format!("line {lineno}: duplicate table [{name}]"));
+            }
+            root.push((name.to_string(), Json::Obj(Vec::new())));
+            cursor = Some((name.to_string(), false));
+            continue;
+        }
+        let (key, rest) = t
+            .split_once('=')
+            .ok_or_else(|| format!("line {lineno}: expected `key = value`, got {t:?}"))?;
+        let key = check_key(key.trim(), lineno)?.to_string();
+        let mut val_src = rest.trim().to_string();
+        // Multiline arrays: keep consuming lines until brackets balance.
+        while bracket_depth(&val_src) > 0 {
+            let cont = raw
+                .get(i)
+                .ok_or_else(|| format!("line {lineno}: unterminated array for key {key:?}"))?;
+            val_src.push(' ');
+            val_src.push_str(strip_comment(cont).trim());
+            i += 1;
+        }
+        let value = Json::parse(&val_src)
+            .map_err(|e| format!("line {lineno}: value for {key:?}: {e}"))?;
+        let table = current_table(&mut root, &cursor)?;
+        if table.iter().any(|(k, _)| *k == key) {
+            return Err(format!("line {lineno}: duplicate key {key:?}"));
+        }
+        table.push((key, value));
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Bare-key validation: `[A-Za-z0-9_-]+` (the TOML bare-key alphabet).
+fn check_key(key: &str, lineno: usize) -> Result<&str, String> {
+    let ok = !key.is_empty()
+        && key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-');
+    if ok {
+        Ok(key)
+    } else {
+        Err(format!("line {lineno}: invalid key {key:?} (bare keys only)"))
+    }
+}
+
+/// The table the next `key = value` lands in.
+fn current_table<'a>(
+    root: &'a mut Vec<(String, Json)>,
+    cursor: &Option<(String, bool)>,
+) -> Result<&'a mut Vec<(String, Json)>, String> {
+    let (name, is_arr) = match cursor {
+        None => return Ok(root),
+        Some((name, is_arr)) => (name, *is_arr),
+    };
+    let v = root
+        .iter_mut()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v)
+        .ok_or_else(|| format!("internal: lost table {name:?}"))?;
+    match (v, is_arr) {
+        (Json::Obj(fields), false) => Ok(fields),
+        (Json::Arr(items), true) => match items.last_mut() {
+            Some(Json::Obj(fields)) => Ok(fields),
+            _ => Err(format!("internal: [[{name}]] lost its tail element")),
+        },
+        _ => Err(format!("table {name:?} redefined with a different shape")),
+    }
+}
+
+/// Drop a `#` comment, honoring string literals (and `\"` inside them).
+fn strip_comment(line: &str) -> &str {
+    let (mut in_str, mut escaped) = (false, false);
+    for (idx, c) in line.char_indices() {
+        match c {
+            _ if escaped => escaped = false,
+            '\\' if in_str => escaped = true,
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..idx],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Net `[`/`]` nesting outside string literals (positive = still open).
+fn bracket_depth(s: &str) -> i32 {
+    let (mut depth, mut in_str, mut escaped) = (0i32, false, false);
+    for c in s.chars() {
+        match c {
+            _ if escaped => escaped = false,
+            '\\' if in_str => escaped = true,
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+    }
+    depth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_arrays_of_tables() {
+        let doc = r#"
+# experiment definition
+name = "demo"
+threshold = 0.25
+
+[protocol]
+trials = 3
+full = true
+
+[[workloads]]
+generator = "FD"
+n = 1024
+
+[[workloads]]
+generator = "random"  # trailing comment
+n = 2048
+"#;
+        let v = parse_toml(doc).unwrap();
+        assert_eq!(v.get("name").and_then(Json::as_str), Some("demo"));
+        assert_eq!(v.get("threshold").and_then(Json::as_f64), Some(0.25));
+        let proto = v.get("protocol").unwrap();
+        assert_eq!(proto.get("trials").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(proto.get("full").and_then(Json::as_bool), Some(true));
+        let wl = v.get("workloads").and_then(Json::as_arr).unwrap();
+        assert_eq!(wl.len(), 2);
+        assert_eq!(wl[1].get("generator").and_then(Json::as_str), Some("random"));
+        assert_eq!(wl[1].get("n").and_then(Json::as_f64), Some(2048.0));
+    }
+
+    #[test]
+    fn multiline_arrays_join() {
+        let doc = "sizes = [\n  64, # small\n  144,\n  1024\n]\ntags = [\"a\", \"b]c\"]\n";
+        let v = parse_toml(doc).unwrap();
+        let sizes = v.get("sizes").and_then(Json::as_arr).unwrap();
+        assert_eq!(sizes.len(), 3);
+        assert_eq!(sizes[2].as_f64(), Some(1024.0));
+        // A `]` inside a string must not close the array early.
+        let tags = v.get("tags").and_then(Json::as_arr).unwrap();
+        assert_eq!(tags[1].as_str(), Some("b]c"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_toml("a = 1\nb = oops\n").unwrap_err();
+        assert!(e.starts_with("line 2:"), "{e}");
+        let e = parse_toml("a = 1\na = 2\n").unwrap_err();
+        assert!(e.contains("duplicate key"), "{e}");
+        let e = parse_toml("[t]\nx = 1\n[t]\n").unwrap_err();
+        assert!(e.contains("duplicate table"), "{e}");
+        let e = parse_toml("just words\n").unwrap_err();
+        assert!(e.contains("key = value"), "{e}");
+        let e = parse_toml("a = [1, 2\n").unwrap_err();
+        assert!(e.contains("unterminated"), "{e}");
+    }
+
+    #[test]
+    fn comment_stripping_respects_strings() {
+        let v = parse_toml("s = \"a # not a comment\" # real one\n").unwrap();
+        assert_eq!(v.get("s").and_then(Json::as_str), Some("a # not a comment"));
+    }
+}

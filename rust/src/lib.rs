@@ -25,6 +25,11 @@
 //!   paper's model-guided analysis on simulated Sandy Bridge hardware,
 //! * the Blazemark benchmarking methodology ([`blazemark`]) and workload
 //!   generators ([`gen`]),
+//! * a declarative experiment harness ([`harness`]): TOML experiment
+//!   definitions with hypotheses and variant matrices, one runner over
+//!   the sweep machinery, versioned structured records, and a noise-band
+//!   regression gate against committed baselines (the `experiment`
+//!   binary; `experiments/` and `baselines/experiments/`),
 //! * a persistent execution engine ([`exec`]: a long-lived worker pool
 //!   with per-worker workspace arenas and model-guided flop-balanced
 //!   partitioning — repeated evaluation through a warm pool performs
@@ -65,6 +70,7 @@ pub mod coordinator;
 pub mod exec;
 pub mod expr;
 pub mod gen;
+pub mod harness;
 pub mod kernels;
 pub mod model;
 pub mod plan;

@@ -200,6 +200,19 @@ impl CscMatrix {
         (&mut self.col_ptr, &mut self.row_idx, &mut self.values)
     }
 
+    /// Drop staged payload beyond `nnz` entries — the column-major
+    /// mirror of [`super::CsrMatrix::truncate_payload`], completing a
+    /// stage-then-compact write: a filler may stage into the slack left
+    /// by [`Self::payload_parts_mut`] (upper-bound sizing), compact the
+    /// survivors front-ward while rewriting `col_ptr`, and then cut the
+    /// arrays down to the compacted population. `col_ptr` must already
+    /// account for exactly `nnz` entries.
+    pub fn truncate_payload(&mut self, nnz: usize) {
+        debug_assert_eq!(*self.col_ptr.last().unwrap(), nnz, "compaction must finish first");
+        self.row_idx.truncate(nnz);
+        self.values.truncate(nnz);
+    }
+
     /// Structural + numerical equality within `tol` (for tests).
     pub fn approx_eq(&self, other: &CscMatrix, tol: f64) -> bool {
         self.rows == other.rows
@@ -291,6 +304,35 @@ mod tests {
         m.copy_from(&src);
         assert!(m.approx_eq(&src, 0.0));
         assert!(m.capacity() >= cap, "copy_from keeps capacity");
+    }
+
+    #[test]
+    fn truncate_then_refill_round_trips() {
+        let mut m = CscMatrix::new(0, 0);
+        // Phase 1: upper-bound sizing — 2 slots per column staged.
+        let cp = m.sizing_parts_mut(3, 2);
+        cp.copy_from_slice(&[0, 2, 4]);
+        let (col_ptr, rows, vals) = m.payload_parts_mut();
+        // Stage survivors: column 0 fills both slots, column 1 only one
+        // — the last staged slot is slack a compaction must cut away.
+        rows[..3].copy_from_slice(&[0, 2, 1]);
+        vals[..3].copy_from_slice(&[1.0, 2.0, 3.0]);
+        col_ptr[2] = 3;
+        m.truncate_payload(3);
+        assert!(m.is_finalized());
+        assert_eq!(m.nnz(), 3);
+        assert!(m.approx_eq(&small(), 0.0), "compacted matrix equals streamed build");
+        // Refill: the truncated matrix is a full citizen of the reuse
+        // protocol — reset keeps capacity and streaming rebuilds it.
+        let cap = m.capacity();
+        m.reset(3, 2);
+        m.append(0, 1.0);
+        m.append(2, 2.0);
+        m.finalize_col();
+        m.append(1, 3.0);
+        m.finalize_col();
+        assert!(m.approx_eq(&small(), 0.0));
+        assert!(m.capacity() >= cap.min(4), "refill reuses the staged buffers");
     }
 
     #[test]

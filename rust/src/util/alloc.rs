@@ -1,0 +1,88 @@
+//! A counting global allocator for steady-state allocation metrics.
+//!
+//! The engine's headline guarantee — warm re-evaluation performs zero
+//! heap allocations — is pinned by `tests/alloc_steady_state.rs`; the
+//! experiment harness turns the same proof into a *recorded metric*
+//! (`steady_allocs`) that the CI regression gate can hold at zero
+//! forever. Binaries opt in:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: CountingAlloc = CountingAlloc::new();
+//! fn probe() -> usize { ALLOC.calls() }
+//! // RunOptions { alloc_probe: Some(probe), .. }
+//! ```
+//!
+//! Only allocation *calls* are counted (alloc/realloc/alloc_zeroed, not
+//! frees): a steady-state count of zero is the invariant of interest,
+//! and counting calls keeps the probe overhead to one relaxed atomic
+//! increment per allocation.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// System-allocator wrapper counting every allocation call.
+pub struct CountingAlloc {
+    calls: AtomicUsize,
+}
+
+impl CountingAlloc {
+    /// A fresh counter (const — usable in a `#[global_allocator]` static).
+    pub const fn new() -> Self {
+        CountingAlloc { calls: AtomicUsize::new(0) }
+    }
+
+    /// Allocation calls observed so far.
+    pub fn calls(&self) -> usize {
+        self.calls.load(Ordering::SeqCst)
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_direct_calls() {
+        // Not installed as the global allocator here — exercise the
+        // GlobalAlloc impl directly.
+        let a = CountingAlloc::new();
+        let layout = Layout::from_size_align(64, 8).unwrap();
+        unsafe {
+            let p = a.alloc(layout);
+            assert!(!p.is_null());
+            a.dealloc(p, layout);
+            let p = a.alloc_zeroed(layout);
+            assert!(!p.is_null());
+            a.dealloc(p, layout);
+        }
+        assert_eq!(a.calls(), 2, "dealloc is not counted");
+    }
+}

@@ -5,11 +5,15 @@
 //! pull from crates.io (a seeded RNG, a CLI parser, a table printer, a
 //! property-testing harness, timing helpers) live here.
 
+pub mod alloc;
 pub mod cli;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod table;
 pub mod timer;
 
+pub use alloc::CountingAlloc;
+pub use json::Json;
 pub use rng::Pcg64;
 pub use timer::Stopwatch;

@@ -1,0 +1,52 @@
+//! The harness's allocation gate, end to end: run the committed
+//! plan-ablation definition quick-tier with a counting global allocator
+//! installed (the same probe the `experiment` binary wires up) and hold
+//! the run against the committed baseline — which pins
+//! `steady_allocs = 0` on the CSR unplanned/warm/persisted rows and
+//! `symbolic_builds = 0` on the disk-warm rows. One `#[test]` so no
+//! concurrent test perturbs the allocation counter.
+
+use blazert::blazemark::{row_field, BenchRecord};
+use blazert::harness::{
+    compare, find_repo_file, run_experiment, ExperimentDef, RunOptions, RunTier,
+};
+use blazert::util::json::Json;
+use blazert::util::CountingAlloc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+fn probe() -> usize {
+    ALLOC.calls()
+}
+
+#[test]
+fn committed_plan_definition_passes_its_baseline_with_zero_steady_allocs() {
+    let def =
+        ExperimentDef::load(&find_repo_file("experiments/plan_ablation.toml")).unwrap();
+    let opts = RunOptions { tier: RunTier::Quick, alloc_probe: Some(probe), verbose: false };
+    let rec = run_experiment(&def, &opts).unwrap();
+    assert_eq!(rec.rows.len(), 16, "8 points × 2 workloads");
+
+    // Cold points rebuild their plan per execution (allocating is their
+    // design); every other point must refill without touching the heap.
+    for row in &rec.rows {
+        let mode = row_field(row, "plan_mode").and_then(Json::as_str).unwrap();
+        let allocs = row_field(row, "steady_allocs").and_then(Json::as_f64);
+        if mode == "cold" {
+            assert!(allocs.is_none(), "cold rows make no steady-state claim");
+        } else {
+            assert_eq!(allocs, Some(0.0), "steady-state allocations on a {mode} row");
+        }
+    }
+
+    // The committed baseline gates exactly these invariants — the same
+    // check CI runs via `experiment compare`.
+    let base =
+        BenchRecord::load(&find_repo_file("baselines/experiments/plan_ablation.json"))
+            .unwrap();
+    let rep = compare(&base, &rec, &def.metrics);
+    assert!(rep.passed(), "{}", rep.render());
+    assert_eq!(rep.checked, 16, "12× steady_allocs + 4× symbolic_builds:\n{}", rep.render());
+    assert!(rep.new_rows.is_empty(), "{}", rep.render());
+}

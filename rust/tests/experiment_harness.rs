@@ -1,0 +1,167 @@
+//! End-to-end pins of the declarative experiment harness: definition →
+//! run → JSON render → reload round-trip, noise-band edge cases at the
+//! public gate API, and the committed `experiments/` + `baselines/`
+//! artifacts staying well-formed.
+
+use blazert::blazemark::{row_field, BenchRecord};
+use blazert::harness::{
+    compare, find_repo_file, run_experiment, ExperimentDef, MetricPolicy, RunOptions,
+};
+use blazert::util::json::Json;
+
+/// Small enough to run in test time, wide enough to cover the strategy
+/// split, replicate aggregation, and the warm symbolic counter.
+const TINY: &str = r#"
+schema = "blazert-experiment-v1"
+name = "tiny"
+hypothesis = "round-trips survive the disk format"
+
+[protocol]
+quick_min_time_s = 0.001
+quick_trials = 1
+quick_replicates = 2
+
+[[workloads]]
+generator = "FD"
+n = 144
+seed = 3
+
+[variants]
+plan_modes = ["unplanned", "warm"]
+threads = [1, 2]
+
+[[metrics]]
+name = "symbolic_builds"
+band = 0.0
+gate = true
+
+[[metrics]]
+name = "mflops"
+band = 0.10
+"#;
+
+#[test]
+fn run_record_round_trips_and_gates_itself() {
+    let def = ExperimentDef::parse(TINY).unwrap();
+    let rec = run_experiment(&def, &RunOptions::default()).unwrap();
+    assert_eq!(rec.rows.len(), 4, "2 plan modes × 2 thread counts, replicates collapsed");
+
+    // Disk round-trip: render → parse reproduces the record exactly.
+    let again = BenchRecord::parse(&rec.render()).unwrap();
+    assert_eq!(rec, again);
+
+    // A run gates cleanly against itself (warm rows carry the symbolic
+    // counter; identical values sit inside every band).
+    let rep = compare(&again, &rec, &def.metrics);
+    assert!(rep.passed(), "{}", rep.render());
+    assert_eq!(rep.checked, 2, "symbolic_builds gated on the two warm rows");
+    assert!(rep.new_rows.is_empty());
+
+    // Injected regression: bump the gated counter on every row that
+    // carries it — the gate must fail (the CI self-test contract).
+    let mut bad = rec.clone();
+    let mut touched = 0;
+    for row in &mut bad.rows {
+        for (name, v) in row.iter_mut() {
+            if name == "symbolic_builds" {
+                *v = Json::Num(7.0);
+                touched += 1;
+            }
+        }
+    }
+    assert_eq!(touched, 2);
+    let rep = compare(&rec, &bad, &def.metrics);
+    assert!(!rep.passed());
+    assert_eq!(rep.regressions.len(), 2, "{}", rep.render());
+
+    // A gated metric silently vanishing from the run is a failure too.
+    let mut base = rec.clone();
+    base.rows[0].push(("steady_allocs".into(), Json::Num(0.0)));
+    let policies =
+        vec![MetricPolicy { name: "steady_allocs".into(), band: 0.0, gate: true }];
+    let rep = compare(&base, &rec, &policies);
+    assert!(!rep.passed(), "{}", rep.render());
+    assert!(rep.regressions[0].detail.contains("missing"), "{}", rep.render());
+}
+
+fn record_with_mflops(mflops: f64) -> BenchRecord {
+    let mut rec = BenchRecord::new("edges");
+    rec.rows = vec![vec![
+        ("workload".into(), Json::Str("FD".into())),
+        ("threads".into(), Json::Num(1.0)),
+        ("mflops".into(), Json::Num(mflops)),
+    ]];
+    rec
+}
+
+#[test]
+fn band_edges_and_new_rows_at_the_gate_level() {
+    let base = record_with_mflops(1000.0);
+    let gate = vec![MetricPolicy { name: "mflops".into(), band: 0.10, gate: true }];
+
+    // Exactly at the band edge passes; one tick below fails.
+    assert!(compare(&base, &record_with_mflops(900.0), &gate).passed());
+    assert!(!compare(&base, &record_with_mflops(899.9), &gate).passed());
+    // Improvements always pass a higher-is-better gate.
+    assert!(compare(&base, &record_with_mflops(5000.0), &gate).passed());
+
+    // Rows the baseline does not know about are reported, not failed.
+    let mut run = record_with_mflops(1000.0);
+    run.rows.push(vec![
+        ("workload".into(), Json::Str("power-law".into())),
+        ("threads".into(), Json::Num(8.0)),
+        ("mflops".into(), Json::Num(50.0)),
+    ]);
+    let rep = compare(&base, &run, &gate);
+    assert!(rep.passed());
+    assert_eq!(rep.new_rows.len(), 1);
+    assert!(rep.new_rows[0].contains("workload=power-law"), "{:?}", rep.new_rows);
+}
+
+#[test]
+fn committed_definitions_and_baselines_stay_well_formed() {
+    // Every committed definition parses, and its variant matrix has the
+    // shape the baselines and snapshots were written for.
+    for (name, points) in [
+        ("plan_ablation", 8),
+        ("simd_ablation", 4),
+        ("threads_ablation", 12),
+        ("scenario_corpus", 4),
+    ] {
+        let path = find_repo_file(&format!("experiments/{name}.toml"));
+        let def = ExperimentDef::load(&path).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(def.name, name);
+        assert_eq!(def.variants.points().len(), points, "{name} matrix shape");
+        assert!(def.hypothesis.is_some(), "{name} declares a hypothesis");
+    }
+    // The structured-operand corpus exercises the banded and
+    // block-structured generators through the harness.
+    let corpus =
+        ExperimentDef::load(&find_repo_file("experiments/scenario_corpus.toml")).unwrap();
+    let tags: Vec<&str> = corpus.workloads.iter().map(|w| w.generator.tag()).collect();
+    assert_eq!(tags, vec!["banded", "block"]);
+
+    // Committed baselines parse under the unified record schema and
+    // only pin invariant counters (never machine-dependent perf).
+    for name in ["plan_ablation", "simd_ablation"] {
+        let path = find_repo_file(&format!("baselines/experiments/{name}.json"));
+        let base = BenchRecord::load(&path).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(base.bench, name);
+        assert!(!base.rows.is_empty());
+        for row in &base.rows {
+            assert!(row_field(row, "mflops").is_none(), "{name} baseline gates perf");
+            for metric in ["symbolic_builds", "steady_allocs"] {
+                if let Some(v) = row_field(row, metric) {
+                    assert_eq!(v.as_f64(), Some(0.0), "{name}: {metric} is an invariant");
+                }
+            }
+        }
+    }
+    // The regenerated trajectory snapshots are readable by the same
+    // schema (so `experiment print`/`compare` can consume them).
+    for file in ["BENCH_plan.json", "BENCH_simd.json"] {
+        let rec = BenchRecord::load(&find_repo_file(file)).unwrap_or_else(|e| panic!("{e}"));
+        assert!(rec.rows.len() >= 8, "{file}");
+        assert!(rec.hypothesis.is_some(), "{file}");
+    }
+}
