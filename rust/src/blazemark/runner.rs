@@ -8,10 +8,15 @@ use std::sync::Arc;
 
 use crate::exec::{serial_spmmm_into, ExecPool, Partition};
 use crate::kernels::parallel::{par_planned_fill, par_spmmm_into};
-use crate::kernels::{planned_fill_serial, planned_fill_serial_csc, Strategy};
-use crate::model::{percent_of_roofline, Machine};
+use crate::kernels::spmv::{spmv, spmv_traced};
+use crate::kernels::tracer::CountingTracer;
+use crate::kernels::{
+    fused_serial_ws, fused_spmmm_spmv_traced, par_fused_spmmm_spmv, planned_fill_serial,
+    planned_fill_serial_csc, spmmm_into_traced, Strategy,
+};
+use crate::model::{fused_pipeline_lower_bound_bytes, percent_of_roofline, Machine};
 use crate::plan::{PlanCache, PlanKey, PlanStats, PlanStore, SpmmmPlan, StoreStats};
-use crate::sparse::{CscMatrix, CsrMatrix};
+use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
 use crate::util::timer::Stopwatch;
 
 /// Measurement protocol parameters.
@@ -114,6 +119,49 @@ pub enum PlanMode {
     Persisted,
 }
 
+/// Which lowering of the pipeline `y = (A · B) · x` a measurement times
+/// — the fuse-vs-materialize pair the fusion ablation compares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pipeline {
+    /// The fused kernel ([`crate::kernels::fused`]): each row of `A·B`
+    /// is contracted against `x` straight out of the dense accumulator;
+    /// the sparse intermediate is never materialized.
+    Fused,
+    /// Materialize `C = A·B` into the session's output, then
+    /// `y = C · x` — the baseline the fused row is gated against.
+    Materialized,
+}
+
+/// Tracer-exact byte accounting for one pipeline pair — the proof that
+/// the fused lowering's intermediate traffic actually disappeared.
+/// Produced by [`SweepSession::account_fused_pipeline`]; the exact
+/// identity `fused_bytes + 32 · intermediate_nnz == materialized_bytes`
+/// (16 B append store + 16 B re-read, minus the 8 B `x` gather both
+/// sides pay, per surviving entry) is pinned by the fused kernel's
+/// tests and re-checked by the fusion-ablation harness.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineAccounting {
+    /// Exact bytes moved by the traced fused pipeline.
+    pub fused_bytes: u64,
+    /// Flops of the fused pipeline (identical on both sides).
+    pub fused_flops: u64,
+    /// Exact bytes moved by traced materialize-then-SpMV.
+    pub materialized_bytes: u64,
+    /// Entries of the (never-materialized) intermediate `A · B`.
+    pub intermediate_nnz: usize,
+    /// Analytic floor ([`fused_pipeline_lower_bound_bytes`]) the `%roof`
+    /// figure divides fused measurements by.
+    pub lower_bound_bytes: u64,
+}
+
+impl PipelineAccounting {
+    /// Bytes the fused lowering removed — the intermediate's store +
+    /// re-read-and-gather traffic (32 B per surviving entry).
+    pub fn bytes_saved(&self) -> u64 {
+        self.materialized_bytes - self.fused_bytes
+    }
+}
+
 /// Persistent measurement state for a sweep: one [`ExecPool`] (workers
 /// + workspaces spawned once), one reused output matrix, and one
 /// [`PlanCache`] for warm planned series. Every repetition of every
@@ -124,6 +172,7 @@ pub struct SweepSession {
     machine: Machine,
     out: CsrMatrix,
     out_csc: CscMatrix,
+    y: Vec<f64>,
     plans: PlanCache,
 }
 
@@ -135,6 +184,7 @@ impl SweepSession {
             machine: Machine::sandy_bridge_i7_2600(),
             out: CsrMatrix::new(0, 0),
             out_csc: CscMatrix::new(0, 0),
+            y: Vec::new(),
             plans: PlanCache::default(),
         }
     }
@@ -157,6 +207,12 @@ impl SweepSession {
     /// The session's reused column-major output.
     pub fn out_csc(&self) -> &CscMatrix {
         &self.out_csc
+    }
+
+    /// The session's reused pipeline result vector (the last
+    /// [`SweepSession::measure_fused_pipeline`] result).
+    pub fn y(&self) -> &[f64] {
+        &self.y
     }
 
     /// Percent of the model's roofline a measurement achieved for a
@@ -277,6 +333,81 @@ impl SweepSession {
                     })
                 })
             }
+        }
+    }
+
+    /// Measure one lowering of the pipeline `y = (A · B) · x` under
+    /// `cfg`, reusing the session's pool, workspaces, output matrix
+    /// (materialized side only) and result vector across all
+    /// repetitions and trials. After the first calibration execution
+    /// the fused timed region performs **zero heap allocations** — the
+    /// intermediate lives entirely in pool workspace accumulators —
+    /// which is exactly what the fusion-ablation `steady_allocs` /
+    /// `intermediate_allocs` gates pin.
+    pub fn measure_fused_pipeline(
+        &mut self,
+        cfg: &BenchConfig,
+        a: &CsrMatrix,
+        b: &CsrMatrix,
+        x: &[f64],
+        strategy: Strategy,
+        threads: usize,
+        partition: Partition,
+        pipeline: Pipeline,
+    ) -> Measurement {
+        let SweepSession { pool, machine, out, y, .. } = self;
+        y.resize(SparseShape::rows(a), 0.0);
+        match pipeline {
+            Pipeline::Fused => measure(cfg, || {
+                if threads > 1 {
+                    par_fused_spmmm_spmv(pool, a, b, x, threads, strategy, partition, machine, y);
+                } else {
+                    pool.with_local(|ws| fused_serial_ws(ws, a, b, x, strategy, y));
+                }
+            }),
+            Pipeline::Materialized => measure(cfg, || {
+                if threads > 1 {
+                    par_spmmm_into(pool, a, b, threads, strategy, partition, machine, out);
+                } else {
+                    pool.with_local(|ws| serial_spmmm_into(ws, a, b, strategy, out));
+                }
+                spmv(out, x, y);
+            }),
+        }
+    }
+
+    /// Tracer-exact byte accounting for the pipeline pair
+    /// `y = (A · B) · x`: replays both lowerings through
+    /// [`CountingTracer`]s and reports their exact traffic alongside
+    /// the analytic fused floor. Untimed — allocation here is fine; the
+    /// figures feed the fusion ablation's `%roof` column and its
+    /// traffic gate (fused must move strictly fewer bytes whenever the
+    /// intermediate is nonempty).
+    pub fn account_fused_pipeline(
+        &mut self,
+        a: &CsrMatrix,
+        b: &CsrMatrix,
+        x: &[f64],
+        strategy: Strategy,
+    ) -> PipelineAccounting {
+        self.y.resize(SparseShape::rows(a), 0.0);
+        let mut fused_tr = CountingTracer::default();
+        fused_spmmm_spmv_traced(a, b, x, strategy, &mut self.y, &mut fused_tr);
+        let mut mat_tr = CountingTracer::default();
+        let mut c = CsrMatrix::new(0, 0);
+        spmmm_into_traced(a, b, strategy, &mut c, &mut mat_tr);
+        spmv_traced(&c, x, &mut self.y, &mut mat_tr);
+        PipelineAccounting {
+            fused_bytes: fused_tr.traffic(),
+            fused_flops: fused_tr.flops,
+            materialized_bytes: mat_tr.traffic(),
+            intermediate_nnz: c.nnz(),
+            lower_bound_bytes: fused_pipeline_lower_bound_bytes(
+                a.nnz(),
+                b.nnz(),
+                c.nnz(),
+                SparseShape::rows(a),
+            ),
         }
     }
 }
@@ -436,6 +567,70 @@ mod tests {
         assert_eq!(s.disk_loads, 2);
         assert_eq!(session.plan_store_stats().expect("store attached").store_rejected, 0);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fused_pipeline_measurement_and_accounting() {
+        use crate::gen::{operand_pair, Workload};
+        use crate::kernels::spmmm;
+        let cfg = BenchConfig { min_time_s: 0.001, trials: 1 };
+        let (a, b) = operand_pair(Workload::FiveBandFd, 130, 11);
+        let x: Vec<f64> = (0..SparseShape::cols(&b)).map(|i| 0.5 + (i % 7) as f64).collect();
+        let c = spmmm(&a, &b, Strategy::Combined);
+        let mut want = vec![0.0; SparseShape::rows(&a)];
+        spmv(&c, &x, &mut want);
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+
+        let mut session = SweepSession::new(2);
+        for threads in [1usize, 2] {
+            for pipeline in [Pipeline::Fused, Pipeline::Materialized] {
+                let m = session.measure_fused_pipeline(
+                    &cfg,
+                    &a,
+                    &b,
+                    &x,
+                    Strategy::Combined,
+                    threads,
+                    Partition::Flops,
+                    pipeline,
+                );
+                assert!(m.best_seconds > 0.0);
+                assert_eq!(
+                    bits(session.y()),
+                    bits(&want),
+                    "threads={threads} pipeline={pipeline:?}"
+                );
+            }
+        }
+
+        // Tracer-exact accounting: the fused lowering moves strictly
+        // fewer bytes, by exactly the intermediate's append + re-read
+        // traffic, at identical flops.
+        let acct = session.account_fused_pipeline(&a, &b, &x, Strategy::Combined);
+        assert_eq!(acct.intermediate_nnz, c.nnz());
+        assert_eq!(
+            acct.fused_bytes + 32 * acct.intermediate_nnz as u64,
+            acct.materialized_bytes
+        );
+        assert!(acct.bytes_saved() > 0);
+        assert!(acct.lower_bound_bytes <= acct.fused_bytes, "floor is a floor");
+        // The %roof validation figure is well-defined against the floor.
+        let m = session.measure_fused_pipeline(
+            &cfg,
+            &a,
+            &b,
+            &x,
+            Strategy::Combined,
+            1,
+            Partition::Flops,
+            Pipeline::Fused,
+        );
+        let pct = session.roofline_percent(
+            acct.fused_flops as f64,
+            acct.lower_bound_bytes as f64,
+            &m,
+        );
+        assert!(pct > 0.0 && pct.is_finite());
     }
 
     #[test]

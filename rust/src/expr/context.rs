@@ -18,9 +18,11 @@
 use super::schedule;
 use crate::exec::{serial_spmmm_into, ExecPool, Partition, Workspace};
 use crate::kernels::tracer::MemTracer;
+use crate::kernels::spmv::{spmv, spmv_traced};
 use crate::kernels::{
-    combined_pre, parallel, planned_fill_serial, spmmm, spmmm_into, spmmm_into_traced,
-    spmmm_traced, Strategy,
+    combined_pre, fused_planned_serial, fused_serial_ws, fused_spmmm_spmv,
+    fused_spmmm_spmv_traced, par_fused_planned, par_fused_spmmm_spmv, parallel,
+    planned_fill_serial, spmmm, spmmm_into, spmmm_into_traced, spmmm_traced, Strategy,
 };
 use crate::model::Machine;
 use crate::plan::{PlanCache, PlanKey, PlanStore, Probe, SpmmmPlan};
@@ -242,13 +244,26 @@ impl<'t> EvalContext<'t> {
     /// phase runs once here); `false` sends the caller down the
     /// unplanned path (first sight of the pattern, or planning declined).
     fn try_planned(&mut self, a: &CsrMatrix, b: &CsrMatrix, out: &mut CsrMatrix) -> bool {
-        let cache = self.plan.expect("caller checked self.plan");
-        let key = PlanKey::of(&self.machine, a, b, self.threads, self.partition);
-        match cache.probe(&key) {
-            Probe::Hit(plan) => {
+        match self.plan_probe(a, b) {
+            Some(plan) => {
                 self.planned_fill(&plan, a, b, out);
                 true
             }
+            None => false,
+        }
+    }
+
+    /// The plan-cache lifecycle shared by the materialized
+    /// ([`Self::product_into`]) and fused ([`Self::fused_matvec`])
+    /// paths: a hit returns the cached plan; a repeated key the
+    /// amortization hook approves builds one (symbolic phase, once)
+    /// and returns it; first sight, a declined key, or an unprofitable
+    /// candidate returns `None` — the caller runs unplanned.
+    fn plan_probe(&mut self, a: &CsrMatrix, b: &CsrMatrix) -> Option<Arc<SpmmmPlan>> {
+        let cache = self.plan.expect("caller checked self.plan");
+        let key = PlanKey::of(&self.machine, a, b, self.threads, self.partition);
+        match cache.probe(&key) {
+            Probe::Hit(plan) => Some(plan),
             Probe::Candidate => {
                 let parallel = self.threads > 1;
                 let pays = match self.exec {
@@ -263,7 +278,7 @@ impl<'t> EvalContext<'t> {
                 };
                 if !pays {
                     cache.decline(key);
-                    return false;
+                    return None;
                 }
                 let plan = match self.exec {
                     Some(pool) => {
@@ -271,11 +286,9 @@ impl<'t> EvalContext<'t> {
                     }
                     None => SpmmmPlan::build(&self.machine, a, b, key, &mut Workspace::new()),
                 };
-                let plan = cache.insert_planned(key, Arc::new(plan));
-                self.planned_fill(&plan, a, b, out);
-                true
+                Some(cache.insert_planned(key, Arc::new(plan)))
             }
-            Probe::Declined | Probe::Miss => false,
+            Probe::Declined | Probe::Miss => None,
         }
     }
 
@@ -299,6 +312,90 @@ impl<'t> EvalContext<'t> {
             }
             PLAN_TEMP.with(|temp| {
                 planned_fill_serial(plan, a, b, &mut temp.borrow_mut(), out)
+            });
+        }
+    }
+
+    /// Evaluate `y = A · x` under this context (honors the tracer, so
+    /// cache simulation of a pipeline tail uses the identical kernel).
+    pub fn matvec(&mut self, a: &CsrMatrix, x: &[f64], y: &mut [f64]) {
+        if let Some(tr) = self.tracer.as_mut() {
+            let mut dyn_tr: &mut dyn MemTracer = &mut **tr;
+            spmv_traced(a, x, y, &mut dyn_tr);
+        } else {
+            spmv(a, x, y);
+        }
+    }
+
+    /// Evaluate the fused pipeline `y = (A · B) · x` under this context
+    /// — the chain-times-vector lowering that never materializes the
+    /// intermediate `A · B` (see [`crate::kernels::fused`]). Dispatch
+    /// mirrors [`Self::product_into`]: with a plan cache attached (and
+    /// no strategy override or tracer), repeated pipelines refill the
+    /// same cached [`SpmmmPlan`]s the materialized products use — the
+    /// plan key ignores how the product is consumed, so a pipeline can
+    /// warm a later materialized product and vice versa. A tracer routes
+    /// through the traced fused kernel whose byte accounting proves the
+    /// intermediate's store/re-read traffic disappeared.
+    pub fn fused_matvec(&mut self, a: &CsrMatrix, b: &CsrMatrix, x: &[f64], y: &mut [f64]) {
+        if self.tracer.is_none() && self.strategy.is_none() && self.plan.is_some() {
+            if let Some(plan) = self.plan_probe(a, b) {
+                self.planned_fused(&plan, a, b, x, y);
+                return;
+            }
+        }
+        let strategy = self.strategy_for(a, b);
+        if let Some(tr) = self.tracer.as_mut() {
+            let mut dyn_tr: &mut dyn MemTracer = &mut **tr;
+            fused_spmmm_spmv_traced(a, b, x, strategy, y, &mut dyn_tr);
+            return;
+        }
+        if self.threads > 1 {
+            let pool = match self.exec {
+                Some(p) => p,
+                None => ExecPool::global(),
+            };
+            par_fused_spmmm_spmv(
+                pool,
+                a,
+                b,
+                x,
+                self.threads,
+                strategy,
+                self.partition,
+                &self.machine,
+                y,
+            );
+            return;
+        }
+        if let Some(pool) = self.exec {
+            pool.with_local(|ws| fused_serial_ws(ws, a, b, x, strategy, y));
+            return;
+        }
+        fused_spmmm_spmv(a, b, x, strategy, y);
+    }
+
+    /// Fused numeric refill of one planned pipeline (serial or
+    /// parallel, workspace-backed when a pool is attached) — the fused
+    /// counterpart of [`Self::planned_fill`].
+    fn planned_fused(&self, plan: &SpmmmPlan, a: &CsrMatrix, b: &CsrMatrix, x: &[f64], y: &mut [f64]) {
+        if self.threads > 1 {
+            let pool = match self.exec {
+                Some(p) => p,
+                None => ExecPool::global(),
+            };
+            par_fused_planned(pool, plan, a, b, x, y);
+        } else if let Some(pool) = self.exec {
+            pool.with_local(|ws| fused_planned_serial(plan, a, b, x, &mut ws.plan_temp, y));
+        } else {
+            // Pool-less serial path: a thread-local dense scratch keeps
+            // warm fused refills allocation-free here too.
+            thread_local! {
+                static FUSED_TEMP: std::cell::RefCell<Vec<f64>> =
+                    const { std::cell::RefCell::new(Vec::new()) };
+            }
+            FUSED_TEMP.with(|temp| {
+                fused_planned_serial(plan, a, b, x, &mut temp.borrow_mut(), y)
             });
         }
     }
@@ -409,6 +506,40 @@ mod tests {
         let s = cache.stats();
         assert_eq!((s.symbolic_builds, s.disk_loads, s.hits), (0, 1, 1));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fused_matvec_shares_the_plan_cache() {
+        use crate::gen::fd_poisson_2d;
+        let a = fd_poisson_2d(12);
+        let n = 144; // 12 × 12 grid
+        let x: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
+        let c = spmmm(&a, &a, Strategy::Combined);
+        let mut want = vec![0.0; n];
+        spmv(&c, &x, &mut want);
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+
+        let cache = PlanCache::default();
+        let pool = ExecPool::new(2);
+        let mut ctx = EvalContext::new().with_exec(&pool).with_plan_cache(&cache);
+        let mut y = vec![0.0; n];
+        // First sight unplanned, second builds, third is a warm hit —
+        // the same lifecycle as product_into, through the fused path.
+        for _ in 0..3 {
+            y.fill(0.0);
+            ctx.fused_matvec(&a, &a, &x, &mut y);
+            assert_eq!(bits(&y), bits(&want));
+        }
+        let s = cache.stats();
+        assert_eq!(s.symbolic_builds, 1);
+        assert!(s.hits >= 1);
+        // The materialized product hits the very same plan: the key
+        // ignores how the product is consumed.
+        let mut out = CsrMatrix::new(0, 0);
+        ctx.product_into(&a, &a, &mut out);
+        assert!(out.approx_eq(&c, 0.0));
+        assert_eq!(cache.stats().hits, s.hits + 1);
+        assert_eq!(cache.stats().symbolic_builds, 1);
     }
 
     #[test]

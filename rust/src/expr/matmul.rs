@@ -5,6 +5,7 @@
 use super::schedule;
 use super::{EvalContext, Expression, SparseOperand};
 use crate::kernels::spmv::{spmv, spmv_traced};
+use crate::kernels::tracer::addr_of;
 use crate::kernels::{spmmm_csc, spmmm_csc_traced, MemTracer};
 use crate::sparse::convert::csr_to_csc;
 use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
@@ -206,6 +207,117 @@ impl MatVecExpr<'_> {
     }
 }
 
+/// Lazy matrix-chain × dense-vector pipeline `A₁·…·Aₙ·x` (with an
+/// optional `+ y` tail), built by multiplying any product expression
+/// with a vector: `&a * &b * &x`. Evaluation lowers to the fused
+/// spMMM→SpMV pipeline ([`crate::kernels::fused`]) — the sparse
+/// intermediate is never materialized — unless the model predicts that
+/// the chain result's reuse across [`Self::with_fanout`] consumers pays
+/// for storing it, in which case it falls back to the plan-cache-aware
+/// materialized product followed by an SpMV. Either way the result is
+/// bit-identical.
+#[derive(Clone, Copy, Debug)]
+pub struct MatChainVecExpr<'v, E> {
+    chain: E,
+    x: &'v [f64],
+    tail: Option<&'v [f64]>,
+    fanout: usize,
+}
+
+impl<'v, E: SparseOperand> MatChainVecExpr<'v, E> {
+    /// Build the lazy pipeline, checking shapes eagerly.
+    pub fn new(chain: E, x: &'v [f64]) -> Self {
+        assert_eq!(chain.op_cols(), x.len(), "dimension mismatch in A * x");
+        MatChainVecExpr { chain, x, tail: None, fanout: 1 }
+    }
+
+    /// Attach a `+ y` tail (the `A*B*x + y` form); usually written with
+    /// the `+` operator.
+    pub fn plus(self, tail: &'v [f64]) -> Self {
+        assert_eq!(self.chain.op_rows(), tail.len(), "dimension mismatch in A*x + y");
+        MatChainVecExpr { tail: Some(tail), ..self }
+    }
+
+    /// Declare how many consumers will read the materialized chain
+    /// product if it were stored (default 1: this pipeline is its only
+    /// reader, and fusing always wins). The fuse-vs-materialize
+    /// arbitration weighs `fanout` SpMV re-reads of a stored
+    /// intermediate against recomputing the chain per consumer.
+    pub fn with_fanout(self, fanout: usize) -> Self {
+        MatChainVecExpr { fanout: fanout.max(1), ..self }
+    }
+
+    /// Evaluate into an existing buffer (no allocation once the
+    /// context's scratch is warm).
+    pub fn eval_into_ctx(&self, y: &mut [f64], ctx: &mut EvalContext<'_>) {
+        assert_eq!(y.len(), self.chain.op_rows(), "output length");
+        let mut factors = Vec::new();
+        self.chain.flatten_product(ctx, &mut factors);
+        schedule::eval_chain_vec(&factors, self.x, self.fanout, ctx, y);
+        if let Some(t) = self.tail {
+            if let Some(tr) = ctx.tracer.as_mut() {
+                for r in 0..y.len() {
+                    tr.load(addr_of(y, r), 8);
+                    tr.load(addr_of(t, r), 8);
+                    tr.flops(1);
+                    tr.store(addr_of(y, r), 8);
+                    y[r] += t[r];
+                }
+            } else {
+                for (yr, tv) in y.iter_mut().zip(t) {
+                    *yr += *tv;
+                }
+            }
+        }
+    }
+}
+
+impl<E: SparseOperand> Expression for MatChainVecExpr<'_, E> {
+    type Output = Vec<f64>;
+
+    fn eval_with(&self, ctx: &mut EvalContext<'_>) -> Vec<f64> {
+        let mut y = vec![0.0; self.chain.op_rows()];
+        self.eval_into_ctx(&mut y, ctx);
+        y
+    }
+}
+
+// These do not overlap the generic `Mul<Rhs: SparseOperand>` operators
+// the node macro generates: `SparseOperand` is local and `&Vec<f64>` /
+// `&[f64]` are (fundamentally) foreign, so no impl can ever exist for
+// them and coherence treats the pairs as disjoint.
+impl<'v, L: SparseOperand, R: SparseOperand> std::ops::Mul<&'v Vec<f64>> for MatMulExpr<L, R> {
+    type Output = MatChainVecExpr<'v, MatMulExpr<L, R>>;
+
+    fn mul(self, rhs: &'v Vec<f64>) -> Self::Output {
+        MatChainVecExpr::new(self, rhs)
+    }
+}
+
+impl<'v, L: SparseOperand, R: SparseOperand> std::ops::Mul<&'v [f64]> for MatMulExpr<L, R> {
+    type Output = MatChainVecExpr<'v, MatMulExpr<L, R>>;
+
+    fn mul(self, rhs: &'v [f64]) -> Self::Output {
+        MatChainVecExpr::new(self, rhs)
+    }
+}
+
+impl<'v, E: SparseOperand> std::ops::Add<&'v Vec<f64>> for MatChainVecExpr<'v, E> {
+    type Output = Self;
+
+    fn add(self, rhs: &'v Vec<f64>) -> Self {
+        self.plus(rhs)
+    }
+}
+
+impl<'v, E: SparseOperand> std::ops::Add<&'v [f64]> for MatChainVecExpr<'v, E> {
+    type Output = Self;
+
+    fn add(self, rhs: &'v [f64]) -> Self {
+        self.plus(rhs)
+    }
+}
+
 impl<'a> std::ops::Mul<&'a Vec<f64>> for &'a CsrMatrix {
     type Output = MatVecExpr<'a>;
 
@@ -284,6 +396,43 @@ mod tests {
             assert!(DenseMatrix::from_csc(&cc).max_abs_diff(&reference) < 1e-12);
             assert!(DenseMatrix::from_csc(&cm).max_abs_diff(&reference) < 1e-12);
         }
+    }
+
+    #[test]
+    fn chain_vec_expression_matches_materialized() {
+        let a = random_fixed_per_row(20, 16, 3, 11);
+        let b = random_fixed_per_row(16, 12, 3, 12);
+        let x: Vec<f64> = (0..12).map(|i| 1.0 + i as f64 * 0.5).collect();
+        let t: Vec<f64> = (0..20).map(|i| i as f64 - 3.0).collect();
+        let c = (&a * &b).eval();
+        let mut want = vec![0.0; 20];
+        spmv(&c, &x, &mut want);
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        let y = (&a * &b * &x).eval();
+        assert_eq!(bits(&y), bits(&want));
+        let y_tail = (&a * &b * &x + &t).eval();
+        let want_tail: Vec<f64> = want.iter().zip(&t).map(|(w, tv)| w + tv).collect();
+        assert_eq!(bits(&y_tail), bits(&want_tail));
+        // A huge fanout forces the materialized fallback — same bits.
+        let y_mat = (&a * &b * &x).with_fanout(1024).eval();
+        assert_eq!(bits(&y_mat), bits(&want));
+        // Three-factor chains route through the chain DP first.
+        let d = random_fixed_per_row(12, 10, 3, 13);
+        let xs: Vec<f64> = (0..10).map(|i| 0.5 - i as f64).collect();
+        let c3 = (&a * &b * &d).eval();
+        let mut want3 = vec![0.0; 20];
+        spmv(&c3, &xs, &mut want3);
+        let y3 = (&a * &b * &d * &xs).eval();
+        assert_eq!(bits(&y3), bits(&want3));
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn chain_vec_dimension_check_at_build() {
+        let a = random_fixed_per_row(4, 5, 2, 1);
+        let b = random_fixed_per_row(5, 6, 2, 2);
+        let x = vec![0.0; 7];
+        let _ = &a * &b * &x; // 6 != 7
     }
 
     #[test]

@@ -32,6 +32,14 @@
 //! let e = (&a * &b * &c).eval();             // association chosen by the model
 //! let f = (2.0 * (&a * &b) + &c.t()).eval();
 //!
+//! // Fused pipeline: a matrix-chain × vector expression streams each
+//! // row of A·B straight into the result vector — the sparse
+//! // intermediate is never materialized (model-arbitrated; see
+//! // `kernels::fused`):
+//! let x = vec![1.0; 64];
+//! let y = (&a * &b * &x).eval();
+//! assert_eq!(y.len(), 64);
+//!
 //! // Uniform context-driven evaluation (strategy override, threads,
 //! // optional memory tracer for the cache simulator):
 //! let g = (&a * &b).eval_with(&mut EvalContext::new().with_threads(2));
@@ -71,7 +79,9 @@ pub mod schedule;
 pub mod vector;
 
 pub use context::EvalContext;
-pub use matmul::{MatMulCscCsrExpr, MatMulCscExpr, MatMulExpr, MatMulMixedExpr, MatVecExpr};
+pub use matmul::{
+    MatChainVecExpr, MatMulCscCsrExpr, MatMulCscExpr, MatMulExpr, MatMulMixedExpr, MatVecExpr,
+};
 pub use ops::{MatAddExpr, MatSubExpr, ScaleExpr, TransposeExpr, TransposeExt};
 pub use schedule::{
     chain_plan, choose_strategy, choose_strategy_csc, planning_pays_off, ChainPlan, FactorMeta,

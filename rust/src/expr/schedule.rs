@@ -296,6 +296,47 @@ pub fn pair_cost(machine: &Machine, l: &FactorMeta, r: &FactorMeta) -> (f64, Fac
     (roofline_seconds(machine, flops, bytes), meta)
 }
 
+/// Fuse-vs-materialize arbitration for a chain-times-vector pipeline
+/// whose root product is `L · R`, read by `consumers` pipelines: fuse
+/// when `consumers` fused passes (each recomputing the product and
+/// contracting it in the accumulator,
+/// [`crate::model::fused_pipeline_seconds`]) are predicted no slower
+/// than computing and storing the product once and re-reading it per
+/// consumer ([`crate::model::materialized_pipeline_seconds`]).
+///
+/// For a single consumer fusion always wins — equal flops, strictly
+/// fewer bytes (the intermediate's 16 B store write and 16 B re-read
+/// per entry disappear); with enough reuse the stored intermediate's
+/// amortized compute phase takes over and the caller should fall back
+/// to the plan-cache-aware materialized product.
+pub fn should_fuse_chain_vec(
+    machine: &Machine,
+    l: &FactorMeta,
+    r: &FactorMeta,
+    consumers: usize,
+) -> bool {
+    // Same intermediate estimate as `pair_cost`, minus its storing term:
+    // the fused pipeline never pays one.
+    let mults = if r.rows == 0 { 0.0 } else { l.nnz * (r.nnz / r.rows as f64) };
+    let dense = l.rows as f64 * r.cols as f64;
+    let nnz_c = mults.min(dense);
+    let compute_flops = 2.0 * mults;
+    let compute_bytes = 16.0 * l.nnz + 32.0 * mults;
+    let consumers = consumers.max(1);
+    let rows = l.rows as f64;
+    let fused = consumers as f64
+        * crate::model::fused_pipeline_seconds(machine, compute_flops, compute_bytes, nnz_c, rows);
+    let materialized = crate::model::materialized_pipeline_seconds(
+        machine,
+        compute_flops,
+        compute_bytes,
+        nnz_c,
+        rows,
+        consumers,
+    );
+    fused <= materialized
+}
+
 /// A matrix-chain evaluation plan.
 #[derive(Clone, Debug)]
 pub struct ChainPlan {
@@ -365,6 +406,43 @@ pub(crate) fn eval_chain_into(
             let k = plan.split[0][n - 1];
             let (left, right) = split_eval(factors, &plan.split, 0, n - 1, k, ctx);
             ctx.product_into(left.as_ref(), right.as_ref(), out);
+        }
+    }
+}
+
+/// Evaluate a flattened chain-times-vector pipeline `(Π factors) · x`
+/// into `y`: the chain DP picks the association order, the two sides of
+/// the *root* split evaluate as usual, and the root product either
+/// lowers to the fused spMMM→SpMV pipeline (never materializing it) or
+/// — when [`should_fuse_chain_vec`] predicts that `fanout` consumers'
+/// reuse wins — materializes through the plan-cache-aware product and
+/// finishes with a plain SpMV. Both lowerings are bit-identical.
+pub(crate) fn eval_chain_vec(
+    factors: &[Cow<'_, CsrMatrix>],
+    x: &[f64],
+    fanout: usize,
+    ctx: &mut EvalContext<'_>,
+    y: &mut [f64],
+) {
+    match factors.len() {
+        0 => panic!("empty product chain"),
+        1 => ctx.matvec(factors[0].as_ref(), x, y),
+        n => {
+            let (left, right) = if n == 2 {
+                (Cow::Borrowed(factors[0].as_ref()), Cow::Borrowed(factors[1].as_ref()))
+            } else {
+                let plan = plan_for(factors, ctx, n);
+                let k = plan.split[0][n - 1];
+                split_eval(factors, &plan.split, 0, n - 1, k, ctx)
+            };
+            let (a, b) = (left.as_ref(), right.as_ref());
+            if should_fuse_chain_vec(&ctx.machine, &FactorMeta::of(a), &FactorMeta::of(b), fanout)
+            {
+                ctx.fused_matvec(a, b, x, y);
+            } else {
+                let c = ctx.product(a, b);
+                ctx.matvec(&c, x, y);
+            }
         }
     }
 }
@@ -506,6 +584,23 @@ mod tests {
         let right = c_bc + c_a_bc;
         assert!(plan.cost <= left.min(right) * (1.0 + 1e-12));
         assert!(plan.cost <= left.max(right));
+    }
+
+    #[test]
+    fn fuse_arbitration_weighs_reuse() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        let l = FactorMeta { rows: 1000, cols: 1000, nnz: 5000.0 };
+        let r = FactorMeta { rows: 1000, cols: 1000, nnz: 5000.0 };
+        // One consumer: fusing strips the intermediate's store+re-read
+        // traffic at equal flops — must always win.
+        assert!(should_fuse_chain_vec(&machine, &l, &r, 1));
+        // Heavy reuse: recomputing the chain per consumer loses to the
+        // stored intermediate's amortized compute phase.
+        assert!(!should_fuse_chain_vec(&machine, &l, &r, 64));
+        // Empty products are indifferent; fusing (<=) is fine.
+        let z = FactorMeta { rows: 10, cols: 0, nnz: 0.0 };
+        let zr = FactorMeta { rows: 0, cols: 10, nnz: 0.0 };
+        assert!(should_fuse_chain_vec(&machine, &z, &zr, 1));
     }
 
     #[test]

@@ -46,10 +46,9 @@ pub enum Orientation {
 pub fn metric_orient(name: &str) -> Option<Orientation> {
     match name {
         "mflops" | "roofline_pct" => Some(Orientation::HigherIsBetter),
-        "best_seconds" | "symbolic_builds" | "disk_loads" | "steady_allocs" => {
-            Some(Orientation::LowerIsBetter)
-        }
-        "flops" | "out_nnz" | "bytes_floor" => Some(Orientation::Exact),
+        "best_seconds" | "symbolic_builds" | "disk_loads" | "steady_allocs"
+        | "intermediate_allocs" => Some(Orientation::LowerIsBetter),
+        "flops" | "out_nnz" | "bytes_floor" | "traffic_bytes" => Some(Orientation::Exact),
         _ => None,
     }
 }
@@ -57,7 +56,10 @@ pub fn metric_orient(name: &str) -> Option<Orientation> {
 /// Invariant counters must hold in *every* replicate, so they aggregate
 /// by worst case rather than by best case.
 fn is_counter(name: &str) -> bool {
-    matches!(name, "symbolic_builds" | "disk_loads" | "steady_allocs")
+    matches!(
+        name,
+        "symbolic_builds" | "disk_loads" | "steady_allocs" | "intermediate_allocs"
+    )
 }
 
 /// Aggregate one metric across replicates: best-of for perf metrics

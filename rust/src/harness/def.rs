@@ -100,6 +100,39 @@ impl ExpPlanMode {
     }
 }
 
+/// Pipeline axis for chain-times-vector experiments: how `A·B·x` is
+/// evaluated. Absent from a definition, the axis contributes nothing
+/// and the experiment measures plain spMMM products (row keys of
+/// existing baselines are unchanged).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExpPipeline {
+    /// Stream each row of `A·B` straight into the `x` contraction; the
+    /// sparse intermediate is never materialized.
+    Fused,
+    /// Materialize `C = A·B`, then run SpMV `C·x` — the baseline the
+    /// fusion ablation compares against.
+    Materialized,
+}
+
+impl ExpPipeline {
+    /// Both pipelines, fused first.
+    pub const ALL: [ExpPipeline; 2] = [ExpPipeline::Fused, ExpPipeline::Materialized];
+
+    /// Report/definition name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ExpPipeline::Fused => "fused",
+            ExpPipeline::Materialized => "materialized",
+        }
+    }
+
+    /// Parse a definition name (case-insensitive).
+    pub fn parse(s: &str) -> Option<ExpPipeline> {
+        let l = s.to_ascii_lowercase();
+        Self::ALL.into_iter().find(|p| p.name() == l)
+    }
+}
+
 /// Measurement protocol of one tier.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MeasureParams {
@@ -155,6 +188,12 @@ pub struct Variants {
     pub strategies: Vec<Strategy>,
     /// Plan modes.
     pub plan_modes: Vec<ExpPlanMode>,
+    /// Pipelines for chain-times-vector points. Empty (the default)
+    /// means the experiment measures plain products; a non-empty axis
+    /// multiplies the *unplanned CSR* points only — the fused kernel
+    /// streams rows, which the CSC numeric phase and the frozen-plan
+    /// refill paths do not expose to the sweep layer.
+    pub pipelines: Vec<ExpPipeline>,
     /// Slab partition strategies.
     pub partitions: Vec<Partition>,
     /// Thread counts (pinned lists, e.g. `[1, 8]`, so row keys do not
@@ -171,6 +210,8 @@ pub struct VariantPoint {
     pub strategy: Option<Strategy>,
     /// Plan mode.
     pub plan_mode: ExpPlanMode,
+    /// Chain-times-vector pipeline; `None` for plain product points.
+    pub pipeline: Option<ExpPipeline>,
     /// Slab partition.
     pub partition: Partition,
     /// Thread count.
@@ -183,6 +224,11 @@ impl Variants {
     /// unplanned) combination is skipped — parse-time validation
     /// guarantees at least one point survives.
     pub fn points(&self) -> Vec<VariantPoint> {
+        let pipelines: Vec<Option<ExpPipeline>> = if self.pipelines.is_empty() {
+            vec![None]
+        } else {
+            self.pipelines.iter().map(|&p| Some(p)).collect()
+        };
         let mut out = Vec::new();
         for &format in &self.formats {
             for &plan_mode in &self.plan_modes {
@@ -195,15 +241,26 @@ impl Variants {
                     vec![None]
                 };
                 for strategy in strategies {
-                    for &partition in &self.partitions {
-                        for &threads in &self.threads {
-                            out.push(VariantPoint {
-                                format,
-                                strategy,
-                                plan_mode,
-                                partition,
-                                threads,
-                            });
+                    for &pipeline in &pipelines {
+                        // Pipeline points need the streaming (unplanned,
+                        // row-major) kernel family.
+                        if pipeline.is_some()
+                            && (format != MatrixFormat::Csr
+                                || plan_mode != ExpPlanMode::Unplanned)
+                        {
+                            continue;
+                        }
+                        for &partition in &self.partitions {
+                            for &threads in &self.threads {
+                                out.push(VariantPoint {
+                                    format,
+                                    strategy,
+                                    plan_mode,
+                                    pipeline,
+                                    partition,
+                                    threads,
+                                });
+                            }
                         }
                     }
                 }
@@ -345,6 +402,7 @@ impl ExperimentDef {
                 "plan_modes",
                 ExpPlanMode::parse,
             )?,
+            pipelines: parse_axis(&names("pipelines"), &[], "pipelines", ExpPipeline::parse)?,
             partitions: parse_axis(
                 &names("partitions"),
                 &["flop-balanced"],
@@ -354,9 +412,9 @@ impl ExperimentDef {
             threads: parse_threads(vs)?,
         };
         if variants.points().is_empty() {
-            return Err(
-                "variant matrix is empty (csc needs at least one planned plan_mode)".into()
-            );
+            return Err("variant matrix is empty (csc needs at least one planned plan_mode; \
+                        pipelines need an unplanned csr point)"
+                .into());
         }
 
         let mut metrics = Vec::new();
@@ -487,10 +545,42 @@ gate = true
         assert!(points
             .iter()
             .all(|p| !(p.format == MatrixFormat::Csc && p.plan_mode == ExpPlanMode::Unplanned)));
-        // Strategy is attached to unplanned points only.
+        // Strategy is attached to unplanned points only; no pipeline
+        // axis declared, so every point is a plain product.
         for p in &points {
             assert_eq!(p.strategy.is_some(), p.plan_mode == ExpPlanMode::Unplanned, "{p:?}");
+            assert_eq!(p.pipeline, None, "{p:?}");
         }
+    }
+
+    #[test]
+    fn pipelines_axis_multiplies_unplanned_csr_points_only() {
+        let doc = DOC.replace(
+            "plan_modes = [\"unplanned\", \"warm\"]",
+            "plan_modes = [\"unplanned\", \"warm\"]\npipelines = [\"fused\", \"materialized\"]",
+        );
+        let def = ExperimentDef::parse(&doc).unwrap();
+        let points = def.variants.points();
+        // Only csr × unplanned survives, multiplied by both pipelines:
+        // 2 pipelines × 2 partitions × 2 threads = 8.
+        assert_eq!(points.len(), 8);
+        for p in &points {
+            assert_eq!(p.format, MatrixFormat::Csr, "{p:?}");
+            assert_eq!(p.plan_mode, ExpPlanMode::Unplanned, "{p:?}");
+            assert!(p.strategy.is_some(), "{p:?}");
+            assert!(p.pipeline.is_some(), "{p:?}");
+        }
+        assert_eq!(
+            points.iter().filter(|p| p.pipeline == Some(ExpPipeline::Fused)).count(),
+            4
+        );
+        // A pipelines axis with no unplanned csr point leaves the matrix
+        // empty — rejected at parse time like the csc/unplanned case.
+        let empty = doc.replace("[\"unplanned\", \"warm\"]", "[\"warm\"]");
+        assert!(ExperimentDef::parse(&empty).unwrap_err().contains("empty"));
+        // Unknown pipeline names are load-time errors.
+        let bad = doc.replace("\"materialized\"", "\"imaginary\"");
+        assert!(ExperimentDef::parse(&bad).unwrap_err().contains("pipelines"));
     }
 
     #[test]
@@ -519,6 +609,9 @@ gate = true
         }
         for f in [MatrixFormat::Csr, MatrixFormat::Csc] {
             assert_eq!(MatrixFormat::parse(f.name()), Some(f));
+        }
+        for p in ExpPipeline::ALL {
+            assert_eq!(ExpPipeline::parse(p.name()), Some(p));
         }
     }
 }

@@ -35,8 +35,8 @@ pub use compare::{
     CompareReport, Orientation, Regression,
 };
 pub use def::{
-    ExpPlanMode, ExperimentDef, MatrixFormat, MeasureParams, MetricPolicy, Protocol,
-    VariantPoint, Variants, WorkloadDef, EXPERIMENT_SCHEMA,
+    ExpPipeline, ExpPlanMode, ExperimentDef, MatrixFormat, MeasureParams, MetricPolicy,
+    Protocol, VariantPoint, Variants, WorkloadDef, EXPERIMENT_SCHEMA,
 };
 pub use runner::{
     bench_main, find_repo_file, render_record_table, run_experiment, RunOptions, RunTier,

@@ -26,10 +26,14 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::blazemark::report::{row_field, BenchRecord, BenchRow};
-use crate::blazemark::runner::{BenchConfig, Measurement, PlanMode, SweepSession};
+use crate::blazemark::runner::{
+    BenchConfig, Measurement, Pipeline, PipelineAccounting, PlanMode, SweepSession,
+};
 use crate::gen::operand_pair;
 use crate::harness::compare::{aggregate_rows, metric_orient, row_key, scalar_cell};
-use crate::harness::def::{ExpPlanMode, ExperimentDef, MatrixFormat, VariantPoint, WorkloadDef};
+use crate::harness::def::{
+    ExpPipeline, ExpPlanMode, ExperimentDef, MatrixFormat, VariantPoint, WorkloadDef,
+};
 use crate::kernels::flops::spmmm_flops;
 use crate::kernels::Strategy;
 use crate::model::planned_fill_lower_bound_bytes;
@@ -92,6 +96,10 @@ struct WorkloadData {
     a: CsrMatrix,
     b: CsrMatrix,
     csc: Option<(CscMatrix, CscMatrix)>,
+    /// Deterministic right-hand vector for pipeline points — a fixed
+    /// function of the index so row keys and results are
+    /// machine-independent.
+    x: Vec<f64>,
     flops: u64,
 }
 
@@ -114,7 +122,8 @@ pub fn run_experiment(def: &ExperimentDef, opts: &RunOptions) -> Result<BenchRec
             let (a, b) = operand_pair(w.generator, w.n, w.seed);
             let flops = spmmm_flops(&a, &b);
             let csc = needs_csc.then(|| (csr_to_csc(&a), csr_to_csc(&b)));
-            WorkloadData { def: *w, a, b, csc, flops }
+            let x = (0..b.cols()).map(|i| 1.0 + (i % 5) as f64).collect();
+            WorkloadData { def: *w, a, b, csc, x, flops }
         })
         .collect();
 
@@ -198,6 +207,23 @@ fn measure_kernel(
     wl: &WorkloadData,
     point: &VariantPoint,
 ) -> Measurement {
+    if let Some(p) = point.pipeline {
+        // Pipeline points are unplanned csr by construction
+        // (`Variants::points` filters the rest).
+        return session.measure_fused_pipeline(
+            cfg,
+            &wl.a,
+            &wl.b,
+            &wl.x,
+            point.strategy.unwrap_or(Strategy::Combined),
+            point.threads,
+            point.partition,
+            match p {
+                ExpPipeline::Fused => Pipeline::Fused,
+                ExpPipeline::Materialized => Pipeline::Materialized,
+            },
+        );
+    }
     match (point.format, point.plan_mode) {
         (MatrixFormat::Csr, ExpPlanMode::Unplanned) => session.measure_spmmm(
             cfg,
@@ -267,11 +293,41 @@ fn measure_once(
     let before = session.plan_stats();
     let m = measure_kernel(session, cfg, wl, point);
     let symbolic = session.plan_stats().symbolic_builds - before.symbolic_builds;
-    let out_nnz = match point.format {
-        MatrixFormat::Csr => session.out().nnz(),
-        MatrixFormat::Csc => session.out_csc().nnz(),
+    // Pipeline points replay both pipelines under the tracer: the row
+    // reports the traffic its own pipeline moves, and the intermediate's
+    // population doubles as the row's `out_nnz`.
+    let acct: Option<PipelineAccounting> = point.pipeline.map(|_| {
+        session.account_fused_pipeline(
+            &wl.a,
+            &wl.b,
+            &wl.x,
+            point.strategy.unwrap_or(Strategy::Combined),
+        )
+    });
+    let out_nnz = match &acct {
+        Some(acct) => acct.intermediate_nnz,
+        None => match point.format {
+            MatrixFormat::Csr => session.out().nnz(),
+            MatrixFormat::Csc => session.out_csc().nnz(),
+        },
     };
-    let bytes = planned_fill_lower_bound_bytes(wl.a.nnz(), wl.b.nnz(), out_nnz);
+    // Pipeline rows add the contraction's 2 flops per intermediate entry
+    // to the worst-case product flop count.
+    let flops = wl.flops + acct.as_ref().map_or(0, |a| 2 * a.intermediate_nnz as u64);
+    let bytes = match point.pipeline {
+        Some(ExpPipeline::Fused) => {
+            acct.as_ref().expect("pipeline accounted").lower_bound_bytes
+        }
+        // Materialized floor: the product's refill floor plus the SpMV
+        // pass over the intermediate (16 B re-read + 8 B `x` gather per
+        // entry, 8 B `y` store per row).
+        Some(ExpPipeline::Materialized) => {
+            planned_fill_lower_bound_bytes(wl.a.nnz(), wl.b.nnz(), out_nnz)
+                + 24 * out_nnz as u64
+                + 8 * wl.a.rows() as u64
+        }
+        None => planned_fill_lower_bound_bytes(wl.a.nnz(), wl.b.nnz(), out_nnz),
+    };
     let mut row: BenchRow = vec![
         ("workload".into(), Json::Str(wl.def.generator.tag().into())),
         ("n".into(), Json::Num(wl.def.n as f64)),
@@ -281,20 +337,30 @@ fn measure_once(
     if let Some(s) = point.strategy {
         row.push(("strategy".into(), Json::Str(s.name().into())));
     }
+    if let Some(p) = point.pipeline {
+        row.push(("pipeline".into(), Json::Str(p.name().into())));
+    }
     row.extend([
         ("plan_mode".into(), Json::Str(point.plan_mode.name().into())),
         ("partition".into(), Json::Str(point.partition.name().into())),
         ("threads".into(), Json::Num(point.threads as f64)),
         ("best_seconds".into(), Json::Num(m.best_seconds)),
-        ("mflops".into(), Json::Num(m.mflops(wl.flops))),
-        ("flops".into(), Json::Num(wl.flops as f64)),
+        ("mflops".into(), Json::Num(m.mflops(flops))),
+        ("flops".into(), Json::Num(flops as f64)),
         ("out_nnz".into(), Json::Num(out_nnz as f64)),
         ("bytes_floor".into(), Json::Num(bytes as f64)),
         (
             "roofline_pct".into(),
-            Json::Num(session.roofline_percent(wl.flops as f64, bytes as f64, &m)),
+            Json::Num(session.roofline_percent(flops as f64, bytes as f64, &m)),
         ),
     ]);
+    if let (Some(acct), Some(p)) = (&acct, point.pipeline) {
+        let traffic = match p {
+            ExpPipeline::Fused => acct.fused_bytes,
+            ExpPipeline::Materialized => acct.materialized_bytes,
+        };
+        row.push(("traffic_bytes".into(), Json::Num(traffic as f64)));
+    }
     if matches!(point.plan_mode, ExpPlanMode::Warm | ExpPlanMode::Persisted) {
         row.push(("symbolic_builds".into(), Json::Num(symbolic as f64)));
     }
@@ -305,7 +371,14 @@ fn measure_once(
             let tiny = BenchConfig { min_time_s: 0.0, trials: 1 };
             let calls = probe();
             measure_kernel(session, &tiny, wl, point);
-            row.push(("steady_allocs".into(), Json::Num((probe() - calls) as f64)));
+            let steady = (probe() - calls) as f64;
+            row.push(("steady_allocs".into(), Json::Num(steady)));
+            if point.pipeline.is_some() {
+                // The same warm execution doubles as the fusion gate:
+                // any heap allocation on a fused row would mean the
+                // intermediate matrix came back.
+                row.push(("intermediate_allocs".into(), Json::Num(steady)));
+            }
         }
     }
     row
@@ -463,6 +536,66 @@ threads = [1, 2]
         // Same product, same structural output either way.
         let nnz = |r: &BenchRow| row_field(r, "out_nnz").and_then(Json::as_f64).unwrap();
         assert_eq!(nnz(csc_rows[0]), nnz(&rec.rows[0]));
+    }
+
+    #[test]
+    fn pipeline_points_account_fused_traffic() {
+        let doc = r#"
+schema = "blazert-experiment-v1"
+name = "tiny-fusion"
+[protocol]
+quick_min_time_s = 0.001
+quick_trials = 1
+quick_replicates = 2
+[[workloads]]
+generator = "FD"
+n = 144
+seed = 3
+[variants]
+formats = ["csr"]
+strategies = ["combined"]
+plan_modes = ["unplanned"]
+pipelines = ["fused", "materialized"]
+threads = [1, 2]
+"#;
+        let def = ExperimentDef::parse(doc).unwrap();
+        let rec = run_experiment(&def, &RunOptions::default()).unwrap();
+        assert_eq!(rec.rows.len(), 4, "2 pipelines × 2 thread counts");
+        let field = |row: &BenchRow, name: &str| row_field(row, name).and_then(Json::as_f64);
+        let by = |p: &str, t: f64| {
+            rec.rows
+                .iter()
+                .find(|r| {
+                    row_field(r, "pipeline").and_then(Json::as_str) == Some(p)
+                        && field(r, "threads") == Some(t)
+                })
+                .unwrap_or_else(|| panic!("missing row {p}/{t}"))
+        };
+        for t in [1.0, 2.0] {
+            let fused = by("fused", t);
+            let mat = by("materialized", t);
+            // Tracer-exact: the fused pipeline moves strictly fewer
+            // bytes — the intermediate's 32 B/entry of store traffic —
+            // at the same flop count and intermediate population.
+            let nnz = field(fused, "out_nnz").unwrap();
+            assert_eq!(field(mat, "out_nnz"), Some(nnz));
+            assert_eq!(field(mat, "flops"), field(fused, "flops"));
+            assert_eq!(
+                field(fused, "traffic_bytes").unwrap() + 32.0 * nnz,
+                field(mat, "traffic_bytes").unwrap(),
+                "threads={t}"
+            );
+            // Each row's %roof is measured against its own floor.
+            for row in [fused, mat] {
+                assert!(field(row, "bytes_floor").unwrap() > 0.0);
+                assert!(field(row, "roofline_pct").unwrap() > 0.0);
+                assert!(field(row, "mflops").unwrap() > 0.0);
+            }
+            assert!(
+                field(fused, "bytes_floor").unwrap() < field(mat, "bytes_floor").unwrap(),
+                "fused floor drops the intermediate's store + re-read terms"
+            );
+        }
     }
 
     #[test]

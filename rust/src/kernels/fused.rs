@@ -1,0 +1,558 @@
+//! Fused spMMM→SpMV pipeline: `y = (A·B)·x` without ever materializing
+//! the sparse intermediate `A·B`.
+//!
+//! Evaluating a chain-times-vector expression by materializing first
+//! pays, per surviving intermediate entry, a 16 B store (index + value)
+//! and a 16 B re-read before the SpMV can even touch `x`. But the dense
+//! accumulator already holds the finished row of `A·B` the moment the
+//! accumulation loop leaves it — so instead of appending the row to a
+//! matrix, the fused kernels contract it against `x` on the spot:
+//! every surviving entry costs one 8 B gather of `x[j]` and two flops,
+//! and the intermediate's 32 B/entry of store traffic disappears.
+//!
+//! The contraction rides the *existing* machinery end to end:
+//!
+//! * unplanned rows flush through the per-strategy
+//!   [`Accumulator::flush_sink`] into a [`ContractSink`] — the same
+//!   entry order and `value != 0.0` drop rule as every storing kernel,
+//!   so the fused result is **bit-identical** to materialize-then-SpMV
+//!   for every strategy;
+//! * planned rows harvest through the frozen [`SpmmmPlan`] pattern
+//!   exactly like [`super::spmmm::planned_fill_serial`], summing instead
+//!   of appending;
+//! * the parallel variants walk the same round-robin slab partitions as
+//!   [`super::parallel`], each worker owning disjoint rows of `y` — no
+//!   staging, no compaction, since the output is dense.
+//!
+//! The traced variant accounts the pipeline the kernel actually runs:
+//! accumulation events are identical to [`super::gustavson::rows_into`],
+//! the flush suppresses the 16 B appends the storing strategies would
+//! charge and books the real 8 B `x` gather + 2 contraction flops per
+//! surviving entry instead, and each row ends in one 8 B store of
+//! `y[r]`. Against `spmmm_into_traced` + `spmv_traced` this moves
+//! exactly 32 B × nnz(A·B) fewer bytes at equal flops.
+
+use std::cell::RefCell;
+
+use super::parallel::{accumulate_row, SendPtr};
+use super::simd;
+use super::store::{Accumulator, Sink};
+use super::tracer::{addr_of, MemTracer, NullTracer};
+use super::Strategy;
+use crate::exec::{slab_bounds_into, ExecPool, Partition, Workspace, WsAccum};
+use crate::model::Machine;
+use crate::plan::{SlabStore, SpmmmPlan};
+use crate::sparse::{CsrMatrix, SparseShape};
+
+/// A [`Sink`] that contracts flushed row entries against `x` instead of
+/// storing them: `sum += value * x[idx]`. Entries arrive in the same
+/// order, with the same cancellation rule, as they would append to a
+/// materialized row — so the running sum is bit-identical to an SpMV
+/// over that row.
+struct ContractSink<'a> {
+    x: &'a [f64],
+    sum: f64,
+}
+
+impl Sink for ContractSink<'_> {
+    #[inline(always)]
+    fn append_entry(&mut self, idx: usize, value: f64) {
+        self.sum += value * self.x[idx];
+    }
+    #[inline(always)]
+    fn tail_addr(&self) -> usize {
+        // Nothing is appended anywhere; the production path flushes
+        // under a NullTracer, so this address is never charged.
+        self.x.as_ptr() as usize
+    }
+}
+
+fn check_dims(a: &CsrMatrix, b: &CsrMatrix, x: &[f64], y: &[f64]) {
+    assert_eq!(a.cols(), b.rows(), "inner dimension");
+    assert_eq!(b.cols(), x.len(), "vector length");
+    assert_eq!(a.rows(), y.len(), "output length");
+}
+
+/// Generic fused row driver: accumulate each row of `A·B` through `acc`
+/// and contract it against `x` into `y` — the fused twin of
+/// [`super::gustavson::rows_into`].
+pub fn fused_rows<A: Accumulator>(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    x: &[f64],
+    acc: &mut A,
+    y: &mut [f64],
+) {
+    check_dims(a, b, x, y);
+    for r in 0..a.rows() {
+        accumulate_row_acc(a, b, r, acc);
+        let mut sink = ContractSink { x, sum: 0.0 };
+        acc.flush_sink(&mut sink, &mut NullTracer);
+        y[r] = sink.sum;
+    }
+}
+
+/// Accumulate row `r` of `A·B` into `acc` — same update order as every
+/// other kernel (bit-identity hinges on it). Unlike
+/// [`accumulate_row`] this only needs [`Accumulator`], not [`WsAccum`],
+/// so owned accumulators work too.
+#[inline(always)]
+fn accumulate_row_acc<A: Accumulator>(a: &CsrMatrix, b: &CsrMatrix, r: usize, acc: &mut A) {
+    let (a_idx, a_val) = a.row(r);
+    for (&k, &va) in a_idx.iter().zip(a_val) {
+        let (b_idx, b_val) = b.row(k);
+        for (&j, &vb) in b_idx.iter().zip(b_val) {
+            acc.update(j, va * vb, &mut NullTracer);
+        }
+    }
+}
+
+/// Serial fused `y = (A·B)·x` with an owned accumulator for `strategy`.
+pub fn fused_spmmm_spmv(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    x: &[f64],
+    strategy: Strategy,
+    y: &mut [f64],
+) {
+    with_strategy_accumulator!(strategy, A => {
+        let mut acc = A::new(b.cols());
+        fused_rows(a, b, x, &mut acc, y)
+    });
+}
+
+/// Serial fused `y = (A·B)·x` on a [`Workspace`], reusing its cached
+/// per-strategy accumulator — zero heap allocations once warm.
+pub fn fused_serial_ws(
+    ws: &mut Workspace,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    x: &[f64],
+    strategy: Strategy,
+    y: &mut [f64],
+) {
+    check_dims(a, b, x, y);
+    let cols = b.cols();
+    with_strategy_accumulator!(strategy, A => {
+        let acc = ws.accumulator::<A>(cols);
+        for r in 0..a.rows() {
+            accumulate_row(a, b, r, acc);
+            let mut sink = ContractSink { x, sum: 0.0 };
+            acc.flush_sink(&mut sink, &mut NullTracer);
+            y[r] = sink.sum;
+        }
+    });
+}
+
+/// Serial fused refill through a frozen [`SpmmmPlan`]: the fused twin of
+/// [`super::spmmm::planned_fill_serial`] — identical accumulation and
+/// harvest order, but each harvested entry contracts against `x`
+/// instead of appending to a matrix. Allocation-free once `temp` is
+/// warm.
+pub fn fused_planned_serial(
+    plan: &SpmmmPlan,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    x: &[f64],
+    temp: &mut Vec<f64>,
+    y: &mut [f64],
+) {
+    assert!(plan.matches(a, b), "plan does not describe these operands");
+    check_dims(a, b, x, y);
+    let cols = b.cols();
+    if temp.len() < cols {
+        temp.resize(simd::padded_len(cols), 0.0);
+    }
+    let b_ptr = b.row_ptr();
+    for (s, &(lo, hi)) in plan.slabs().iter().enumerate() {
+        let store = plan.slab_store(s);
+        for r in lo..hi {
+            let (a_idx, a_val) = a.row(r);
+            for (i, (&k, &va)) in a_idx.iter().zip(a_val).enumerate() {
+                if let Some(&nk) = a_idx.get(i + 1) {
+                    simd::prefetch_read(b.col_idx(), b_ptr[nk]);
+                    simd::prefetch_read(b.values(), b_ptr[nk]);
+                }
+                let (b_idx, b_val) = b.row(k);
+                simd::accumulate_scaled(temp, b_idx, b_val, va);
+            }
+            let pat = plan.pattern_row(r);
+            simd::prefetch_read(pat, 0);
+            let mut sum = 0.0f64;
+            match store {
+                SlabStore::Gather => {
+                    simd::harvest_gather(temp, pat, |j, v| sum += v * x[j]);
+                }
+                SlabStore::RegionScan => {
+                    if let (Some(&first), Some(&last)) = (pat.first(), pat.last()) {
+                        simd::harvest_region(temp, first, last, |j, v| sum += v * x[j]);
+                    }
+                }
+            }
+            y[r] = sum;
+        }
+    }
+}
+
+/// Parallel fused `y = (A·B)·x` over `threads` slab partitions on the
+/// pool — the fused twin of [`super::parallel::par_spmmm_into`], minus
+/// the sizing phase: `y` is dense, every worker writes its slabs' rows
+/// directly, so one accumulation pass suffices.
+#[allow(clippy::too_many_arguments)]
+pub fn par_fused_spmmm_spmv(
+    pool: &ExecPool,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    x: &[f64],
+    threads: usize,
+    strategy: Strategy,
+    partition: Partition,
+    machine: &Machine,
+    y: &mut [f64],
+) {
+    check_dims(a, b, x, y);
+    let slabs = threads.max(1).min(a.rows().max(1));
+    if slabs == 1 || pool.threads() == 1 {
+        pool.with_local(|ws| fused_serial_ws(ws, a, b, x, strategy, y));
+        return;
+    }
+    pool.with_local(|ws| {
+        slab_bounds_into(partition, machine, a, b, slabs, &mut ws.cost, &mut ws.bounds);
+        with_strategy_accumulator!(strategy, A => par_fused::<A>(pool, a, b, x, &ws.bounds, y));
+    });
+}
+
+fn par_fused<A: WsAccum>(
+    pool: &ExecPool,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    x: &[f64],
+    bounds: &[(usize, usize)],
+    y: &mut [f64],
+) {
+    let cols = b.cols();
+    let workers = pool.threads().min(bounds.len()).max(1);
+    let y_base = SendPtr(y.as_mut_ptr());
+    pool.run(workers, &|w, ws| {
+        let acc = ws.accumulator::<A>(cols);
+        for (s, &(lo, hi)) in bounds.iter().enumerate() {
+            if s % workers != w {
+                continue;
+            }
+            for r in lo..hi {
+                accumulate_row(a, b, r, acc);
+                let mut sink = ContractSink { x, sum: 0.0 };
+                acc.flush_sink(&mut sink, &mut NullTracer);
+                // SAFETY: row r belongs to slab s, owned by exactly this
+                // worker (round-robin assignment over disjoint slabs).
+                unsafe { *y_base.0.add(r) = sink.sum };
+            }
+        }
+    });
+}
+
+/// Parallel fused refill through a frozen [`SpmmmPlan`] over its slab
+/// partitions — the fused twin of [`super::parallel::par_planned_fill`].
+/// `y` rows are disjoint per slab, so there is no staging and no
+/// compaction pass.
+pub fn par_fused_planned(
+    pool: &ExecPool,
+    plan: &SpmmmPlan,
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    x: &[f64],
+    y: &mut [f64],
+) {
+    assert!(plan.matches(a, b), "plan does not describe these operands");
+    check_dims(a, b, x, y);
+    if plan.slabs().len() == 1 || pool.threads() == 1 {
+        pool.with_local(|ws| {
+            fused_planned_serial(plan, a, b, x, &mut ws.plan_temp, y)
+        });
+        return;
+    }
+    let cols = b.cols();
+    let workers = pool.threads().min(plan.slabs().len()).max(1);
+    let y_base = SendPtr(y.as_mut_ptr());
+    pool.run(workers, &|w, ws| {
+        let temp = ws.plan_temp_mut(cols);
+        let b_ptr = b.row_ptr();
+        for (s, &(lo, hi)) in plan.slabs().iter().enumerate() {
+            if s % workers != w {
+                continue;
+            }
+            let store = plan.slab_store(s);
+            for r in lo..hi {
+                let (a_idx, a_val) = a.row(r);
+                for (i, (&k, &va)) in a_idx.iter().zip(a_val).enumerate() {
+                    if let Some(&nk) = a_idx.get(i + 1) {
+                        simd::prefetch_read(b.col_idx(), b_ptr[nk]);
+                        simd::prefetch_read(b.values(), b_ptr[nk]);
+                    }
+                    let (b_idx, b_val) = b.row(k);
+                    simd::accumulate_scaled(temp, b_idx, b_val, va);
+                }
+                let pat = plan.pattern_row(r);
+                simd::prefetch_read(pat, 0);
+                let mut sum = 0.0f64;
+                match store {
+                    SlabStore::Gather => {
+                        simd::harvest_gather(temp, pat, |j, v| sum += v * x[j]);
+                    }
+                    SlabStore::RegionScan => {
+                        if let (Some(&first), Some(&last)) = (pat.first(), pat.last()) {
+                            simd::harvest_region(temp, first, last, |j, v| sum += v * x[j]);
+                        }
+                    }
+                }
+                // SAFETY: row r belongs to slab s, owned by exactly this
+                // worker (round-robin assignment over disjoint slabs).
+                unsafe { *y_base.0.add(r) = sum };
+            }
+        }
+    });
+}
+
+/// A [`Sink`] for the traced flush: contracts like [`ContractSink`] and
+/// books the traffic the fused pipeline really pays per surviving entry
+/// — one 8 B gather of `x[idx]` and the 2 contraction flops.
+struct TracedContractSink<'a, 'c, 't, T: MemTracer> {
+    x: &'a [f64],
+    sum: f64,
+    tr: &'c RefCell<&'t mut T>,
+}
+
+impl<T: MemTracer> Sink for TracedContractSink<'_, '_, '_, T> {
+    #[inline(always)]
+    fn append_entry(&mut self, idx: usize, value: f64) {
+        let mut tr = self.tr.borrow_mut();
+        tr.load(addr_of(self.x, idx), 8);
+        tr.flops(2);
+        self.sum += value * self.x[idx];
+    }
+    #[inline(always)]
+    fn tail_addr(&self) -> usize {
+        self.x.as_ptr() as usize
+    }
+}
+
+/// [`MemTracer`] adapter for the traced fused flush: drops the 16 B
+/// result-append stores the storing strategies charge per surviving
+/// entry — the fused pipeline never materializes those entries; the
+/// contraction sink books the real gather instead — and forwards every
+/// other event (temp scans, bookkeeping) unchanged, because those
+/// happen identically in the fused kernel. 16 B stores are emitted by
+/// the strategy flushes *only* for appends (all other flush stores are
+/// the 8 B temp re-zero / 1 B touched-byte writes), so the width is an
+/// unambiguous discriminator.
+struct SkipAppendStores<'c, 't, T: MemTracer> {
+    tr: &'c RefCell<&'t mut T>,
+}
+
+impl<T: MemTracer> MemTracer for SkipAppendStores<'_, '_, T> {
+    #[inline(always)]
+    fn load(&mut self, addr: usize, bytes: usize) {
+        self.tr.borrow_mut().load(addr, bytes);
+    }
+    #[inline(always)]
+    fn store(&mut self, addr: usize, bytes: usize) {
+        if bytes != 16 {
+            self.tr.borrow_mut().store(addr, bytes);
+        }
+    }
+    #[inline(always)]
+    fn flops(&mut self, n: u64) {
+        self.tr.borrow_mut().flops(n);
+    }
+}
+
+/// Traced fused `y = (A·B)·x`: exact byte accounting for the pipeline
+/// the untraced kernels execute. Accumulation events mirror
+/// [`super::gustavson::rows_into`] verbatim; the flush books each
+/// surviving entry as an 8 B `x` gather + 2 flops (see
+/// [`SkipAppendStores`]); each row ends in one 8 B store of `y[r]`.
+///
+/// Compared to `spmmm_into_traced` + `spmv_traced` with the same
+/// strategy, this trace moves exactly `32 B × nnz(A·B)` fewer bytes at
+/// equal flop count: the materialized pipeline pays a 16 B append plus
+/// a 24 B re-read-and-gather per entry where the fused one pays only
+/// the 8 B gather.
+pub fn fused_spmmm_spmv_traced<T: MemTracer>(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    x: &[f64],
+    strategy: Strategy,
+    y: &mut [f64],
+    tr: &mut T,
+) {
+    check_dims(a, b, x, y);
+    with_strategy_accumulator!(strategy, A => {
+        let mut acc = A::new(b.cols());
+        for r in 0..a.rows() {
+            let (a_idx, a_val) = a.row(r);
+            for (q, (&k, &va)) in a_idx.iter().zip(a_val).enumerate() {
+                tr.load(addr_of(a_idx, q), 8);
+                tr.load(addr_of(a_val, q), 8);
+                let (b_idx, b_val) = b.row(k);
+                for (p, (&j, &vb)) in b_idx.iter().zip(b_val).enumerate() {
+                    tr.load(addr_of(b_idx, p), 8);
+                    tr.load(addr_of(b_val, p), 8);
+                    tr.flops(2);
+                    acc.update(j, va * vb, tr);
+                }
+            }
+            let sum = {
+                // Split the tracer between the strategy's scan events
+                // and the contraction sink for the duration of the
+                // flush.
+                let cell = RefCell::new(&mut *tr);
+                let mut sink = TracedContractSink { x, sum: 0.0, tr: &cell };
+                let mut skip = SkipAppendStores { tr: &cell };
+                acc.flush_sink(&mut sink, &mut skip);
+                sink.sum
+            };
+            tr.store(addr_of(y, r), 8);
+            y[r] = sum;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{fd_poisson_2d, operand_pair, Workload};
+    use crate::kernels::spmv::{spmv, spmv_traced};
+    use crate::kernels::tracer::CountingTracer;
+    use crate::kernels::{spmmm, spmmm_into_traced, Strategy};
+    use crate::plan::PlanKey;
+
+    fn reference(a: &CsrMatrix, b: &CsrMatrix, x: &[f64], strategy: Strategy) -> Vec<f64> {
+        let c = spmmm(a, b, strategy);
+        let mut y = vec![0.0; a.rows()];
+        spmv(&c, x, &mut y);
+        y
+    }
+
+    fn probe_vector(n: usize) -> Vec<f64> {
+        (0..n).map(|i| 0.25 + (i % 7) as f64 * 0.5 - (i % 3) as f64).collect()
+    }
+
+    #[test]
+    fn fused_matches_materialized_bitwise_all_strategies() {
+        for w in [Workload::FiveBandFd, Workload::RandomFixed5, Workload::PowerLawSkew] {
+            let (a, b) = operand_pair(w, 200, 3);
+            let x = probe_vector(b.cols());
+            for s in Strategy::ALL {
+                let want = reference(&a, &b, &x, s);
+                let mut y = vec![0.0; a.rows()];
+                fused_spmmm_spmv(&a, &b, &x, s, &mut y);
+                for (r, (got, exp)) in y.iter().zip(&want).enumerate() {
+                    assert_eq!(got.to_bits(), exp.to_bits(), "{w:?} {} row {r}", s.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_workspace_and_traced_match_owned() {
+        let (a, b) = operand_pair(Workload::RandomFixed5, 150, 9);
+        let x = probe_vector(b.cols());
+        for s in Strategy::ALL {
+            let mut want = vec![0.0; a.rows()];
+            fused_spmmm_spmv(&a, &b, &x, s, &mut want);
+            let mut ws = Workspace::new();
+            let mut y = vec![0.0; a.rows()];
+            fused_serial_ws(&mut ws, &a, &b, &x, s, &mut y);
+            assert_eq!(
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "workspace {}",
+                s.name()
+            );
+            let mut yt = vec![0.0; a.rows()];
+            fused_spmmm_spmv_traced(&a, &b, &x, s, &mut yt, &mut CountingTracer::default());
+            assert_eq!(
+                yt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "traced {}",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn traced_fused_moves_exactly_32_bytes_per_entry_less() {
+        let a = fd_poisson_2d(24);
+        let x = probe_vector(a.cols());
+        for s in Strategy::ALL {
+            let c = spmmm(&a, &a, s);
+            let mut mat = CountingTracer::default();
+            let mut c_out = CsrMatrix::new(0, 0);
+            spmmm_into_traced(&a, &a, s, &mut c_out, &mut mat);
+            let mut y = vec![0.0; a.rows()];
+            spmv_traced(&c_out, &x, &mut y, &mut mat);
+
+            let mut fused = CountingTracer::default();
+            let mut yf = vec![0.0; a.rows()];
+            fused_spmmm_spmv_traced(&a, &a, &x, s, &mut yf, &mut fused);
+
+            assert_eq!(fused.flops, mat.flops, "{}", s.name());
+            assert_eq!(
+                fused.traffic() + 32 * c.nnz() as u64,
+                mat.traffic(),
+                "{}: fused must save the 16 B append + 16 B re-read per entry",
+                s.name()
+            );
+            assert!(fused.traffic() < mat.traffic(), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn planned_and_parallel_fused_match_serial() {
+        use crate::exec::default_machine;
+        let pool = ExecPool::new(3);
+        let machine = default_machine();
+        for w in [Workload::FiveBandFd, Workload::RandomFixed5, Workload::PowerLawSkew] {
+            let (a, b) = operand_pair(w, 250, 13);
+            let x = probe_vector(b.cols());
+            let want = reference(&a, &b, &x, Strategy::Combined);
+            let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            for threads in [2usize, 5, 16] {
+                let mut y = vec![0.0; a.rows()];
+                par_fused_spmmm_spmv(
+                    &pool,
+                    &a,
+                    &b,
+                    &x,
+                    threads,
+                    Strategy::Combined,
+                    Partition::Flops,
+                    machine,
+                    &mut y,
+                );
+                assert_eq!(bits(&y), bits(&want), "{w:?} unplanned threads={threads}");
+
+                let key = PlanKey::of(machine, &a, &b, threads, Partition::Flops);
+                let plan = SpmmmPlan::build(machine, &a, &b, key, &mut Workspace::new());
+                let mut yp = vec![0.0; a.rows()];
+                par_fused_planned(&pool, &plan, &a, &b, &x, &mut yp);
+                assert_eq!(bits(&yp), bits(&want), "{w:?} planned threads={threads}");
+
+                let mut ys = vec![0.0; a.rows()];
+                let mut temp = Vec::new();
+                fused_planned_serial(&plan, &a, &b, &x, &mut temp, &mut ys);
+                assert_eq!(bits(&ys), bits(&want), "{w:?} planned serial threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rows_and_empty_operands() {
+        let a = CsrMatrix::from_parts(3, 2, vec![0, 0, 0, 0], vec![], vec![]);
+        let b = CsrMatrix::from_parts(2, 4, vec![0, 0, 0], vec![], vec![]);
+        let x = vec![1.0; 4];
+        let mut y = vec![7.0; 3];
+        fused_spmmm_spmv(&a, &b, &x, Strategy::Combined, &mut y);
+        assert_eq!(y, vec![0.0; 3], "empty rows must still overwrite y");
+    }
+}

@@ -61,6 +61,7 @@ pub(crate) use with_strategy_accumulator;
 pub mod classic;
 pub mod combined_pre;
 pub mod flops;
+pub mod fused;
 pub mod gustavson;
 pub mod parallel;
 pub mod simd;
@@ -69,6 +70,10 @@ pub mod spmv;
 pub mod store;
 pub mod tracer;
 
+pub use fused::{
+    fused_planned_serial, fused_serial_ws, fused_spmmm_spmv, fused_spmmm_spmv_traced,
+    par_fused_planned, par_fused_spmmm_spmv,
+};
 pub use spmmm::{
     planned_fill_csr_csc, planned_fill_serial, planned_fill_serial_csc, spmmm, spmmm_csc,
     spmmm_csc_traced, spmmm_csr_csc, spmmm_into, spmmm_into_traced, spmmm_traced, spmmm_with,

@@ -102,7 +102,7 @@ pub fn par_spmmm_into(
 
 /// Raw pointer that may cross threads: every use writes a range derived
 /// from a slab this worker exclusively owns.
-struct SendPtr<T>(*mut T);
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
@@ -131,7 +131,7 @@ impl Sink for SliceSink<'_> {
 /// both phases — identical update order keeps results bit-identical to
 /// the serial kernel).
 #[inline(always)]
-fn accumulate_row<A: WsAccum>(a: &CsrMatrix, b: &CsrMatrix, r: usize, acc: &mut A) {
+pub(crate) fn accumulate_row<A: WsAccum>(a: &CsrMatrix, b: &CsrMatrix, r: usize, acc: &mut A) {
     let (a_idx, a_val) = a.row(r);
     for (&k, &va) in a_idx.iter().zip(a_val) {
         let (b_idx, b_val) = b.row(k);

@@ -75,6 +75,24 @@ pub fn planned_fill_lower_bound_bytes(a_nnz: usize, b_nnz: usize, pattern_nnz: u
     (16 * (a_nnz + b_nnz) + 24 * pattern_nnz) as u64
 }
 
+/// Memory-level traffic lower bound of the **fused** spMMM→SpMV
+/// pipeline `y = (A·B)·x`: stream both operands once (16 B per nnz),
+/// gather `x` once per surviving intermediate entry (8 B — the entry
+/// itself lives and dies in the dense accumulator, so no store or
+/// re-read term appears), and write `y` once (8 B per row). This is the
+/// byte count [`super::predict::percent_of_roofline`] divides fused
+/// pipeline measurements by; like
+/// [`planned_fill_lower_bound_bytes`] it is a floor, so the percentage
+/// cannot exceed 100 from an over-estimate.
+pub fn fused_pipeline_lower_bound_bytes(
+    a_nnz: usize,
+    b_nnz: usize,
+    intermediate_nnz: usize,
+    rows: usize,
+) -> u64 {
+    (16 * (a_nnz + b_nnz) + 8 * intermediate_nnz + 8 * rows) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +134,21 @@ mod tests {
         let planned = planned_fill_lower_bound_bytes(a.nnz(), a.nnz(), pattern_nnz);
         assert!(planned < t.total_bytes());
         assert!(planned >= (16 * 2 * a.nnz()) as u64, "streams both operands at least");
+    }
+
+    #[test]
+    fn fused_bound_undercuts_materialize_then_spmv() {
+        // Materializing pays the planned-fill floor plus a 24 B
+        // re-read-and-gather per entry and the same 8 B/row y sweep; the
+        // fused floor must sit strictly below it whenever the
+        // intermediate is nonempty.
+        let a = fd_poisson_2d(10);
+        let c = crate::kernels::spmmm(&a, &a, crate::kernels::Strategy::MinMax);
+        let nnz_c = c.nnz();
+        let fused = fused_pipeline_lower_bound_bytes(a.nnz(), a.nnz(), nnz_c, a.rows());
+        let materialized = planned_fill_lower_bound_bytes(a.nnz(), a.nnz(), nnz_c)
+            + (24 * nnz_c + 8 * a.rows()) as u64;
+        assert!(fused < materialized);
+        assert!(fused >= (16 * 2 * a.nnz()) as u64, "streams both operands at least");
     }
 }

@@ -152,6 +152,51 @@ pub fn plan_breakeven_evals(
     }
 }
 
+/// Light-speed seconds of the **fused** spMMM→SpMV pipeline
+/// `y = (A·B)·x`: the chain product is computed once (`compute_flops`,
+/// `compute_bytes` — the accumulation traffic of the best unfused
+/// product evaluation *minus* its store-write term), and every finished
+/// accumulator row contracts against `x` in place. Per surviving
+/// intermediate entry the contraction costs one 8 B gather of `x` and
+/// 2 flops; per output row one 8 B store of `y`. The intermediate's
+/// 16 B store write and its 16 B + 8 B SpMV re-read-and-gather never
+/// happen — that is the byte saving the fuse-vs-materialize arbitration
+/// weighs.
+pub fn fused_pipeline_seconds(
+    machine: &Machine,
+    compute_flops: f64,
+    compute_bytes: f64,
+    intermediate_nnz: f64,
+    rows: f64,
+) -> f64 {
+    let flops = compute_flops + 2.0 * intermediate_nnz;
+    let bytes = compute_bytes + 8.0 * intermediate_nnz + 8.0 * rows;
+    roofline_seconds(machine, flops, bytes)
+}
+
+/// Light-speed seconds of the **materialized** pipeline serving
+/// `consumers` reads of the chain product: compute the product once
+/// (`compute_flops`, `compute_bytes` as in [`fused_pipeline_seconds`]),
+/// store it (16 B per entry), then run one SpMV per consumer (16 B
+/// re-read + 8 B `x` gather + 2 flops per entry, 8 B `y` store per
+/// row). The fused pipeline must instead *recompute* the product per
+/// consumer, so with enough consumers the stored intermediate wins —
+/// the reuse case the arbitration falls back to.
+pub fn materialized_pipeline_seconds(
+    machine: &Machine,
+    compute_flops: f64,
+    compute_bytes: f64,
+    intermediate_nnz: f64,
+    rows: f64,
+    consumers: usize,
+) -> f64 {
+    let c = consumers.max(1) as f64;
+    let flops = compute_flops + 2.0 * intermediate_nnz * c;
+    let bytes =
+        compute_bytes + 16.0 * intermediate_nnz + c * (24.0 * intermediate_nnz + 8.0 * rows);
+    roofline_seconds(machine, flops, bytes)
+}
+
 /// Build the prediction for a traced run on `machine`.
 ///
 /// Path traffic: L1 sees every load/store the kernel issues
@@ -290,6 +335,34 @@ mod tests {
         // No predicted gain -> never plan.
         assert!(plan_breakeven_evals(&m, 2.0e6, 32.0e6, 32.0e6, 1.0).is_infinite());
         assert!(plan_breakeven_evals(&m, 2.0e6, 16.0e6, 32.0e6, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn fused_beats_materialized_for_single_consumer() {
+        let m = Machine::sandy_bridge_i7_2600();
+        // Equal flops, strictly fewer bytes: the fused pipeline can only
+        // win when the chain result has exactly one consumer.
+        let (cf, cb, nnz, rows) = (2.0e6, 48.0e6, 5.0e5, 1.0e4);
+        let fused = fused_pipeline_seconds(&m, cf, cb, nnz, rows);
+        let mat = materialized_pipeline_seconds(&m, cf, cb, nnz, rows, 1);
+        assert!(fused < mat, "{fused} vs {mat}");
+        // Degenerate empty intermediate: both reduce to the compute
+        // phase plus the y sweep; neither may be cheaper.
+        let f0 = fused_pipeline_seconds(&m, cf, cb, 0.0, rows);
+        let m0 = materialized_pipeline_seconds(&m, cf, cb, 0.0, rows, 1);
+        assert_eq!(f0, m0);
+    }
+
+    #[test]
+    fn materialized_wins_with_enough_consumers() {
+        let m = Machine::sandy_bridge_i7_2600();
+        // A compute-heavy chain read many times: recomputing it per
+        // consumer must eventually cost more than storing it once.
+        let (cf, cb, nnz, rows) = (2.0e6, 64.0e6, 1.0e5, 1.0e4);
+        let consumers = 8;
+        let fused_total = consumers as f64 * fused_pipeline_seconds(&m, cf, cb, nnz, rows);
+        let mat_total = materialized_pipeline_seconds(&m, cf, cb, nnz, rows, consumers);
+        assert!(mat_total < fused_total, "{mat_total} vs {fused_total}");
     }
 
     #[test]

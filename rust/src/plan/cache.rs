@@ -480,10 +480,11 @@ impl PlanCache {
             }
         }
         self.lock().stats.disk_writes += saved as u64;
-        // A flush marks a session boundary: fold the loose per-plan
-        // files into one segment so the next process warms from a
-        // single sequential read instead of a directory of tiny files.
-        store.compact();
+        // Incremental compaction: only fold the loose per-plan files
+        // into a segment once enough have accumulated to matter for the
+        // next process's warm-up read. A flush of one or two plans onto
+        // a large folded store must not rewrite the whole segment.
+        store.compact_if_needed();
         saved
     }
 

@@ -354,6 +354,17 @@ impl PlanStore {
     /// each) while bounded enough for a service state volume.
     pub const DEFAULT_BUDGET_BYTES: u64 = 64 << 20;
 
+    /// Loose-file count past which [`PlanStore::compact_if_needed`]
+    /// folds. Below it, a directory of a handful of `.bzp` files warms
+    /// perfectly well and rewriting the segment would cost more I/O
+    /// than it saves.
+    pub const COMPACT_LOOSE_FILES: usize = 8;
+
+    /// Loose-file byte total past which [`PlanStore::compact_if_needed`]
+    /// folds — a few unusually large plans justify a fold even at a low
+    /// file count.
+    pub const COMPACT_LOOSE_BYTES: u64 = 1 << 20;
+
     /// Open (creating if needed) a store over `dir` holding at most
     /// `budget_bytes` of entries.
     pub fn open(dir: &Path, budget_bytes: u64) -> std::io::Result<PlanStore> {
@@ -730,6 +741,30 @@ impl PlanStore {
         count
     }
 
+    /// Loose-file pressure: number of loose `.bzp` entry files and
+    /// their summed byte size — the inputs to the incremental
+    /// compaction policy.
+    pub fn loose_stats(&self) -> (usize, u64) {
+        let paths = self.entry_paths();
+        let bytes = paths.iter().filter_map(|p| fs::metadata(p).ok()).map(|m| m.len()).sum();
+        (paths.len(), bytes)
+    }
+
+    /// Threshold-gated [`PlanStore::compact`]: fold only once the loose
+    /// files have piled up past [`PlanStore::COMPACT_LOOSE_FILES`]
+    /// entries or [`PlanStore::COMPACT_LOOSE_BYTES`] bytes. Below both
+    /// thresholds this returns `None` without touching any file — an
+    /// under-threshold session flush must leave the existing segment
+    /// byte-for-byte intact. Returns `Some(count)` when a fold ran.
+    pub fn compact_if_needed(&self) -> Option<usize> {
+        let (files, bytes) = self.loose_stats();
+        if files >= Self::COMPACT_LOOSE_FILES || bytes >= Self::COMPACT_LOOSE_BYTES {
+            Some(self.compact())
+        } else {
+            None
+        }
+    }
+
     /// Counter snapshot.
     pub fn stats(&self) -> StoreStats {
         self.lock().stats
@@ -1001,6 +1036,53 @@ mod tests {
         assert_eq!(store.len(), 3);
         assert!(store.load(&keys[1]).is_some());
         assert_eq!(store.load_all().len(), 3);
+        fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn compaction_is_threshold_gated() {
+        let d = tmpdir("threshold");
+        let store = PlanStore::open_default(&d).unwrap();
+        // Fold an initial segment from three plans.
+        for seed in 70..73u64 {
+            let (_, _, _, plan) = plan_for(seed, 1);
+            assert!(store.save(&plan));
+        }
+        assert_eq!(store.compact(), 3);
+        let seg = store.segment_paths().remove(0);
+        let before = fs::metadata(&seg).unwrap();
+        let (seg_len, seg_mtime) = (before.len(), before.modified().unwrap());
+        // An under-threshold flush: a couple of loose saves must not
+        // trigger a fold, and the existing segment file stays intact.
+        let under: Vec<PlanKey> = (73..75u64)
+            .map(|seed| {
+                let (_, _, key, plan) = plan_for(seed, 1);
+                assert!(store.save(&plan));
+                key
+            })
+            .collect();
+        let (files, bytes) = store.loose_stats();
+        assert!(files < PlanStore::COMPACT_LOOSE_FILES);
+        assert!(bytes < PlanStore::COMPACT_LOOSE_BYTES);
+        assert_eq!(store.compact_if_needed(), None, "under threshold: no fold");
+        assert_eq!(store.entry_paths().len(), 2, "loose files stay loose");
+        assert_eq!(store.segment_paths().len(), 1);
+        let after = fs::metadata(&seg).unwrap();
+        assert_eq!(after.len(), seg_len, "segment bytes untouched");
+        assert_eq!(after.modified().unwrap(), seg_mtime, "segment file not rewritten");
+        for key in &under {
+            assert!(store.load(key).is_some(), "loose entries still load");
+        }
+        assert_eq!(store.len(), 5);
+        // Crossing the file-count threshold folds everything.
+        for seed in 75..75 + PlanStore::COMPACT_LOOSE_FILES as u64 {
+            let (_, _, _, plan) = plan_for(seed, 1);
+            assert!(store.save(&plan));
+        }
+        let folded = store.compact_if_needed().expect("over threshold: fold runs");
+        assert_eq!(folded, 5 + PlanStore::COMPACT_LOOSE_FILES);
+        assert_eq!(store.entry_paths().len(), 0, "loose files were consumed");
+        assert_eq!(store.segment_paths().len(), 1);
         fs::remove_dir_all(&d).ok();
     }
 

@@ -1,7 +1,8 @@
 //! The engine's headline guarantee, pinned with a counting global
 //! allocator: after one warm-up call, re-evaluating an expression tree
 //! through a warm [`ExecPool`] performs **zero heap allocations** — on
-//! the serial workspace path, on the parallel size-then-fill path, and
+//! the serial workspace path, on the parallel size-then-fill path, on
+//! the planned CSC refill path, on the fused spMMM→SpMV pipeline, and
 //! on the plan-cache hit path, which additionally performs **zero
 //! symbolic work** (proven by the [`PlanCache::stats`] counters). This
 //! file holds its tests in one `#[test]` so no concurrent test can
@@ -13,9 +14,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use blazert::exec::{default_machine, ExecPool, Partition};
 use blazert::expr::{EvalContext, SparseOperand};
 use blazert::gen::{operand_pair, Workload};
-use blazert::kernels::{spmmm, Strategy};
+use blazert::kernels::{planned_fill_serial_csc, spmmm, Strategy};
 use blazert::plan::{PlanCache, PlanStore};
-use blazert::sparse::CsrMatrix;
+use blazert::sparse::convert::csr_to_csc;
+use blazert::sparse::{CscMatrix, CsrMatrix, SparseShape};
 use std::sync::Arc;
 
 struct CountingAlloc;
@@ -163,4 +165,70 @@ fn warm_pool_evaluation_allocates_nothing() {
     assert_eq!(s.disk_loads, 2, "both plans came from the load phase");
     assert_eq!(s.misses, 0, "every planned evaluation hit the warmed cache");
     std::fs::remove_dir_all(&dir).ok();
+
+    // Planned CSC refill path: the column-major twin of the plan-hit
+    // loop above. Conversion and the symbolic build allocate up front;
+    // the steady-state numeric refill through the frozen plan must not
+    // — this is the invariant the csc rows of the plan-ablation
+    // baseline gate with `steady_allocs = 0`.
+    let (ca, cb) = (csr_to_csc(&fa), csr_to_csc(&fb));
+    let csc_reference = csr_to_csc(&planned_reference);
+    let csc_cache = PlanCache::default();
+    let mut out_csc = CscMatrix::new(0, 0);
+    let csc_plan = pool.with_local(|ws| {
+        csc_cache.get_or_build_csc(default_machine(), ws, &ca, &cb, 1, Partition::Flops)
+    });
+    for _ in 0..2 {
+        pool.with_local(|ws| {
+            planned_fill_serial_csc(&csc_plan, &ca, &cb, &mut ws.plan_temp, &mut out_csc)
+        });
+    }
+    let before = allocs();
+    for _ in 0..5 {
+        pool.with_local(|ws| {
+            planned_fill_serial_csc(&csc_plan, &ca, &cb, &mut ws.plan_temp, &mut out_csc)
+        });
+    }
+    assert_eq!(allocs(), before, "planned CSC refill hot loop must not allocate");
+    assert!(out_csc.approx_eq(&csc_reference, 0.0));
+
+    // Fused spMMM→SpMV pipeline: the workspace path, the parallel slab
+    // path, and the plan-hit refill must all contract the chain against
+    // x without materializing the intermediate or touching the heap.
+    let x: Vec<f64> = (0..fb.cols()).map(|i| 1.0 + (i % 5) as f64).collect();
+    let mut y = vec![0.0; fa.rows()];
+    for threads in [1usize, 2] {
+        let mut ctx = EvalContext::new().with_exec(&pool).with_threads(threads);
+        for _ in 0..2 {
+            ctx.fused_matvec(&fa, &fb, &x, &mut y);
+        }
+        let before = allocs();
+        for _ in 0..5 {
+            ctx.fused_matvec(&fa, &fb, &x, &mut y);
+        }
+        assert_eq!(
+            allocs(),
+            before,
+            "fused hot loop must not allocate (threads={threads})"
+        );
+    }
+    // Plan-hit fused path: zero heap allocations AND zero symbolic
+    // work once the shared product plan is cached.
+    let fused_cache = PlanCache::default();
+    let mut ctx = EvalContext::new().with_exec(&pool).with_plan_cache(&fused_cache);
+    for _ in 0..3 {
+        ctx.fused_matvec(&fa, &fb, &x, &mut y);
+    }
+    let stats = fused_cache.stats();
+    let before = allocs();
+    for _ in 0..5 {
+        ctx.fused_matvec(&fa, &fb, &x, &mut y);
+    }
+    assert_eq!(allocs(), before, "planned fused hot loop must not allocate");
+    let after = fused_cache.stats();
+    assert_eq!(
+        after.symbolic_builds, stats.symbolic_builds,
+        "planned fused hot loop must not run the symbolic phase"
+    );
+    assert_eq!(after.hits, stats.hits + 5, "every hot fused evaluation is a plan hit");
 }

@@ -2,8 +2,9 @@
 //! plan-ablation definition quick-tier with a counting global allocator
 //! installed (the same probe the `experiment` binary wires up) and hold
 //! the run against the committed baseline — which pins
-//! `steady_allocs = 0` on the CSR unplanned/warm/persisted rows and
-//! `symbolic_builds = 0` on the disk-warm rows. One `#[test]` so no
+//! `steady_allocs = 0` on the CSR unplanned/warm/persisted rows *and*
+//! the CSC warm/persisted rows, and `symbolic_builds = 0` on the
+//! disk-warm rows of both formats. One `#[test]` so no
 //! concurrent test perturbs the allocation counter.
 
 use blazert::blazemark::{row_field, BenchRecord};
@@ -26,7 +27,7 @@ fn committed_plan_definition_passes_its_baseline_with_zero_steady_allocs() {
         ExperimentDef::load(&find_repo_file("experiments/plan_ablation.toml")).unwrap();
     let opts = RunOptions { tier: RunTier::Quick, alloc_probe: Some(probe), verbose: false };
     let rec = run_experiment(&def, &opts).unwrap();
-    assert_eq!(rec.rows.len(), 16, "8 points × 2 workloads");
+    assert_eq!(rec.rows.len(), 28, "14 points × 2 workloads");
 
     // Cold points rebuild their plan per execution (allocating is their
     // design); every other point must refill without touching the heap.
@@ -47,6 +48,6 @@ fn committed_plan_definition_passes_its_baseline_with_zero_steady_allocs() {
             .unwrap();
     let rep = compare(&base, &rec, &def.metrics);
     assert!(rep.passed(), "{}", rep.render());
-    assert_eq!(rep.checked, 16, "12× steady_allocs + 4× symbolic_builds:\n{}", rep.render());
+    assert_eq!(rep.checked, 28, "20× steady_allocs + 8× symbolic_builds:\n{}", rep.render());
     assert!(rep.new_rows.is_empty(), "{}", rep.render());
 }

@@ -143,14 +143,14 @@ fn committed_definitions_and_baselines_stay_well_formed() {
 
     // Committed baselines parse under the unified record schema and
     // only pin invariant counters (never machine-dependent perf).
-    for name in ["plan_ablation", "simd_ablation"] {
+    for name in ["plan_ablation", "simd_ablation", "fusion_ablation"] {
         let path = find_repo_file(&format!("baselines/experiments/{name}.json"));
         let base = BenchRecord::load(&path).unwrap_or_else(|e| panic!("{e}"));
         assert_eq!(base.bench, name);
         assert!(!base.rows.is_empty());
         for row in &base.rows {
             assert!(row_field(row, "mflops").is_none(), "{name} baseline gates perf");
-            for metric in ["symbolic_builds", "steady_allocs"] {
+            for metric in ["symbolic_builds", "steady_allocs", "intermediate_allocs"] {
                 if let Some(v) = row_field(row, metric) {
                     assert_eq!(v.as_f64(), Some(0.0), "{name}: {metric} is an invariant");
                 }

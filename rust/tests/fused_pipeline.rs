@@ -1,0 +1,186 @@
+//! Fused spMMM→SpMV pipeline, end to end: the fused evaluation must be
+//! **bit-identical** to materializing the sparse product and then
+//! multiplying by the vector — across every storing strategy, partition
+//! scheme, and thread count, through both `EvalContext::fused_matvec`
+//! and the expression layer (`(&a * &b * &x).eval()`, the `+ y` tail,
+//! and the `with_fanout` materialized fallback), and including the
+//! floating-point edge cases where "close" is not "equal": exact
+//! cancellation in the intermediate, empty rows, and NaN payloads.
+//! Because every check compares fused bits against materialized bits
+//! (never against a hand-computed oracle), the file passes unchanged
+//! with and without `--features simd`.
+
+use blazert::exec::{default_machine, ExecPool, Partition};
+use blazert::expr::{EvalContext, Expression};
+use blazert::gen::{operand_pair, Workload};
+use blazert::kernels::spmv::spmv;
+use blazert::kernels::{spmmm, Strategy};
+use blazert::plan::PlanCache;
+use blazert::sparse::{CsrMatrix, SparseShape};
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// Materialized reference: C = A·B stored, then y = C·x (+ tail).
+fn materialized(
+    a: &CsrMatrix,
+    b: &CsrMatrix,
+    x: &[f64],
+    tail: Option<&[f64]>,
+    strategy: Strategy,
+) -> Vec<f64> {
+    let c = spmmm(a, b, strategy);
+    let mut y = vec![0.0; a.rows()];
+    spmv(&c, x, &mut y);
+    if let Some(t) = tail {
+        for (yr, tv) in y.iter_mut().zip(t) {
+            *yr += *tv;
+        }
+    }
+    y
+}
+
+fn probe_vector(n: usize) -> Vec<f64> {
+    (0..n).map(|i| 0.25 + (i % 7) as f64 * 0.5 - (i % 3) as f64).collect()
+}
+
+#[test]
+fn fused_matches_materialized_across_strategies_partitions_threads() {
+    let pool = ExecPool::new(3);
+    for w in [Workload::FiveBandFd, Workload::RandomFixed5, Workload::PowerLawSkew] {
+        let (a, b) = operand_pair(w, 180, 7);
+        let x = probe_vector(b.cols());
+        for s in Strategy::ALL {
+            let want = materialized(&a, &b, &x, None, s);
+            for threads in [1usize, 2, 5] {
+                for partition in [Partition::Rows, Partition::Flops, Partition::Model] {
+                    let mut ctx = EvalContext::using(s)
+                        .with_exec(&pool)
+                        .with_threads(threads)
+                        .with_partition(partition)
+                        .with_machine(default_machine());
+                    let mut y = vec![0.0; a.rows()];
+                    ctx.fused_matvec(&a, &b, &x, &mut y);
+                    assert_eq!(
+                        bits(&y),
+                        bits(&want),
+                        "{w:?} {} threads={threads} {partition:?}",
+                        s.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn expression_layer_lowers_to_the_same_bits() {
+    let pool = ExecPool::new(2);
+    let (a, b) = operand_pair(Workload::RandomFixed5, 160, 21);
+    let x = probe_vector(b.cols());
+    let tail: Vec<f64> = (0..a.rows()).map(|i| i as f64 * 0.125 - 4.0).collect();
+    let want = materialized(&a, &b, &x, None, Strategy::Combined);
+    let want_tail = materialized(&a, &b, &x, Some(&tail), Strategy::Combined);
+
+    // Bare eval (fresh default context) and pooled/threaded contexts.
+    let y = (&a * &b * &x).eval();
+    assert_eq!(bits(&y), bits(&want), "bare eval");
+    let y_tail = (&a * &b * &x + &tail).eval();
+    assert_eq!(bits(&y_tail), bits(&want_tail), "tail eval");
+    for threads in [1usize, 2] {
+        let mut ctx =
+            EvalContext::using(Strategy::Combined).with_exec(&pool).with_threads(threads);
+        let y = (&a * &b * &x).eval_with(&mut ctx);
+        assert_eq!(bits(&y), bits(&want), "pooled eval threads={threads}");
+    }
+
+    // A huge fanout flips the arbitration to the materialized fallback;
+    // the answer must not move by a single bit.
+    let y_mat = (&a * &b * &x).with_fanout(1 << 20).eval();
+    assert_eq!(bits(&y_mat), bits(&want), "materialized fallback");
+    let y_mat_tail = ((&a * &b * &x).with_fanout(1 << 20) + &tail).eval();
+    assert_eq!(bits(&y_mat_tail), bits(&want_tail), "materialized fallback + tail");
+
+    // Plan-cache path: repeated pipelines reuse the shared product plan
+    // (hits go up, symbolic builds don't) and still match bitwise.
+    let cache = PlanCache::default();
+    let mut ctx = EvalContext::new().with_exec(&pool).with_plan_cache(&cache);
+    let mut y = vec![0.0; a.rows()];
+    for _ in 0..3 {
+        ctx.fused_matvec(&a, &b, &x, &mut y);
+        assert_eq!(bits(&y), bits(&want), "planned fused");
+    }
+    let stats = cache.stats();
+    ctx.fused_matvec(&a, &b, &x, &mut y);
+    let after = cache.stats();
+    assert_eq!(bits(&y), bits(&want), "planned fused, warm");
+    assert_eq!(after.symbolic_builds, stats.symbolic_builds, "no symbolic rebuild");
+    assert!(after.hits > stats.hits, "warm pipeline hits the plan cache");
+}
+
+#[test]
+fn exact_cancellation_and_empty_rows_are_bit_identical() {
+    // A is 4×2 with an empty row 1; B is 2×3. Row 0 of the product
+    // cancels exactly in column 0 (1·1 + 1·(−1) = ±0.0): the fused
+    // contraction and the materialized product must agree on the sign
+    // of that zero, because both fold the same partials in the same
+    // order.
+    let a = CsrMatrix::from_parts(
+        4,
+        2,
+        vec![0, 2, 2, 3, 5],
+        vec![0, 1, 0, 0, 1],
+        vec![1.0, 1.0, 2.5, -3.0, 0.5],
+    );
+    let b = CsrMatrix::from_parts(
+        2,
+        3,
+        vec![0, 2, 4],
+        vec![0, 1, 0, 2],
+        vec![1.0, 4.0, -1.0, 8.0],
+    );
+    let x = vec![7.0, -2.0, 1.5];
+    let tail = vec![0.25, -0.25, 3.0, -3.0];
+    for s in Strategy::ALL {
+        let want = materialized(&a, &b, &x, None, s);
+        let mut y = vec![0.0; a.rows()];
+        EvalContext::using(s).fused_matvec(&a, &b, &x, &mut y);
+        assert_eq!(bits(&y), bits(&want), "cancellation, {}", s.name());
+        assert_eq!(y[1].to_bits(), 0.0f64.to_bits(), "empty row stays +0.0");
+    }
+    let want_tail = materialized(&a, &b, &x, Some(&tail), Strategy::Combined);
+    let y_tail = (&a * &b * &x + &tail).eval();
+    assert_eq!(bits(&y_tail), bits(&want_tail), "cancellation + tail");
+}
+
+#[test]
+fn nan_payloads_propagate_identically() {
+    // A NaN (and an ∞, whose partial sums can collapse to NaN) in the
+    // left operand poisons every product entry its row produces; fused
+    // and materialized must emit byte-identical payloads. Compared via
+    // to_bits — comparing the floats would fail outright, NaN != NaN.
+    let (_, b) = operand_pair(Workload::RandomFixed5, 96, 5);
+    let a = CsrMatrix::from_parts(
+        3,
+        96,
+        vec![0, 2, 4, 5],
+        vec![0, 10, 20, 21, 5],
+        vec![f64::NAN, 1.0, f64::INFINITY, -1.0, 2.0],
+    );
+    let x = probe_vector(b.cols());
+    for s in Strategy::ALL {
+        let want = materialized(&a, &b, &x, None, s);
+        assert!(want.iter().any(|v| v.is_nan()), "probe must actually hit a NaN");
+        let mut y = vec![0.0; a.rows()];
+        EvalContext::using(s).fused_matvec(&a, &b, &x, &mut y);
+        assert_eq!(bits(&y), bits(&want), "NaN propagation, {}", s.name());
+    }
+    // And through the expression layer on both sides of the arbitration.
+    let want = materialized(&a, &b, &x, None, Strategy::Combined);
+    let mut ctx = EvalContext::using(Strategy::Combined);
+    let y = (&a * &b * &x).eval_with(&mut ctx);
+    assert_eq!(bits(&y), bits(&want), "NaN via fused expression");
+    let y_mat = (&a * &b * &x).with_fanout(1 << 20).eval_with(&mut ctx);
+    assert_eq!(bits(&y_mat), bits(&want), "NaN via materialized fallback");
+}
