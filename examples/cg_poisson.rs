@@ -1,11 +1,12 @@
 //! Domain example: conjugate-gradient solve of the 2D Poisson problem —
 //! the FD workload the paper's matrices come from, and the CG algorithm
 //! its companion study [12] benchmarks. Exercises SpMV, the expression
-//! layer and the FD generator.
+//! layer, the fused multi-factor chain pipeline and the FD generator.
 //!
 //! Run: `cargo run --release --example cg_poisson [-- grid_k]`
 
-use blazert::expr::vector::{cg, norm2};
+use blazert::expr::vector::{cg_with, norm2};
+use blazert::expr::{EvalContext, Expression};
 use blazert::gen::{fd_poisson_2d, fd_rhs_ones};
 use blazert::sparse::SparseShape;
 use blazert::util::timer::Stopwatch;
@@ -19,14 +20,17 @@ fn main() {
     println!("matrix: nnz = {} ({:.2} per row)", a.nnz(), a.nnz() as f64 / n as f64);
     let b = fd_rhs_ones(k);
 
+    // The iteration body runs through the expression layer's
+    // no-allocation context path (`ap = A·p` per iteration).
+    let mut ctx = EvalContext::new();
     let sw = Stopwatch::start();
-    let (x, iters, res) = cg(&a, &b, 1e-10, 10 * n);
+    let s = cg_with(|p, ap| (&a * p).eval_into_ctx(ap, &mut ctx), &b, 1e-10, 10 * n);
     let dt = sw.seconds();
+    let (x, iters, res) = (s.x, s.iterations, s.residual);
 
-    // Verify: residual + discrete max principle. The residual SpMV goes
-    // through the expression layer's no-allocation form.
+    // Verify: residual + discrete max principle.
     let mut ax = vec![0.0; n];
-    (&a * &x).eval_into(&mut ax);
+    (&a * &x[..]).eval_into(&mut ax);
     let r: Vec<f64> = ax.iter().zip(&b).map(|(p, q)| p - q).collect();
     let max_u = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
     println!(
@@ -44,12 +48,39 @@ fn main() {
     assert!(norm2(&r) < 1e-7, "residual too large");
     assert!(x.iter().all(|&v| v > 0.0), "max principle violated");
 
+    // The fused-chain iteration: CG on the (still SPD) cubed operator
+    // A³u = b. The streamed body evaluates the three-factor chain
+    // A·A·A·p per iteration through the DP-lowered pipeline — neither
+    // A·A nor (A·A)·A is ever materialized — and must track the
+    // materialized loop (both products stored, then a plain SpMV)
+    // bit-for-bit.
+    let budget = 40;
+    let sw = Stopwatch::start();
+    let fused = cg_with(|p, ap| (&a * &a * &a * p).eval_into_ctx(ap, &mut ctx), &b, 1e-30, budget);
+    let dt_fused = sw.seconds();
+    let m2 = (&a * &a).eval();
+    let m3 = (&m2 * &a).eval();
+    let mat = cg_with(|p, ap| (&m3 * p).eval_into(ap), &b, 1e-30, budget);
+    assert_eq!(fused.history.len(), mat.history.len());
+    assert!(
+        fused.history.iter().zip(&mat.history).all(|(f, m)| f.to_bits() == m.to_bits()),
+        "fused chain CG diverged from the materialized loop"
+    );
+    assert!(fused.x.iter().zip(&mat.x).all(|(f, m)| f.to_bits() == m.to_bits()));
+    println!(
+        "chain CG (A^3 u = b, {budget} iterations, {:.1} ms): ||r|| {:.3e} -> {:.3e}, \
+         residual trajectory bit-identical to the materialized loop",
+        dt_fused * 1e3,
+        fused.history[0],
+        fused.residual
+    );
+
     // The SpMV throughput figure (2 flops per nnz):
     let flops = 2 * a.nnz();
     let sw = Stopwatch::start();
     let reps = 50;
     let mut y = vec![0.0; n];
-    let ax_expr = &a * &x;
+    let ax_expr = &a * &x[..];
     for _ in 0..reps {
         ax_expr.eval_into(&mut y);
         std::hint::black_box(&y);

@@ -108,6 +108,24 @@ fn main() {
         y_tail.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     );
 
+    // --- Streamed multi-factor chains: A*B*A*x, zero intermediates -----
+    // The chain DP extends fusion through every hop: leading products
+    // stream row-by-row into the fused root, so neither A*B nor
+    // (A*B)*A is ever stored — and the result is still bit-identical
+    // to materializing every hop.
+    let sw = Stopwatch::start();
+    let y3 = (&a * &b * &a * &xv).eval();
+    let dt = sw.seconds();
+    let m2 = (&a * &b).eval();
+    let m3 = (&m2 * &a).eval();
+    let y3_mat = (&m3 * &xv).eval();
+    let identical3 = y3.iter().zip(&y3_mat).all(|(p, q)| p.to_bits() == q.to_bits());
+    println!(
+        "chain:   A*B*A*x streamed in {:.2} ms, no intermediates; bits match materialized: {}",
+        dt * 1e3,
+        identical3
+    );
+
     // --- No-allocation assignment: C is reused across evaluations ------
     let mut out = CsrMatrix::new(0, 0);
     (&ar * &br).assign_to(&mut out, &mut EvalContext::new());

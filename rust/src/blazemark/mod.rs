@@ -30,5 +30,6 @@ pub mod runner;
 pub use figures::{figure_by_id, Figure, SeriesKind, FIGURES};
 pub use report::{row_field, run_figure, BenchRecord, BenchRow, FigureResult, BENCH_SCHEMA};
 pub use runner::{
-    measure, BenchConfig, Measurement, Pipeline, PipelineAccounting, PlanMode, SweepSession,
+    measure, BenchConfig, ChainAccounting, Measurement, Pipeline, PipelineAccounting, PlanMode,
+    SweepSession,
 };

@@ -11,10 +11,14 @@ use crate::kernels::parallel::{par_planned_fill, par_spmmm_into};
 use crate::kernels::spmv::{spmv, spmv_traced};
 use crate::kernels::tracer::CountingTracer;
 use crate::kernels::{
-    fused_serial_ws, fused_spmmm_spmv_traced, par_fused_spmmm_spmv, planned_fill_serial,
-    planned_fill_serial_csc, spmmm_into_traced, Strategy,
+    fused_serial_ws, fused_spmmm_spmv_traced, par_fused_spmmm_spmv, par_streamed_chain,
+    planned_fill_serial, planned_fill_serial_csc, spmmm_into_traced, streamed_chain_traced,
+    streamed_chain_ws, Strategy,
 };
-use crate::model::{fused_pipeline_lower_bound_bytes, percent_of_roofline, Machine};
+use crate::model::{
+    fused_pipeline_lower_bound_bytes, percent_of_roofline, streamed_chain_lower_bound_bytes,
+    Machine,
+};
 use crate::plan::{PlanCache, PlanKey, PlanStats, PlanStore, SpmmmPlan, StoreStats};
 use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
 use crate::util::timer::Stopwatch;
@@ -162,6 +166,41 @@ impl PipelineAccounting {
     }
 }
 
+/// Tracer-exact byte accounting for the three-factor chain pair
+/// `y = (A·B·C)·x` — the multi-hop analogue of [`PipelineAccounting`],
+/// produced by [`SweepSession::account_streamed_chain`]. At the
+/// instruction level the streamed lowering books every middle hop like
+/// the materialized one (same appends, same re-reads, on recycled
+/// addresses a cache simulator sees as resident), so the counting-level
+/// identity is the root fusion's:
+/// `streamed_bytes + 32 · final_nnz == materialized_bytes`; the
+/// intermediates' traffic saving appears at the cache levels, which the
+/// fused kernel's hierarchy tests pin.
+#[derive(Clone, Copy, Debug)]
+pub struct ChainAccounting {
+    /// Exact bytes moved by the traced streamed chain.
+    pub streamed_bytes: u64,
+    /// Flops of the chain pipeline (identical on both sides).
+    pub streamed_flops: u64,
+    /// Exact bytes moved by traced materialize-every-hop-then-SpMV.
+    pub materialized_bytes: u64,
+    /// Entries of the (never-materialized) leading product `A·B`.
+    pub intermediate_nnz: usize,
+    /// Entries of the full chain product `A·B·C`.
+    pub final_nnz: usize,
+    /// Analytic floor ([`streamed_chain_lower_bound_bytes`]) the `%roof`
+    /// figure divides streamed measurements by.
+    pub lower_bound_bytes: u64,
+}
+
+impl ChainAccounting {
+    /// Bytes the streamed lowering removed at the counting level — the
+    /// root contraction's fusion saving (32 B per final entry).
+    pub fn bytes_saved(&self) -> u64 {
+        self.materialized_bytes - self.streamed_bytes
+    }
+}
+
 /// Persistent measurement state for a sweep: one [`ExecPool`] (workers
 /// + workspaces spawned once), one reused output matrix, and one
 /// [`PlanCache`] for warm planned series. Every repetition of every
@@ -172,6 +211,9 @@ pub struct SweepSession {
     machine: Machine,
     out: CsrMatrix,
     out_csc: CscMatrix,
+    /// Second reused output for chain baselines that materialize two
+    /// intermediates (`A·B` lands in `out`, `(A·B)·C` here).
+    chain_out: CsrMatrix,
     y: Vec<f64>,
     plans: PlanCache,
 }
@@ -184,6 +226,7 @@ impl SweepSession {
             machine: Machine::sandy_bridge_i7_2600(),
             out: CsrMatrix::new(0, 0),
             out_csc: CscMatrix::new(0, 0),
+            chain_out: CsrMatrix::new(0, 0),
             y: Vec::new(),
             plans: PlanCache::default(),
         }
@@ -373,6 +416,91 @@ impl SweepSession {
                 }
                 spmv(out, x, y);
             }),
+        }
+    }
+
+    /// Measure one lowering of the three-factor chain pipeline
+    /// `y = (A · B · C) · x` under `cfg` — the chain analogue of
+    /// [`SweepSession::measure_fused_pipeline`]. [`Pipeline::Fused`]
+    /// times the streamed multi-hop kernel (no intermediate product is
+    /// ever materialized; the warm timed region performs zero heap
+    /// allocations); [`Pipeline::Materialized`] stores both
+    /// intermediates into the session's reused outputs and finishes
+    /// with a plain SpMV.
+    #[allow(clippy::too_many_arguments)]
+    pub fn measure_streamed_chain(
+        &mut self,
+        cfg: &BenchConfig,
+        a: &CsrMatrix,
+        b: &CsrMatrix,
+        c: &CsrMatrix,
+        x: &[f64],
+        strategy: Strategy,
+        threads: usize,
+        partition: Partition,
+        pipeline: Pipeline,
+    ) -> Measurement {
+        let SweepSession { pool, machine, out, chain_out, y, .. } = self;
+        y.resize(SparseShape::rows(a), 0.0);
+        match pipeline {
+            Pipeline::Fused => {
+                let factors = [a, b, c];
+                measure(cfg, || {
+                    if threads > 1 {
+                        par_streamed_chain(
+                            pool, &factors, x, threads, strategy, partition, machine, y,
+                        );
+                    } else {
+                        pool.with_local(|ws| streamed_chain_ws(ws, &factors, x, strategy, y));
+                    }
+                })
+            }
+            Pipeline::Materialized => measure(cfg, || {
+                if threads > 1 {
+                    par_spmmm_into(pool, a, b, threads, strategy, partition, machine, out);
+                    par_spmmm_into(pool, out, c, threads, strategy, partition, machine, chain_out);
+                } else {
+                    pool.with_local(|ws| serial_spmmm_into(ws, a, b, strategy, out));
+                    pool.with_local(|ws| serial_spmmm_into(ws, out, c, strategy, chain_out));
+                }
+                spmv(chain_out, x, y);
+            }),
+        }
+    }
+
+    /// Tracer-exact byte accounting for the three-factor chain pair
+    /// `y = (A · B · C) · x`: replays both lowerings through
+    /// [`CountingTracer`]s — see [`ChainAccounting`] for the identity
+    /// the figures satisfy. Untimed; feeds the chain-fusion ablation's
+    /// `traffic_bytes`, `final_nnz`, and `%roof` columns.
+    pub fn account_streamed_chain(
+        &mut self,
+        a: &CsrMatrix,
+        b: &CsrMatrix,
+        c: &CsrMatrix,
+        x: &[f64],
+        strategy: Strategy,
+    ) -> ChainAccounting {
+        self.y.resize(SparseShape::rows(a), 0.0);
+        let mut streamed_tr = CountingTracer::default();
+        streamed_chain_traced(&[a, b, c], x, strategy, &mut self.y, &mut streamed_tr);
+        let mut mat_tr = CountingTracer::default();
+        let mut c1 = CsrMatrix::new(0, 0);
+        let mut c2 = CsrMatrix::new(0, 0);
+        spmmm_into_traced(a, b, strategy, &mut c1, &mut mat_tr);
+        spmmm_into_traced(&c1, c, strategy, &mut c2, &mut mat_tr);
+        spmv_traced(&c2, x, &mut self.y, &mut mat_tr);
+        ChainAccounting {
+            streamed_bytes: streamed_tr.traffic(),
+            streamed_flops: streamed_tr.flops,
+            materialized_bytes: mat_tr.traffic(),
+            intermediate_nnz: c1.nnz(),
+            final_nnz: c2.nnz(),
+            lower_bound_bytes: streamed_chain_lower_bound_bytes(
+                &[a.nnz(), b.nnz(), c.nnz()],
+                c2.nnz(),
+                SparseShape::rows(a),
+            ),
         }
     }
 
@@ -627,6 +755,74 @@ mod tests {
         );
         let pct = session.roofline_percent(
             acct.fused_flops as f64,
+            acct.lower_bound_bytes as f64,
+            &m,
+        );
+        assert!(pct > 0.0 && pct.is_finite());
+    }
+
+    #[test]
+    fn streamed_chain_measurement_and_accounting() {
+        use crate::gen::{operand_pair, Workload};
+        use crate::kernels::spmmm;
+        let cfg = BenchConfig { min_time_s: 0.001, trials: 1 };
+        let (a, b) = operand_pair(Workload::FiveBandFd, 130, 11);
+        let (c, _) = operand_pair(Workload::FiveBandFd, 130, 12);
+        let x: Vec<f64> = (0..SparseShape::cols(&c)).map(|i| 0.5 + (i % 7) as f64).collect();
+        let c1 = spmmm(&a, &b, Strategy::Combined);
+        let c2 = spmmm(&c1, &c, Strategy::Combined);
+        let mut want = vec![0.0; SparseShape::rows(&a)];
+        spmv(&c2, &x, &mut want);
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+
+        let mut session = SweepSession::new(2);
+        for threads in [1usize, 2] {
+            for pipeline in [Pipeline::Fused, Pipeline::Materialized] {
+                let m = session.measure_streamed_chain(
+                    &cfg,
+                    &a,
+                    &b,
+                    &c,
+                    &x,
+                    Strategy::Combined,
+                    threads,
+                    Partition::Flops,
+                    pipeline,
+                );
+                assert!(m.best_seconds > 0.0);
+                assert_eq!(
+                    bits(session.y()),
+                    bits(&want),
+                    "threads={threads} pipeline={pipeline:?}"
+                );
+            }
+        }
+
+        // Counting-level identity: the streamed chain saves exactly the
+        // root contraction's 32 B per final entry at identical flops;
+        // the intermediates' savings live at the cache levels.
+        let acct = session.account_streamed_chain(&a, &b, &c, &x, Strategy::Combined);
+        assert_eq!(acct.intermediate_nnz, c1.nnz());
+        assert_eq!(acct.final_nnz, c2.nnz());
+        assert_eq!(
+            acct.streamed_bytes + 32 * acct.final_nnz as u64,
+            acct.materialized_bytes
+        );
+        assert!(acct.bytes_saved() > 0);
+        assert!(acct.lower_bound_bytes <= acct.streamed_bytes, "floor is a floor");
+        let m = session.measure_streamed_chain(
+            &cfg,
+            &a,
+            &b,
+            &c,
+            &x,
+            Strategy::Combined,
+            1,
+            Partition::Flops,
+            Pipeline::Fused,
+        );
+        let pct = session.roofline_percent(
+            acct.streamed_flops as f64,
             acct.lower_bound_bytes as f64,
             &m,
         );

@@ -29,7 +29,7 @@ mod workspace;
 
 pub use partition::{col_seconds, col_slab_bounds_into, row_seconds, slab_bounds_into, Partition};
 pub use pool::{default_machine, ExecPool};
-pub use workspace::{Workspace, WsAccum};
+pub use workspace::{ChainRowBuf, Workspace, WsAccum};
 
 use crate::kernels::tracer::NullTracer;
 use crate::kernels::{with_strategy_accumulator, Strategy};

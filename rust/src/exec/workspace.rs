@@ -16,6 +16,45 @@ use crate::kernels::store::{
     Sort, SortRadix,
 };
 use crate::sparse::CsrMatrix;
+use std::borrow::Cow;
+
+/// One sparse row in coordinate-split form — the streaming buffer the
+/// multi-hop fused kernels pass a row of a leading product through
+/// instead of materializing the whole intermediate matrix. Entries are
+/// kept in increasing column order with exact zeros dropped (the same
+/// invariant every storing strategy's `flush` guarantees), so the buffer
+/// contents are bit-for-bit the row the materialized product would hold.
+#[derive(Debug, Default)]
+pub struct ChainRowBuf {
+    /// Column indices, strictly increasing.
+    pub idx: Vec<usize>,
+    /// Matching values (never exact zero).
+    pub val: Vec<f64>,
+}
+
+impl ChainRowBuf {
+    /// Drop all entries, keeping the capacity.
+    pub fn clear(&mut self) {
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    /// Number of stored entries.
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// True when the row is empty.
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Append an entry (callers maintain the sorted/nonzero invariant).
+    pub fn push(&mut self, idx: usize, val: f64) {
+        self.idx.push(idx);
+        self.val.push(val);
+    }
+}
 
 /// One worker's persistent scratch arena. Held by every [`super::ExecPool`]
 /// worker thread (plus one "local" instance for the coordinator-side
@@ -54,6 +93,18 @@ pub struct Workspace {
     pub plan_mark_gen: u64,
     /// Touched-column collector of the symbolic phase.
     pub plan_touched: Vec<usize>,
+    /// Streaming row buffer of the multi-hop fused chain kernels: one
+    /// sparse row of a leading product in flight between hops. A single
+    /// buffer suffices because each hop drains it into the strategy
+    /// accumulator *before* refilling it from the flush.
+    pub chain_row: ChainRowBuf,
+    /// Recycled flattened-factor lists for chain-times-vector sugar
+    /// (`MatChainVecExpr::eval_into_ctx` and the streamed-spine
+    /// assembly). A stack because the sugar's flattened list and the
+    /// schedule's spine list are live at the same time. Stored with a
+    /// `'static` lifetime parameter purely as a placeholder: the vecs
+    /// are always empty here, only their allocations are reused.
+    chain_factors: Vec<Vec<Cow<'static, CsrMatrix>>>,
 }
 
 impl Workspace {
@@ -74,6 +125,33 @@ impl Workspace {
             self.plan_temp.resize(want, 0.0);
         }
         &mut self.plan_temp
+    }
+
+    /// Borrow a recycled (empty) flattened-factor list. The allocation
+    /// comes from the last [`Workspace::restore_factor_list`] at this
+    /// depth, so a warm chain evaluation never reallocates it. The
+    /// lifetime is the caller's choice — sound because the vec holds no
+    /// values and `Cow<'_, CsrMatrix>` has a lifetime-independent layout.
+    pub fn take_factor_list<'s>(&mut self) -> Vec<Cow<'s, CsrMatrix>> {
+        let v = self.chain_factors.pop().unwrap_or_default();
+        debug_assert!(v.is_empty());
+        let mut v = std::mem::ManuallyDrop::new(v);
+        // SAFETY: `v` is empty, so no value's lifetime is being altered;
+        // only the (typed, zero-length) allocation is reinterpreted, and
+        // `Cow<'a, CsrMatrix>` has one layout for every `'a`.
+        unsafe { Vec::from_raw_parts(v.as_mut_ptr().cast(), 0, v.capacity()) }
+    }
+
+    /// Return a factor list taken with [`Workspace::take_factor_list`].
+    /// Owned entries are dropped here; the allocation goes back on the
+    /// recycling stack for the next chain evaluation.
+    pub fn restore_factor_list(&mut self, mut v: Vec<Cow<'_, CsrMatrix>>) {
+        v.clear();
+        let mut v = std::mem::ManuallyDrop::new(v);
+        // SAFETY: as in `take_factor_list` — empty vec, layout-identical
+        // element types differing only in the (erased) lifetime.
+        let v = unsafe { Vec::from_raw_parts(v.as_mut_ptr().cast(), 0, v.capacity()) };
+        self.chain_factors.push(v);
     }
 
     /// The cached accumulator of strategy type `A`, grown to cover a
@@ -149,6 +227,39 @@ mod tests {
         assert_eq!(ws.plan_temp_mut(13).len(), 16);
         assert_eq!(ws.plan_temp_mut(3).len(), 16, "never shrinks");
         assert!(ws.plan_temp.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn chain_row_buf_keeps_capacity_across_clears() {
+        let mut buf = ChainRowBuf::default();
+        assert!(buf.is_empty());
+        buf.push(3, 1.5);
+        buf.push(7, -2.0);
+        assert_eq!(buf.len(), 2);
+        let cap = (buf.idx.capacity(), buf.val.capacity());
+        buf.clear();
+        assert!(buf.is_empty());
+        assert_eq!((buf.idx.capacity(), buf.val.capacity()), cap);
+    }
+
+    #[test]
+    fn factor_lists_recycle_their_allocations() {
+        let mut ws = Workspace::new();
+        let a = CsrMatrix::new(2, 2);
+        let mut v = ws.take_factor_list();
+        v.push(std::borrow::Cow::Borrowed(&a));
+        v.push(std::borrow::Cow::Owned(CsrMatrix::new(2, 2)));
+        let cap = v.capacity();
+        ws.restore_factor_list(v);
+        // Two lists can be live at once (sugar + spine); both recycle.
+        let v1: Vec<std::borrow::Cow<'_, CsrMatrix>> = ws.take_factor_list();
+        let mut v2 = ws.take_factor_list();
+        assert_eq!(v1.capacity(), cap, "warm take reuses the allocation");
+        assert!(v1.is_empty() && v2.is_empty());
+        v2.push(std::borrow::Cow::Borrowed(&a));
+        ws.restore_factor_list(v2);
+        ws.restore_factor_list(v1);
+        assert_eq!(ws.chain_factors.len(), 2);
     }
 
     #[test]

@@ -21,13 +21,24 @@ use crate::kernels::tracer::MemTracer;
 use crate::kernels::spmv::{spmv, spmv_traced};
 use crate::kernels::{
     combined_pre, fused_planned_serial, fused_serial_ws, fused_spmmm_spmv,
-    fused_spmmm_spmv_traced, par_fused_planned, par_fused_spmmm_spmv, parallel,
-    planned_fill_serial, spmmm, spmmm_into, spmmm_into_traced, spmmm_traced, Strategy,
+    fused_spmmm_spmv_traced, par_fused_planned, par_fused_spmmm_spmv, par_streamed_chain,
+    parallel, planned_fill_serial, spmmm, spmmm_into, spmmm_into_traced, spmmm_traced,
+    streamed_chain_planned, streamed_chain_traced, streamed_chain_ws, Strategy,
 };
 use crate::model::Machine;
 use crate::plan::{PlanCache, PlanKey, PlanStore, Probe, SpmmmPlan};
 use crate::sparse::CsrMatrix;
+use std::borrow::Cow;
 use std::sync::Arc;
+
+// Pool-less chain-pipeline scratch: the streamed multi-hop kernel and
+// the chain sugar's factor lists run out of a thread-local workspace, so
+// even contexts without an attached pool evaluate warm chains without
+// heap allocation.
+thread_local! {
+    static CHAIN_WS: std::cell::RefCell<Workspace> =
+        std::cell::RefCell::new(Workspace::new());
+}
 
 /// Context for one expression evaluation. Defaults: model-guided
 /// strategy selection, one thread, flop-balanced partitioning, no pool,
@@ -98,8 +109,8 @@ impl<'t> EvalContext<'t> {
     }
 
     /// Use a different machine description for the cost model.
-    pub fn with_machine(mut self, machine: Machine) -> Self {
-        self.machine = machine;
+    pub fn with_machine(mut self, machine: &Machine) -> Self {
+        self.machine = machine.clone();
         self
     }
 
@@ -375,6 +386,88 @@ impl<'t> EvalContext<'t> {
         fused_spmmm_spmv(a, b, x, strategy, y);
     }
 
+    /// Borrow a recycled factor-list allocation (pool workspace when
+    /// attached, thread-local otherwise). Pair with
+    /// [`Self::restore_factor_list`] so warm chain evaluations never
+    /// allocate the flattened factor vector — the lists form a small
+    /// stack, so the chain sugar's list and the schedule's spine list
+    /// can be live simultaneously.
+    pub fn take_factor_list<'s>(&mut self) -> Vec<Cow<'s, CsrMatrix>> {
+        match self.exec {
+            Some(pool) => pool.with_local(|ws| ws.take_factor_list()),
+            None => CHAIN_WS.with(|ws| ws.borrow_mut().take_factor_list()),
+        }
+    }
+
+    /// Return a factor list taken with [`Self::take_factor_list`] to the
+    /// recycling stack (cleared; its allocation survives for the next
+    /// take).
+    pub fn restore_factor_list(&mut self, list: Vec<Cow<'_, CsrMatrix>>) {
+        match self.exec {
+            Some(pool) => pool.with_local(|ws| ws.restore_factor_list(list)),
+            None => CHAIN_WS.with(|ws| ws.borrow_mut().restore_factor_list(list)),
+        }
+    }
+
+    /// Evaluate the streamed multi-hop pipeline
+    /// `y = (F₁ · F₂ · … · F_k) · x` under this context — the
+    /// chain-times-vector lowering that materializes *no* prefix
+    /// product (see [`crate::kernels::fused`]'s streaming chains).
+    /// Dispatch mirrors [`Self::fused_matvec`]: the plan cache is
+    /// probed on the leading pair (whose plan the streamed kernel's
+    /// slab walk consumes), a tracer routes through the traced kernel
+    /// whose byte accounting equals materialize-then-fuse exactly, and
+    /// `threads > 1` streams disjoint row slabs in parallel. Without a
+    /// pool, a thread-local workspace keeps warm evaluations
+    /// allocation-free.
+    pub fn streamed_matvec(&mut self, factors: &[Cow<'_, CsrMatrix>], x: &[f64], y: &mut [f64]) {
+        debug_assert!(factors.len() >= 2, "streamed pipeline needs at least two factors");
+        let (a, b) = (factors[0].as_ref(), factors[1].as_ref());
+        if self.tracer.is_none() && self.strategy.is_none() && self.plan.is_some() {
+            if let Some(plan) = self.plan_probe(a, b) {
+                let strategy = self.strategy_for(a, b);
+                match self.exec {
+                    Some(pool) => pool.with_local(|ws| {
+                        streamed_chain_planned(&plan, factors, x, strategy, ws, y)
+                    }),
+                    None => CHAIN_WS.with(|ws| {
+                        streamed_chain_planned(&plan, factors, x, strategy, &mut ws.borrow_mut(), y)
+                    }),
+                }
+                return;
+            }
+        }
+        let strategy = self.strategy_for(a, b);
+        if let Some(tr) = self.tracer.as_mut() {
+            let mut dyn_tr: &mut dyn MemTracer = &mut **tr;
+            streamed_chain_traced(factors, x, strategy, y, &mut dyn_tr);
+            return;
+        }
+        if self.threads > 1 {
+            let pool = match self.exec {
+                Some(p) => p,
+                None => ExecPool::global(),
+            };
+            par_streamed_chain(
+                pool,
+                factors,
+                x,
+                self.threads,
+                strategy,
+                self.partition,
+                &self.machine,
+                y,
+            );
+            return;
+        }
+        match self.exec {
+            Some(pool) => pool.with_local(|ws| streamed_chain_ws(ws, factors, x, strategy, y)),
+            None => CHAIN_WS.with(|ws| {
+                streamed_chain_ws(&mut ws.borrow_mut(), factors, x, strategy, y)
+            }),
+        }
+    }
+
     /// Fused numeric refill of one planned pipeline (serial or
     /// parallel, workspace-backed when a pool is attached) — the fused
     /// counterpart of [`Self::planned_fill`].
@@ -540,6 +633,91 @@ mod tests {
         assert!(out.approx_eq(&c, 0.0));
         assert_eq!(cache.stats().hits, s.hits + 1);
         assert_eq!(cache.stats().symbolic_builds, 1);
+    }
+
+    #[test]
+    fn streamed_matvec_matches_the_materialized_chain_on_all_paths() {
+        let a = random_fixed_per_row(40, 36, 4, 7);
+        let b = random_fixed_per_row(36, 30, 3, 8);
+        let c = random_fixed_per_row(30, 24, 3, 9);
+        let x: Vec<f64> = (0..24).map(|i| 0.5 + (i % 3) as f64 - (i % 2) as f64).collect();
+        let ab = spmmm(&a, &b, Strategy::Combined);
+        let abc = spmmm(&ab, &c, Strategy::Combined);
+        let mut want = vec![0.0; 40];
+        spmv(&abc, &x, &mut want);
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        let factors = vec![Cow::Borrowed(&a), Cow::Borrowed(&b), Cow::Borrowed(&c)];
+        let mut y = vec![0.0; 40];
+
+        // Pool-less serial (thread-local workspace).
+        EvalContext::new().streamed_matvec(&factors, &x, &mut y);
+        assert_eq!(bits(&y), bits(&want), "serial");
+        // Fixed-strategy override (flush-order invariant: still
+        // bit-identical).
+        y.fill(0.0);
+        EvalContext::using(Strategy::Sort).streamed_matvec(&factors, &x, &mut y);
+        assert_eq!(bits(&y), bits(&want), "sort override");
+        // Pooled serial and parallel.
+        let pool = ExecPool::new(2);
+        y.fill(0.0);
+        EvalContext::new().with_exec(&pool).streamed_matvec(&factors, &x, &mut y);
+        assert_eq!(bits(&y), bits(&want), "pooled");
+        y.fill(0.0);
+        EvalContext::new().with_exec(&pool).with_threads(3).streamed_matvec(&factors, &x, &mut y);
+        assert_eq!(bits(&y), bits(&want), "parallel");
+        // Traced.
+        let mut tr = CountingTracer::default();
+        y.fill(0.0);
+        EvalContext::new().with_tracer(&mut tr).streamed_matvec(&factors, &x, &mut y);
+        assert_eq!(bits(&y), bits(&want), "traced");
+        assert!(tr.flops > 0);
+    }
+
+    #[test]
+    fn streamed_matvec_shares_the_plan_cache() {
+        use crate::gen::fd_poisson_2d;
+        let a = fd_poisson_2d(12);
+        let n = 144;
+        let x: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
+        let c2 = spmmm(&a, &a, Strategy::Combined);
+        let c3 = spmmm(&c2, &a, Strategy::Combined);
+        let mut want = vec![0.0; n];
+        spmv(&c3, &x, &mut want);
+        let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+
+        let cache = PlanCache::default();
+        let pool = ExecPool::new(2);
+        let mut ctx = EvalContext::new().with_exec(&pool).with_plan_cache(&cache);
+        let factors = vec![Cow::Borrowed(&a), Cow::Borrowed(&a), Cow::Borrowed(&a)];
+        let mut y = vec![0.0; n];
+        // Same lifecycle as the two-operand pipeline: first sight
+        // unplanned, second builds the leading pair's plan, third is a
+        // warm planned slab walk — all bit-identical.
+        for _ in 0..3 {
+            y.fill(0.0);
+            ctx.streamed_matvec(&factors, &x, &mut y);
+            assert_eq!(bits(&y), bits(&want));
+        }
+        let s = cache.stats();
+        assert_eq!(s.symbolic_builds, 1);
+        assert!(s.hits >= 1);
+    }
+
+    #[test]
+    fn factor_lists_recycle_through_the_context() {
+        let mut ctx = EvalContext::new();
+        let mut first = ctx.take_factor_list();
+        first.push(Cow::Owned(CsrMatrix::new(2, 2)));
+        first.push(Cow::Owned(CsrMatrix::new(3, 3)));
+        // A second list can be live at the same time (sugar + spine).
+        let second = ctx.take_factor_list();
+        assert!(second.is_empty());
+        ctx.restore_factor_list(first);
+        ctx.restore_factor_list(second);
+        // Warm takes reuse the returned allocation.
+        let warm: Vec<Cow<'_, CsrMatrix>> = ctx.take_factor_list();
+        assert!(warm.capacity() >= 2, "recycled list keeps its allocation");
+        ctx.restore_factor_list(warm);
     }
 
     #[test]

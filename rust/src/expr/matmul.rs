@@ -248,12 +248,14 @@ impl<'v, E: SparseOperand> MatChainVecExpr<'v, E> {
     }
 
     /// Evaluate into an existing buffer (no allocation once the
-    /// context's scratch is warm).
+    /// context's scratch is warm — the flattened factor list itself is
+    /// staged in recycled workspace scratch).
     pub fn eval_into_ctx(&self, y: &mut [f64], ctx: &mut EvalContext<'_>) {
         assert_eq!(y.len(), self.chain.op_rows(), "output length");
-        let mut factors = Vec::new();
+        let mut factors = ctx.take_factor_list();
         self.chain.flatten_product(ctx, &mut factors);
         schedule::eval_chain_vec(&factors, self.x, self.fanout, ctx, y);
+        ctx.restore_factor_list(factors);
         if let Some(t) = self.tail {
             if let Some(tr) = ctx.tracer.as_mut() {
                 for r in 0..y.len() {

@@ -26,9 +26,24 @@
 //!    `nnz(L) · nnz(R) / rows(R)` (the paper's Σ āₖ·b̄ₖ under a uniform
 //!    row-population assumption), converted to seconds through the same
 //!    roofline hook. The cheapest parenthesization is then evaluated.
+//!
+//! 3. **Streaming depth of chain-times-vector pipelines**
+//!    ([`chain_vec_schedule`]): when the chain contracts against a
+//!    vector, every prefix split gains a third state beyond the classic
+//!    DP's materialize: *stream* — hand the running prefix row-by-row to
+//!    the next hop through the fused pipeline's recycled row buffer,
+//!    paying 32 B per multiplication but neither the 24 B/entry store
+//!    nor the 16 B/entry re-read of a materialized intermediate
+//!    ([`crate::model::streamed_hop_seconds`]). The fuse-vs-materialize
+//!    arbitration is backed by the cache simulator's residency rule
+//!    ([`crate::simulator::resident_level`]): a materialized product
+//!    that stays cache-resident re-reads at that level's bandwidth
+//!    ([`crate::model::consumer_reread_seconds`]), so heavy `fanout`
+//!    reuse tips the decision back to materializing.
 
 use crate::kernels::Strategy;
-use crate::model::{roofline_seconds, Machine};
+use crate::model::{consumer_reread_seconds, roofline_seconds, streamed_hop_seconds, Machine};
+use crate::simulator::{intermediate_footprint_bytes, resident_level};
 use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
 use std::borrow::Cow;
 
@@ -350,6 +365,19 @@ pub struct ChainPlan {
 /// Matrix-chain ordering over estimated roofline costs (classic O(n³)
 /// dynamic program; chains are short, n is typically 2–5).
 pub fn chain_plan(machine: &Machine, metas: &[FactorMeta]) -> ChainPlan {
+    let (cost, split, _) = chain_tables(machine, metas);
+    let n = metas.len();
+    ChainPlan { cost: cost[0][n - 1], split }
+}
+
+/// The classic materialize-only chain DP, returning its full
+/// `(cost, split, meta)` tables so the streaming DP can price
+/// materialized subchains per split.
+#[allow(clippy::type_complexity)]
+fn chain_tables(
+    machine: &Machine,
+    metas: &[FactorMeta],
+) -> (Vec<Vec<f64>>, Vec<Vec<usize>>, Vec<Vec<FactorMeta>>) {
     let n = metas.len();
     assert!(n >= 1, "empty product chain");
     let mut cost = vec![vec![0.0f64; n]; n];
@@ -374,7 +402,173 @@ pub fn chain_plan(machine: &Machine, metas: &[FactorMeta]) -> ChainPlan {
             cost[i][j] = best;
         }
     }
-    ChainPlan { cost: cost[0][n - 1], split }
+    (cost, split, meta)
+}
+
+/// How the chain DP lowers a chain-times-vector pipeline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ChainVecLowering {
+    /// Materialize the full chain product (reuse pays for the store),
+    /// then contract with a plain SpMV per consumer.
+    Materialize,
+    /// Stream the chain through the fused pipeline: each `(i, j)` entry
+    /// is an inclusive factor range evaluated (via the materialized DP)
+    /// into one spine operand; the spine operands then stream
+    /// row-slab-by-row-slab through the multi-hop fused kernel without
+    /// ever materializing a prefix product. Always has ≥ 2 entries
+    /// covering `0..n` contiguously.
+    Stream {
+        /// Inclusive factor ranges of the spine operands, left to right.
+        spine: Vec<(usize, usize)>,
+    },
+}
+
+/// The chain-times-vector schedule: the materialized DP's association
+/// plan (used both for the `Materialize` fallback and for evaluating
+/// multi-factor spine operands) plus the chosen lowering.
+#[derive(Clone, Debug)]
+pub struct ChainVecSchedule {
+    /// Association-order plan of the classic materialize-only DP.
+    pub plan: ChainPlan,
+    /// The arbitrated lowering.
+    pub lowering: ChainVecLowering,
+}
+
+/// One state of the prefix-streaming DP: the cheapest streamed pipeline
+/// whose running prefix covers factors `0..=j`.
+#[derive(Clone)]
+struct StreamedPrefix {
+    cost: f64,
+    meta: FactorMeta,
+    /// The split: factors `from+1..=j` form this prefix's last spine
+    /// operand.
+    from: usize,
+    /// Whether the lead `0..=from` is itself streamed (`true`) or a
+    /// materialized spine operand (`false`).
+    lead_streamed: bool,
+}
+
+/// Estimated cost and resulting prefix metadata of one streamed hop:
+/// multiply the running prefix (`lead`) by the spine operand `elem`.
+/// Same Σ āₖ·b̄ₖ multiplication estimate as [`pair_cost`], but costed
+/// through [`streamed_hop_seconds`] — no storing term, and the lead's
+/// 16 B/entry read only hits memory when the lead is a materialized
+/// operand rather than the cache-resident stream buffer.
+fn streamed_hop(
+    machine: &Machine,
+    lead: &FactorMeta,
+    elem: &FactorMeta,
+    lead_materialized: bool,
+) -> (f64, FactorMeta) {
+    let mults = if elem.rows == 0 { 0.0 } else { lead.nnz * (elem.nnz / elem.rows as f64) };
+    let dense = lead.rows as f64 * elem.cols as f64;
+    let meta = FactorMeta { rows: lead.rows, cols: elem.cols, nnz: mults.min(dense) };
+    (streamed_hop_seconds(machine, lead.nnz, mults, lead_materialized), meta)
+}
+
+/// DP-level fuse-vs-materialize scheduling for `(Π factors) · x` read by
+/// `fanout` consumers.
+///
+/// On top of the classic materialize-only tables ([`chain_plan`]), a
+/// prefix DP prices *streaming*: for every split `i` the running prefix
+/// `0..=i` either streams onward (its rows live in the fused pipeline's
+/// recycled buffer — the next hop's prefix read is free) or enters as a
+/// materialized spine operand (the hop pays its 16 B/entry re-read),
+/// and the subchain `i+1..=j` always materializes via the classic
+/// tables before streaming through. The best streamed pipeline —
+/// including the final 8 B-gather contraction against `x` — is then
+/// arbitrated against materializing the whole product once and serving
+/// `fanout` SpMV re-reads from wherever the cache simulator's residency
+/// rule says the product stays resident. Ties stream: equal predicted
+/// cost with zero intermediate allocations is strictly better.
+pub fn chain_vec_schedule(
+    machine: &Machine,
+    metas: &[FactorMeta],
+    fanout: usize,
+) -> ChainVecSchedule {
+    let n = metas.len();
+    assert!(n >= 2, "chain-times-vector schedule needs at least two factors");
+    let (cost, split, meta) = chain_tables(machine, metas);
+
+    // stream[j]: cheapest streamed pipeline covering factors 0..=j (at
+    // least one hop, so a spine of >= 2 operands). stream[0] stays None:
+    // a bare factor has nothing to stream through.
+    let mut stream: Vec<Option<StreamedPrefix>> = vec![None; n];
+    for j in 1..n {
+        let mut best: Option<StreamedPrefix> = None;
+        let mut best_cost = f64::INFINITY;
+        for i in 0..j {
+            let elem_cost = cost[i + 1][j];
+            let elem = meta[i + 1][j];
+            // Lead 0..=i enters materialized (classic tables)...
+            let (hop, pmeta) = streamed_hop(machine, &meta[0][i], &elem, true);
+            let total = cost[0][i] + elem_cost + hop;
+            if total < best_cost {
+                best_cost = total;
+                best = Some(StreamedPrefix {
+                    cost: total,
+                    meta: pmeta,
+                    from: i,
+                    lead_streamed: false,
+                });
+            }
+            // ...or is itself already streaming.
+            if let Some(p) = stream[i].clone() {
+                let (hop, pmeta) = streamed_hop(machine, &p.meta, &elem, false);
+                let total = p.cost + elem_cost + hop;
+                if total < best_cost {
+                    best_cost = total;
+                    best = Some(StreamedPrefix {
+                        cost: total,
+                        meta: pmeta,
+                        from: i,
+                        lead_streamed: true,
+                    });
+                }
+            }
+        }
+        stream[j] = best;
+    }
+    let last = stream[n - 1].clone().expect("n >= 2 always yields a streamed pipeline");
+
+    // Streamed side: every consumer re-runs the whole pipeline plus the
+    // final contraction (8 B x-gather per surviving entry, 8 B per y row).
+    let rows = metas[0].rows as f64;
+    let contract =
+        roofline_seconds(machine, 2.0 * last.meta.nnz, 8.0 * last.meta.nnz + 8.0 * rows);
+    let consumers = fanout.max(1);
+    let streamed_total = consumers as f64 * (last.cost + contract);
+
+    // Materialized side: compute and store the product once (the classic
+    // tables already price the storing term), then serve the consumers'
+    // re-read sweeps from the level the product stays resident in.
+    let root = meta[0][n - 1];
+    let residency = resident_level(machine, intermediate_footprint_bytes(root.nnz, rows));
+    let mat_total =
+        cost[0][n - 1] + consumer_reread_seconds(machine, root.nnz, rows, consumers, residency);
+
+    // An (estimated) empty product has nothing worth re-reading:
+    // streaming is then strictly better — it skips the allocation.
+    let lowering = if root.nnz == 0.0 || streamed_total <= mat_total {
+        // Walk the back-pointers into the spine, rightmost operand first.
+        let mut spine = Vec::new();
+        let mut j = n - 1;
+        loop {
+            let p = stream[j].as_ref().expect("back-pointer chain is dense");
+            spine.push((p.from + 1, j));
+            if p.lead_streamed {
+                j = p.from;
+            } else {
+                spine.push((0, p.from));
+                break;
+            }
+        }
+        spine.reverse();
+        ChainVecLowering::Stream { spine }
+    } else {
+        ChainVecLowering::Materialize
+    };
+    ChainVecSchedule { plan: ChainPlan { cost: cost[0][n - 1], split }, lowering }
 }
 
 /// Evaluate a flattened product chain under `ctx`, multiplying in the
@@ -411,12 +605,15 @@ pub(crate) fn eval_chain_into(
 }
 
 /// Evaluate a flattened chain-times-vector pipeline `(Π factors) · x`
-/// into `y`: the chain DP picks the association order, the two sides of
-/// the *root* split evaluate as usual, and the root product either
-/// lowers to the fused spMMM→SpMV pipeline (never materializing it) or
-/// — when [`should_fuse_chain_vec`] predicts that `fanout` consumers'
-/// reuse wins — materializes through the plan-cache-aware product and
-/// finishes with a plain SpMV. Both lowerings are bit-identical.
+/// into `y`. Two factors keep the original arbitration
+/// ([`should_fuse_chain_vec`]: fused spMMM→SpMV vs plan-cache-aware
+/// product + SpMV). Longer chains go through the DP-level schedule
+/// ([`chain_vec_schedule`]): `Materialize` evaluates the classic
+/// association order and finishes with a plain SpMV; a two-operand
+/// `Stream` spine lowers onto the existing fused pipeline; a deeper
+/// spine materializes each spine operand (single factors borrow) and
+/// streams them through the multi-hop fused kernel — no prefix product
+/// is ever materialized. All lowerings are bit-identical.
 pub(crate) fn eval_chain_vec(
     factors: &[Cow<'_, CsrMatrix>],
     x: &[f64],
@@ -427,15 +624,8 @@ pub(crate) fn eval_chain_vec(
     match factors.len() {
         0 => panic!("empty product chain"),
         1 => ctx.matvec(factors[0].as_ref(), x, y),
-        n => {
-            let (left, right) = if n == 2 {
-                (Cow::Borrowed(factors[0].as_ref()), Cow::Borrowed(factors[1].as_ref()))
-            } else {
-                let plan = plan_for(factors, ctx, n);
-                let k = plan.split[0][n - 1];
-                split_eval(factors, &plan.split, 0, n - 1, k, ctx)
-            };
-            let (a, b) = (left.as_ref(), right.as_ref());
+        2 => {
+            let (a, b) = (factors[0].as_ref(), factors[1].as_ref());
             if should_fuse_chain_vec(&ctx.machine, &FactorMeta::of(a), &FactorMeta::of(b), fanout)
             {
                 ctx.fused_matvec(a, b, x, y);
@@ -444,6 +634,50 @@ pub(crate) fn eval_chain_vec(
                 ctx.matvec(&c, x, y);
             }
         }
+        n => {
+            let metas: Vec<FactorMeta> =
+                factors.iter().map(|f| FactorMeta::of(f.as_ref())).collect();
+            let sched = chain_vec_schedule(&ctx.machine, &metas, fanout);
+            let split = &sched.plan.split;
+            match &sched.lowering {
+                ChainVecLowering::Materialize => {
+                    let k = split[0][n - 1];
+                    let (left, right) = split_eval(factors, split, 0, n - 1, k, ctx);
+                    let c = ctx.product(left.as_ref(), right.as_ref());
+                    ctx.matvec(&c, x, y);
+                }
+                ChainVecLowering::Stream { spine } if spine.len() == 2 => {
+                    // Root-only fusion: reuse the tuned two-operand
+                    // pipeline (plan cache, tracing, parallel slabs).
+                    let left = spine_operand(factors, split, spine[0], ctx);
+                    let right = spine_operand(factors, split, spine[1], ctx);
+                    ctx.fused_matvec(left.as_ref(), right.as_ref(), x, y);
+                }
+                ChainVecLowering::Stream { spine } => {
+                    let mut operands = ctx.take_factor_list();
+                    for &range in spine {
+                        operands.push(spine_operand(factors, split, range, ctx));
+                    }
+                    ctx.streamed_matvec(&operands, x, y);
+                    ctx.restore_factor_list(operands);
+                }
+            }
+        }
+    }
+}
+
+/// Materialize one spine operand: single factors borrow, multi-factor
+/// ranges evaluate in the classic tables' association order.
+fn spine_operand<'f>(
+    factors: &'f [Cow<'f, CsrMatrix>],
+    split: &[Vec<usize>],
+    (i, j): (usize, usize),
+    ctx: &mut EvalContext<'_>,
+) -> Cow<'f, CsrMatrix> {
+    if i == j {
+        Cow::Borrowed(factors[i].as_ref())
+    } else {
+        Cow::Owned(eval_range(factors, split, i, j, ctx))
     }
 }
 
@@ -601,6 +835,131 @@ mod tests {
         let z = FactorMeta { rows: 10, cols: 0, nnz: 0.0 };
         let zr = FactorMeta { rows: 0, cols: 10, nnz: 0.0 };
         assert!(should_fuse_chain_vec(&machine, &z, &zr, 1));
+    }
+
+    fn uniform_chain(k: usize) -> Vec<FactorMeta> {
+        vec![FactorMeta { rows: 500, cols: 500, nnz: 5000.0 }; k]
+    }
+
+    fn assert_spine_covers(spine: &[(usize, usize)], n: usize) {
+        assert!(spine.len() >= 2, "a streamed spine has at least two operands");
+        let mut next = 0usize;
+        for &(i, j) in spine {
+            assert_eq!(i, next, "spine ranges are contiguous");
+            assert!(j >= i);
+            next = j + 1;
+        }
+        assert_eq!(next, n, "spine covers the whole chain");
+    }
+
+    #[test]
+    fn chain_vec_schedule_streams_single_consumer_chains() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        for k in [2usize, 3, 4, 5] {
+            let metas = uniform_chain(k);
+            let sched = chain_vec_schedule(&machine, &metas, 1);
+            match &sched.lowering {
+                ChainVecLowering::Stream { spine } => assert_spine_covers(spine, k),
+                ChainVecLowering::Materialize => {
+                    panic!("single consumer must stream, k = {k}")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_sparse_chains_stream_every_factor() {
+        // Streaming a hop costs 32 B/mult; materializing the same pair
+        // first adds a 24 B/entry store plus a 16 B/entry re-read. For a
+        // uniformly sparse chain the DP must therefore keep every factor
+        // as its own spine operand — full streaming, zero intermediate
+        // products.
+        let machine = Machine::sandy_bridge_i7_2600();
+        let metas = uniform_chain(4);
+        let sched = chain_vec_schedule(&machine, &metas, 1);
+        assert_eq!(
+            sched.lowering,
+            ChainVecLowering::Stream { spine: vec![(0, 0), (1, 1), (2, 2), (3, 3)] }
+        );
+    }
+
+    #[test]
+    fn chain_vec_schedule_materializes_under_heavy_reuse() {
+        // 64 consumers: recomputing three hops per consumer loses to
+        // storing the product once and serving cache-priced re-reads —
+        // the same reuse flip `fuse_arbitration_weighs_reuse` pins for
+        // the two-factor arbitration.
+        let machine = Machine::sandy_bridge_i7_2600();
+        let metas = uniform_chain(3);
+        assert_eq!(chain_vec_schedule(&machine, &metas, 64).lowering, ChainVecLowering::Materialize);
+        // And the flip is monotone: once materializing wins at some
+        // fanout, more consumers never switch back to streaming.
+        let mut streamed_after_flip = false;
+        let mut flipped = false;
+        for fanout in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+            let mat = chain_vec_schedule(&machine, &metas, fanout).lowering
+                == ChainVecLowering::Materialize;
+            if flipped && !mat {
+                streamed_after_flip = true;
+            }
+            flipped |= mat;
+        }
+        assert!(flipped, "heavy reuse must eventually materialize");
+        assert!(!streamed_after_flip, "the arbitration is monotone in fanout");
+    }
+
+    #[test]
+    fn residency_discount_lowers_the_materialize_threshold() {
+        // The same chain on a machine with no caches: every consumer
+        // re-read hits the memory interface, so materializing needs
+        // *more* consumers to win than on the cached machine where the
+        // product stays resident. A near-diagonal chain (one entry per
+        // row) keeps the product at ~24 kB — L1-resident on the paper's
+        // machine — which puts the two flip points on opposite sides of
+        // fanout 2.
+        let cached = Machine::sandy_bridge_i7_2600();
+        let mut cacheless = Machine::sandy_bridge_i7_2600();
+        for l in &mut cacheless.levels {
+            l.size_bytes = 0; // nothing is ever resident
+        }
+        let metas = vec![FactorMeta { rows: 1000, cols: 1000, nnz: 1000.0 }; 3];
+        for fanout in [1usize, 2, 4, 8, 16, 64] {
+            let mat_cacheless = chain_vec_schedule(&cacheless, &metas, fanout).lowering
+                == ChainVecLowering::Materialize;
+            let mat_cached = chain_vec_schedule(&cached, &metas, fanout).lowering
+                == ChainVecLowering::Materialize;
+            assert!(
+                !mat_cacheless || mat_cached,
+                "fanout {fanout}: residency can only favor materializing"
+            );
+        }
+        // And the discount is real: at two consumers the L1-resident
+        // re-read already pays for the store, the memory-priced one
+        // does not.
+        let at2_cached = chain_vec_schedule(&cached, &metas, 2).lowering;
+        let at2_cacheless = chain_vec_schedule(&cacheless, &metas, 2).lowering;
+        assert_eq!(at2_cached, ChainVecLowering::Materialize);
+        assert!(matches!(at2_cacheless, ChainVecLowering::Stream { .. }));
+    }
+
+    #[test]
+    fn streamed_dp_undercuts_the_materialized_plan_for_one_consumer() {
+        // The DP's streamed pipeline can always mimic "materialize
+        // everything but the last factor, then fuse the root", dropping
+        // the root's store/re-read bytes — so for a single consumer its
+        // cost never exceeds the classic plan plus an SpMV.
+        let machine = Machine::sandy_bridge_i7_2600();
+        for metas in [uniform_chain(3), uniform_chain(5)] {
+            let sched = chain_vec_schedule(&machine, &metas, 1);
+            assert!(matches!(sched.lowering, ChainVecLowering::Stream { .. }));
+            assert!(sched.plan.cost > 0.0);
+        }
+        // Degenerate empty chain: zero cost everywhere; ties stream.
+        let empty = vec![FactorMeta { rows: 10, cols: 10, nnz: 0.0 }; 3];
+        assert!(matches!(
+            chain_vec_schedule(&machine, &empty, 1).lowering,
+            ChainVecLowering::Stream { .. }
+        ));
     }
 
     #[test]

@@ -28,6 +28,59 @@ pub fn xpby(x: &[f64], beta: f64, y: &mut [f64]) {
     }
 }
 
+/// One CG solve's outcome, including the per-iteration residual-norm
+/// trajectory — the figure the fused-vs-materialized iteration bodies
+/// are pinned bit-identical on.
+pub struct CgSolve {
+    /// The solution vector.
+    pub x: Vec<f64>,
+    /// Iterations performed before converging (or `max_iter`).
+    pub iterations: usize,
+    /// Final residual norm ‖r‖.
+    pub residual: f64,
+    /// ‖r‖ entering each iteration (`history[0]` = initial residual),
+    /// closed by the norm that met the tolerance or exhausted the
+    /// budget.
+    pub history: Vec<f64>,
+}
+
+/// Operator-apply form of [`cg`]: `apply(p, ap)` computes `ap = A·p`
+/// for the (symmetric positive-definite) operator, so the iteration
+/// body can run any evaluation path — a plain SpMV, or a fused
+/// multi-factor chain `A₁·…·Aₖ·p` that never materializes an
+/// intermediate ([`crate::expr::MatChainVecExpr::eval_into_ctx`]).
+pub fn cg_with<F: FnMut(&[f64], &mut [f64])>(
+    mut apply: F,
+    b: &[f64],
+    tol: f64,
+    max_iter: usize,
+) -> CgSolve {
+    let n = b.len();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n];
+    let mut rr = dot(&r, &r);
+    let b_norm = norm2(b).max(f64::MIN_POSITIVE);
+    let mut history = Vec::new();
+    for it in 0..max_iter {
+        history.push(rr.sqrt());
+        if rr.sqrt() / b_norm <= tol {
+            return CgSolve { x, iterations: it, residual: rr.sqrt(), history };
+        }
+        apply(&p, &mut ap);
+        let alpha = rr / dot(&p, &ap);
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rr_new = dot(&r, &r);
+        let beta = rr_new / rr;
+        xpby(&r, beta, &mut p);
+        rr = rr_new;
+    }
+    history.push(rr.sqrt());
+    CgSolve { x, iterations: max_iter, residual: rr.sqrt(), history }
+}
+
 /// Conjugate-gradient solve of `A x = b` for symmetric positive-definite
 /// CSR `A`; returns (solution, iterations, final residual norm).
 pub fn cg(
@@ -37,28 +90,8 @@ pub fn cg(
     max_iter: usize,
 ) -> (Vec<f64>, usize, f64) {
     use crate::kernels::spmv::spmv;
-    let n = b.len();
-    let mut x = vec![0.0; n];
-    let mut r = b.to_vec();
-    let mut p = r.clone();
-    let mut ap = vec![0.0; n];
-    let mut rr = dot(&r, &r);
-    let b_norm = norm2(b).max(f64::MIN_POSITIVE);
-    for it in 0..max_iter {
-        if rr.sqrt() / b_norm <= tol {
-            return (x, it, rr.sqrt());
-        }
-        spmv(a, &p, &mut ap);
-        let alpha = rr / dot(&p, &ap);
-        axpy(alpha, &p, &mut x);
-        axpy(-alpha, &ap, &mut r);
-        let rr_new = dot(&r, &r);
-        let beta = rr_new / rr;
-        xpby(&r, beta, &mut p);
-        rr = rr_new;
-    }
-    let res = rr.sqrt();
-    (x, max_iter, res)
+    let s = cg_with(|p, ap| spmv(a, p, ap), b, tol, max_iter);
+    (s.x, s.iterations, s.residual)
 }
 
 #[cfg(test)]
@@ -95,5 +128,32 @@ mod tests {
         assert!(norm2(&r) < 1e-7, "residual {}", norm2(&r));
         // Solution is positive in the interior (max principle).
         assert!(x.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn chain_cg_trajectory_is_bit_identical_to_the_materialized_loop() {
+        use crate::expr::EvalContext;
+        use crate::kernels::{spmmm, Strategy};
+        let k = 8;
+        let a = fd_poisson_2d(k);
+        let b = fd_rhs_ones(k);
+        // Materialized loop: build A³ hop by hop, then iterate with a
+        // plain SpMV over the stored product.
+        let m2 = spmmm(&a, &a, Strategy::Combined);
+        let m3 = spmmm(&m2, &a, Strategy::Combined);
+        let mat = cg_with(|p, ap| spmv(&m3, p, ap), &b, 1e-30, 40);
+        // Fused loop: the iteration body evaluates the three-factor
+        // chain A·A·A·p through the DP-lowered pipeline — no
+        // intermediate matrix ever exists.
+        let mut ctx = EvalContext::new();
+        let fused = cg_with(|p, ap| (&a * &a * &a * p).eval_into_ctx(ap, &mut ctx), &b, 1e-30, 40);
+        assert_eq!(fused.iterations, mat.iterations);
+        assert_eq!(fused.history.len(), mat.history.len());
+        for (f, m) in fused.history.iter().zip(&mat.history) {
+            assert_eq!(f.to_bits(), m.to_bits(), "residual trajectories must match bitwise");
+        }
+        for (f, m) in fused.x.iter().zip(&mat.x) {
+            assert_eq!(f.to_bits(), m.to_bits(), "solutions must match bitwise");
+        }
     }
 }

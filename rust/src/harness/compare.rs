@@ -48,7 +48,9 @@ pub fn metric_orient(name: &str) -> Option<Orientation> {
         "mflops" | "roofline_pct" => Some(Orientation::HigherIsBetter),
         "best_seconds" | "symbolic_builds" | "disk_loads" | "steady_allocs"
         | "intermediate_allocs" => Some(Orientation::LowerIsBetter),
-        "flops" | "out_nnz" | "bytes_floor" | "traffic_bytes" => Some(Orientation::Exact),
+        "flops" | "out_nnz" | "final_nnz" | "bytes_floor" | "traffic_bytes" => {
+            Some(Orientation::Exact)
+        }
         _ => None,
     }
 }

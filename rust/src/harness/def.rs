@@ -100,10 +100,11 @@ impl ExpPlanMode {
     }
 }
 
-/// Pipeline axis for chain-times-vector experiments: how `A·B·x` is
-/// evaluated. Absent from a definition, the axis contributes nothing
-/// and the experiment measures plain spMMM products (row keys of
-/// existing baselines are unchanged).
+/// Pipeline axis for chain-times-vector experiments: how `A·B·x` (the
+/// two-factor pair) or `A·B·C·x` (the three-factor chain) is evaluated.
+/// Absent from a definition, the axis contributes nothing and the
+/// experiment measures plain spMMM products (row keys of existing
+/// baselines are unchanged).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ExpPipeline {
     /// Stream each row of `A·B` straight into the `x` contraction; the
@@ -112,17 +113,31 @@ pub enum ExpPipeline {
     /// Materialize `C = A·B`, then run SpMV `C·x` — the baseline the
     /// fusion ablation compares against.
     Materialized,
+    /// Stream the three-factor chain `A·B·C·x` through the multi-hop
+    /// fused kernel ([`crate::kernels::fused::streamed_chain_spmv`]):
+    /// no intermediate product is ever materialized.
+    Streamed,
+    /// Materialize both intermediates of `A·B·C`, then run SpMV — the
+    /// baseline the chain-fusion ablation compares against.
+    ChainMaterialized,
 }
 
 impl ExpPipeline {
-    /// Both pipelines, fused first.
-    pub const ALL: [ExpPipeline; 2] = [ExpPipeline::Fused, ExpPipeline::Materialized];
+    /// Every pipeline, streaming lowerings before their baselines.
+    pub const ALL: [ExpPipeline; 4] = [
+        ExpPipeline::Fused,
+        ExpPipeline::Materialized,
+        ExpPipeline::Streamed,
+        ExpPipeline::ChainMaterialized,
+    ];
 
     /// Report/definition name.
     pub fn name(self) -> &'static str {
         match self {
             ExpPipeline::Fused => "fused",
             ExpPipeline::Materialized => "materialized",
+            ExpPipeline::Streamed => "streamed",
+            ExpPipeline::ChainMaterialized => "chain-materialized",
         }
     }
 

@@ -26,9 +26,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::blazemark::report::{row_field, BenchRecord, BenchRow};
-use crate::blazemark::runner::{
-    BenchConfig, Measurement, Pipeline, PipelineAccounting, PlanMode, SweepSession,
-};
+use crate::blazemark::runner::{BenchConfig, Measurement, Pipeline, PlanMode, SweepSession};
 use crate::gen::operand_pair;
 use crate::harness::compare::{aggregate_rows, metric_orient, row_key, scalar_cell};
 use crate::harness::def::{
@@ -95,6 +93,9 @@ struct WorkloadData {
     def: WorkloadDef,
     a: CsrMatrix,
     b: CsrMatrix,
+    /// Third factor for chain-pipeline points (`streamed` /
+    /// `chain-materialized`): same generator and size, shifted seed.
+    c: Option<CsrMatrix>,
     csc: Option<(CscMatrix, CscMatrix)>,
     /// Deterministic right-hand vector for pipeline points — a fixed
     /// function of the index so row keys and results are
@@ -114,6 +115,9 @@ pub fn run_experiment(def: &ExperimentDef, opts: &RunOptions) -> Result<BenchRec
     let points = def.variants.points();
     let max_threads = def.variants.threads.iter().copied().max().unwrap_or(1);
     let needs_csc = points.iter().any(|p| p.format == MatrixFormat::Csc);
+    let needs_chain = points.iter().any(|p| {
+        matches!(p.pipeline, Some(ExpPipeline::Streamed | ExpPipeline::ChainMaterialized))
+    });
 
     let workloads: Vec<WorkloadData> = def
         .workloads
@@ -122,8 +126,14 @@ pub fn run_experiment(def: &ExperimentDef, opts: &RunOptions) -> Result<BenchRec
             let (a, b) = operand_pair(w.generator, w.n, w.seed);
             let flops = spmmm_flops(&a, &b);
             let csc = needs_csc.then(|| (csr_to_csc(&a), csr_to_csc(&b)));
+            let c = needs_chain.then(|| {
+                let (c, _) = operand_pair(w.generator, w.n, w.seed + 1);
+                assert_eq!(b.cols(), c.rows(), "chain factor must compose with A·B");
+                assert_eq!(c.cols(), b.cols(), "chain keeps the contraction width");
+                c
+            });
             let x = (0..b.cols()).map(|i| 1.0 + (i % 5) as f64).collect();
-            WorkloadData { def: *w, a, b, csc, x, flops }
+            WorkloadData { def: *w, a, b, c, csc, x, flops }
         })
         .collect();
 
@@ -210,19 +220,37 @@ fn measure_kernel(
     if let Some(p) = point.pipeline {
         // Pipeline points are unplanned csr by construction
         // (`Variants::points` filters the rest).
-        return session.measure_fused_pipeline(
-            cfg,
-            &wl.a,
-            &wl.b,
-            &wl.x,
-            point.strategy.unwrap_or(Strategy::Combined),
-            point.threads,
-            point.partition,
-            match p {
-                ExpPipeline::Fused => Pipeline::Fused,
-                ExpPipeline::Materialized => Pipeline::Materialized,
-            },
-        );
+        let strategy = point.strategy.unwrap_or(Strategy::Combined);
+        return match p {
+            ExpPipeline::Fused | ExpPipeline::Materialized => session.measure_fused_pipeline(
+                cfg,
+                &wl.a,
+                &wl.b,
+                &wl.x,
+                strategy,
+                point.threads,
+                point.partition,
+                if p == ExpPipeline::Fused { Pipeline::Fused } else { Pipeline::Materialized },
+            ),
+            ExpPipeline::Streamed | ExpPipeline::ChainMaterialized => {
+                let c = wl.c.as_ref().expect("chain factor prepared");
+                session.measure_streamed_chain(
+                    cfg,
+                    &wl.a,
+                    &wl.b,
+                    c,
+                    &wl.x,
+                    strategy,
+                    point.threads,
+                    point.partition,
+                    if p == ExpPipeline::Streamed {
+                        Pipeline::Fused
+                    } else {
+                        Pipeline::Materialized
+                    },
+                )
+            }
+        };
     }
     match (point.format, point.plan_mode) {
         (MatrixFormat::Csr, ExpPlanMode::Unplanned) => session.measure_spmmm(
@@ -267,6 +295,89 @@ fn plan_mode(mode: ExpPlanMode) -> PlanMode {
     }
 }
 
+/// Tracer-derived figures of one pipeline row: the traffic its own
+/// lowering moves, the worst-case flop count, the (first)
+/// intermediate's population, the full chain product's population for
+/// chain points, and the row's §IV-A byte floor.
+struct PipelineFigures {
+    own_traffic: u64,
+    flops: u64,
+    out_nnz: usize,
+    final_nnz: Option<usize>,
+    floor: u64,
+}
+
+fn pipeline_figures(
+    session: &mut SweepSession,
+    wl: &WorkloadData,
+    point: &VariantPoint,
+    p: ExpPipeline,
+) -> PipelineFigures {
+    let strategy = point.strategy.unwrap_or(Strategy::Combined);
+    match p {
+        ExpPipeline::Fused | ExpPipeline::Materialized => {
+            let acct = session.account_fused_pipeline(&wl.a, &wl.b, &wl.x, strategy);
+            let out_nnz = acct.intermediate_nnz;
+            let floor = match p {
+                ExpPipeline::Fused => acct.lower_bound_bytes,
+                // Materialized floor: the product's refill floor plus
+                // the SpMV pass over the intermediate (16 B re-read +
+                // 8 B `x` gather per entry, 8 B `y` store per row).
+                _ => {
+                    planned_fill_lower_bound_bytes(wl.a.nnz(), wl.b.nnz(), out_nnz)
+                        + 24 * out_nnz as u64
+                        + 8 * wl.a.rows() as u64
+                }
+            };
+            PipelineFigures {
+                own_traffic: if p == ExpPipeline::Fused {
+                    acct.fused_bytes
+                } else {
+                    acct.materialized_bytes
+                },
+                // The contraction adds 2 flops per intermediate entry
+                // to the worst-case product flop count.
+                flops: wl.flops + 2 * out_nnz as u64,
+                out_nnz,
+                final_nnz: None,
+                floor,
+            }
+        }
+        ExpPipeline::Streamed | ExpPipeline::ChainMaterialized => {
+            let c = wl.c.as_ref().expect("chain factor prepared");
+            let acct = session.account_streamed_chain(&wl.a, &wl.b, c, &wl.x, strategy);
+            let floor = match p {
+                ExpPipeline::Streamed => acct.lower_bound_bytes,
+                // Chain-materialized floor: both products' refill
+                // floors plus the SpMV pass over the final product.
+                _ => {
+                    planned_fill_lower_bound_bytes(
+                        wl.a.nnz(),
+                        wl.b.nnz(),
+                        acct.intermediate_nnz,
+                    ) + planned_fill_lower_bound_bytes(
+                        acct.intermediate_nnz,
+                        c.nnz(),
+                        acct.final_nnz,
+                    ) + 24 * acct.final_nnz as u64
+                        + 8 * wl.a.rows() as u64
+                }
+            };
+            PipelineFigures {
+                own_traffic: if p == ExpPipeline::Streamed {
+                    acct.streamed_bytes
+                } else {
+                    acct.materialized_bytes
+                },
+                flops: acct.streamed_flops,
+                out_nnz: acct.intermediate_nnz,
+                final_nnz: Some(acct.final_nnz),
+                floor,
+            }
+        }
+    }
+}
+
 /// Measure one point `replicates` times and aggregate
 /// ([`crate::harness::compare::aggregate_rows`]).
 fn measure_point(
@@ -293,39 +404,20 @@ fn measure_once(
     let before = session.plan_stats();
     let m = measure_kernel(session, cfg, wl, point);
     let symbolic = session.plan_stats().symbolic_builds - before.symbolic_builds;
-    // Pipeline points replay both pipelines under the tracer: the row
-    // reports the traffic its own pipeline moves, and the intermediate's
-    // population doubles as the row's `out_nnz`.
-    let acct: Option<PipelineAccounting> = point.pipeline.map(|_| {
-        session.account_fused_pipeline(
-            &wl.a,
-            &wl.b,
-            &wl.x,
-            point.strategy.unwrap_or(Strategy::Combined),
-        )
-    });
-    let out_nnz = match &acct {
-        Some(acct) => acct.intermediate_nnz,
+    // Pipeline points replay both lowerings under the tracer: the row
+    // reports the traffic its own lowering moves, and the (first)
+    // intermediate's population doubles as the row's `out_nnz`.
+    let figures = point.pipeline.map(|p| pipeline_figures(session, wl, point, p));
+    let out_nnz = match &figures {
+        Some(f) => f.out_nnz,
         None => match point.format {
             MatrixFormat::Csr => session.out().nnz(),
             MatrixFormat::Csc => session.out_csc().nnz(),
         },
     };
-    // Pipeline rows add the contraction's 2 flops per intermediate entry
-    // to the worst-case product flop count.
-    let flops = wl.flops + acct.as_ref().map_or(0, |a| 2 * a.intermediate_nnz as u64);
-    let bytes = match point.pipeline {
-        Some(ExpPipeline::Fused) => {
-            acct.as_ref().expect("pipeline accounted").lower_bound_bytes
-        }
-        // Materialized floor: the product's refill floor plus the SpMV
-        // pass over the intermediate (16 B re-read + 8 B `x` gather per
-        // entry, 8 B `y` store per row).
-        Some(ExpPipeline::Materialized) => {
-            planned_fill_lower_bound_bytes(wl.a.nnz(), wl.b.nnz(), out_nnz)
-                + 24 * out_nnz as u64
-                + 8 * wl.a.rows() as u64
-        }
+    let flops = figures.as_ref().map_or(wl.flops, |f| f.flops);
+    let bytes = match &figures {
+        Some(f) => f.floor,
         None => planned_fill_lower_bound_bytes(wl.a.nnz(), wl.b.nnz(), out_nnz),
     };
     let mut row: BenchRow = vec![
@@ -354,12 +446,11 @@ fn measure_once(
             Json::Num(session.roofline_percent(flops as f64, bytes as f64, &m)),
         ),
     ]);
-    if let (Some(acct), Some(p)) = (&acct, point.pipeline) {
-        let traffic = match p {
-            ExpPipeline::Fused => acct.fused_bytes,
-            ExpPipeline::Materialized => acct.materialized_bytes,
-        };
-        row.push(("traffic_bytes".into(), Json::Num(traffic as f64)));
+    if let Some(f) = &figures {
+        row.push(("traffic_bytes".into(), Json::Num(f.own_traffic as f64)));
+        if let Some(final_nnz) = f.final_nnz {
+            row.push(("final_nnz".into(), Json::Num(final_nnz as f64)));
+        }
     }
     if matches!(point.plan_mode, ExpPlanMode::Warm | ExpPlanMode::Persisted) {
         row.push(("symbolic_builds".into(), Json::Num(symbolic as f64)));
@@ -594,6 +685,68 @@ threads = [1, 2]
             assert!(
                 field(fused, "bytes_floor").unwrap() < field(mat, "bytes_floor").unwrap(),
                 "fused floor drops the intermediate's store + re-read terms"
+            );
+        }
+    }
+
+    #[test]
+    fn chain_pipeline_points_account_streamed_traffic() {
+        let doc = r#"
+schema = "blazert-experiment-v1"
+name = "tiny-chain"
+[protocol]
+quick_min_time_s = 0.001
+quick_trials = 1
+quick_replicates = 2
+[[workloads]]
+generator = "FD"
+n = 144
+seed = 3
+[variants]
+formats = ["csr"]
+strategies = ["combined"]
+plan_modes = ["unplanned"]
+pipelines = ["streamed", "chain-materialized"]
+threads = [1, 2]
+"#;
+        let def = ExperimentDef::parse(doc).unwrap();
+        let rec = run_experiment(&def, &RunOptions::default()).unwrap();
+        assert_eq!(rec.rows.len(), 4, "2 pipelines × 2 thread counts");
+        let field = |row: &BenchRow, name: &str| row_field(row, name).and_then(Json::as_f64);
+        let by = |p: &str, t: f64| {
+            rec.rows
+                .iter()
+                .find(|r| {
+                    row_field(r, "pipeline").and_then(Json::as_str) == Some(p)
+                        && field(r, "threads") == Some(t)
+                })
+                .unwrap_or_else(|| panic!("missing row {p}/{t}"))
+        };
+        for t in [1.0, 2.0] {
+            let streamed = by("streamed", t);
+            let mat = by("chain-materialized", t);
+            // Tracer-exact: at the instruction level only the root
+            // fusion saves counted bytes — 32 B per final-product
+            // entry — at equal flops and populations; the middle hop's
+            // savings live at the cache levels.
+            let final_nnz = field(streamed, "final_nnz").unwrap();
+            assert!(final_nnz > 0.0);
+            assert_eq!(field(mat, "final_nnz"), Some(final_nnz));
+            assert_eq!(field(mat, "out_nnz"), field(streamed, "out_nnz"));
+            assert_eq!(field(mat, "flops"), field(streamed, "flops"));
+            assert_eq!(
+                field(streamed, "traffic_bytes").unwrap() + 32.0 * final_nnz,
+                field(mat, "traffic_bytes").unwrap(),
+                "threads={t}"
+            );
+            for row in [streamed, mat] {
+                assert!(field(row, "bytes_floor").unwrap() > 0.0);
+                assert!(field(row, "roofline_pct").unwrap() > 0.0);
+                assert!(field(row, "mflops").unwrap() > 0.0);
+            }
+            assert!(
+                field(streamed, "bytes_floor").unwrap() < field(mat, "bytes_floor").unwrap(),
+                "streamed floor drops the intermediates' store + re-read terms"
             );
         }
     }

@@ -72,7 +72,8 @@ pub mod tracer;
 
 pub use fused::{
     fused_planned_serial, fused_serial_ws, fused_spmmm_spmv, fused_spmmm_spmv_traced,
-    par_fused_planned, par_fused_spmmm_spmv,
+    par_fused_planned, par_fused_spmmm_spmv, par_streamed_chain, streamed_chain_planned,
+    streamed_chain_spmv, streamed_chain_traced, streamed_chain_ws,
 };
 pub use spmmm::{
     planned_fill_csr_csc, planned_fill_serial, planned_fill_serial_csc, spmmm, spmmm_csc,

@@ -93,6 +93,23 @@ pub fn fused_pipeline_lower_bound_bytes(
     (16 * (a_nnz + b_nnz) + 8 * intermediate_nnz + 8 * rows) as u64
 }
 
+/// Memory-level traffic lower bound of the **streamed** N-factor chain
+/// pipeline `y = (A₁·…·A_k)·x`: every factor streams through the
+/// memory interface exactly once (16 B per nnz), the final hop's
+/// surviving entries each gather `x` once (8 B), and `y` is written once
+/// (8 B per row). The hop-to-hop intermediates live and die in the
+/// row-recycled stream buffer, so — unlike materialize-then-fuse — no
+/// store or re-read term appears for *any* prefix product. At two
+/// factors this reduces exactly to [`fused_pipeline_lower_bound_bytes`].
+pub fn streamed_chain_lower_bound_bytes(
+    factor_nnz: &[usize],
+    final_nnz: usize,
+    rows: usize,
+) -> u64 {
+    let operands: usize = factor_nnz.iter().sum();
+    (16 * operands + 8 * final_nnz + 8 * rows) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +151,18 @@ mod tests {
         let planned = planned_fill_lower_bound_bytes(a.nnz(), a.nnz(), pattern_nnz);
         assert!(planned < t.total_bytes());
         assert!(planned >= (16 * 2 * a.nnz()) as u64, "streams both operands at least");
+    }
+
+    #[test]
+    fn streamed_chain_bound_reduces_to_fused_at_two_factors() {
+        let a = fd_poisson_2d(10);
+        let c = crate::kernels::spmmm(&a, &a, crate::kernels::Strategy::MinMax);
+        let two = streamed_chain_lower_bound_bytes(&[a.nnz(), a.nnz()], c.nnz(), a.rows());
+        assert_eq!(two, fused_pipeline_lower_bound_bytes(a.nnz(), a.nnz(), c.nnz(), a.rows()));
+        // A third factor adds exactly its one streaming pass — the
+        // intermediates still contribute no store/re-read bytes.
+        let three = streamed_chain_lower_bound_bytes(&[a.nnz(); 3], c.nnz(), a.rows());
+        assert_eq!(three, two + 16 * a.nnz() as u64);
     }
 
     #[test]

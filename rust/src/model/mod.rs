@@ -23,10 +23,14 @@ pub mod machine;
 pub mod predict;
 pub mod roofline;
 
-pub use balance::{fused_pipeline_lower_bound_bytes, planned_fill_lower_bound_bytes};
+pub use balance::{
+    fused_pipeline_lower_bound_bytes, planned_fill_lower_bound_bytes,
+    streamed_chain_lower_bound_bytes,
+};
 pub use machine::{CacheLevel, Machine};
 pub use predict::{
-    fused_pipeline_seconds, materialized_pipeline_seconds, percent_of_roofline,
-    plan_breakeven_evals, predict, roofline_seconds, Prediction,
+    consumer_reread_seconds, fused_pipeline_seconds, materialized_pipeline_seconds,
+    percent_of_roofline, plan_breakeven_evals, predict, roofline_seconds, streamed_hop_seconds,
+    Prediction,
 };
 pub use roofline::lightspeed;

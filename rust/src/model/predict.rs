@@ -197,6 +197,59 @@ pub fn materialized_pipeline_seconds(
     roofline_seconds(machine, flops, bytes)
 }
 
+/// Light-speed seconds of one **streamed** hop of a multi-factor chain
+/// pipeline: multiplying the running prefix row by the next factor while
+/// the prefix streams hop-to-hop through the row-recycled buffer
+/// ([`crate::kernels::fused`]'s `streamed_chain_*`). The inner loop pays
+/// the full 32 B per multiplication (index + value + temp load + temp
+/// store — the paper's 16 B/Flop balance); the prefix row itself is
+/// read from the stream buffer, which stays cache-resident, so the
+/// 16 B-per-prefix-entry outer-loop term only hits the memory interface
+/// when the prefix was *materialized* by an earlier DP decision
+/// (`prefix_materialized`).
+pub fn streamed_hop_seconds(
+    machine: &Machine,
+    prefix_nnz: f64,
+    mults: f64,
+    prefix_materialized: bool,
+) -> f64 {
+    let flops = 2.0 * mults;
+    let mut bytes = 32.0 * mults;
+    if prefix_materialized {
+        bytes += 16.0 * prefix_nnz;
+    }
+    roofline_seconds(machine, flops, bytes)
+}
+
+/// Light-speed seconds of `consumers` SpMV re-reads of a stored chain
+/// product, with the re-read optionally served by a resident cache
+/// level instead of memory. Per consumer and entry: 16 B intermediate
+/// re-read + 8 B `x` gather + 2 flops; per row an 8 B `y` store.
+/// `resident_level` indexes `machine.levels` (innermost first) — the
+/// cache-simulator-validated residency the arbitration feeds in via
+/// [`crate::simulator::resident_level`]; `None` charges the memory
+/// interface, the analytic model's blind-spot-free default.
+pub fn consumer_reread_seconds(
+    machine: &Machine,
+    intermediate_nnz: f64,
+    rows: f64,
+    consumers: usize,
+    resident_level: Option<usize>,
+) -> f64 {
+    let c = consumers.max(1) as f64;
+    let flops = 2.0 * intermediate_nnz * c;
+    let bytes = c * (24.0 * intermediate_nnz + 8.0 * rows);
+    let bw = match resident_level {
+        Some(l) if l < machine.levels.len() => machine.levels[l].bandwidth,
+        _ => machine.mem_bandwidth,
+    };
+    if flops <= 0.0 {
+        return if bw > 0.0 { bytes / bw } else { 0.0 };
+    }
+    let ceiling = lightspeed_for(machine.peak_flops(), bw, bytes / flops);
+    flops / ceiling
+}
+
 /// Build the prediction for a traced run on `machine`.
 ///
 /// Path traffic: L1 sees every load/store the kernel issues
@@ -363,6 +416,50 @@ mod tests {
         let fused_total = consumers as f64 * fused_pipeline_seconds(&m, cf, cb, nnz, rows);
         let mat_total = materialized_pipeline_seconds(&m, cf, cb, nnz, rows, consumers);
         assert!(mat_total < fused_total, "{mat_total} vs {fused_total}");
+    }
+
+    #[test]
+    fn streamed_hop_charges_the_left_reread_only_when_materialized() {
+        let m = Machine::sandy_bridge_i7_2600();
+        let (prefix_nnz, mults) = (5.0e5, 2.0e6);
+        let streamed = streamed_hop_seconds(&m, prefix_nnz, mults, false);
+        let from_mat = streamed_hop_seconds(&m, prefix_nnz, mults, true);
+        assert!(streamed < from_mat, "{streamed} vs {from_mat}");
+        // The gap is exactly the 16 B-per-prefix-entry transfer time
+        // (both regimes are memory-bound at 16 B/Flop).
+        let gap = from_mat - streamed;
+        let expected = 16.0 * prefix_nnz / m.mem_bandwidth;
+        assert!((gap - expected).abs() / expected < 1e-9, "{gap} vs {expected}");
+        // With a cache-resident prefix the hop is the pure inner-loop
+        // roofline.
+        assert_eq!(streamed, roofline_seconds(&m, 2.0 * mults, 32.0 * mults));
+        // Empty hop costs nothing when nothing was materialized.
+        assert_eq!(streamed_hop_seconds(&m, 0.0, 0.0, false), 0.0);
+    }
+
+    #[test]
+    fn resident_rereads_beat_memory_rereads() {
+        let m = Machine::sandy_bridge_i7_2600();
+        let (nnz, rows) = (1.0e5, 1.0e4);
+        let mem = consumer_reread_seconds(&m, nnz, rows, 4, None);
+        // Every cache level of the model machine outruns the memory
+        // interface, so residency can only help — and strictly helps in
+        // this memory-bound regime.
+        let mut prev = mem;
+        for l in (0..m.levels.len()).rev() {
+            let t = consumer_reread_seconds(&m, nnz, rows, 4, Some(l));
+            assert!(t < mem, "level {l}: {t} vs {mem}");
+            assert!(t <= prev, "inner levels are at least as fast");
+            prev = t;
+        }
+        // An out-of-range level is the memory path.
+        assert_eq!(consumer_reread_seconds(&m, nnz, rows, 4, Some(99)), mem);
+        // Consumers scale the cost linearly in the bandwidth-bound regime.
+        let one = consumer_reread_seconds(&m, nnz, rows, 1, None);
+        assert!((mem - 4.0 * one).abs() / mem < 1e-9);
+        // Degenerate empty product: only the y sweeps remain.
+        let empty = consumer_reread_seconds(&m, 0.0, rows, 2, None);
+        assert!((empty - 2.0 * 8.0 * rows / m.mem_bandwidth).abs() / empty < 1e-9);
     }
 
     #[test]

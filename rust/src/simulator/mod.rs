@@ -11,8 +11,10 @@
 
 mod cache;
 mod hierarchy;
+mod reuse;
 mod stats;
 
 pub use cache::{Cache, CacheConfig};
 pub use hierarchy::Hierarchy;
+pub use reuse::{intermediate_footprint_bytes, resident_level, simulated_reread_mem_bytes};
 pub use stats::{LevelStats, TrafficReport};

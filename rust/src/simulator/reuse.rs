@@ -1,0 +1,120 @@
+//! Reuse-distance arbitration for the fuse-vs-materialize decision.
+//!
+//! When the chain DP ([`crate::expr::schedule`]) weighs materializing an
+//! intermediate product against streaming it through the fused pipeline,
+//! the materialized side's cost hinges on where the consumers' re-reads
+//! are served from: a product that stays resident in L2/L3 re-reads at
+//! cache bandwidth, one that spills re-reads over the memory interface.
+//! The consumers sweep the stored product front to back, and under true
+//! LRU a cyclic sweep is all-or-nothing: if the footprint fits a level,
+//! every re-read hits there; if it exceeds the level by even one set's
+//! worth, the sweep evicts each line just before its reuse and every
+//! re-read misses. [`resident_level`] is that closed form — cheap enough
+//! for the DP to call per split — and [`simulated_reread_mem_bytes`]
+//! replays the same sweep through the full simulated [`Hierarchy`] so a
+//! test pins the analytic rule to the simulator's behavior instead of
+//! trusting it.
+
+use super::Hierarchy;
+use crate::kernels::tracer::MemTracer;
+use crate::model::Machine;
+
+/// Innermost cache level of `machine` whose capacity holds
+/// `footprint_bytes`, or `None` when the footprint spills to memory —
+/// the closed form of a cyclic sweep over a true-LRU hierarchy. The
+/// index feeds [`crate::model::consumer_reread_seconds`], which charges
+/// the consumers' re-reads to that level's bandwidth.
+pub fn resident_level(machine: &Machine, footprint_bytes: usize) -> Option<usize> {
+    machine.levels.iter().position(|l| l.size_bytes >= footprint_bytes)
+}
+
+/// Cache footprint (bytes) of a materialized CSR intermediate with
+/// `nnz` entries over `rows` rows: 8 B column index + 8 B value per
+/// entry, 8 B row pointer per row — the quantity [`resident_level`]
+/// tests against the level capacities. Takes `f64` because the DP works
+/// on estimated (fractional) nonzero counts.
+pub fn intermediate_footprint_bytes(nnz: f64, rows: f64) -> usize {
+    (16.0 * nnz + 8.0 * rows) as usize
+}
+
+/// Replay the consumer access pattern — one warm-up sweep then one
+/// measured sweep over a `footprint_bytes` region — through `machine`'s
+/// simulated hierarchy, returning the memory-interface bytes of the
+/// *measured* sweep. Zero means the region was served entirely from
+/// cache: by the LRU all-or-nothing property this is the case exactly
+/// when [`resident_level`] returns `Some`, which the tests below verify
+/// against the real set-associative simulator.
+pub fn simulated_reread_mem_bytes(machine: &Machine, footprint_bytes: usize) -> u64 {
+    if footprint_bytes == 0 || machine.levels.is_empty() {
+        return 0;
+    }
+    let mut h = Hierarchy::of_machine(machine);
+    let line = machine.levels[0].line_bytes;
+    let lines = footprint_bytes.div_ceil(line);
+    let base = line; // any line-aligned region; stay off address zero
+    let sweep = |h: &mut Hierarchy| {
+        for i in 0..lines {
+            h.load(base + i * line, 8);
+        }
+    };
+    sweep(&mut h);
+    let warm = h.mem_bytes;
+    sweep(&mut h);
+    h.mem_bytes - warm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::machine::CacheLevel;
+
+    fn tiny_machine() -> Machine {
+        Machine {
+            name: "tiny".into(),
+            freq_hz: 1.0e9,
+            flops_per_cycle: 2.0,
+            levels: vec![
+                CacheLevel { name: "L1", size_bytes: 1024, line_bytes: 64, assoc: 2, bandwidth: 8.0e9 },
+                CacheLevel { name: "L2", size_bytes: 4096, line_bytes: 64, assoc: 4, bandwidth: 4.0e9 },
+            ],
+            mem_bandwidth: 1.0e9,
+        }
+    }
+
+    #[test]
+    fn analytic_residency_matches_the_simulated_sweep() {
+        let m = tiny_machine();
+        // Footprints straddling each capacity, including the exact
+        // boundaries: the closed form and the set-associative simulator
+        // must agree on "re-reads free vs re-reads from memory".
+        for footprint in [64usize, 512, 1024, 1088, 2048, 4096, 4160, 8192] {
+            let analytic = resident_level(&m, footprint);
+            let simulated = simulated_reread_mem_bytes(&m, footprint);
+            assert_eq!(
+                analytic.is_some(),
+                simulated == 0,
+                "footprint {footprint}: analytic {analytic:?}, simulated {simulated} B"
+            );
+        }
+        // Well past the LLC every set is overloaded: the sweep misses on
+        // every single line — the worst case the analytic rule charges.
+        assert_eq!(simulated_reread_mem_bytes(&m, 8192), 128 * 64);
+    }
+
+    #[test]
+    fn resident_level_picks_the_innermost_fit() {
+        let m = tiny_machine();
+        assert_eq!(resident_level(&m, 0), Some(0));
+        assert_eq!(resident_level(&m, 1024), Some(0));
+        assert_eq!(resident_level(&m, 1025), Some(1));
+        assert_eq!(resident_level(&m, 4096), Some(1));
+        assert_eq!(resident_level(&m, 4097), None);
+    }
+
+    #[test]
+    fn footprint_counts_csr_storage() {
+        // 100 entries, 10 rows: 16 B per entry + 8 B per row pointer.
+        assert_eq!(intermediate_footprint_bytes(100.0, 10.0), 1680);
+        assert_eq!(intermediate_footprint_bytes(0.0, 0.0), 0);
+    }
+}

@@ -12,12 +12,14 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use blazert::exec::{default_machine, ExecPool, Partition};
-use blazert::expr::{EvalContext, SparseOperand};
+use blazert::expr::{chain_vec_schedule, ChainVecLowering, EvalContext, FactorMeta, SparseOperand};
 use blazert::gen::{operand_pair, Workload};
+use blazert::kernels::spmv::spmv;
 use blazert::kernels::{planned_fill_serial_csc, spmmm, Strategy};
 use blazert::plan::{PlanCache, PlanStore};
 use blazert::sparse::convert::csr_to_csc;
 use blazert::sparse::{CscMatrix, CsrMatrix, SparseShape};
+use std::borrow::Cow;
 use std::sync::Arc;
 
 struct CountingAlloc;
@@ -231,4 +233,55 @@ fn warm_pool_evaluation_allocates_nothing() {
         "planned fused hot loop must not run the symbolic phase"
     );
     assert_eq!(after.hits, stats.hits + 5, "every hot fused evaluation is a plan hit");
+
+    // Chain-times-vector sugar: the flattened factor list is staged in
+    // recycled workspace scratch, so the warm two-factor pipeline
+    // expression — build, flatten, arbitrate, fused contraction —
+    // allocates nothing end to end.
+    let mut ctx = EvalContext::new().with_exec(&pool);
+    let mut y_sugar = vec![0.0; fa.rows()];
+    for _ in 0..2 {
+        (&fa * &fb * &x).eval_into_ctx(&mut y_sugar, &mut ctx);
+    }
+    let before = allocs();
+    for _ in 0..5 {
+        (&fa * &fb * &x).eval_into_ctx(&mut y_sugar, &mut ctx);
+    }
+    assert_eq!(allocs(), before, "warm chain-sugar pipeline must not allocate");
+
+    // Streamed multi-hop chain: the three-factor pipeline the chain DP
+    // lowers onto [`EvalContext::streamed_matvec`]. Spine rows stream
+    // through the workspace's recycled row buffer and per-hop
+    // accumulators — no intermediate matrix is ever materialized and
+    // the warm loop never touches the heap (the invariant the
+    // chain-fusion baseline gates with `intermediate_allocs = 0`).
+    let meta = [FactorMeta::of(&fa), FactorMeta::of(&fb), FactorMeta::of(&fa)];
+    let schedule = chain_vec_schedule(default_machine(), &meta, 1);
+    assert!(
+        matches!(schedule.lowering, ChainVecLowering::Stream { .. }),
+        "single-consumer FD chain must stream"
+    );
+    let ab = spmmm(&fa, &fb, Strategy::Combined);
+    let abc = spmmm(&ab, &fa, Strategy::Combined);
+    let mut want_chain = vec![0.0; fa.rows()];
+    spmv(&abc, &x, &mut want_chain);
+    let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+    let factors = [Cow::Borrowed(&fa), Cow::Borrowed(&fb), Cow::Borrowed(&fa)];
+    let mut y_chain = vec![0.0; fa.rows()];
+    for threads in [1usize, 2] {
+        let mut ctx = EvalContext::new().with_exec(&pool).with_threads(threads);
+        for _ in 0..2 {
+            ctx.streamed_matvec(&factors, &x, &mut y_chain);
+        }
+        let before = allocs();
+        for _ in 0..5 {
+            ctx.streamed_matvec(&factors, &x, &mut y_chain);
+        }
+        assert_eq!(
+            allocs(),
+            before,
+            "streamed chain hot loop must not allocate (threads={threads})"
+        );
+        assert_eq!(bits(&y_chain), bits(&want_chain), "streamed chain stays bit-identical");
+    }
 }

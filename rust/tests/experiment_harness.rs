@@ -127,6 +127,7 @@ fn committed_definitions_and_baselines_stay_well_formed() {
         ("simd_ablation", 4),
         ("threads_ablation", 12),
         ("scenario_corpus", 4),
+        ("chain_fusion_ablation", 4),
     ] {
         let path = find_repo_file(&format!("experiments/{name}.toml"));
         let def = ExperimentDef::load(&path).unwrap_or_else(|e| panic!("{e}"));
@@ -143,7 +144,7 @@ fn committed_definitions_and_baselines_stay_well_formed() {
 
     // Committed baselines parse under the unified record schema and
     // only pin invariant counters (never machine-dependent perf).
-    for name in ["plan_ablation", "simd_ablation", "fusion_ablation"] {
+    for name in ["plan_ablation", "simd_ablation", "fusion_ablation", "chain_fusion_ablation"] {
         let path = find_repo_file(&format!("baselines/experiments/{name}.json"));
         let base = BenchRecord::load(&path).unwrap_or_else(|e| panic!("{e}"));
         assert_eq!(base.bench, name);

@@ -6,9 +6,14 @@
 //! and the `with_fanout` materialized fallback), and including the
 //! floating-point edge cases where "close" is not "equal": exact
 //! cancellation in the intermediate, empty rows, and NaN payloads.
+//! The same contract extends to streamed ≥3-factor chains
+//! (`EvalContext::streamed_matvec`, `(&a * &b * &c * &x)`): every
+//! lowering must reproduce the materialize-every-hop loop bit for bit.
 //! Because every check compares fused bits against materialized bits
 //! (never against a hand-computed oracle), the file passes unchanged
 //! with and without `--features simd`.
+
+use std::borrow::Cow;
 
 use blazert::exec::{default_machine, ExecPool, Partition};
 use blazert::expr::{EvalContext, Expression};
@@ -43,6 +48,17 @@ fn materialized(
 
 fn probe_vector(n: usize) -> Vec<f64> {
     (0..n).map(|i| 0.25 + (i % 7) as f64 * 0.5 - (i % 3) as f64).collect()
+}
+
+/// Materialized chain reference: every hop stored, then y = (…)·x.
+fn materialized_chain(factors: &[&CsrMatrix], x: &[f64], strategy: Strategy) -> Vec<f64> {
+    let mut m = spmmm(factors[0], factors[1], strategy);
+    for f in &factors[2..] {
+        m = spmmm(&m, f, strategy);
+    }
+    let mut y = vec![0.0; m.rows()];
+    spmv(&m, x, &mut y);
+    y
 }
 
 #[test]
@@ -183,4 +199,133 @@ fn nan_payloads_propagate_identically() {
     assert_eq!(bits(&y), bits(&want), "NaN via fused expression");
     let y_mat = (&a * &b * &x).with_fanout(1 << 20).eval_with(&mut ctx);
     assert_eq!(bits(&y_mat), bits(&want), "NaN via materialized fallback");
+}
+
+#[test]
+fn streamed_chain_matches_materialized_across_strategies_partitions_threads() {
+    let pool = ExecPool::new(3);
+    for w in [Workload::FiveBandFd, Workload::RandomFixed5, Workload::PowerLawSkew] {
+        let (a, b) = operand_pair(w, 120, 7);
+        let (c, _) = operand_pair(w, 120, 8);
+        assert_eq!(b.cols(), c.rows(), "square workloads compose into a chain");
+        let x = probe_vector(c.cols());
+        for s in Strategy::ALL {
+            let want = materialized_chain(&[&a, &b, &c], &x, s);
+            for threads in [1usize, 2, 5] {
+                for partition in [Partition::Rows, Partition::Flops, Partition::Model] {
+                    let mut ctx = EvalContext::using(s)
+                        .with_exec(&pool)
+                        .with_threads(threads)
+                        .with_partition(partition)
+                        .with_machine(default_machine());
+                    let factors = [Cow::Borrowed(&a), Cow::Borrowed(&b), Cow::Borrowed(&c)];
+                    let mut y = vec![0.0; a.rows()];
+                    ctx.streamed_matvec(&factors, &x, &mut y);
+                    assert_eq!(
+                        bits(&y),
+                        bits(&want),
+                        "{w:?} {} threads={threads} {partition:?}",
+                        s.name()
+                    );
+                }
+            }
+        }
+    }
+    // The four-term sugar lowers through the same DP arbitration; the
+    // bare default context must land on the same bits.
+    let (a, b) = operand_pair(Workload::RandomFixed5, 120, 7);
+    let (c, _) = operand_pair(Workload::RandomFixed5, 120, 8);
+    let x = probe_vector(c.cols());
+    let want = materialized_chain(&[&a, &b, &c], &x, Strategy::Combined);
+    let y = (&a * &b * &c * &x[..]).eval();
+    assert_eq!(bits(&y), bits(&want), "4-term sugar, bare eval");
+    let y_mat = (&a * &b * &c * &x[..]).with_fanout(1 << 20).eval();
+    assert_eq!(bits(&y_mat), bits(&want), "4-term sugar, materialized fallback");
+}
+
+#[test]
+fn chain_cancellation_negative_zero_and_empty_rows_are_bit_identical() {
+    // A is 4×2 with an empty row 1. Row 0 of A·B cancels exactly in
+    // column 0 (1·1 + 1·(−1) = ±0.0). B additionally stores an explicit
+    // −0.0 in row 1: A's row 2 touches only that B row, so its product
+    // entry in column 1 is a lone −0.0 partial — the `!= 0.0` drop rule
+    // discards it in the streamed slab exactly as the materialized
+    // product does, or the chain's next hop would see different
+    // patterns on the two sides.
+    let a = CsrMatrix::from_parts(
+        4,
+        2,
+        vec![0, 2, 2, 3, 5],
+        vec![0, 1, 1, 0, 1],
+        vec![1.0, 1.0, 2.0, -3.0, 0.5],
+    );
+    let b = CsrMatrix::from_parts(
+        2,
+        3,
+        vec![0, 2, 5],
+        vec![0, 1, 0, 1, 2],
+        vec![1.0, 4.0, -1.0, -0.0, 8.0],
+    );
+    let c = CsrMatrix::from_parts(
+        3,
+        3,
+        vec![0, 2, 3, 6],
+        vec![0, 2, 1, 0, 1, 2],
+        vec![2.0, -1.0, 3.0, 0.5, -0.25, 1.0],
+    );
+    // Pin the premise: the lone −0.0 partial is dropped from the
+    // materialized intermediate (row 2 keeps two of three candidates).
+    let m1 = spmmm(&a, &b, Strategy::Combined);
+    assert_eq!(m1.row(2).0.len(), 2, "lone -0.0 partial must be dropped");
+    let x = vec![7.0, -2.0, 1.5];
+    let pool = ExecPool::new(2);
+    for s in Strategy::ALL {
+        let want = materialized_chain(&[&a, &b, &c], &x, s);
+        for threads in [1usize, 2, 5] {
+            let mut ctx = EvalContext::using(s).with_exec(&pool).with_threads(threads);
+            let factors = [Cow::Borrowed(&a), Cow::Borrowed(&b), Cow::Borrowed(&c)];
+            let mut y = vec![0.0; a.rows()];
+            ctx.streamed_matvec(&factors, &x, &mut y);
+            assert_eq!(bits(&y), bits(&want), "chain cancellation, {} t={threads}", s.name());
+            assert_eq!(y[1].to_bits(), 0.0f64.to_bits(), "empty row stays +0.0");
+        }
+    }
+}
+
+#[test]
+fn chain_nan_payloads_propagate_identically() {
+    // A NaN (and an ∞) in the middle factor poisons every chain entry
+    // its row reaches; streamed and materialize-every-hop must emit
+    // byte-identical payloads. Compared via to_bits — NaN != NaN.
+    let (c, _) = operand_pair(Workload::RandomFixed5, 96, 5);
+    let a = CsrMatrix::from_parts(
+        3,
+        3,
+        vec![0, 1, 2, 4],
+        vec![0, 1, 0, 2],
+        vec![1.0, -2.0, 1.0, 0.5],
+    );
+    let b = CsrMatrix::from_parts(
+        3,
+        96,
+        vec![0, 2, 4, 5],
+        vec![0, 10, 20, 21, 5],
+        vec![f64::NAN, 1.0, f64::INFINITY, -1.0, 2.0],
+    );
+    let x = probe_vector(c.cols());
+    for s in Strategy::ALL {
+        let want = materialized_chain(&[&a, &b, &c], &x, s);
+        assert!(want.iter().any(|v| v.is_nan()), "probe must actually hit a NaN");
+        let factors = [Cow::Borrowed(&a), Cow::Borrowed(&b), Cow::Borrowed(&c)];
+        let mut y = vec![0.0; a.rows()];
+        EvalContext::using(s).streamed_matvec(&factors, &x, &mut y);
+        assert_eq!(bits(&y), bits(&want), "chain NaN propagation, {}", s.name());
+    }
+    // And through the expression layer on both sides of the arbitration.
+    let want = materialized_chain(&[&a, &b, &c], &x, Strategy::Combined);
+    let mut ctx = EvalContext::using(Strategy::Combined);
+    let y = (&a * &b * &c * &x[..]).eval_with(&mut ctx);
+    assert_eq!(bits(&y), bits(&want), "chain NaN via streamed expression");
+    let y_mat = (&a * &b * &c * &x[..]).with_fanout(1 << 20).eval_with(&mut ctx);
+    assert_eq!(bits(&y_mat), bits(&want), "chain NaN via materialized fallback");
 }
