@@ -13,7 +13,16 @@
 //!
 //! Jobs run *on* pool workers and therefore must not re-enter the pool
 //! (serial kernels only inside `execute`).
+//!
+//! The drain is a thin shim over [`crate::service::JobService`] — the
+//! batch is one tenant of the multi-tenant service, claimed FIFO (the
+//! old loop popped a `Vec` from the back, executing batches in
+//! *reverse* submission order). Per-job panics are caught into a failed
+//! [`JobResult`] carrying the panic message, so one bad job reports as
+//! a casualty instead of poisoning the queue and aborting every
+//! neighbour.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex};
 
 use crate::exec::{default_machine, serial_spmmm_into, ExecPool, Partition, Workspace};
@@ -21,6 +30,7 @@ use crate::gen::{operand_pair, Workload};
 use crate::kernels::flops::spmmm_flops;
 use crate::kernels::{planned_fill_serial, spmmm, Strategy};
 use crate::plan::{PlanCache, PlanStore};
+use crate::service::{JobService, ServiceConfig};
 use crate::sparse::{CsrMatrix, SparseShape};
 use crate::util::timer::Stopwatch;
 
@@ -70,6 +80,10 @@ pub struct JobResult {
     pub verified: Option<bool>,
     /// Worker that ran the job.
     pub worker: usize,
+    /// Panic message when the job blew up mid-execution; `None` for a
+    /// clean run. Failed jobs report zeroed measurements and, when
+    /// verification was requested, `verified == Some(false)`.
+    pub error: Option<String>,
 }
 
 fn execute(job: &Job, ws: &mut Workspace, plans: Option<&PlanCache>) -> JobResult {
@@ -136,6 +150,7 @@ fn execute(job: &Job, ws: &mut Workspace, plans: Option<&PlanCache>) -> JobResul
         nnz_c: c.nnz(),
         verified,
         worker: 0,
+        error: None,
     };
     ws.csr_scratch = scratch;
     result
@@ -179,20 +194,66 @@ fn drain_on(pool: &ExecPool, jobs: Vec<Job>, plans: Option<&PlanCache>) -> Vec<J
         return Vec::new();
     }
     let workers = pool.threads().min(jobs.len());
-    let queue = Mutex::new(jobs);
+    // Single-tenant deployment of the multi-tenant service: one FIFO
+    // queue sized to the batch, an effectively-infinite lease (workers
+    // here cannot outlive the `pool.run` call), and one attempt per
+    // job — a panic is a reported casualty, not a retry.
+    let service: JobService<Job> = JobService::new(ServiceConfig {
+        lease_timeout_ns: u64::MAX / 2,
+        max_attempts: 1,
+    });
+    let tenant = service.register_tenant("coordinator", 1, jobs.len());
+    for job in jobs {
+        service.submit(tenant, job).expect("queue sized to the batch");
+    }
     let results = Mutex::new(Vec::new());
-    pool.run(workers, &|w, ws| loop {
-        let job = queue.lock().expect("queue lock").pop();
-        match job {
-            Some(j) => {
-                let mut r = execute(&j, ws, plans);
-                r.worker = w;
-                results.lock().expect("results lock").push(r);
-            }
-            None => return,
+    pool.run(workers, &|w, ws| {
+        while let Some(claim) = service.claim() {
+            let job = claim.job;
+            let mut r = match catch_unwind(AssertUnwindSafe(|| execute(&job, ws, plans))) {
+                Ok(r) => r,
+                Err(panic) => {
+                    // The panic may have torn workspace invariants
+                    // (e.g. a taken-out scratch); replace the arena
+                    // wholesale instead of reusing it.
+                    *ws = Workspace::new();
+                    failed_result(&job, panic_message(panic.as_ref()))
+                }
+            };
+            r.worker = w;
+            service.complete(claim.token);
+            results
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .push(r);
         }
     });
-    results.into_inner().expect("results lock")
+    results
+        .into_inner()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn failed_result(job: &Job, message: String) -> JobResult {
+    JobResult {
+        id: job.id,
+        n: job.n,
+        seconds: 0.0,
+        mflops: 0.0,
+        nnz_c: 0,
+        verified: job.verify.then_some(false),
+        worker: 0,
+        error: Some(message),
+    }
+}
+
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "job panicked".to_string()
+    }
 }
 
 /// Run jobs on a dedicated pool of `threads` workers (spawned once per
@@ -236,6 +297,46 @@ mod tests {
         let mut ids: Vec<usize> = results.iter().map(|r| r.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_complete_in_submission_order() {
+        // One worker claims the whole batch: completion order IS claim
+        // order, which must be FIFO (the old drain popped the Vec from
+        // the back and ran batches in reverse).
+        let pool = ExecPool::new(1);
+        let results = run_jobs_on(&pool, jobs(6));
+        let ids: Vec<usize> = results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>(), "drain must claim FIFO, not LIFO");
+    }
+
+    #[test]
+    fn panicking_job_is_isolated_and_reported() {
+        let pool = ExecPool::new(2);
+        let mut batch = jobs(5);
+        // tile = 0 violates the BSR constructor's invariant and panics
+        // inside `execute`.
+        batch[2] = Job {
+            id: 2,
+            workload: Workload::RandomFixed5,
+            n: 120,
+            kind: JobKind::BsrNative { tile: 0 },
+            seed: 2,
+            verify: true,
+        };
+        let results = run_jobs_on(&pool, batch);
+        assert_eq!(results.len(), 5, "a panicking job must not abort the batch");
+        let casualty = results.iter().find(|r| r.id == 2).expect("casualty reported");
+        assert!(casualty.error.is_some(), "panic message surfaced");
+        assert_eq!(casualty.verified, Some(false));
+        for r in results.iter().filter(|r| r.id != 2) {
+            assert!(r.error.is_none());
+            assert_eq!(r.verified, Some(true), "job {} must survive its neighbour's panic", r.id);
+        }
+        // The pool and its workers stay usable after the casualty.
+        let again = run_jobs_on(&pool, jobs(4));
+        assert_eq!(again.len(), 4);
+        assert!(again.iter().all(|r| r.verified == Some(true)));
     }
 
     #[test]

@@ -84,8 +84,9 @@ pub use matmul::{
 };
 pub use ops::{MatAddExpr, MatSubExpr, ScaleExpr, TransposeExpr, TransposeExt};
 pub use schedule::{
-    chain_plan, chain_vec_schedule, choose_strategy, choose_strategy_csc, planning_pays_off,
-    ChainPlan, ChainVecLowering, ChainVecSchedule, FactorMeta, ProductStats,
+    cached_chain_vec_schedule, chain_plan, chain_vec_schedule, choose_strategy,
+    choose_strategy_csc, planning_pays_off, ChainPlan, ChainVecLowering, ChainVecSchedule,
+    FactorMeta, ProductStats,
 };
 
 use crate::sparse::convert::csc_to_csr;

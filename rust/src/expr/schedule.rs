@@ -43,9 +43,12 @@
 
 use crate::kernels::Strategy;
 use crate::model::{consumer_reread_seconds, roofline_seconds, streamed_hop_seconds, Machine};
+use crate::plan::fingerprint::{machine_fingerprint, PatternFingerprint};
 use crate::simulator::{intermediate_footprint_bytes, resident_level};
 use crate::sparse::{CscMatrix, CsrMatrix, SparseShape};
 use std::borrow::Cow;
+use std::cell::RefCell;
+use std::sync::Arc;
 
 use super::EvalContext;
 
@@ -571,6 +574,90 @@ pub fn chain_vec_schedule(
     ChainVecSchedule { plan: ChainPlan { cost: cost[0][n - 1], split }, lowering }
 }
 
+/// Entries the thread-local chain-schedule memo keeps before evicting
+/// the least recently used one. Chain-times-vector call sites in one
+/// thread (solvers re-applying the same preconditioner pipeline) cycle
+/// through a handful of distinct shapes, so a small bound suffices.
+const CHAIN_CACHE_CAP: usize = 8;
+
+struct ChainCacheEntry {
+    machine: u64,
+    fanout: usize,
+    factors: Vec<PatternFingerprint>,
+    last_used: u64,
+    sched: Arc<ChainVecSchedule>,
+}
+
+#[derive(Default)]
+struct ChainScheduleCache {
+    entries: Vec<ChainCacheEntry>,
+    /// Reusable fingerprint scratch: lookups on the warm path compare
+    /// against this without allocating a fresh key vector per call.
+    probe: Vec<PatternFingerprint>,
+    clock: u64,
+}
+
+impl ChainScheduleCache {
+    fn get(
+        &mut self,
+        machine: &Machine,
+        factors: &[Cow<'_, CsrMatrix>],
+        fanout: usize,
+    ) -> Arc<ChainVecSchedule> {
+        let ChainScheduleCache { entries, probe, clock } = self;
+        *clock += 1;
+        let mach = machine_fingerprint(machine);
+        probe.clear();
+        probe.extend(factors.iter().map(|f| f.as_ref().pattern_fingerprint()));
+        if let Some(entry) = entries
+            .iter_mut()
+            .find(|e| e.machine == mach && e.fanout == fanout && e.factors == *probe)
+        {
+            entry.last_used = *clock;
+            return Arc::clone(&entry.sched);
+        }
+        let metas: Vec<FactorMeta> = factors.iter().map(|f| FactorMeta::of(f.as_ref())).collect();
+        let sched = Arc::new(chain_vec_schedule(machine, &metas, fanout));
+        if entries.len() >= CHAIN_CACHE_CAP {
+            let oldest = entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("cache is non-empty");
+            entries.swap_remove(oldest);
+        }
+        entries.push(ChainCacheEntry {
+            machine: mach,
+            fanout,
+            factors: probe.clone(),
+            last_used: *clock,
+            sched: Arc::clone(&sched),
+        });
+        sched
+    }
+}
+
+thread_local! {
+    static CHAIN_SCHED_CACHE: RefCell<ChainScheduleCache> =
+        RefCell::new(ChainScheduleCache::default());
+}
+
+/// [`chain_vec_schedule`] through a thread-local memo keyed by the
+/// machine's cost-model fingerprint, the consumer fanout, and the
+/// factors' structural [`PatternFingerprint`]s — the same invalidation
+/// rule as [`crate::plan::PlanCache`]. Warm ≥3-factor pipelines skip
+/// the O(n³) DP and its three n×n table allocations entirely: value
+/// updates hit (fingerprints ignore values), any structural or machine
+/// change misses and re-plans.
+pub fn cached_chain_vec_schedule(
+    machine: &Machine,
+    factors: &[Cow<'_, CsrMatrix>],
+    fanout: usize,
+) -> Arc<ChainVecSchedule> {
+    CHAIN_SCHED_CACHE.with(|cache| cache.borrow_mut().get(machine, factors, fanout))
+}
+
 /// Evaluate a flattened product chain under `ctx`, multiplying in the
 /// model-chosen association order.
 pub(crate) fn eval_chain(factors: &[Cow<'_, CsrMatrix>], ctx: &mut EvalContext<'_>) -> CsrMatrix {
@@ -635,9 +722,7 @@ pub(crate) fn eval_chain_vec(
             }
         }
         n => {
-            let metas: Vec<FactorMeta> =
-                factors.iter().map(|f| FactorMeta::of(f.as_ref())).collect();
-            let sched = chain_vec_schedule(&ctx.machine, &metas, fanout);
+            let sched = cached_chain_vec_schedule(&ctx.machine, factors, fanout);
             let split = &sched.plan.split;
             match &sched.lowering {
                 ChainVecLowering::Materialize => {
@@ -960,6 +1045,45 @@ mod tests {
             chain_vec_schedule(&machine, &empty, 1).lowering,
             ChainVecLowering::Stream { .. }
         ));
+    }
+
+    #[test]
+    fn chain_schedule_cache_keys_on_structure_not_values() {
+        let machine = Machine::sandy_bridge_i7_2600();
+        let a = random_fixed_per_row(64, 64, 4, 31);
+        let b = random_fixed_per_row(64, 64, 4, 32);
+        let c = random_fixed_per_row(64, 64, 4, 33);
+        let factors: Vec<Cow<'_, CsrMatrix>> =
+            vec![Cow::Borrowed(&a), Cow::Borrowed(&b), Cow::Borrowed(&c)];
+        let first = cached_chain_vec_schedule(&machine, &factors, 1);
+        let again = cached_chain_vec_schedule(&machine, &factors, 1);
+        assert!(Arc::ptr_eq(&first, &again), "identical pipelines must share one schedule");
+        // Value-only updates keep the structural key: still a hit, and
+        // the memo agrees with a fresh DP run.
+        let a_scaled = CsrMatrix::from_parts(
+            a.rows(),
+            a.cols(),
+            a.row_ptr().to_vec(),
+            a.col_idx().to_vec(),
+            a.values().iter().map(|v| 2.0 * v).collect(),
+        );
+        let scaled: Vec<Cow<'_, CsrMatrix>> =
+            vec![Cow::Borrowed(&a_scaled), Cow::Borrowed(&b), Cow::Borrowed(&c)];
+        let warm = cached_chain_vec_schedule(&machine, &scaled, 1);
+        assert!(Arc::ptr_eq(&first, &warm), "value updates must not re-plan");
+        let metas: Vec<FactorMeta> = factors.iter().map(|f| FactorMeta::of(f.as_ref())).collect();
+        assert_eq!(warm.lowering, chain_vec_schedule(&machine, &metas, 1).lowering);
+        // Fanout is part of the key: a different consumer count gets its
+        // own entry without evicting the first.
+        let fanned = cached_chain_vec_schedule(&machine, &factors, 64);
+        assert!(!Arc::ptr_eq(&first, &fanned), "fanout changes the schedule key");
+        assert!(Arc::ptr_eq(&first, &cached_chain_vec_schedule(&machine, &factors, 1)));
+        // A structural change (one entry moves column) misses.
+        let d = random_fixed_per_row(64, 64, 4, 34);
+        let restructured: Vec<Cow<'_, CsrMatrix>> =
+            vec![Cow::Borrowed(&d), Cow::Borrowed(&b), Cow::Borrowed(&c)];
+        let missed = cached_chain_vec_schedule(&machine, &restructured, 1);
+        assert!(!Arc::ptr_eq(&first, &missed), "structural changes must re-plan");
     }
 
     #[test]

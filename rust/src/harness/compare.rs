@@ -45,10 +45,13 @@ pub enum Orientation {
 /// one record schema serve run outputs and baselines alike.
 pub fn metric_orient(name: &str) -> Option<Orientation> {
     match name {
-        "mflops" | "roofline_pct" => Some(Orientation::HigherIsBetter),
+        "mflops" | "roofline_pct" | "throughput_jps" | "fairness_index" => {
+            Some(Orientation::HigherIsBetter)
+        }
         "best_seconds" | "symbolic_builds" | "disk_loads" | "steady_allocs"
-        | "intermediate_allocs" => Some(Orientation::LowerIsBetter),
-        "flops" | "out_nnz" | "final_nnz" | "bytes_floor" | "traffic_bytes" => {
+        | "intermediate_allocs" | "p50_latency_s" | "p99_latency_s" | "lost_jobs"
+        | "duplicate_jobs" | "rejected_jobs" => Some(Orientation::LowerIsBetter),
+        "flops" | "out_nnz" | "final_nnz" | "bytes_floor" | "traffic_bytes" | "jobs_completed" => {
             Some(Orientation::Exact)
         }
         _ => None,
@@ -60,7 +63,13 @@ pub fn metric_orient(name: &str) -> Option<Orientation> {
 fn is_counter(name: &str) -> bool {
     matches!(
         name,
-        "symbolic_builds" | "disk_loads" | "steady_allocs" | "intermediate_allocs"
+        "symbolic_builds"
+            | "disk_loads"
+            | "steady_allocs"
+            | "intermediate_allocs"
+            | "lost_jobs"
+            | "duplicate_jobs"
+            | "rejected_jobs"
     )
 }
 

@@ -300,6 +300,35 @@ pub struct MetricPolicy {
     pub gate: bool,
 }
 
+/// Saturation-service experiment block (the `[service]` table).
+/// Present, it switches the runner from the workload × variant sweep to
+/// driving the multi-tenant [`crate::service`] scheduler at full queue
+/// pressure: `tenants` concurrent tenants each submit
+/// `jobs_per_tenant` spMMM jobs whose sizes follow a power-law
+/// (Pareto exponent `alpha`, sizes in `[n_min, n_max]`), and every
+/// shard count in `shards` is measured as its own set of rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServiceDef {
+    /// Concurrent tenants.
+    pub tenants: usize,
+    /// Jobs each tenant submits per batch.
+    pub jobs_per_tenant: usize,
+    /// Per-tenant queue depth (admission-control bound).
+    pub queue_depth: usize,
+    /// Worker-shard counts to measure (one cold + one warm row each).
+    pub shards: Vec<usize>,
+    /// Operand generator family.
+    pub generator: Workload,
+    /// Smallest job size.
+    pub n_min: usize,
+    /// Largest job size (the power-law tail is capped here).
+    pub n_max: usize,
+    /// Pareto exponent of the job-size distribution.
+    pub alpha: f64,
+    /// Seed for operands and size sampling.
+    pub seed: u64,
+}
+
 /// A parsed experiment definition.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentDef {
@@ -315,6 +344,9 @@ pub struct ExperimentDef {
     pub variants: Variants,
     /// Noise-band policies.
     pub metrics: Vec<MetricPolicy>,
+    /// Saturation-service block; `Some` makes this a service
+    /// experiment and `workloads` may be empty.
+    pub service: Option<ServiceDef>,
 }
 
 impl ExperimentDef {
@@ -390,7 +422,11 @@ impl ExperimentDef {
             let seed = w.get("seed").and_then(Json::as_f64).unwrap_or(5.0) as u64;
             workloads.push(WorkloadDef { generator, n, seed });
         }
-        if workloads.is_empty() {
+        let service = match v.get("service") {
+            None => None,
+            Some(s) => Some(parse_service(s)?),
+        };
+        if workloads.is_empty() && service.is_none() {
             return Err("definition declares no [[workloads]]".into());
         }
 
@@ -448,8 +484,61 @@ impl ExperimentDef {
             let gate = m.get("gate").and_then(Json::as_bool).unwrap_or(false);
             metrics.push(MetricPolicy { name: mname.to_string(), band, gate });
         }
-        Ok(ExperimentDef { name, hypothesis, protocol, workloads, variants, metrics })
+        Ok(ExperimentDef { name, hypothesis, protocol, workloads, variants, metrics, service })
     }
+}
+
+fn parse_service(s: &Json) -> Result<ServiceDef, String> {
+    let count = |key: &str, default: usize| -> Result<usize, String> {
+        match s.get(key).and_then(Json::as_f64) {
+            None => Ok(default),
+            Some(n) if n >= 1.0 && n.fract() == 0.0 => Ok(n as usize),
+            Some(n) => Err(format!("service.{key}: invalid count {n}")),
+        }
+    };
+    let tenants = count("tenants", 200)?;
+    let jobs_per_tenant = count("jobs_per_tenant", 4)?;
+    let queue_depth = count("queue_depth", jobs_per_tenant)?;
+    let n_min = count("n_min", 48)?;
+    let n_max = count("n_max", 384)?;
+    if n_max < n_min {
+        return Err("service.n_max must be >= service.n_min".into());
+    }
+    let tag = s.get("generator").and_then(Json::as_str).unwrap_or("random");
+    let generator =
+        Workload::from_tag(tag).ok_or_else(|| format!("service: unknown generator {tag:?}"))?;
+    let alpha = s.get("alpha").and_then(Json::as_f64).unwrap_or(1.1);
+    if alpha.is_nan() || alpha <= 0.0 {
+        return Err("service.alpha must be positive".into());
+    }
+    let seed = s.get("seed").and_then(Json::as_f64).unwrap_or(7.0) as u64;
+    let shards = match s.get("shards").and_then(Json::as_arr) {
+        None => vec![1],
+        Some(arr) => {
+            let mut out = Vec::new();
+            for e in arr {
+                match e.as_f64() {
+                    Some(n) if n >= 1.0 && n.fract() == 0.0 => out.push(n as usize),
+                    _ => return Err("service.shards: entries must be positive integers".into()),
+                }
+            }
+            if out.is_empty() {
+                return Err("service.shards is empty".into());
+            }
+            out
+        }
+    };
+    Ok(ServiceDef {
+        tenants,
+        jobs_per_tenant,
+        queue_depth,
+        shards,
+        generator,
+        n_min,
+        n_max,
+        alpha,
+        seed,
+    })
 }
 
 fn int_param(v: Option<f64>, default: u32, what: &str) -> Result<u32, String> {

@@ -107,6 +107,11 @@ struct WorkloadData {
 /// Execute `def`'s full variant matrix and return the structured
 /// record (not yet written to disk — callers decide the path).
 pub fn run_experiment(def: &ExperimentDef, opts: &RunOptions) -> Result<BenchRecord, String> {
+    // A `[service]` block routes the whole definition to the
+    // multi-tenant saturation driver instead of the variant sweep.
+    if let Some(svc) = &def.service {
+        return crate::service::bench::run_service_experiment(def, svc, opts);
+    }
     let params = match opts.tier {
         RunTier::Quick => def.protocol.quick,
         RunTier::Full => def.protocol.full,

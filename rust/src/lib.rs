@@ -43,7 +43,13 @@
 //!   warms from disk instead of re-running every symbolic phase),
 //! * a PJRT runtime ([`runtime`]) that loads AOT-compiled JAX/Pallas
 //!   artifacts and a block-sparse spMMM ([`bsr`]) scheduled onto them,
-//! * a job-pipeline coordinator ([`coordinator`]).
+//! * a sharded multi-tenant job service ([`service`]: bounded
+//!   per-tenant queues with admission control, weighted-round-robin
+//!   tenant-fair claiming under expiring leases — crash-safe pull
+//!   coordination with exactly-once completion — per-tenant plan-store
+//!   byte quotas, and a power-law saturation bench),
+//! * a job-pipeline coordinator ([`coordinator`]), now a thin shim over
+//!   the service's single-tenant case.
 //!
 //! The paper's Listing 1 (`C = A * B;`) and its composable-graph
 //! generalization, in five lines:
@@ -75,6 +81,7 @@ pub mod kernels;
 pub mod model;
 pub mod plan;
 pub mod runtime;
+pub mod service;
 pub mod simulator;
 pub mod sparse;
 pub mod util;

@@ -288,6 +288,30 @@ pub fn warm_start_plans(
     Ok(WarmStart { store, plans_loaded, plans_rejected })
 }
 
+/// Tenant-scoped [`warm_start_plans`]: the tenant's plans live in their
+/// own subdirectory of `state_dir` under their own byte budget, so the
+/// store's LRU eviction is a *per-tenant* write-through quota — one
+/// tenant's plan churn can only ever evict that tenant's entries.
+pub fn warm_start_tenant_plans(
+    cache: &PlanCache,
+    state_dir: &Path,
+    tenant: &str,
+    quota_bytes: u64,
+) -> std::io::Result<WarmStart> {
+    warm_start_plans(cache, &tenant_state_dir(state_dir, tenant), quota_bytes)
+}
+
+/// The per-tenant state directory: `<state_dir>/tenant_<name>`, with
+/// every character outside `[A-Za-z0-9-]` mapped to `_` so a tenant
+/// name can never traverse out of the state directory.
+pub fn tenant_state_dir(state_dir: &Path, tenant: &str) -> PathBuf {
+    let safe: String = tenant
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' { c } else { '_' })
+        .collect();
+    state_dir.join(format!("tenant_{safe}"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

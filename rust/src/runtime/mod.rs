@@ -15,5 +15,8 @@
 pub mod client;
 pub mod tile_engine;
 
-pub use client::{warm_start_plans, Manifest, ManifestEntry, Runtime, WarmStart};
+pub use client::{
+    tenant_state_dir, warm_start_plans, warm_start_tenant_plans, Manifest, ManifestEntry, Runtime,
+    WarmStart,
+};
 pub use tile_engine::TileEngine;

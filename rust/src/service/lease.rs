@@ -1,0 +1,157 @@
+//! Expiring leases over claimed jobs.
+//!
+//! A claim moves the job out of its tenant queue into a lease slot
+//! with a deadline. Completion surrenders the lease; a lease whose
+//! deadline passes first is *reaped* — the job goes back to its queue
+//! and the slot's nonce is retired, so a late completion from the
+//! stalled worker no longer matches and is reported as stale instead
+//! of double-counting the job. Slots are recycled through a free list,
+//! so steady-state claim/complete churn is allocation-free.
+
+use super::queue::Queued;
+
+/// Proof of a granted lease. The nonce is what makes exactly-once
+/// work: tokens are compared against the slot's *current* nonce, so a
+/// token that outlives its lease (worker stalled past the deadline)
+/// can never act on the slot's next occupant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClaimToken {
+    slot: usize,
+    nonce: u64,
+}
+
+#[derive(Debug)]
+struct LeaseEntry<J> {
+    nonce: u64,
+    tenant: usize,
+    deadline_ns: u64,
+    queued: Queued<J>,
+}
+
+/// Slot table of outstanding leases.
+#[derive(Debug)]
+pub struct LeaseTable<J> {
+    slots: Vec<Option<LeaseEntry<J>>>,
+    free: Vec<usize>,
+    next_nonce: u64,
+    live: usize,
+}
+
+impl<J> LeaseTable<J> {
+    pub fn with_capacity(capacity: usize) -> LeaseTable<J> {
+        let mut slots = Vec::with_capacity(capacity);
+        slots.resize_with(capacity, || None);
+        LeaseTable {
+            free: (0..capacity).rev().collect(),
+            slots,
+            next_nonce: 1,
+            live: 0,
+        }
+    }
+
+    /// Number of outstanding leases.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Grant a lease on `queued` until `deadline_ns`.
+    pub fn grant(&mut self, tenant: usize, deadline_ns: u64, queued: Queued<J>) -> ClaimToken {
+        let nonce = self.next_nonce;
+        self.next_nonce += 1;
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(None);
+                self.slots.len() - 1
+            }
+        };
+        self.slots[slot] = Some(LeaseEntry {
+            nonce,
+            tenant,
+            deadline_ns,
+            queued,
+        });
+        self.live += 1;
+        ClaimToken { slot, nonce }
+    }
+
+    /// Surrender a lease. `Some((tenant, queued))` when the token still
+    /// names a live lease; `None` when the lease was already reaped (a
+    /// stale completion).
+    pub fn complete(&mut self, token: ClaimToken) -> Option<(usize, Queued<J>)> {
+        let slot = self.slots.get_mut(token.slot)?;
+        if slot.as_ref()?.nonce != token.nonce {
+            return None;
+        }
+        let entry = slot.take().expect("nonce matched a live entry");
+        self.free.push(token.slot);
+        self.live -= 1;
+        Some((entry.tenant, entry.queued))
+    }
+
+    /// Reclaim every lease whose deadline is `<= now_ns`, handing each
+    /// `(tenant, queued)` to the callback.
+    pub fn reap_expired(&mut self, now_ns: u64, mut reclaimed: impl FnMut(usize, Queued<J>)) {
+        for slot in 0..self.slots.len() {
+            let expired = matches!(&self.slots[slot], Some(e) if e.deadline_ns <= now_ns);
+            if !expired {
+                continue;
+            }
+            let entry = self.slots[slot].take().expect("checked above");
+            self.free.push(slot);
+            self.live -= 1;
+            reclaimed(entry.tenant, entry.queued);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(job: u32) -> Queued<u32> {
+        Queued {
+            job,
+            submitted_at_ns: 0,
+            attempts: 1,
+        }
+    }
+
+    #[test]
+    fn grant_complete_roundtrip_recycles_slots() {
+        let mut table: LeaseTable<u32> = LeaseTable::with_capacity(1);
+        let t1 = table.grant(0, 100, q(1));
+        assert_eq!(table.live(), 1);
+        let (tenant, job) = table.complete(t1).unwrap();
+        assert_eq!((tenant, job.job), (0, 1));
+        assert_eq!(table.live(), 0);
+        // Same slot, new nonce: the old token is dead.
+        let t2 = table.grant(3, 100, q(2));
+        assert!(table.complete(t1).is_none());
+        assert_eq!(table.complete(t2).unwrap().1.job, 2);
+    }
+
+    #[test]
+    fn reap_returns_expired_and_fences_late_completion() {
+        let mut table: LeaseTable<u32> = LeaseTable::with_capacity(2);
+        let expired = table.grant(0, 50, q(1));
+        let alive = table.grant(1, 500, q(2));
+        let mut reclaimed = Vec::new();
+        table.reap_expired(100, |tenant, queued| reclaimed.push((tenant, queued.job)));
+        assert_eq!(reclaimed, vec![(0, 1)]);
+        assert_eq!(table.live(), 1);
+        // The stalled worker's completion is stale, the healthy one's is not.
+        assert!(table.complete(expired).is_none());
+        assert!(table.complete(alive).is_some());
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut table: LeaseTable<u32> = LeaseTable::with_capacity(1);
+        let a = table.grant(0, 10, q(1));
+        let b = table.grant(0, 10, q(2));
+        assert_eq!(table.live(), 2);
+        assert_eq!(table.complete(a).unwrap().1.job, 1);
+        assert_eq!(table.complete(b).unwrap().1.job, 2);
+    }
+}

@@ -1,0 +1,51 @@
+//! The sharded, lease-based multi-tenant spMMM service layer.
+//!
+//! [`coordinator::pipeline`](crate::coordinator::pipeline) drains one
+//! batch for one caller; this module is the traffic-scale substrate the
+//! ROADMAP promotes it to. The design is *pull-based crash-safe
+//! coordination*: workers never receive jobs, they **claim** them.
+//!
+//! * **Per-tenant queues with admission control** ([`queue`]): every
+//!   tenant owns a bounded FIFO. A submit against a full queue is
+//!   rejected with a reason ([`SubmitError::QueueFull`]) instead of
+//!   growing without bound — backpressure is the caller's signal to
+//!   slow down, not the service's problem to absorb.
+//! * **Tenant-fair scheduling** ([`scheduler`]): claims are arbitrated
+//!   by smooth weighted round-robin across the non-empty queues, so a
+//!   heavy tenant's backlog interleaves with a light tenant's trickle
+//!   — no queue is starved, and weights buy proportional service.
+//! * **Expiring leases** ([`lease`]): a claim grants a lease, not
+//!   ownership. A worker that dies or stalls past its lease has the
+//!   job reclaimed and requeued at the *front* of its tenant's queue
+//!   (it already waited once); a completion against a reclaimed lease
+//!   is recognized as stale and dropped, so every job's result is
+//!   delivered exactly once.
+//! * **Per-tenant plan quotas** ([`quota`]): each tenant's plan store
+//!   lives in its own directory under its own byte budget, enforced at
+//!   write-through by the store's LRU eviction — one tenant's plan
+//!   churn can evict only its own entries.
+//! * **Saturation bench** ([`bench`]): hundreds of concurrent tenants
+//!   submitting power-law-sized jobs, reporting p50/p99 latency,
+//!   throughput, and a Jain fairness index through the experiment
+//!   harness (`experiments/service_saturation.toml`).
+//!
+//! [`svc::JobService`] ties the first three together behind one lock;
+//! job *execution* always happens with no lock held, so a panicking job
+//! can never poison the service (the failure mode the old coordinator
+//! drain loop had).
+
+pub mod bench;
+pub mod lease;
+pub mod queue;
+pub mod quota;
+pub mod scheduler;
+pub mod svc;
+
+pub use bench::{SaturationBench, SaturationConfig, SaturationReport};
+pub use lease::{ClaimToken, LeaseTable};
+pub use queue::{Queued, TenantQueue};
+pub use quota::{PlanQuotas, TenantPlans};
+pub use scheduler::WrrScheduler;
+pub use svc::{
+    Claim, JobService, ServiceConfig, ServiceCounters, SubmitError, TenantId, TenantStats,
+};

@@ -1,0 +1,115 @@
+//! Bounded per-tenant FIFO queues — the admission-control edge of the
+//! service.
+//!
+//! Depth is fixed at registration and enforced on every submit: a full
+//! queue rejects instead of growing, which is the backpressure signal
+//! multi-tenant ingestion needs (an unbounded queue converts overload
+//! into unbounded latency for everyone behind it). Requeues after a
+//! lease expiry go back to the *front* — the job already waited its
+//! turn once — and are exempt from the depth bound, because the job was
+//! admitted before and dropping it on requeue would turn a worker crash
+//! into silent job loss.
+
+use std::collections::VecDeque;
+
+/// A job wrapped with its queueing metadata: when it entered the
+/// service (for end-to-end latency) and how many times it has been
+/// claimed (for the give-up bound on repeatedly abandoned jobs).
+#[derive(Clone, Debug)]
+pub struct Queued<J> {
+    pub job: J,
+    pub submitted_at_ns: u64,
+    pub attempts: u32,
+}
+
+/// One tenant's bounded FIFO. Plain `VecDeque` with the capacity
+/// reserved up front so steady-state submit/claim churn never touches
+/// the allocator.
+#[derive(Debug)]
+pub struct TenantQueue<J> {
+    depth: usize,
+    jobs: VecDeque<Queued<J>>,
+}
+
+impl<J> TenantQueue<J> {
+    pub fn new(depth: usize) -> TenantQueue<J> {
+        assert!(depth >= 1, "queue depth must be at least 1");
+        TenantQueue {
+            depth,
+            jobs: VecDeque::with_capacity(depth),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.jobs.len() >= self.depth
+    }
+
+    /// Admit a new job at the tail. Hands the job back untouched when
+    /// the queue is at depth so the caller can surface a typed
+    /// rejection.
+    pub fn push_back(&mut self, queued: Queued<J>) -> Result<(), Queued<J>> {
+        if self.is_full() {
+            return Err(queued);
+        }
+        self.jobs.push_back(queued);
+        Ok(())
+    }
+
+    /// Return a reclaimed job to the head of the line. Not subject to
+    /// the depth bound: the job was already admitted once.
+    pub fn push_front_requeue(&mut self, queued: Queued<J>) {
+        self.jobs.push_front(queued);
+    }
+
+    pub fn pop_front(&mut self) -> Option<Queued<J>> {
+        self.jobs.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(job: u32) -> Queued<u32> {
+        Queued {
+            job,
+            submitted_at_ns: 0,
+            attempts: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_depth_bound() {
+        let mut queue = TenantQueue::new(2);
+        queue.push_back(q(1)).unwrap();
+        queue.push_back(q(2)).unwrap();
+        let rejected = queue.push_back(q(3)).unwrap_err();
+        assert_eq!(rejected.job, 3);
+        assert!(queue.is_full());
+        assert_eq!(queue.pop_front().unwrap().job, 1);
+        assert_eq!(queue.pop_front().unwrap().job, 2);
+        assert!(queue.pop_front().is_none());
+    }
+
+    #[test]
+    fn requeue_jumps_the_line_and_ignores_depth() {
+        let mut queue = TenantQueue::new(1);
+        queue.push_back(q(1)).unwrap();
+        queue.push_front_requeue(q(9));
+        assert_eq!(queue.len(), 2);
+        assert_eq!(queue.pop_front().unwrap().job, 9);
+        assert_eq!(queue.pop_front().unwrap().job, 1);
+    }
+}

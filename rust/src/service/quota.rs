@@ -1,0 +1,85 @@
+//! Per-tenant plan-store byte quotas.
+//!
+//! Each tenant gets its own `PlanCache` backed by its own disk
+//! `PlanStore` directory (`<state_dir>/tenant_<name>`) opened with the
+//! tenant's byte budget. The store's existing LRU byte budget *is* the
+//! quota, enforced at write-through: when a tenant's plans exceed its
+//! budget the store evicts that tenant's least-recently-used entries
+//! (or rejects oversized writes) — never a neighbour's. Isolation
+//! falls out of the directory split; no new eviction machinery is
+//! needed.
+
+use std::collections::HashMap;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::plan::PlanCache;
+use crate::runtime::{warm_start_tenant_plans, WarmStart};
+
+/// One tenant's isolated planning state.
+pub struct TenantPlans {
+    /// The tenant's in-memory plan cache, write-through to its store.
+    pub cache: PlanCache,
+    /// Warm-start outcome: the store handle plus how many persisted
+    /// plans were rehydrated (and how many the budget rejected).
+    pub warm: WarmStart,
+    /// The byte budget this tenant's store was opened with.
+    pub quota_bytes: u64,
+}
+
+/// Registry of per-tenant plan stores under one state directory.
+pub struct PlanQuotas {
+    state_dir: PathBuf,
+    default_quota: u64,
+    tenants: Mutex<HashMap<String, Arc<TenantPlans>>>,
+}
+
+impl PlanQuotas {
+    pub fn open(state_dir: &Path, default_quota: u64) -> PlanQuotas {
+        PlanQuotas {
+            state_dir: state_dir.to_path_buf(),
+            default_quota,
+            tenants: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn state_dir(&self) -> &Path {
+        &self.state_dir
+    }
+
+    /// Fetch (or lazily open and warm-start) a tenant's planning
+    /// state. `quota` overrides the registry default on first open;
+    /// an already-open tenant keeps its original budget.
+    pub fn tenant(&self, name: &str, quota: Option<u64>) -> io::Result<Arc<TenantPlans>> {
+        let mut tenants = self
+            .tenants
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        if let Some(existing) = tenants.get(name) {
+            return Ok(Arc::clone(existing));
+        }
+        let quota_bytes = quota.unwrap_or(self.default_quota);
+        let cache = PlanCache::default();
+        let warm = warm_start_tenant_plans(&cache, &self.state_dir, name, quota_bytes)?;
+        let plans = Arc::new(TenantPlans {
+            cache,
+            warm,
+            quota_bytes,
+        });
+        tenants.insert(name.to_string(), Arc::clone(&plans));
+        Ok(plans)
+    }
+
+    /// Tenants opened so far.
+    pub fn len(&self) -> usize {
+        self.tenants
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

@@ -1,0 +1,402 @@
+//! [`JobService`] — the multi-tenant core: bounded queues, WRR
+//! arbitration, and expiring leases behind one mutex.
+//!
+//! The lock covers only bookkeeping (submit/claim/complete/reap);
+//! workers execute the claimed job with no service lock held, so a
+//! panicking job cannot poison the service, and a worker that never
+//! comes back simply lets its lease expire. Expired leases are reaped
+//! lazily at the head of every `claim`, so no reaper thread is needed:
+//! as long as anyone is still pulling work, abandoned jobs flow back
+//! into their queues.
+//!
+//! Time is `Instant`-based with an atomic skew so tests can `advance`
+//! the clock deterministically past a lease deadline without sleeping.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+use super::lease::{ClaimToken, LeaseTable};
+use super::queue::{Queued, TenantQueue};
+use super::scheduler::WrrScheduler;
+
+/// Service-wide policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// How long a claim may run before the job is reclaimed.
+    pub lease_timeout_ns: u64,
+    /// Claims per job before the service gives up and counts it lost
+    /// (a poison job that kills every worker must not recirculate
+    /// forever).
+    pub max_attempts: u32,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            lease_timeout_ns: 5_000_000_000,
+            max_attempts: 5,
+        }
+    }
+}
+
+/// Handle for a registered tenant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TenantId(usize);
+
+impl TenantId {
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// Why a submit was turned away. `QueueFull` is the backpressure
+/// signal: the tenant's bounded queue is at depth and the caller
+/// should retry later or shed load.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    UnknownTenant,
+    QueueFull { tenant: String, depth: usize },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::UnknownTenant => write!(f, "unknown tenant"),
+            SubmitError::QueueFull { tenant, depth } => {
+                write!(f, "tenant `{tenant}` queue full (depth {depth})")
+            }
+        }
+    }
+}
+
+/// A granted lease: the job to run plus the token that proves the
+/// lease when completing. `attempt` is 1 on the first claim of a job.
+#[derive(Clone, Debug)]
+pub struct Claim<J> {
+    pub token: ClaimToken,
+    pub tenant: TenantId,
+    pub attempt: u32,
+    pub job: J,
+}
+
+/// Monotonic service-wide counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceCounters {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Submits rejected by admission control.
+    pub rejected: u64,
+    /// Jobs reclaimed from an expired lease and requeued.
+    pub requeued: u64,
+    /// Jobs dropped after `max_attempts` expired leases.
+    pub lost: u64,
+    /// Completions that arrived after their lease was reaped and were
+    /// discarded — each one is a duplicate execution fenced off.
+    pub stale_results: u64,
+}
+
+/// Per-tenant counters plus the latency sum for fairness accounting.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    pub name: String,
+    pub weight: u64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub latency_sum_ns: u64,
+}
+
+struct TenantState<J> {
+    queue: TenantQueue<J>,
+    stats: TenantStats,
+}
+
+struct State<J> {
+    tenants: Vec<TenantState<J>>,
+    wrr: WrrScheduler,
+    leases: LeaseTable<J>,
+    counters: ServiceCounters,
+}
+
+/// The multi-tenant job service. `J` is whatever the deployment calls
+/// a job — it is cloned out on claim so the lease keeps a copy to
+/// requeue if the worker dies.
+pub struct JobService<J> {
+    state: Mutex<State<J>>,
+    config: ServiceConfig,
+    epoch: Instant,
+    skew_ns: AtomicU64,
+}
+
+impl<J: Clone> JobService<J> {
+    pub fn new(config: ServiceConfig) -> JobService<J> {
+        JobService {
+            state: Mutex::new(State {
+                tenants: Vec::new(),
+                wrr: WrrScheduler::new(),
+                leases: LeaseTable::with_capacity(16),
+                counters: ServiceCounters::default(),
+            }),
+            config,
+            epoch: Instant::now(),
+            skew_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> ServiceConfig {
+        self.config
+    }
+
+    /// Nanoseconds since the service started, plus any test skew.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64 + self.skew_ns.load(Ordering::Relaxed)
+    }
+
+    /// Advance the service clock (tests: step past a lease deadline
+    /// without sleeping).
+    pub fn advance(&self, ns: u64) {
+        self.skew_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    fn lock(&self) -> MutexGuard<'_, State<J>> {
+        // The lock only ever covers bookkeeping; a poisoned state is
+        // still consistent because no job code runs under it.
+        self.state
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Register a tenant with a scheduling weight and a queue depth.
+    pub fn register_tenant(&self, name: &str, weight: u64, depth: usize) -> TenantId {
+        let mut st = self.lock();
+        let idx = st.wrr.add(weight);
+        st.tenants.push(TenantState {
+            queue: TenantQueue::new(depth),
+            stats: TenantStats {
+                name: name.to_string(),
+                weight: weight.max(1),
+                ..TenantStats::default()
+            },
+        });
+        TenantId(idx)
+    }
+
+    /// Admit a job to the tenant's queue, or reject it with a reason.
+    pub fn submit(&self, tenant: TenantId, job: J) -> Result<(), SubmitError> {
+        let now = self.now_ns();
+        let mut st = self.lock();
+        let State {
+            tenants, counters, ..
+        } = &mut *st;
+        let t = tenants
+            .get_mut(tenant.0)
+            .ok_or(SubmitError::UnknownTenant)?;
+        let queued = Queued {
+            job,
+            submitted_at_ns: now,
+            attempts: 0,
+        };
+        match t.queue.push_back(queued) {
+            Ok(()) => {
+                t.stats.submitted += 1;
+                counters.submitted += 1;
+                Ok(())
+            }
+            Err(_) => {
+                t.stats.rejected += 1;
+                counters.rejected += 1;
+                Err(SubmitError::QueueFull {
+                    tenant: t.stats.name.clone(),
+                    depth: t.queue.depth(),
+                })
+            }
+        }
+    }
+
+    /// Claim the next job under a lease, arbitrated tenant-fairly.
+    /// Reaps expired leases first, so abandoned work is reoffered
+    /// before new work. `None` means every queue is empty right now —
+    /// not that the batch is done (leases may still be outstanding;
+    /// see [`JobService::pending`]).
+    pub fn claim(&self) -> Option<Claim<J>> {
+        let now = self.now_ns();
+        let mut st = self.lock();
+        Self::reap_locked(&mut st, now, self.config.max_attempts);
+        let State {
+            tenants,
+            wrr,
+            leases,
+            ..
+        } = &mut *st;
+        let idx = wrr.pick(|i| !tenants[i].queue.is_empty())?;
+        let mut queued = tenants[idx]
+            .queue
+            .pop_front()
+            .expect("picked tenant has queued work");
+        queued.attempts += 1;
+        let attempt = queued.attempts;
+        let job = queued.job.clone();
+        let deadline = now.saturating_add(self.config.lease_timeout_ns);
+        let token = leases.grant(idx, deadline, queued);
+        Some(Claim {
+            token,
+            tenant: TenantId(idx),
+            attempt,
+            job,
+        })
+    }
+
+    /// Surrender a lease after executing its job. Returns the job's
+    /// end-to-end latency in nanoseconds, or `None` (and a
+    /// `stale_results` tick) when the lease was already reclaimed —
+    /// the caller's result is a duplicate and must be dropped.
+    pub fn complete(&self, token: ClaimToken) -> Option<u64> {
+        let now = self.now_ns();
+        let mut st = self.lock();
+        let State {
+            tenants,
+            leases,
+            counters,
+            ..
+        } = &mut *st;
+        match leases.complete(token) {
+            Some((tenant, queued)) => {
+                let latency = now.saturating_sub(queued.submitted_at_ns);
+                let stats = &mut tenants[tenant].stats;
+                stats.completed += 1;
+                stats.latency_sum_ns += latency;
+                counters.completed += 1;
+                Some(latency)
+            }
+            None => {
+                counters.stale_results += 1;
+                None
+            }
+        }
+    }
+
+    /// Reap expired leases now (claim does this implicitly). Returns
+    /// how many jobs were requeued.
+    pub fn reap_expired(&self) -> usize {
+        let now = self.now_ns();
+        let mut st = self.lock();
+        Self::reap_locked(&mut st, now, self.config.max_attempts)
+    }
+
+    fn reap_locked(st: &mut State<J>, now_ns: u64, max_attempts: u32) -> usize {
+        let State {
+            tenants,
+            leases,
+            counters,
+            ..
+        } = &mut *st;
+        let mut requeued = 0;
+        leases.reap_expired(now_ns, |tenant, queued| {
+            if queued.attempts >= max_attempts {
+                counters.lost += 1;
+            } else {
+                counters.requeued += 1;
+                requeued += 1;
+                tenants[tenant].queue.push_front_requeue(queued);
+            }
+        });
+        requeued
+    }
+
+    /// Jobs still in flight: queued plus leased.
+    pub fn pending(&self) -> usize {
+        let st = self.lock();
+        let queued: usize = st.tenants.iter().map(|t| t.queue.len()).sum();
+        queued + st.leases.live()
+    }
+
+    pub fn counters(&self) -> ServiceCounters {
+        self.lock().counters
+    }
+
+    pub fn tenant_stats(&self, tenant: TenantId) -> Option<TenantStats> {
+        self.lock().tenants.get(tenant.0).map(|t| t.stats.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service(lease_ns: u64, max_attempts: u32) -> JobService<u32> {
+        JobService::new(ServiceConfig {
+            lease_timeout_ns: lease_ns,
+            max_attempts,
+        })
+    }
+
+    #[test]
+    fn submit_claim_complete_happy_path() {
+        let svc = service(u64::MAX / 2, 3);
+        let t = svc.register_tenant("acme", 1, 4);
+        svc.submit(t, 7).unwrap();
+        assert_eq!(svc.pending(), 1);
+        let claim = svc.claim().unwrap();
+        assert_eq!((claim.job, claim.attempt, claim.tenant), (7, 1, t));
+        assert!(svc.complete(claim.token).is_some());
+        assert_eq!(svc.pending(), 0);
+        let c = svc.counters();
+        assert_eq!((c.submitted, c.completed, c.lost), (1, 1, 0));
+        assert!(svc.claim().is_none());
+    }
+
+    #[test]
+    fn queue_full_rejects_with_reason() {
+        let svc = service(u64::MAX / 2, 3);
+        let t = svc.register_tenant("noisy", 1, 2);
+        svc.submit(t, 1).unwrap();
+        svc.submit(t, 2).unwrap();
+        let err = svc.submit(t, 3).unwrap_err();
+        assert_eq!(
+            err,
+            SubmitError::QueueFull {
+                tenant: "noisy".into(),
+                depth: 2
+            }
+        );
+        assert_eq!(svc.counters().rejected, 1);
+        assert_eq!(svc.tenant_stats(t).unwrap().rejected, 1);
+        // Rejected submit did not displace admitted work.
+        assert_eq!(svc.pending(), 2);
+    }
+
+    #[test]
+    fn expired_lease_requeues_at_front_then_gives_up() {
+        let svc = service(1_000, 2);
+        let t = svc.register_tenant("flaky", 1, 4);
+        svc.submit(t, 42).unwrap();
+        // Attempt 1: claim and abandon.
+        let c1 = svc.claim().unwrap();
+        assert_eq!(c1.attempt, 1);
+        svc.advance(10_000_000);
+        // Attempt 2: reap-on-claim reoffers the same job.
+        let c2 = svc.claim().unwrap();
+        assert_eq!((c2.job, c2.attempt), (42, 2));
+        // The stale token from attempt 1 is fenced.
+        assert!(svc.complete(c1.token).is_none());
+        assert_eq!(svc.counters().stale_results, 1);
+        // Abandon again: max_attempts reached, the job is lost, not
+        // recirculated.
+        svc.advance(10_000_000);
+        assert!(svc.claim().is_none());
+        let c = svc.counters();
+        assert_eq!((c.requeued, c.lost, c.completed), (1, 1, 0));
+        assert_eq!(svc.pending(), 0);
+    }
+
+    #[test]
+    fn unknown_tenant_is_rejected() {
+        let svc = service(1_000, 2);
+        let t = svc.register_tenant("a", 1, 1);
+        drop(svc);
+        let other = service(1_000, 2);
+        assert_eq!(other.submit(t, 1), Err(SubmitError::UnknownTenant));
+    }
+}

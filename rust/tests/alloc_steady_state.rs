@@ -12,7 +12,10 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use blazert::exec::{default_machine, ExecPool, Partition};
-use blazert::expr::{chain_vec_schedule, ChainVecLowering, EvalContext, FactorMeta, SparseOperand};
+use blazert::expr::{
+    cached_chain_vec_schedule, chain_vec_schedule, ChainVecLowering, EvalContext, FactorMeta,
+    SparseOperand,
+};
 use blazert::gen::{operand_pair, Workload};
 use blazert::kernels::spmv::spmv;
 use blazert::kernels::{planned_fill_serial_csc, spmmm, Strategy};
@@ -284,4 +287,24 @@ fn warm_pool_evaluation_allocates_nothing() {
         );
         assert_eq!(bits(&y_chain), bits(&want_chain), "streamed chain stays bit-identical");
     }
+
+    // Warm ≥3-factor chain sugar: the DP-level schedule now comes from
+    // the thread-local pattern-keyed memo, so the hot loop skips the
+    // O(n³) planning pass and its three n×n tables entirely — build,
+    // flatten, cached-schedule lookup, streamed contraction: zero heap
+    // allocations end to end, bit-identical to the materialized
+    // reference.
+    let sched = cached_chain_vec_schedule(default_machine(), &factors, 1);
+    assert_eq!(sched.lowering, schedule.lowering, "memo agrees with the direct DP");
+    let mut ctx = EvalContext::new().with_exec(&pool);
+    let mut y3 = vec![0.0; fa.rows()];
+    for _ in 0..2 {
+        (&fa * &fb * &fa * &x[..]).eval_into_ctx(&mut y3, &mut ctx);
+    }
+    let before = allocs();
+    for _ in 0..5 {
+        (&fa * &fb * &fa * &x[..]).eval_into_ctx(&mut y3, &mut ctx);
+    }
+    assert_eq!(allocs(), before, "warm 3-factor chain sugar must not allocate");
+    assert_eq!(bits(&y3), bits(&want_chain), "cached chain schedule stays bit-identical");
 }

@@ -128,6 +128,9 @@ fn committed_definitions_and_baselines_stay_well_formed() {
         ("threads_ablation", 12),
         ("scenario_corpus", 4),
         ("chain_fusion_ablation", 4),
+        // A `[service]` definition bypasses the variant sweep; its
+        // defaulted matrix is the single trivial point.
+        ("service_saturation", 1),
     ] {
         let path = find_repo_file(&format!("experiments/{name}.toml"));
         let def = ExperimentDef::load(&path).unwrap_or_else(|e| panic!("{e}"));
@@ -144,14 +147,27 @@ fn committed_definitions_and_baselines_stay_well_formed() {
 
     // Committed baselines parse under the unified record schema and
     // only pin invariant counters (never machine-dependent perf).
-    for name in ["plan_ablation", "simd_ablation", "fusion_ablation", "chain_fusion_ablation"] {
+    for name in [
+        "plan_ablation",
+        "simd_ablation",
+        "fusion_ablation",
+        "chain_fusion_ablation",
+        "service_saturation",
+    ] {
         let path = find_repo_file(&format!("baselines/experiments/{name}.json"));
         let base = BenchRecord::load(&path).unwrap_or_else(|e| panic!("{e}"));
         assert_eq!(base.bench, name);
         assert!(!base.rows.is_empty());
         for row in &base.rows {
             assert!(row_field(row, "mflops").is_none(), "{name} baseline gates perf");
-            for metric in ["symbolic_builds", "steady_allocs", "intermediate_allocs"] {
+            for metric in [
+                "symbolic_builds",
+                "steady_allocs",
+                "intermediate_allocs",
+                "lost_jobs",
+                "duplicate_jobs",
+                "rejected_jobs",
+            ] {
                 if let Some(v) = row_field(row, metric) {
                     assert_eq!(v.as_f64(), Some(0.0), "{name}: {metric} is an invariant");
                 }

@@ -1,0 +1,216 @@
+//! Multi-tenant service contracts, end to end: crash recovery through
+//! expiring leases (a dead worker's job is reclaimed, re-executed
+//! exactly once, and the result is bit-identical to an undisturbed
+//! run), tenant-fair weighted scheduling with no starvation, per-tenant
+//! FIFO, admission-control backpressure that recovers after a drain,
+//! and per-tenant plan-store byte quotas whose eviction never crosses
+//! tenant directories.
+
+use std::sync::Arc;
+
+use blazert::exec::{default_machine, ExecPool, Partition};
+use blazert::gen::{operand_pair, Workload};
+use blazert::kernels::{spmmm, Strategy};
+use blazert::runtime::tenant_state_dir;
+use blazert::service::{JobService, PlanQuotas, ServiceConfig, SubmitError};
+use blazert::sparse::CsrMatrix;
+
+fn service(lease_ns: u64, max_attempts: u32) -> JobService<u32> {
+    JobService::new(ServiceConfig { lease_timeout_ns: lease_ns, max_attempts })
+}
+
+fn bits(m: &CsrMatrix) -> (Vec<usize>, Vec<usize>, Vec<u64>) {
+    (
+        m.row_ptr().to_vec(),
+        m.col_idx().to_vec(),
+        m.values().iter().map(|v| v.to_bits()).collect(),
+    )
+}
+
+#[test]
+fn dead_worker_job_is_reclaimed_and_reexecuted_exactly_once() {
+    let (a, b) = operand_pair(Workload::RandomFixed5, 120, 5);
+    let undisturbed = spmmm(&a, &b, Strategy::Combined);
+
+    let svc = service(1_000, 3);
+    let tenant = svc.register_tenant("acme", 1, 4);
+    svc.submit(tenant, 0).unwrap();
+
+    // Worker A claims the job and dies mid-execution: no complete ever
+    // arrives, the lease just expires.
+    let doomed = svc.claim().unwrap();
+    assert_eq!(doomed.attempt, 1);
+    svc.advance(1_000_000);
+
+    // Worker B's claim reaps the expired lease and is offered the very
+    // same job, second attempt.
+    let retry = svc.claim().unwrap();
+    assert_eq!((retry.job, retry.attempt, retry.tenant), (0, 2, tenant));
+    let recovered = spmmm(&a, &b, Strategy::Combined);
+    assert!(svc.complete(retry.token).is_some(), "live lease completes");
+
+    // The dead worker's ghost result is fenced off as a duplicate...
+    assert!(svc.complete(doomed.token).is_none(), "stale lease is fenced");
+    // ...so the job completed exactly once, nothing was lost, and the
+    // recovered result is bit-identical to the undisturbed run.
+    let c = svc.counters();
+    assert_eq!((c.completed, c.requeued, c.lost, c.stale_results), (1, 1, 0, 1));
+    assert_eq!(svc.pending(), 0);
+    assert_eq!(bits(&recovered), bits(&undisturbed));
+}
+
+#[test]
+fn per_tenant_jobs_complete_in_submission_order() {
+    let svc = service(u64::MAX / 2, 3);
+    let tenant = svc.register_tenant("ordered", 1, 8);
+    for j in 0..8u32 {
+        svc.submit(tenant, j).unwrap();
+    }
+    let mut seen = Vec::new();
+    while let Some(claim) = svc.claim() {
+        seen.push(claim.job);
+        svc.complete(claim.token);
+    }
+    assert_eq!(seen, (0..8).collect::<Vec<_>>(), "single tenant drains FIFO");
+}
+
+#[test]
+fn weighted_round_robin_interleaves_three_to_one() {
+    let svc = service(u64::MAX / 2, 3);
+    let heavy = svc.register_tenant("heavy", 3, 16);
+    let light = svc.register_tenant("light", 1, 16);
+    for j in 0..8u32 {
+        svc.submit(heavy, j).unwrap();
+        svc.submit(light, j).unwrap();
+    }
+    let order: Vec<usize> = (0..8).map(|_| svc.claim().unwrap().tenant.index()).collect();
+    // Smooth WRR at weights 3:1 cycles [heavy, heavy, light, heavy] —
+    // the light tenant is served inside every window, never bunched at
+    // the end.
+    let (h, l) = (heavy.index(), light.index());
+    assert_eq!(order, vec![h, h, l, h, h, h, l, h]);
+}
+
+#[test]
+fn no_tenant_starves_under_a_dominant_neighbour() {
+    let svc = service(u64::MAX / 2, 3);
+    let weights = [10u64, 1, 1, 1];
+    let tenants: Vec<_> = weights
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| svc.register_tenant(&format!("t{i}"), w, 32))
+        .collect();
+    for t in &tenants {
+        for j in 0..32u32 {
+            svc.submit(*t, j).unwrap();
+        }
+    }
+    // Over one full weight cycle (Σw = 13 picks) every tenant is served
+    // exactly its weight — the light tenants are never starved out by
+    // the 10x neighbour.
+    let mut per_cycle = [0usize; 4];
+    for _ in 0..13 {
+        per_cycle[svc.claim().unwrap().tenant.index()] += 1;
+    }
+    assert_eq!(per_cycle, [10, 1, 1, 1]);
+    let mut second = [0usize; 4];
+    for _ in 0..13 {
+        second[svc.claim().unwrap().tenant.index()] += 1;
+    }
+    assert_eq!(second, [10, 1, 1, 1], "the share repeats cycle after cycle");
+}
+
+#[test]
+fn admission_control_rejects_when_full_and_recovers_after_drain() {
+    let svc = service(u64::MAX / 2, 3);
+    let tenant = svc.register_tenant("bursty", 1, 2);
+    svc.submit(tenant, 1).unwrap();
+    svc.submit(tenant, 2).unwrap();
+    let err = svc.submit(tenant, 3).unwrap_err();
+    assert_eq!(err, SubmitError::QueueFull { tenant: "bursty".into(), depth: 2 });
+    // Draining one job frees a slot; admission recovers immediately.
+    let claim = svc.claim().unwrap();
+    svc.complete(claim.token);
+    svc.submit(tenant, 3).unwrap();
+    let c = svc.counters();
+    assert_eq!((c.submitted, c.rejected), (3, 1));
+}
+
+#[test]
+fn reclaimed_jobs_jump_the_queue_and_ignore_the_depth_bound() {
+    let svc = service(1_000, 3);
+    let tenant = svc.register_tenant("narrow", 1, 1);
+    svc.submit(tenant, 1).unwrap();
+    let doomed = svc.claim().unwrap();
+    // The queue slot freed by the claim admits a second job...
+    svc.submit(tenant, 2).unwrap();
+    assert!(svc.submit(tenant, 3).is_err(), "depth 1 is full again");
+    // ...then the lease expires. The reaped job re-enters at the FRONT
+    // of the (already full) queue: requeues are exempt from the depth
+    // bound and abandoned work is retried before newer work.
+    svc.advance(1_000_000);
+    let first = svc.claim().unwrap();
+    assert_eq!((first.job, first.attempt), (1, 2));
+    let second = svc.claim().unwrap();
+    assert_eq!((second.job, second.attempt), (2, 1));
+    svc.complete(first.token);
+    svc.complete(second.token);
+    assert!(svc.complete(doomed.token).is_none(), "dead worker's result is dropped");
+    let c = svc.counters();
+    assert_eq!((c.completed, c.requeued, c.lost), (2, 1, 0));
+}
+
+#[test]
+fn plan_quotas_isolate_tenant_stores() {
+    let dir =
+        std::env::temp_dir().join(format!("blazert_tenant_quota_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let pool = ExecPool::new(1);
+    let (fa, fb) = operand_pair(Workload::FiveBandFd, 300, 11);
+
+    {
+        let quotas = PlanQuotas::open(&dir, 1 << 20);
+        // `alpha` opens with a 1-byte override: every write-through
+        // blows the budget and is immediately evicted. `beta` keeps the
+        // registry default.
+        let alpha = quotas.tenant("alpha", Some(1)).expect("alpha opens");
+        let beta = quotas.tenant("beta", None).expect("beta opens");
+        assert_eq!((alpha.quota_bytes, beta.quota_bytes), (1, 1 << 20));
+        pool.with_local(|ws| {
+            alpha.cache.get_or_build(default_machine(), ws, &fa, &fb, 1, Partition::Flops);
+            beta.cache.get_or_build(default_machine(), ws, &fa, &fb, 1, Partition::Flops);
+        });
+        // Same plan, two fates: beta's store keeps it, alpha's byte
+        // quota evicted it — and only alpha's directory was touched by
+        // that eviction.
+        assert_eq!(beta.warm.store.len(), 1, "beta persists under its budget");
+        assert_eq!(alpha.warm.store.len(), 0, "alpha's quota evicts its own plan");
+        // The stores live in disjoint per-tenant directories.
+        assert_eq!(alpha.warm.store.dir(), tenant_state_dir(&dir, "alpha"));
+        assert_eq!(beta.warm.store.dir(), tenant_state_dir(&dir, "beta"));
+        // Re-fetching a tenant returns the already-open state, original
+        // budget intact.
+        let beta_again = quotas.tenant("beta", Some(7)).expect("cached handle");
+        assert!(Arc::ptr_eq(&beta, &beta_again));
+        assert_eq!(beta_again.quota_bytes, 1 << 20);
+        assert_eq!(quotas.len(), 2);
+    }
+
+    // Simulated restart: a fresh registry over the same state dir
+    // warm-starts beta from its surviving plan; alpha starts cold.
+    let reopened = PlanQuotas::open(&dir, 1 << 20);
+    let beta = reopened.tenant("beta", None).expect("beta reopens");
+    let alpha = reopened.tenant("alpha", None).expect("alpha reopens");
+    assert_eq!(beta.warm.plans_loaded, 1, "restart recovers beta's plan");
+    assert_eq!(alpha.warm.plans_loaded, 0, "alpha has nothing to recover");
+
+    // Tenant names are sanitized into path-safe directories.
+    let weird = reopened.tenant("we/ird name", None).expect("sanitized open");
+    assert_eq!(weird.warm.store.dir(), tenant_state_dir(&dir, "we/ird name"));
+    assert_eq!(
+        tenant_state_dir(&dir, "we/ird name"),
+        dir.join("tenant_we_ird_name"),
+        "path separators and spaces are mapped to underscores"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
